@@ -1,0 +1,85 @@
+"""Paper Fig. 1–2 — pipeline-as-DAG + the hierarchy of persistence.
+
+Measures throughput at each reversible layer of Fig. 2:
+in-memory columns ⇄ tensorfile bytes ⇄ table snapshot ⇄ catalog commit,
+and the full DAG execution rate (rows/s through transformation functions)."""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import Lake, Model, Pipeline, model
+from repro.core import tensorfile as tf
+from .common import emit, timeit
+
+
+def main(n_rows: int = 200_000):
+    rng = np.random.default_rng(0)
+    cols = {"a": rng.normal(size=n_rows).astype(np.float32),
+            "b": rng.integers(0, 1000, n_rows).astype(np.int64)}
+    nbytes = sum(v.nbytes for v in cols.values())
+
+    # layer 1: columns -> tensorfile bytes (Arrow -> Parquet analogue)
+    blob_holder = {}
+
+    def enc():
+        blob_holder["blob"], _ = tf.encode(cols)
+    us = timeit(enc)
+    emit("fig2/encode_tensorfile", us,
+         f"MBps={nbytes / us:.1f}")
+
+    def dec():
+        tf.decode(blob_holder["blob"])
+    us = timeit(dec)
+    emit("fig2/decode_tensorfile", us, f"MBps={nbytes / us:.1f}")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        lake = Lake(tmp, protect_main=False)
+
+        # layer 2: tensorfile -> snapshot in the object store (Iceberg)
+        snap_holder = {}
+
+        def write_snap():
+            snap_holder["s"] = lake.io.write_snapshot(cols)
+        us = timeit(write_snap, repeats=3)
+        emit("fig2/write_snapshot", us, f"MBps={nbytes / us:.1f}")
+
+        def read_snap():
+            lake.io.read(snap_holder["s"])
+        us = timeit(read_snap, repeats=3)
+        emit("fig2/read_snapshot", us, f"MBps={nbytes / us:.1f}")
+
+        # layer 3: snapshot -> commit (Nessie)
+        i = [0]
+
+        def commit():
+            i[0] += 1
+            lake.catalog.commit("main", {f"t{i[0]}": snap_holder["s"]}, "c")
+        emit("fig2/commit", timeit(commit), "multi_table=True")
+
+        # Fig. 1: full DAG run (two transformation functions)
+        lake.catalog.commit("main", {"source_table":
+                                     lake.io.write_snapshot(cols)}, "seed")
+
+        @model()
+        def mid(data=Model("source_table")):
+            return {"a2": data["a"] * 2, "b": data["b"]}
+
+        @model()
+        def out(data=Model("mid")):
+            return {"y": data["a2"] + data["b"]}
+
+        pipe = Pipeline([mid, out])
+        lake.catalog.create_branch("u.run", "main", author="u")
+
+        def run():
+            lake.run(pipe, branch="u.run", author="u")
+        us = timeit(run, repeats=3)
+        emit("fig1/dag_run_2nodes", us,
+             f"rows_per_s={n_rows / (us / 1e6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline summary — reads results/dryrun/*.json (produced by
+``repro.launch.dryrun``) and emits one CSV row per (arch × shape × mesh)
+cell: the three roofline terms, the bottleneck, and the MFU bound."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main():
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        recs.append(r)
+    for r in recs:
+        rl = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        us = rl["step_time_lb"] * 1e6
+        derived = (f"bottleneck={rl['bottleneck']};"
+                   f"tc={rl['t_compute']:.4f};tm={rl['t_memory']:.4f};"
+                   f"tx={rl['t_collective']:.4f};"
+                   f"useful={rl['useful_flops_ratio']:.3f};"
+                   f"mfu_bound={rl['mfu_bound']:.3f}")
+        print(f"{name},{us:.1f},{derived}")
+    if not recs:
+        print("roofline/none,0,run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Training-integration benchmark (paper §5.5 extended to training):
+tokens/s of the paper-demo model on CPU, the per-step overhead of
+checkpoint-as-commit (sync vs async), and the catalog cost of a full
+fault-tolerant resume."""
+
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, save
+from repro.configs import smoke_config
+from repro.core import Lake
+from repro.models import init_params
+from repro.optim import adamw
+from repro.runtime.steps import build_train_step, synthetic_batch
+from .common import emit, timeit
+
+
+def main():
+    cfg = smoke_config("paper-demo")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig()
+    opt_state = adamw.init(params, opt_cfg)
+    step = jax.jit(build_train_step(cfg, opt_config=opt_cfg,
+                                    schedule="constant",
+                                    schedule_kw={"peak_lr": 1e-3}))
+    batch = synthetic_batch(cfg, batch=8, seq=64)
+    state = {"p": params, "o": opt_state}
+
+    def train_step():
+        state["p"], state["o"], m = step(state["p"], state["o"], batch)
+        jax.block_until_ready(m["loss"])
+
+    us = timeit(train_step, repeats=5, warmup=2)
+    tokens = 8 * 64
+    emit("train/step", us, f"tokens_per_s={tokens / (us / 1e6):.0f}")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        lake = Lake(tmp, protect_main=False)
+
+        i = [0]
+
+        def sync_ckpt():
+            i[0] += 1
+            save(lake, "main", step=i[0], params=state["p"],
+                 opt_state=state["o"])
+        us_sync = timeit(sync_ckpt, repeats=3)
+        emit("train/checkpoint_sync", us_sync, "")
+
+        mgr = CheckpointManager(lake, "main")
+
+        def async_ckpt():
+            i[0] += 1
+            mgr.submit(step=i[0], params=state["p"], opt_state=state["o"])
+        us_async = timeit(async_ckpt, repeats=3)
+        mgr.wait()
+        emit("train/checkpoint_async_submit", us_async,
+             f"hidden_ratio={us_sync / max(us_async, 1):.1f}x")
+
+        from repro.checkpoint import restore, latest_checkpoint
+
+        def do_restore():
+            restore(lake, latest_checkpoint(lake, "main"))
+        emit("train/restore", timeit(do_restore, repeats=3), "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""§Perf hillclimb harness: lower + analyze named variants of the three
+chosen (arch × shape) pairs and log hypothesis → before → after.
+
+Run (one experiment at a time; each compiles a 256-device cell):
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair hymba --variant block_remat
+  PYTHONPATH=src python -m benchmarks.hillclimb --all
+Results append to results/perf/hillclimb.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "perf"
+
+# the three §Perf pairs (chosen per the mandate — see EXPERIMENTS.md):
+PAIRS = {
+    "hymba": ("hymba-1.5b", "train_4k"),        # worst roofline fraction
+    "qwen3": ("qwen3-moe-235b-a22b", "prefill_32k"),  # most collective-bound
+    "yi": ("yi-34b", "train_4k"),               # representative train cell
+}
+
+# variant name -> (lower_cell kwargs)
+VARIANTS = {
+    "baseline": {},
+    "block_remat": {"cfg_overrides": {"attn_block_remat": True}},
+    "moe_ep_constraints": {"moe_constraints": True},
+    "moe_bf16_combine": {
+        "cfg_overrides": {"moe_combine_dtype": "bfloat16"}},
+    "moe_ep_shardmap": {"cfg_overrides": {"moe_impl": "ep"}},
+    "moe_ep+block_remat": {"cfg_overrides": {"moe_impl": "ep",
+                                             "attn_block_remat": True}},
+    "ssm_chunk128": {"cfg_overrides": {"ssm_chunk": 128,
+                                       "attn_block_remat": True}},
+    "ssm_chunk64": {"cfg_overrides": {"ssm_chunk": 64,
+                                      "attn_block_remat": True}},
+    "moe_ep+bf16": {"moe_constraints": True,
+                    "cfg_overrides": {"moe_combine_dtype": "bfloat16"}},
+    "serve_layout": {"serving_layout": True},
+    "serve_layout+moe": {"serving_layout": True, "moe_constraints": True,
+                         "cfg_overrides": {"moe_combine_dtype": "bfloat16"}},
+    "block2048": {"cfg_overrides": {"attn_block": 2048,
+                                    "attn_block_remat": True}},
+    "block4096": {"cfg_overrides": {"attn_block": 4096,
+                                    "attn_block_remat": True}},
+    "block512": {"cfg_overrides": {"attn_block": 512,
+                                   "attn_block_remat": True}},
+    "pure_fsdp": {"pure_fsdp": True,
+                  "cfg_overrides": {"attn_block_remat": True}},
+    "no_remat": {"remat": False},
+    "no_tp": {"tp": False},
+    "xla_attention": {"attention_impl": "xla"},
+}
+
+
+def run_variant(pair: str, variant: str) -> dict:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    import jax
+    from repro.distributed import analysis
+    from repro.launch.dryrun import lower_cell
+
+    arch, shape = PAIRS[pair]
+    kw = VARIANTS[variant]
+    lo, co, ctx = lower_cell(arch, shape, multi_pod=False, **kw)
+    roof, coll = analysis.roofline_from_compiled(
+        co, n_devices=256, model_flops_total=ctx["model_flops_total"])
+    rec = {
+        "pair": pair, "arch": arch, "shape": shape, "variant": variant,
+        "roofline": roof.to_dict(),
+        "collective_counts": coll.counts,
+        "compile_seconds": ctx["compile_seconds"],
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    log_path = RESULTS / "hillclimb.json"
+    log = json.loads(log_path.read_text()) if log_path.exists() else []
+    log = [r for r in log
+           if not (r["pair"] == pair and r["variant"] == variant)]
+    log.append(rec)
+    log_path.write_text(json.dumps(log, indent=1, default=float))
+    r = roof
+    print(f"{pair}/{variant}: t=({r.t_compute:.2f},{r.t_memory:.2f},"
+          f"{r.t_collective:.2f}) bneck={r.bottleneck} "
+          f"useful={r.useful_flops_ratio:.3f} mfu_bound={r.mfu_bound:.4f}",
+          flush=True)
+    jax.clear_caches()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS))
+    ap.add_argument("--variant", choices=list(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        plan = [("hymba", "baseline"), ("hymba", "block_remat"),
+                ("qwen3", "baseline"), ("qwen3", "moe_ep_constraints"),
+                ("yi", "baseline"), ("yi", "block_remat")]
+        for pair, variant in plan:
+            run_variant(pair, variant)
+    else:
+        assert args.pair and args.variant
+        run_variant(args.pair, args.variant)
+
+
+if __name__ == "__main__":
+    main()

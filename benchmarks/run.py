@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §7):
+  bench_reproducibility → Table 1 (run manifests, bit-exact replay)
+  bench_pipeline        → Fig. 1–2 (DAG runs, persistence hierarchy)
+  bench_runtime         → Fig. 3 (read/write path, run-id overhead)
+  bench_branching       → Fig. 4 + §5.4 (CoW branching, time travel)
+  bench_train           → training integration (checkpoint-as-commit)
+  bench_roofline        → scale mandate (summarizes results/dryrun)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_branching, bench_pipeline, bench_reproducibility,
+                   bench_runtime, bench_train)
+
+    print("name,us_per_call,derived")
+    bench_reproducibility.main()
+    bench_pipeline.main()
+    bench_runtime.main()
+    bench_branching.main()
+    bench_train.main()
+    try:
+        from . import bench_roofline
+        bench_roofline.main()
+    except Exception as e:  # dry-run results may not exist yet
+        print(f"roofline/summary,0,skipped({type(e).__name__})",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 4 as a CLI session: the bauplan-style commands of Listing 3 driven
+through the ``repro`` CLI (launch/repro_cli.py).
+
+  bauplan checkout richard.debug_branch   →  repro branch richard.debug
+  bauplan run --id=1441804                →  repro run --id <run_id>
+  bauplan query "SELECT COUNT(*) ..."     →  repro query "SELECT count(*) ..."
+
+Run:  PYTHONPATH=src python examples/debug_branch.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core import Lake
+from repro.data import build_data_pipeline, seed_corpus
+from repro.launch.repro_cli import main as cli
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="repro_cli_lake_")
+    lake = Lake(tmp)
+    lake.catalog.create_branch("data.main", "main", author="data")
+    seed_corpus(lake, "data.main", n_docs=64, seed=3, vocab_size=512,
+                mean_len=100, author="data")
+    print(f"$ # lake at {tmp}")
+
+    def sh(*args):
+        print(f"$ repro {' '.join(args)}")
+        cli(["--lake", tmp, *args])
+
+    # nightly production run (cron in the paper)
+    sh("run", "--pipeline", "data", "--seq-len", "128",
+       "--branch", "data.main", "--author", "data")
+    run_id = lake.ledger.runs()[0]
+
+    # Listing 3, line 1: create the debug branch
+    sh("branch", "richard.debug", "--from", "data.main")
+    # Listing 3, line 2: replay last night's run by id
+    sh("run", "--id", run_id, "--pipeline", "data", "--seq-len", "128",
+       "--branch", "richard.debug2", "--author", "richard")
+    # Listing 3, line 3: query the reproduced artifact
+    sh("query", "SELECT count(*) FROM packed", "--ref", "richard.debug2")
+    sh("query", "SELECT count(*) FROM data_stats", "--ref", "richard.debug2")
+
+    # catalog inspection
+    sh("branches")
+    sh("log", "data.main")
+    sh("runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving example: batched requests against a model whose weights are
+pinned to an immutable catalog commit (Fig. 3 read path, applied to
+inference).  Trains a few steps first so there is a checkpoint to serve.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import latest_checkpoint
+from repro.configs import smoke_config
+from repro.core import Lake
+from repro.data import build_data_pipeline, seed_corpus
+from repro.runtime import Trainer, TrainerConfig
+from repro.serving import BatchedServer, ServeEngine
+
+
+def main():
+    cfg = smoke_config("paper-demo")
+    tmp = tempfile.mkdtemp(prefix="repro_serve_")
+    lake = Lake(tmp)
+
+    # quick training run to produce a served checkpoint
+    lake.catalog.create_branch("data.main", "main", author="data")
+    seed_corpus(lake, "data.main", n_docs=128, seed=1,
+                vocab_size=cfg.vocab_size, mean_len=120, author="data")
+    lake.run(build_data_pipeline(64), branch="data.main", author="data")
+    tcfg = TrainerConfig(arch=cfg.name, seq_len=64, global_batch=8,
+                         n_steps=20, ckpt_every=10, author="trainer",
+                         schedule="constant",
+                         schedule_kw={"peak_lr": 1e-3})
+    trainer = Trainer(lake, cfg, tcfg, data_branch="data.main",
+                      run_name="serve-src")
+    trainer.run()
+    commit = latest_checkpoint(lake, trainer.run_branch)
+    print(f"serving from checkpoint commit {commit[:12]}")
+
+    # the engine pins its weights to that immutable commit
+    engine = ServeEngine.from_catalog(lake, commit, cfg, max_len=96,
+                                      batch_size=4)
+    server = BatchedServer(engine)
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        plen = int(rng.integers(4, 40))
+        server.submit(rid, rng.integers(
+            3, cfg.vocab_size, plen).astype(np.int32), n_tokens=12)
+    total = 0
+    while server.queue:
+        total += server.step()
+    print(f"served {total} requests; every response cites model_commit="
+          f"{engine.model_commit[:12]}")
+    for rid in (0, 1):
+        r = server.completed[rid]
+        print(f"  req {rid}: generated {r.tokens[0].tolist()}")
+
+    # reproducibility story: the same commit always serves the same bytes
+    engine2 = ServeEngine.from_catalog(lake, commit, cfg, max_len=96,
+                                       batch_size=4)
+    p = rng.integers(3, cfg.vocab_size, 16).astype(np.int32)
+    g1 = engine.generate(np.tile(p, (4, 1)), n_tokens=8).tokens
+    g2 = engine2.generate(np.tile(p, (4, 1)), n_tokens=8).tokens
+    assert (g1 == g2).all()
+    print("same commit ⇒ identical generations ✓")
+
+
+if __name__ == "__main__":
+    main()

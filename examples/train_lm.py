@@ -1,0 +1,93 @@
+"""End-to-end driver: train the ~100M paper-demo LM through the replayable
+catalog — corpus → packing pipeline → fault-tolerant training (checkpoint
+commits + injected failure + bit-exact resume) → WAP publish → replay audit.
+
+This is the paper's technique applied to a training job: every input the
+run consumed and every artifact it produced is an immutable catalog object.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
+(--full uses the real 12-layer/768-d 100M config; default is the reduced
+config so the example finishes in ~a minute on CPU.)
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs import full_config, smoke_config
+from repro.core import Lake
+from repro.data import batch_rows, build_data_pipeline, seed_corpus
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--full", action="store_true",
+                    help="train the real ~100M config (slower)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = (full_config("paper-demo") if args.full
+           else smoke_config("paper-demo"))
+    tmp = tempfile.mkdtemp(prefix="repro_train_")
+    lake = Lake(tmp)
+    print(f"lake at {tmp}; model={cfg.name} ({cfg.param_count()/1e6:.1f}M)")
+
+    # 1. data lands as catalog tables via the packing pipeline
+    lake.catalog.create_branch("data.main", "main", author="data")
+    seed_corpus(lake, "data.main", n_docs=512, seed=7,
+                vocab_size=cfg.vocab_size, mean_len=200, author="data")
+    res = lake.run(build_data_pipeline(args.seq_len), branch="data.main",
+                   author="data")
+    print(f"data pipeline run_id={res.run_id}")
+
+    # 2. fault-tolerant training with an injected node failure
+    tcfg = TrainerConfig(
+        arch=cfg.name, seq_len=args.seq_len, global_batch=args.batch,
+        n_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+        schedule="wsd",
+        schedule_kw={"peak_lr": 3e-4,
+                     "warmup_steps": args.steps // 10,
+                     "stable_steps": args.steps // 2,
+                     "decay_steps": args.steps // 2},
+        author="trainer")
+    trainer = Trainer(lake, cfg, tcfg, data_branch="data.main",
+                      run_name="demo", failure_at=args.steps // 2)
+    try:
+        trainer.run()
+    except RuntimeError as e:
+        print(f"!! {e} — restarting from last checkpoint commit")
+    out = trainer.run(resume=True)
+    print(f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"({len(out['losses'])} recorded steps, "
+          f"{trainer.straggler_events} straggler events)")
+
+    # 3. the data-iterator state is ONE integer — prove resume determinism
+    packed = lake.read_table(trainer.run_branch, "packed")
+    r1, _ = batch_rows(args.steps // 2,
+                       n_rows=packed["tokens"].shape[0],
+                       global_batch=args.batch, seed=tcfg.seed)
+    r2, _ = batch_rows(args.steps // 2,
+                       n_rows=packed["tokens"].shape[0],
+                       global_batch=args.batch, seed=tcfg.seed)
+    assert (r1 == r2).all()
+    print("stateless loader: post-failure batch identical on resume ✓")
+
+    # 4. publish the run through write-audit-publish
+    head = trainer.publish("main")
+    print(f"WAP-published run branch to main @ {head[:12]}")
+    print(f"main tables: {sorted(lake.catalog.tables('main'))}")
+
+    # 5. every checkpoint is time-travelable
+    from repro.checkpoint import latest_checkpoint, restore
+    c = latest_checkpoint(lake, trainer.run_branch)
+    _, _, meta = restore(lake, c)
+    print(f"latest checkpoint commit {c[:12]} at step {meta['step']} "
+          f"digest={meta.get('params_digest', '')[:16]}…")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro — reproducible, replayable training & serving over a tensor lake.
+
+JAX reproduction of "Reproducible data science over data lakes: replayable
+data pipelines with Bauplan and Nessie" (DEEM @ SIGMOD 2024), extended into
+a multi-pod training/serving framework: the catalog (Git semantics over
+content-addressed tensor tables) versions data, code, runtime and hardware
+for every run — training runs, checkpoints and serving deployments are all
+replayable catalog objects.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""repro.checkpoint — checkpoints ARE catalog commits (the paper's technique
+applied to model state).
+
+A checkpoint is a multi-table transaction on the run branch:
+  ``ckpt_params``    one row per leaf (leaf path → (1, *shape) column)
+  ``ckpt_opt``       optimizer state the same way
+plus commit metadata {step, data iterator state, mesh fingerprint, digest}.
+
+Consequences inherited from the catalog (DESIGN.md §2):
+ - restart = checkout: restore the branch head (or ANY historical commit);
+ - unchanged leaves dedup by content address (free CoW across checkpoints);
+ - a training run's checkpoints, metrics and input data live in one ref
+   graph — `replay(run_id)` pins all of them at once;
+ - async save: serialization + commit happen on a host thread off the
+   critical path (the device→host copy is the only sync part).
+"""
+
+from .saver import (CheckpointManager, columns_to_tree, latest_checkpoint,
+                    leaves_to_columns, restore, restore_into, save)
+
+__all__ = ["save", "restore", "restore_into", "latest_checkpoint",
+           "CheckpointManager", "leaves_to_columns", "columns_to_tree"]

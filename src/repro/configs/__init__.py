@@ -1,0 +1,9 @@
+"""Assigned architecture configs (``--arch <id>``) + reduced smoke variants.
+
+Every config is the EXACT published configuration from the assignment table;
+``smoke_config(id)`` returns a reduced same-family variant for CPU tests.
+"""
+
+from .registry import (ARCH_IDS, full_config, list_archs, smoke_config)
+
+__all__ = ["ARCH_IDS", "full_config", "smoke_config", "list_archs"]

@@ -1,0 +1,21 @@
+"""gemma2-9b — local+global alternating attention, logit softcaps
+[arXiv:2408.00118]."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, d_head=256,
+    d_ff=14336, vocab_size=256000, rope_theta=10_000.0,
+    sliding_window=4096, global_every=2,       # local, global, local, ...
+    attn_softcap=50.0, final_softcap=30.0,
+    mlp_act="gelu", tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="gemma2-9b-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab_size=256, sliding_window=8, global_every=2,
+    attn_softcap=50.0, final_softcap=30.0, mlp_act="gelu",
+    tie_embeddings=True, param_dtype="float32", compute_dtype="float32",
+)

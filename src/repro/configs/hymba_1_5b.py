@@ -1,0 +1,22 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads in every layer
+[arXiv:2411.13676].  Sliding-window attention everywhere except 3 full-
+attention layers (first / middle / last), as in the paper; meta-tokens are
+not modelled (noted in DESIGN.md).  Sub-quadratic ⇒ runs ``long_500k``."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_head=64,
+    d_ff=5504, vocab_size=32001, rope_theta=10_000.0,
+    sliding_window=1024, global_layers=(0, 15, 31),
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+)
+
+SMOKE = ModelConfig(
+    name="hymba-1.5b-smoke", family="hybrid",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab_size=257, sliding_window=8, global_layers=(0, 2),
+    ssm_state=8, ssm_expand=2, ssm_head_dim=16, ssm_conv=4, ssm_chunk=16,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""internvl2-76b — InternViT + InternLM2 VLM [arXiv:2404.16821].
+The backbone below is the InternLM2-76B language tower; the InternViT
+frontend is a STUB: ``input_specs()`` supplies precomputed patch embeddings
+(256 per image) that pass through a trained connector and occupy the first
+``n_frontend_embeds`` positions (loss-masked)."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-76b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=28672, vocab_size=128256, rope_theta=1_000_000.0,
+    frontend="vision", n_frontend_embeds=256,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-76b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=128, vocab_size=256,
+    frontend="vision", n_frontend_embeds=8,
+    param_dtype="float32", compute_dtype="float32",
+)

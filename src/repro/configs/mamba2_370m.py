@@ -1,0 +1,19 @@
+"""mamba2-370m — attention-free SSM with SSD (state-space duality)
+[arXiv:2405.21060].  d_inner = 2*1024 = 2048, 32 ssd heads of dim 64."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, vocab_size=50280,
+    d_ff=0,  # attention-free, MLP-free: the mixer IS the layer
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-370m-smoke", family="ssm",
+    n_layers=2, d_model=64, vocab_size=256, d_ff=0,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_conv=4, ssm_chunk=16,
+    tie_embeddings=True, param_dtype="float32", compute_dtype="float32",
+)

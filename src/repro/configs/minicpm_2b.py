@@ -1,0 +1,21 @@
+"""minicpm-2b — llama-like dense, trained with the WSD schedule
+[arXiv:2404.06395].  The WSD (warmup-stable-decay) schedule is implemented in
+``repro.optim.schedules`` and selected by this arch's training recipe."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36, d_head=64,
+    d_ff=5760, vocab_size=122753, rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm-2b-smoke", family="dense",
+    n_layers=2, d_model=48, n_heads=6, n_kv_heads=6, d_head=8,
+    d_ff=96, vocab_size=211,  # odd vocab on purpose (122753 is odd too)
+    tie_embeddings=True, param_dtype="float32", compute_dtype="float32",
+)
+
+TRAIN_SCHEDULE = "wsd"  # the arch's published training recipe

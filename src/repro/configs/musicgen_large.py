@@ -1,0 +1,22 @@
+"""musicgen-large — decoder-only transformer over EnCodec audio tokens
+[arXiv:2306.05284].  The EnCodec frontend is a STUB: ``input_specs()``
+supplies precomputed conditioning frame embeddings that occupy the first
+``n_frontend_embeds`` positions (loss-masked)."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="musicgen-large", family="dense",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_head=64,
+    d_ff=8192, vocab_size=2048, rope_theta=10_000.0,
+    mlp_act="gelu",
+    frontend="audio", n_frontend_embeds=64,
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=128, vocab_size=128, mlp_act="gelu",
+    frontend="audio", n_frontend_embeds=4,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,19 @@
+"""paper-demo — the ~100M-parameter model used by the paper-style end-to-end
+example (train a small LM through a replayable catalog-backed pipeline,
+``examples/train_lm.py``)."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="paper-demo", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+    d_ff=2048, vocab_size=32768, tie_embeddings=True,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+SMOKE = ModelConfig(
+    name="paper-demo-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab_size=512, tie_embeddings=True,
+    param_dtype="float32", compute_dtype="float32",
+)

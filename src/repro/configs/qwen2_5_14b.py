@@ -1,0 +1,17 @@
+"""qwen2.5-14b — dense GQA with QKV bias [hf:Qwen/Qwen2.5]."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+    d_ff=13824, vocab_size=152064, rope_theta=1_000_000.0,
+    qkv_bias=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-14b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=128, vocab_size=256, qkv_bias=True,
+    param_dtype="float32", compute_dtype="float32",
+)

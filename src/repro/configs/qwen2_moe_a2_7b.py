@@ -1,0 +1,19 @@
+"""qwen2-moe-a2.7b — 60 routed experts top-4 + 4 shared experts
+[hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_head=128,
+    vocab_size=151936, rope_theta=1_000_000.0, qkv_bias=True,
+    n_experts=60, top_k=4, expert_d_ff=1408, n_shared_experts=4,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-moe-a2.7b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    vocab_size=256, qkv_bias=True,
+    n_experts=8, top_k=4, expert_d_ff=32, n_shared_experts=2,
+    param_dtype="float32", compute_dtype="float32",
+)

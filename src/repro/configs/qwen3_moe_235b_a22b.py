@@ -1,0 +1,19 @@
+"""qwen3-moe-235b-a22b — 128 routed experts top-8, no shared experts
+[hf:Qwen/Qwen3 family]."""
+
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_head=128,
+    vocab_size=151936, rope_theta=1_000_000.0,
+    n_experts=128, top_k=8, expert_d_ff=1536, n_shared_experts=0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-235b-a22b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    vocab_size=256,
+    n_experts=16, top_k=8, expert_d_ff=16, n_shared_experts=0,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,42 @@
+"""Config registry: one module per assigned arch, resolved by id."""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "yi-34b",
+    "gemma2-9b",
+    "minicpm-2b",
+    "qwen2.5-14b",
+    "mamba2-370m",
+    "hymba-1.5b",
+    "qwen2-moe-a2.7b",
+    "qwen3-moe-235b-a22b",
+    "musicgen-large",
+    "internvl2-76b",
+    "paper-demo",  # the paper's own pipeline demo model (~100M)
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _load(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def full_config(arch: str) -> ModelConfig:
+    return _load(arch).FULL
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    return _load(arch).SMOKE
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,79 @@
+"""repro.core — the paper's contribution: a content-addressed tensor lake with
+Git semantics (Nessie-style catalog) and replayable functional-DAG pipelines.
+
+Layering (Fig. 2 of the paper):
+    in-memory columns  ⇄  tensorfile  ⇄  table snapshots  ⇄  catalog commits
+                                          (Iceberg-like)      (Nessie-like)
+plus the run ledger (immutable run_ids, replay) and write-audit-publish.
+"""
+
+from .catalog import Catalog, Commit
+from .errors import (CodeDrift, CycleError, ExpectationFailed, MergeConflict,
+                     ObjectNotFound, PermissionDenied, RefConflict,
+                     RefNotFound, ReproError, RunNotFound, SchemaError,
+                     TableNotFound)
+from .frame import Expr, col, lit, nrows, select, where
+from .ledger import (ReplayReport, RunLedger, mesh_fingerprint, run_pipeline,
+                     runtime_fingerprint)
+from .pipeline import (Model, Node, Pipeline, RunResult, code_hash_of, execute,
+                       model, sql_model)
+from .store import ObjectStore, sha256_hex
+from .table import ManifestEntry, Snapshot, TableIO
+from .tensorfile import ColumnSpec, Schema
+from .wap import (AuditReport, Expectation, audit, column_range, expectation,
+                  no_nans, not_empty, publish)
+
+
+class Lake:
+    """Convenience bundle: one object store + catalog + table IO + ledger.
+
+    >>> lake = Lake("/tmp/my_lake")
+    >>> lake.catalog.create_branch("richard.debug", "main", author="richard")
+    """
+
+    def __init__(self, root, *, protect_main: bool = True, clock=None):
+        import time as _time
+
+        clock = clock or _time.time
+        self.store = ObjectStore(root)
+        self.catalog = Catalog(self.store, protect_main=protect_main,
+                               clock=clock)
+        self.io = TableIO(self.store)
+        self.ledger = RunLedger(self.store, clock=clock)
+
+    # thin facades used across examples / benchmarks -------------------------
+    def write_table(self, branch: str, name: str, cols, *, author="system",
+                    message=None) -> str:
+        snap = self.io.write_snapshot(cols)
+        self.catalog.commit(branch, {name: snap},
+                            message or f"write {name}", author=author)
+        return snap
+
+    def read_table(self, ref: str, name: str, columns=None):
+        return self.io.read(self.catalog.snapshot_of(ref, name), columns)
+
+    def run(self, pipeline: Pipeline, *, branch: str, author="system",
+            config=None, seed=None, mesh=None) -> RunResult:
+        return run_pipeline(pipeline, self.catalog, self.io, self.ledger,
+                            branch=branch, author=author, config=config,
+                            seed=seed, mesh=mesh)
+
+    def replay(self, run_id: str, pipeline: Pipeline, *, branch: str,
+               author="system", **kw) -> ReplayReport:
+        return self.ledger.replay(run_id, pipeline, self.catalog, self.io,
+                                  branch=branch, author=author, **kw)
+
+
+__all__ = [
+    "Lake", "Catalog", "Commit", "ObjectStore", "TableIO", "Snapshot",
+    "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
+    "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
+    "ReplayReport", "Expectation", "expectation", "audit", "publish",
+    "AuditReport", "not_empty", "no_nans", "column_range", "col", "lit",
+    "Expr", "select", "where", "nrows", "sha256_hex", "code_hash_of",
+    "mesh_fingerprint", "runtime_fingerprint",
+    # errors
+    "ReproError", "ObjectNotFound", "RefNotFound", "RefConflict",
+    "TableNotFound", "SchemaError", "MergeConflict", "PermissionDenied",
+    "CycleError", "ExpectationFailed", "CodeDrift", "RunNotFound",
+]

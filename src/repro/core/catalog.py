@@ -1,0 +1,316 @@
+"""Nessie-style catalog: Git semantics over tables (paper §3.3, Fig. 4).
+
+A *commit* is an immutable, content-addressed, multi-table transaction:
+
+    { parents: [digest...], tables: {name: snapshot_digest}, message,
+      author, ts, meta }
+
+Branches are mutable refs (name → commit digest) updated with compare-and-set,
+which gives the catalog the transactional behavior the paper needs for data
+pipelines.  Branching is **copy-on-write**: creating a branch writes one ref —
+no table data is copied regardless of size (benchmarked in
+``benchmarks/bench_branching.py``).
+
+Namespacing follows the paper's ``user.branch`` convention: everyone can read
+any branch, only ``user`` can write ``user.*``; ``main`` accepts only merges
+that went through write-audit-publish (see ``wap.py``) unless the catalog is
+created with ``protect_main=False``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Set
+
+import msgpack
+
+from .errors import (MergeConflict, ObjectNotFound, PermissionDenied,
+                     RefNotFound, ReproError)
+from .store import ObjectStore
+
+_BRANCH_PREFIX = "branch="
+_TAG_PREFIX = "tag="
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+@dataclass(frozen=True)
+class Commit:
+    parents: tuple
+    tables: Dict[str, str]  # table name -> snapshot digest
+    message: str
+    author: str
+    ts: float
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def to_obj(self):
+        return {
+            "parents": list(self.parents),
+            "tables": dict(sorted(self.tables.items())),
+            "message": self.message,
+            "author": self.author,
+            "ts": self.ts,
+            "meta": self.meta,
+        }
+
+    @staticmethod
+    def from_obj(o) -> "Commit":
+        return Commit(tuple(o["parents"]), dict(o["tables"]), o["message"],
+                      o["author"], o["ts"], o.get("meta", {}))
+
+
+class Catalog:
+    def __init__(self, store: ObjectStore, *, protect_main: bool = True,
+                 clock: Callable[[], float] = time.time):
+        self.store = store
+        self.protect_main = protect_main
+        self.clock = clock
+        try:
+            self.store.get_ref(_BRANCH_PREFIX + "main")
+        except RefNotFound:
+            root = Commit((), {}, "repository root", "system", self.clock())
+            self.store.set_ref(_BRANCH_PREFIX + "main",
+                               self.store.put(_pack(root.to_obj())))
+
+    # -------------------------------------------------------------- plumbing
+    def _load_commit(self, digest: str) -> Commit:
+        return Commit.from_obj(_unpack(self.store.get(digest)))
+
+    def _store_commit(self, commit: Commit) -> str:
+        return self.store.put(_pack(commit.to_obj()))
+
+    def head(self, branch: str) -> str:
+        return self.store.get_ref(_BRANCH_PREFIX + branch)
+
+    def branches(self) -> List[str]:
+        return [r[len(_BRANCH_PREFIX):] for r in self.store.iter_refs()
+                if r.startswith(_BRANCH_PREFIX)]
+
+    def tags(self) -> List[str]:
+        return [r[len(_TAG_PREFIX):] for r in self.store.iter_refs()
+                if r.startswith(_TAG_PREFIX)]
+
+    # --------------------------------------------------------------- resolve
+    def resolve(self, ref: str) -> str:
+        """Resolve branch / tag / commit digest / time-travel spec.
+
+        Time travel (paper §5 "travels back in time"):
+          ``main@1718000000``  — last commit on main at/before unix ts
+          ``main~3``           — 3 first-parent steps back from main head
+        """
+        if "@" in ref:
+            base, ts = ref.split("@", 1)
+            return self._at_time(self.resolve(base), float(ts))
+        if "~" in ref:
+            base, n = ref.split("~", 1)
+            digest = self.resolve(base)
+            for _ in range(int(n)):
+                parents = self._load_commit(digest).parents
+                if not parents:
+                    raise RefNotFound(f"{ref}: ran out of history")
+                digest = parents[0]
+            return digest
+        try:
+            return self.head(ref)
+        except RefNotFound:
+            pass
+        try:
+            return self.store.get_ref(_TAG_PREFIX + ref)
+        except RefNotFound:
+            pass
+        if self.store.has(ref):
+            return ref
+        # commit digest prefix
+        matches = [d for d in self.store.iter_objects() if d.startswith(ref)]
+        if len(matches) == 1:
+            return matches[0]
+        raise RefNotFound(ref)
+
+    def _at_time(self, digest: str, ts: float) -> str:
+        cur: Optional[str] = digest
+        while cur is not None:
+            c = self._load_commit(cur)
+            if c.ts <= ts:
+                return cur
+            cur = c.parents[0] if c.parents else None
+        raise RefNotFound(f"no commit at/before ts={ts}")
+
+    # ---------------------------------------------------------------- policy
+    @staticmethod
+    def branch_owner(branch: str) -> Optional[str]:
+        return branch.split(".", 1)[0] if "." in branch else None
+
+    def _check_write(self, branch: str, author: str, *, wap_token: bool):
+        if branch == "main":
+            if self.protect_main and not wap_token:
+                raise PermissionDenied(
+                    "main is write-audit-publish protected; use wap.publish()")
+            return
+        owner = self.branch_owner(branch)
+        if owner is not None and owner != author:
+            raise PermissionDenied(
+                f"{author!r} cannot write to {branch!r} (owner {owner!r})")
+
+    # ---------------------------------------------------------------- writes
+    def create_branch(self, name: str, from_ref: str = "main", *,
+                      author: str = "system") -> str:
+        """Copy-on-write branch: one ref write, zero data copies (§5.4)."""
+        if name != "main" and self.branch_owner(name) not in (None, author):
+            raise PermissionDenied(f"{author!r} cannot create {name!r}")
+        if name in self.branches():
+            raise ReproError(f"branch {name!r} exists")
+        digest = self.resolve(from_ref)
+        self.store.set_ref(_BRANCH_PREFIX + name, digest)
+        return digest
+
+    def delete_branch(self, name: str) -> None:
+        if name == "main":
+            raise PermissionDenied("cannot delete main")
+        self.store.delete_ref(_BRANCH_PREFIX + name)
+
+    def create_tag(self, name: str, ref: str) -> str:
+        digest = self.resolve(ref)
+        self.store.set_ref(_TAG_PREFIX + name, digest)
+        return digest
+
+    def commit(
+        self,
+        branch: str,
+        table_updates: Mapping[str, Optional[str]],
+        message: str,
+        *,
+        author: str = "system",
+        meta: Optional[Dict[str, Any]] = None,
+        _wap_token: bool = False,
+    ) -> str:
+        """Multi-table transaction: atomically update snapshot pointers on a
+        branch.  ``None`` as snapshot digest deletes the table."""
+        self._check_write(branch, author, wap_token=_wap_token)
+        old_head = self.head(branch)
+        tables = dict(self._load_commit(old_head).tables)
+        for name, snap in table_updates.items():
+            if snap is None:
+                tables.pop(name, None)
+            else:
+                tables[name] = snap
+        commit = Commit((old_head,), tables, message, author, self.clock(),
+                        meta or {})
+        digest = self._store_commit(commit)
+        self.store.cas_ref(_BRANCH_PREFIX + branch, old_head, digest)
+        return digest
+
+    # ----------------------------------------------------------------- reads
+    def tables(self, ref: str) -> Dict[str, str]:
+        return dict(self._load_commit(self.resolve(ref)).tables)
+
+    def snapshot_of(self, ref: str, table: str) -> str:
+        tables = self.tables(ref)
+        if table not in tables:
+            from .errors import TableNotFound
+            raise TableNotFound(f"{table!r} not in {ref!r}")
+        return tables[table]
+
+    def log(self, ref: str, *, first_parent: bool = True) -> List[str]:
+        out, cur = [], self.resolve(ref)
+        seen: Set[str] = set()
+        stack = [cur]
+        while stack:
+            digest = stack.pop(0)
+            if digest in seen:
+                continue
+            seen.add(digest)
+            out.append(digest)
+            parents = self._load_commit(digest).parents
+            if first_parent:
+                stack.extend(parents[:1])
+            else:
+                stack.extend(parents)
+        return out
+
+    def commit_info(self, ref: str) -> Commit:
+        return self._load_commit(self.resolve(ref))
+
+    # ----------------------------------------------------------------- merge
+    def _ancestors(self, digest: str) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [digest]
+        while stack:
+            d = stack.pop()
+            if d in seen:
+                continue
+            seen.add(d)
+            stack.extend(self._load_commit(d).parents)
+        return seen
+
+    def merge_base(self, a: str, b: str) -> Optional[str]:
+        """Lowest common ancestor (first found walking a's history by ts)."""
+        anc_b = self._ancestors(b)
+        best, best_ts = None, -1.0
+        for d in self._ancestors(a):
+            if d in anc_b:
+                ts = self._load_commit(d).ts
+                if ts > best_ts:
+                    best, best_ts = d, ts
+        return best
+
+    def merge(self, src_ref: str, dst_branch: str, *, author: str = "system",
+              message: Optional[str] = None, _wap_token: bool = False) -> str:
+        """Fast-forward when possible, else 3-way at table granularity.
+
+        Conflict rule (Nessie semantics): a table changed on *both* sides
+        since the merge base conflicts unless both sides reached the same
+        snapshot.
+        """
+        self._check_write(dst_branch, author, wap_token=_wap_token)
+        src = self.resolve(src_ref)
+        dst = self.head(dst_branch)
+        if src == dst:
+            return dst
+        if dst in self._ancestors(src):  # fast-forward
+            self.store.cas_ref(_BRANCH_PREFIX + dst_branch, dst, src)
+            return src
+        base = self.merge_base(src, dst)
+        base_tables = self._load_commit(base).tables if base else {}
+        src_tables = self._load_commit(src).tables
+        dst_tables = self._load_commit(dst).tables
+        conflicts, merged = [], dict(dst_tables)
+        for name in sorted(set(base_tables) | set(src_tables) | set(dst_tables)):
+            b = base_tables.get(name)
+            s = src_tables.get(name)
+            d = dst_tables.get(name)
+            if s == d:
+                continue
+            src_changed, dst_changed = (s != b), (d != b)
+            if src_changed and dst_changed:
+                conflicts.append(name)
+            elif src_changed:
+                if s is None:
+                    merged.pop(name, None)
+                else:
+                    merged[name] = s
+        if conflicts:
+            raise MergeConflict(conflicts)
+        commit = Commit(
+            (dst, src), merged,
+            message or f"merge {src_ref} into {dst_branch}",
+            author, self.clock(), {"merge_base": base},
+        )
+        digest = self._store_commit(commit)
+        self.store.cas_ref(_BRANCH_PREFIX + dst_branch, dst, digest)
+        return digest
+
+    def diff(self, ref_a: str, ref_b: str) -> Dict[str, tuple]:
+        """Tables whose snapshot differs between two refs."""
+        ta, tb = self.tables(ref_a), self.tables(ref_b)
+        out = {}
+        for name in sorted(set(ta) | set(tb)):
+            if ta.get(name) != tb.get(name):
+                out[name] = (ta.get(name), tb.get(name))
+        return out

@@ -1,0 +1,53 @@
+"""Exception hierarchy for the repro core (catalog / store / pipeline)."""
+
+
+class ReproError(Exception):
+    """Base class for all repro errors."""
+
+
+class ObjectNotFound(ReproError):
+    """A content-addressed object is missing from the store."""
+
+
+class RefNotFound(ReproError):
+    """A branch/tag ref does not exist."""
+
+
+class RefConflict(ReproError):
+    """Compare-and-set on a ref failed (concurrent writer)."""
+
+
+class TableNotFound(ReproError):
+    """A table is not present in the commit being read."""
+
+
+class SchemaError(ReproError):
+    """Schema mismatch between producer and consumer."""
+
+
+class MergeConflict(ReproError):
+    """Three-way merge found tables changed on both sides."""
+
+    def __init__(self, tables):
+        self.tables = list(tables)
+        super().__init__(f"merge conflict on tables: {self.tables}")
+
+
+class PermissionDenied(ReproError):
+    """Namespace policy rejected a write."""
+
+
+class CycleError(ReproError):
+    """The pipeline DAG has a cycle."""
+
+
+class ExpectationFailed(ReproError):
+    """A write-audit-publish expectation failed."""
+
+
+class CodeDrift(ReproError):
+    """Replay requested but the registered node code differs from the run manifest."""
+
+
+class RunNotFound(ReproError):
+    """Unknown run id in the ledger."""

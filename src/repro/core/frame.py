@@ -1,0 +1,140 @@
+"""Minimal columnar-frame expression layer for declarative (SQL-style) nodes.
+
+The paper's Listing 1 is a SQL node; the point it demonstrates is *declarative
+multi-language nodes with implicit parents*, not SQL parsing.  We keep the
+declarative power (projection + row filter over named columns) as a small
+expression tree whose canonical form is hashable — so SQL-style nodes get the
+same code-versioning guarantees as Python nodes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping
+
+import numpy as np
+
+from .errors import SchemaError
+
+Frame = Dict[str, np.ndarray]
+
+
+class Expr:
+    """Tiny expression tree over columns: ``col('x') > 5 & col('y') == 0``."""
+
+    def __init__(self, op: str, args: tuple):
+        self.op = op
+        self.args = args
+
+    # -- construction sugar -------------------------------------------------
+    def _bin(self, op: str, other) -> "Expr":
+        return Expr(op, (self, _lift(other)))
+
+    def __add__(self, o):
+        return self._bin("add", o)
+
+    def __sub__(self, o):
+        return self._bin("sub", o)
+
+    def __mul__(self, o):
+        return self._bin("mul", o)
+
+    def __truediv__(self, o):
+        return self._bin("div", o)
+
+    def __gt__(self, o):
+        return self._bin("gt", o)
+
+    def __ge__(self, o):
+        return self._bin("ge", o)
+
+    def __lt__(self, o):
+        return self._bin("lt", o)
+
+    def __le__(self, o):
+        return self._bin("le", o)
+
+    def __eq__(self, o):  # type: ignore[override]
+        return self._bin("eq", o)
+
+    def __ne__(self, o):  # type: ignore[override]
+        return self._bin("ne", o)
+
+    def __and__(self, o):
+        return self._bin("and", o)
+
+    def __or__(self, o):
+        return self._bin("or", o)
+
+    def __invert__(self):
+        return Expr("not", (self,))
+
+    def __hash__(self):  # Exprs go into canonical specs
+        return hash(self.canonical())
+
+    # -- evaluation / canonicalization --------------------------------------
+    def evaluate(self, frame: Mapping[str, np.ndarray]) -> np.ndarray:
+        return _eval(self, frame)
+
+    def canonical(self) -> str:
+        return _canon(self)
+
+
+def col(name: str) -> Expr:
+    return Expr("col", (name,))
+
+
+def lit(value: Any) -> Expr:
+    return Expr("lit", (value,))
+
+
+def _lift(x) -> Expr:
+    return x if isinstance(x, Expr) else lit(x)
+
+
+_BINOPS = {
+    "add": np.add, "sub": np.subtract, "mul": np.multiply,
+    "div": np.divide, "gt": np.greater, "ge": np.greater_equal,
+    "lt": np.less, "le": np.less_equal, "eq": np.equal, "ne": np.not_equal,
+    "and": np.logical_and, "or": np.logical_or,
+}
+
+
+def _eval(e: Expr, frame: Mapping[str, np.ndarray]) -> np.ndarray:
+    if e.op == "col":
+        name = e.args[0]
+        if name not in frame:
+            raise SchemaError(f"unknown column {name!r}")
+        return np.asarray(frame[name])
+    if e.op == "lit":
+        return np.asarray(e.args[0])
+    if e.op == "not":
+        return np.logical_not(_eval(e.args[0], frame))
+    if e.op in _BINOPS:
+        return _BINOPS[e.op](_eval(e.args[0], frame), _eval(e.args[1], frame))
+    raise SchemaError(f"unknown expr op {e.op!r}")
+
+
+def _canon(e: Expr) -> str:
+    if e.op in ("col", "lit"):
+        return f"{e.op}({e.args[0]!r})"
+    return f"{e.op}({','.join(_canon(a) for a in e.args)})"
+
+
+def select(frame: Frame, columns: List[str]) -> Frame:
+    missing = [c for c in columns if c not in frame]
+    if missing:
+        raise SchemaError(f"missing columns {missing}")
+    return {c: frame[c] for c in columns}
+
+
+def where(frame: Frame, predicate: Expr) -> Frame:
+    mask = predicate.evaluate(frame)
+    if mask.dtype != np.bool_ or mask.ndim != 1:
+        raise SchemaError("predicate must evaluate to a 1-D boolean mask")
+    return {k: v[mask] for k, v in frame.items()}
+
+
+def nrows(frame: Frame) -> int:
+    if not frame:
+        return 0
+    return next(iter(frame.values())).shape[0]

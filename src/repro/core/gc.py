@@ -1,0 +1,97 @@
+"""Mark-and-sweep garbage collection for the tensor lake.
+
+Immutable content-addressed objects accumulate forever (every commit,
+snapshot, tensorfile and run manifest).  Real lakehouses expire unreachable
+data; here: roots = every branch/tag head + every run-ledger link; mark =
+walk commits → snapshots → manifest files (+ run manifests → result
+commits); sweep = delete unmarked objects.
+
+Because branches are the only mutable state, deleting a branch is what makes
+its unique history collectable — a paper-consistent retention story
+(nothing reachable from a ref is ever collected, so replayability of
+*recorded* runs survives GC as long as their ledger links remain).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Set
+
+import msgpack
+
+from .catalog import _BRANCH_PREFIX, _TAG_PREFIX, Catalog, Commit
+from .ledger import _RUNS_HEAD
+from .store import ObjectStore
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+@dataclass
+class GCReport:
+    live: int
+    swept: int
+    bytes_freed: int
+
+
+def _mark_commit(store: ObjectStore, digest: str, live: Set[str]):
+    stack = [digest]
+    while stack:
+        d = stack.pop()
+        if d in live or not store.has(d):
+            continue
+        live.add(d)
+        commit = Commit.from_obj(_unpack(store.get(d)))
+        stack.extend(commit.parents)
+        for snap_digest in commit.tables.values():
+            _mark_snapshot(store, snap_digest, live)
+
+
+def _mark_snapshot(store: ObjectStore, digest: str, live: Set[str]):
+    while digest is not None and digest not in live:
+        if not store.has(digest):
+            return
+        live.add(digest)
+        snap = _unpack(store.get(digest))
+        for entry in snap.get("manifest", []):
+            live.add(entry[0])  # tensorfile digest
+        digest = snap.get("parent")
+
+
+def collect(store: ObjectStore, *, dry_run: bool = False) -> GCReport:
+    """Mark from all refs; sweep unreachable objects."""
+    live: Set[str] = set()
+    for ref in store.iter_refs():
+        head = store.get_ref(ref)
+        if ref.startswith((_BRANCH_PREFIX, _TAG_PREFIX)):
+            _mark_commit(store, head, live)
+        elif ref == _RUNS_HEAD:  # run-ledger chain: links + manifests
+            cur = head
+            while cur is not None and store.has(cur):
+                if cur in live:
+                    break
+                live.add(cur)
+                link = _unpack(store.get(cur))
+                manifest_digest = link.get("manifest")
+                if manifest_digest and store.has(manifest_digest):
+                    live.add(manifest_digest)
+                    manifest = _unpack(store.get(manifest_digest))
+                    for c in (manifest.get("data_commit"),
+                              manifest.get("result_commit")):
+                        if c:
+                            _mark_commit(store, c, live)
+                    for snap in manifest.get("outputs", {}).values():
+                        _mark_snapshot(store, snap, live)
+                cur = link.get("prev")
+
+    swept = 0
+    freed = 0
+    for digest in list(store.iter_objects()):
+        if digest in live:
+            continue
+        freed += store.size(digest)
+        if not dry_run:
+            store._path(digest).unlink()
+        swept += 1
+    return GCReport(live=len(live), swept=swept, bytes_freed=freed)

@@ -1,0 +1,229 @@
+"""Immutable runs + replay (paper §4–5): every run gets a ``run_id`` that
+uniquely pins the combination of code, config, runtime and input-data commit —
+``bauplan run --id=1441804`` becomes ``ledger.replay(run_id, ...)``.
+
+The run manifest covers all four rows of the paper's Table 1:
+
+    input data -> data_commit (catalog commit digest at read time)
+    code       -> per-node code hashes + pipeline hash
+    runtime    -> python/jax versions + node runtime pins (pip={...})
+    hardware   -> mesh fingerprint (device kind, axis names, shape)
+
+Replay = checkout a debug branch at ``data_commit``, re-execute the same code,
+and (optionally) verify output digests are bit-identical to the original run.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import platform
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import msgpack
+
+from .catalog import Catalog
+from .errors import CodeDrift, RefNotFound, RunNotFound
+from .pipeline import Pipeline, RunResult, execute
+from .store import ObjectStore
+from .table import TableIO
+
+_RUNS_HEAD = "runs-head"
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+def runtime_fingerprint() -> Dict[str, str]:
+    fp = {
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+    }
+    try:
+        import jax
+
+        fp["jax"] = jax.__version__
+    except ImportError:  # pragma: no cover
+        pass
+    return fp
+
+
+def mesh_fingerprint(mesh=None) -> Dict[str, Any]:
+    """Hardware row of Table 1, TPU edition."""
+    if mesh is None:
+        return {"kind": "unspecified"}
+    return {
+        "kind": str(getattr(mesh.devices.flat[0], "device_kind", "cpu")),
+        "shape": dict(mesh.shape),
+        "axes": list(mesh.axis_names),
+        "n_devices": int(mesh.devices.size),
+    }
+
+
+@dataclass
+class ReplayReport:
+    run_id: str
+    replay_run_id: str
+    branch: str
+    bit_exact: bool
+    diffs: Dict[str, tuple] = field(default_factory=dict)
+
+
+class RunLedger:
+    """Append-only chain of run manifests in the object store."""
+
+    def __init__(self, store: ObjectStore, clock=time.time):
+        self.store = store
+        self.clock = clock
+
+    # ---------------------------------------------------------------- record
+    def record(
+        self,
+        *,
+        pipeline: Pipeline,
+        data_commit: str,
+        result_commit: str,
+        branch: str,
+        outputs: Dict[str, str],
+        config: Optional[Dict[str, Any]] = None,
+        seed: Optional[int] = None,
+        mesh=None,
+        parent_run: Optional[str] = None,
+        kind: str = "pipeline",
+    ) -> str:
+        manifest = {
+            "kind": kind,
+            "code": pipeline.code_manifest(),
+            "pipeline_hash": pipeline.code_hash(),
+            "node_runtime": {n.name: n.runtime
+                             for n in pipeline.nodes.values() if n.runtime},
+            "data_commit": data_commit,
+            "result_commit": result_commit,
+            "branch": branch,
+            "outputs": dict(sorted(outputs.items())),
+            "config": config or {},
+            "seed": seed,
+            "runtime": runtime_fingerprint(),
+            "hardware": mesh_fingerprint(mesh),
+            "parent_run": parent_run,
+            "ts": self.clock(),
+        }
+        blob = _pack(manifest)
+        run_id = hashlib.sha256(blob).hexdigest()[:16]
+        payload_digest = self.store.put(blob)
+        # append to the run chain (enumerable history of all runs)
+        try:
+            prev = self.store.get_ref(_RUNS_HEAD)
+        except RefNotFound:
+            prev = None
+        link = self.store.put(_pack({"run_id": run_id,
+                                     "manifest": payload_digest,
+                                     "prev": prev}))
+        self.store.set_ref(_RUNS_HEAD, link)
+        return run_id
+
+    # ------------------------------------------------------------------ read
+    def _iter_links(self):
+        try:
+            cur: Optional[str] = self.store.get_ref(_RUNS_HEAD)
+        except RefNotFound:
+            return
+        while cur is not None:
+            link = _unpack(self.store.get(cur))
+            yield link
+            cur = link["prev"]
+
+    def runs(self) -> List[str]:
+        return [link["run_id"] for link in self._iter_links()]
+
+    def get(self, run_id: str) -> Dict[str, Any]:
+        for link in self._iter_links():
+            if link["run_id"] == run_id or link["run_id"].startswith(run_id):
+                return _unpack(self.store.get(link["manifest"]))
+        raise RunNotFound(run_id)
+
+    # ---------------------------------------------------------------- replay
+    def replay(
+        self,
+        run_id: str,
+        pipeline: Pipeline,
+        catalog: Catalog,
+        io: TableIO,
+        *,
+        branch: str,
+        author: str = "system",
+        allow_code_drift: bool = False,
+        verify: bool = True,
+    ) -> ReplayReport:
+        """Re-execute a past run into a (new) debug branch — use case #2.
+
+        1) time-travel: the debug branch is created at the run's data commit;
+        2) code check: the supplied pipeline must hash-match the manifest
+           (the paper pins code via its API; we verify and refuse on drift);
+        3) re-run + record, and compare output digests to the original.
+        """
+        manifest = self.get(run_id)
+        recorded = manifest["code"]
+        current = pipeline.code_manifest()
+        if recorded != current and not allow_code_drift:
+            drifted = sorted(k for k in set(recorded) | set(current)
+                             if recorded.get(k) != current.get(k))
+            raise CodeDrift(f"nodes changed since run {run_id}: {drifted}")
+        if branch not in catalog.branches():
+            catalog.create_branch(branch, manifest["data_commit"],
+                                  author=author)
+        outputs = execute(pipeline, catalog, io, branch=branch, author=author,
+                          params=manifest["config"].get("params"),
+                          read_ref=manifest["data_commit"])
+        replay_id = self.record(
+            pipeline=pipeline,
+            data_commit=manifest["data_commit"],
+            result_commit=catalog.head(branch),
+            branch=branch,
+            outputs=outputs,
+            config=manifest["config"],
+            seed=manifest["seed"],
+            parent_run=run_id,
+            kind="replay",
+        )
+        diffs = {}
+        if verify:
+            for name, digest in manifest["outputs"].items():
+                new = outputs.get(name)
+                if new != digest:
+                    diffs[name] = (digest, new)
+        return ReplayReport(run_id=run_id, replay_run_id=replay_id,
+                            branch=branch, bit_exact=not diffs, diffs=diffs)
+
+
+def run_pipeline(
+    pipeline: Pipeline,
+    catalog: Catalog,
+    io: TableIO,
+    ledger: RunLedger,
+    *,
+    branch: str,
+    author: str = "system",
+    config: Optional[Dict[str, Any]] = None,
+    seed: Optional[int] = None,
+    mesh=None,
+) -> RunResult:
+    """``bauplan run``: execute + record, returning the run id."""
+    data_commit = catalog.head(branch)
+    outputs = execute(pipeline, catalog, io, branch=branch, author=author,
+                      params=(config or {}).get("params"))
+    result_commit = catalog.head(branch)
+    run_id = ledger.record(
+        pipeline=pipeline, data_commit=data_commit,
+        result_commit=result_commit, branch=branch, outputs=outputs,
+        config=config, seed=seed, mesh=mesh,
+    )
+    return RunResult(run_id=run_id, commit=result_commit, branch=branch,
+                     outputs=outputs)

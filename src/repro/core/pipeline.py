@@ -1,0 +1,247 @@
+"""Functional DAG pipelines (paper §2): nodes are dataframes, edges are pure
+transformation functions, parents are declared *implicitly* by referencing the
+parent's name — exactly the ergonomics of Listings 1–2:
+
+    @model()
+    def training_data(data=Model("final_table")):
+        ...
+        return {"x": ..., "y": ...}
+
+    final_table = sql_model(
+        "final_table", select=["c1", "c2", "c3"], frm="source_table",
+        where=col("transaction_ts") >= lit(CUTOFF))
+
+Each node's *code version* is hashed (Python source / canonical SQL spec) and
+recorded per run, which is half of the paper's reproducibility contract (the
+other half, the data commit, comes from the catalog).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import textwrap
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from . import frame as F
+from .catalog import Catalog
+from .errors import CycleError, ReproError, SchemaError, TableNotFound
+from .frame import Expr
+from .table import TableIO
+
+
+class Model:
+    """A named reference to a parent DAG node / source table (bauplan.Model)."""
+
+    def __init__(self, name: str, columns: Optional[Sequence[str]] = None):
+        self.name = name
+        self.columns = list(columns) if columns else None
+
+    def __repr__(self):
+        return f"Model({self.name!r})"
+
+
+def _hash_text(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def code_hash_of(fn: Callable) -> str:
+    """Stable hash of a node's transformation code."""
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+    except (OSError, TypeError):  # dynamically built fn — hash its repr chain
+        src = repr(fn)
+    return _hash_text(src)
+
+
+@dataclass
+class Node:
+    name: str
+    fn: Callable[..., Mapping[str, np.ndarray]]
+    deps: List[str]
+    dep_params: Dict[str, Model]
+    code_hash: str
+    materialize: bool = True
+    runtime: Dict[str, Any] = field(default_factory=dict)  # pinned deps (Listing 2)
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+def model(name: Optional[str] = None, *, materialize: bool = True,
+          python: Optional[str] = None, pip: Optional[Dict[str, str]] = None):
+    """Decorator turning a function into a DAG node.
+
+    ``python=``/``pip=`` mirror Listing 2's runtime pinning: the values are
+    recorded in the node's runtime manifest (on TPU the actual enforcement is
+    the jaxpr/HLO fingerprint — see DESIGN.md §2.2)."""
+
+    def deco(fn: Callable) -> Node:
+        sig = inspect.signature(fn)
+        dep_params: Dict[str, Model] = {}
+        for pname, p in sig.parameters.items():
+            if isinstance(p.default, Model):
+                dep_params[pname] = p.default
+        node_name = name or fn.__name__
+        runtime = {}
+        if python:
+            runtime["python"] = python
+        if pip:
+            runtime["pip"] = dict(pip)
+        return Node(
+            name=node_name,
+            fn=fn,
+            deps=[m.name for m in dep_params.values()],
+            dep_params=dep_params,
+            code_hash=code_hash_of(fn),
+            materialize=materialize,
+            runtime=runtime,
+        )
+
+    return deco
+
+
+def sql_model(name: str, *, select: Sequence[str], frm: str,
+              where: Optional[Expr] = None, materialize: bool = True) -> Node:
+    """Declarative (SQL-style) node: projection + row filter (Listing 1)."""
+    spec = (f"SELECT {','.join(select)} FROM {frm}"
+            + (f" WHERE {where.canonical()}" if where is not None else ""))
+
+    def fn(**inputs):
+        parent = inputs["data"]
+        out = parent if where is None else F.where(parent, where)
+        return F.select(out, list(select))
+
+    node = Node(
+        name=name, fn=lambda data: fn(data=data), deps=[frm],
+        dep_params={"data": Model(frm)}, code_hash=_hash_text(spec),
+        materialize=materialize, runtime={"lang": "sql", "spec": spec},
+    )
+    return node
+
+
+class Pipeline:
+    """A DAG of nodes.  ``run()`` is in ``runtime/executor.py`` — the pipeline
+    itself only knows structure (names, edges, code hashes)."""
+
+    def __init__(self, nodes: Sequence[Node]):
+        self.nodes: Dict[str, Node] = {}
+        for n in nodes:
+            if n.name in self.nodes:
+                raise ReproError(f"duplicate node {n.name!r}")
+            self.nodes[n.name] = n
+        self.order = self._topo_sort()
+
+    def _topo_sort(self) -> List[str]:
+        internal = set(self.nodes)
+        indeg = {n: 0 for n in internal}
+        children: Dict[str, List[str]] = {n: [] for n in internal}
+        for n in self.nodes.values():
+            for d in n.deps:
+                if d in internal:
+                    indeg[n.name] += 1
+                    children[d].append(n.name)
+        ready = sorted(n for n, k in indeg.items() if k == 0)
+        order: List[str] = []
+        while ready:
+            cur = ready.pop(0)
+            order.append(cur)
+            for ch in sorted(children[cur]):
+                indeg[ch] -= 1
+                if indeg[ch] == 0:
+                    ready.append(ch)
+            ready.sort()
+        if len(order) != len(internal):
+            stuck = sorted(internal - set(order))
+            raise CycleError(f"cycle through {stuck}")
+        return order
+
+    def source_tables(self) -> List[str]:
+        """External tables the DAG reads (must exist on the branch)."""
+        internal = set(self.nodes)
+        out: List[str] = []
+        for n in self.nodes.values():
+            out.extend(d for d in n.deps if d not in internal)
+        return sorted(set(out))
+
+    def code_manifest(self) -> Dict[str, str]:
+        return {name: self.nodes[name].code_hash for name in self.order}
+
+    def code_hash(self) -> str:
+        return _hash_text(repr(sorted(self.code_manifest().items())))
+
+
+@dataclass
+class RunResult:
+    run_id: str
+    commit: str
+    branch: str
+    outputs: Dict[str, str]  # node name -> snapshot digest
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+def execute(
+    pipeline: Pipeline,
+    catalog: Catalog,
+    io: TableIO,
+    *,
+    branch: str,
+    author: str = "system",
+    params: Optional[Dict[str, Any]] = None,
+    read_ref: Optional[str] = None,
+) -> Dict[str, str]:
+    """Run the DAG against a branch: read parents from ``read_ref`` (defaults
+    to the branch head), evaluate nodes in topological order, materialize
+    outputs and commit them as ONE multi-table transaction (paper §3:
+    multi-table transactions are crucial for pipelines).
+
+    Returns {node name -> snapshot digest}.  Ledger bookkeeping (run ids,
+    replay) lives in ``ledger.py`` on top of this primitive.
+    """
+    params = params or {}
+    read_ref = read_ref or branch
+    head_tables = catalog.tables(read_ref)
+    cache: Dict[str, Dict[str, np.ndarray]] = {}
+
+    def fetch(table: str) -> Dict[str, np.ndarray]:
+        if table in cache:
+            return cache[table]
+        if table not in head_tables:
+            raise TableNotFound(f"source table {table!r} not on {read_ref!r}")
+        cols = io.read(head_tables[table])
+        cache[table] = cols
+        return cols
+
+    outputs: Dict[str, str] = {}
+    for name in pipeline.order:
+        node = pipeline.nodes[name]
+        kwargs: Dict[str, Any] = {}
+        for pname, mref in node.dep_params.items():
+            data = fetch(mref.name)
+            if mref.columns:
+                data = F.select(data, mref.columns)
+            kwargs[pname] = data
+        sig = inspect.signature(node.fn)
+        for pname in sig.parameters:
+            if pname in params and pname not in kwargs:
+                kwargs[pname] = params[pname]
+        result = node.fn(**kwargs)
+        if not isinstance(result, Mapping) or not result:
+            raise SchemaError(
+                f"node {name!r} must return a non-empty column mapping")
+        result = {k: np.asarray(v) for k, v in result.items()}
+        cache[name] = result
+        if node.materialize:
+            outputs[name] = io.write_snapshot(result)
+
+    if outputs:
+        catalog.commit(
+            branch, outputs,
+            f"pipeline run: {', '.join(pipeline.order)}",
+            author=author,
+            meta={"pipeline_code": pipeline.code_hash()},
+        )
+    return outputs

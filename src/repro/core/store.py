@@ -1,0 +1,153 @@
+"""Content-addressed object store with S3-like key layout.
+
+This is the "S3" of the paper (Table 1, Fig. 2/3): every artifact — tensor
+files, table snapshots, commits, run manifests — is an immutable blob keyed by
+the sha-256 of its *uncompressed* content.  Immutability + content addressing
+is what makes branches copy-on-write and runs replayable.
+
+The filesystem backend mirrors an S3 key scheme (``objects/ab/cdef...``) so a
+real S3/GCS backend is a drop-in replacement of this one class.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Iterator, Optional
+
+import zstandard as zstd
+
+from .errors import ObjectNotFound, RefConflict, RefNotFound
+
+_MAGIC = b"RPR1"  # blob framing: magic + 1 byte codec id
+_CODEC_RAW = b"\x00"
+_CODEC_ZSTD = b"\x01"
+
+
+def sha256_hex(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+class ObjectStore:
+    """Immutable content-addressed blobs + mutable atomic refs.
+
+    Objects:  ``put(bytes) -> digest``; ``get(digest) -> bytes``.
+    Refs:     ``set_ref/get_ref/cas_ref`` — tiny mutable pointers used only by
+              the catalog for branch heads (everything else is immutable).
+    """
+
+    def __init__(self, root: str | os.PathLike, *, compress: bool = True,
+                 level: int = 3):
+        self.root = Path(root)
+        self.obj_dir = self.root / "objects"
+        self.ref_dir = self.root / "refs"
+        self.obj_dir.mkdir(parents=True, exist_ok=True)
+        self.ref_dir.mkdir(parents=True, exist_ok=True)
+        self.compress = compress
+        self._cctx = zstd.ZstdCompressor(level=level)
+        self._dctx = zstd.ZstdDecompressor()
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ blobs
+    def _path(self, digest: str) -> Path:
+        return self.obj_dir / digest[:2] / digest[2:]
+
+    def put(self, data: bytes) -> str:
+        digest = sha256_hex(data)
+        path = self._path(digest)
+        if path.exists():  # dedup: content addressing makes re-puts free
+            return digest
+        payload = (
+            _MAGIC + _CODEC_ZSTD + self._cctx.compress(data)
+            if self.compress and len(data) > 64
+            else _MAGIC + _CODEC_RAW + data
+        )
+        path.parent.mkdir(parents=True, exist_ok=True)
+        # Write-then-rename so readers never observe partial objects.
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return digest
+
+    def get(self, digest: str) -> bytes:
+        path = self._path(digest)
+        try:
+            payload = path.read_bytes()
+        except FileNotFoundError:
+            raise ObjectNotFound(digest) from None
+        if payload[:4] != _MAGIC:
+            raise ObjectNotFound(f"corrupt object {digest}")
+        codec, body = payload[4:5], payload[5:]
+        data = self._dctx.decompress(body) if codec == _CODEC_ZSTD else body
+        if sha256_hex(data) != digest:
+            raise ObjectNotFound(f"digest mismatch for {digest}")
+        return data
+
+    def has(self, digest: str) -> bool:
+        return self._path(digest).exists()
+
+    def size(self, digest: str) -> int:
+        """On-disk (compressed) size — used by benchmarks."""
+        try:
+            return self._path(digest).stat().st_size
+        except FileNotFoundError:
+            raise ObjectNotFound(digest) from None
+
+    def iter_objects(self) -> Iterator[str]:
+        for sub in sorted(self.obj_dir.iterdir()):
+            if not sub.is_dir():
+                continue
+            for obj in sorted(sub.iterdir()):
+                if not obj.name.startswith("."):
+                    yield sub.name + obj.name
+
+    # ------------------------------------------------------------------- refs
+    def _ref_path(self, name: str) -> Path:
+        if "/" in name or name.startswith("."):
+            raise ValueError(f"bad ref name {name!r}")
+        return self.ref_dir / name
+
+    def set_ref(self, name: str, digest: str) -> None:
+        path = self._ref_path(name)
+        fd, tmp = tempfile.mkstemp(dir=self.ref_dir, prefix=".tmp-")
+        with os.fdopen(fd, "w") as f:
+            f.write(digest)
+        os.replace(tmp, path)
+
+    def get_ref(self, name: str) -> str:
+        try:
+            return self._ref_path(name).read_text().strip()
+        except FileNotFoundError:
+            raise RefNotFound(name) from None
+
+    def cas_ref(self, name: str, expected: Optional[str], new: str) -> None:
+        """Compare-and-set a ref (atomicity of catalog commits)."""
+        with self._lock:
+            current: Optional[str]
+            try:
+                current = self.get_ref(name)
+            except RefNotFound:
+                current = None
+            if current != expected:
+                raise RefConflict(
+                    f"ref {name}: expected {expected!r}, found {current!r}")
+            self.set_ref(name, new)
+
+    def delete_ref(self, name: str) -> None:
+        try:
+            self._ref_path(name).unlink()
+        except FileNotFoundError:
+            raise RefNotFound(name) from None
+
+    def iter_refs(self) -> Iterator[str]:
+        for p in sorted(self.ref_dir.iterdir()):
+            if not p.name.startswith("."):
+                yield p.name

@@ -1,0 +1,174 @@
+"""Iceberg-style tables: snapshots + manifests over tensor files (Fig. 2, layer 3).
+
+A *snapshot* is an immutable, content-addressed metadata object:
+
+    { schema, manifest: [ {digest, nrows, nbytes, stats}, ... ],
+      parent: <snapshot digest | None>, op: "append"|"overwrite", seq }
+
+The level of indirection is exactly the paper's point (§3.2): users reason
+about schema evolution and table snapshots; inserts/updates produce a new
+immutable snapshot that downstream systems reference as a stable state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence
+
+import msgpack
+import numpy as np
+
+from . import tensorfile
+from .errors import SchemaError
+from .store import ObjectStore
+from .tensorfile import Schema
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+@dataclass(frozen=True)
+class ManifestEntry:
+    digest: str
+    nrows: int
+    nbytes: int
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    def to_obj(self):
+        return [self.digest, self.nrows, self.nbytes, self.stats]
+
+    @staticmethod
+    def from_obj(o):
+        return ManifestEntry(o[0], o[1], o[2], o[3])
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    schema: Schema
+    manifest: tuple  # tuple[ManifestEntry]
+    parent: Optional[str]
+    op: str
+    seq: int
+
+    @property
+    def nrows(self) -> int:
+        return sum(e.nrows for e in self.manifest)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self.manifest)
+
+    def to_obj(self):
+        return {
+            "schema": self.schema.to_obj(),
+            "manifest": [e.to_obj() for e in self.manifest],
+            "parent": self.parent,
+            "op": self.op,
+            "seq": self.seq,
+        }
+
+    @staticmethod
+    def from_obj(o) -> "Snapshot":
+        return Snapshot(
+            schema=Schema.from_obj(o["schema"]),
+            manifest=tuple(ManifestEntry.from_obj(e) for e in o["manifest"]),
+            parent=o["parent"],
+            op=o["op"],
+            seq=o["seq"],
+        )
+
+
+class TableIO:
+    """Write/read path between in-memory columns and snapshots.
+
+    write: columns → tensorfile blob(s) → manifest → snapshot digest
+    read:  snapshot digest → manifest → tensorfile blobs → columns
+    (the reversible hierarchy of Fig. 2).
+    """
+
+    def __init__(self, store: ObjectStore, *, target_rows_per_file: int = 65536):
+        self.store = store
+        self.target_rows_per_file = target_rows_per_file
+
+    # ------------------------------------------------------------------ write
+    def write_snapshot(
+        self,
+        cols: Mapping[str, np.ndarray],
+        *,
+        parent: Optional[str] = None,
+        op: str = "overwrite",
+    ) -> str:
+        """Persist columns as a new snapshot; returns the snapshot digest."""
+        entries: List[ManifestEntry] = []
+        schema: Optional[Schema] = None
+        seq = 0
+        if parent is not None:
+            parent_snap = self.load_snapshot(parent)
+            seq = parent_snap.seq + 1
+            if op == "append":
+                entries.extend(parent_snap.manifest)
+                schema = parent_snap.schema
+
+        for chunk in _row_chunks(cols, self.target_rows_per_file):
+            blob, meta = tensorfile.encode(chunk)
+            digest = self.store.put(blob)
+            chunk_schema = Schema.from_obj(meta["schema"])
+            if schema is None:
+                schema = chunk_schema
+            else:
+                schema.check_compatible(chunk_schema)
+            entries.append(
+                ManifestEntry(digest, meta["nrows"], meta["nbytes"], meta["stats"])
+            )
+        if schema is None:
+            raise SchemaError("empty snapshot")
+        snap = Snapshot(schema, tuple(entries), parent, op, seq)
+        return self.store.put(_pack(snap.to_obj()))
+
+    def append(self, parent: str, cols: Mapping[str, np.ndarray]) -> str:
+        return self.write_snapshot(cols, parent=parent, op="append")
+
+    # ------------------------------------------------------------------- read
+    def load_snapshot(self, digest: str) -> Snapshot:
+        return Snapshot.from_obj(_unpack(self.store.get(digest)))
+
+    def iter_files(self, digest: str) -> Iterator[Dict[str, np.ndarray]]:
+        snap = self.load_snapshot(digest)
+        for entry in snap.manifest:
+            yield tensorfile.decode(self.store.get(entry.digest))
+
+    def read(self, digest: str, columns: Optional[Sequence[str]] = None
+             ) -> Dict[str, np.ndarray]:
+        frames = list(self.iter_files(digest))
+        cols = tensorfile.concat(frames)
+        if columns is not None:
+            missing = set(columns) - cols.keys()
+            if missing:
+                raise SchemaError(f"missing columns {sorted(missing)}")
+            cols = {k: cols[k] for k in columns}
+        return cols
+
+    def history(self, digest: str) -> List[str]:
+        """Snapshot lineage, newest first (time travel within one table)."""
+        out, cur = [], digest
+        while cur is not None:
+            out.append(cur)
+            cur = self.load_snapshot(cur).parent
+        return out
+
+
+def _row_chunks(cols: Mapping[str, np.ndarray], rows_per_file: int):
+    arrays = {k: np.asarray(v) for k, v in cols.items()}
+    if not arrays:
+        raise SchemaError("no columns")
+    n = next(iter(arrays.values())).shape[0]
+    if n == 0:
+        raise SchemaError("empty columns")
+    for start in range(0, n, rows_per_file):
+        stop = min(start + rows_per_file, n)
+        yield {k: v[start:stop] for k, v in arrays.items()}

@@ -1,0 +1,124 @@
+"""Write-Audit-Publish (paper §5.5): branch → expectations → gated merge.
+
+Expectations are named boolean functions over dataframes ("typically called
+expectations... functions from dataframes to booleans").  In the training
+integration they also run over *metric tables* (e.g. "loss is finite and
+decreasing"), giving CI/CD semantics to model training itself.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .catalog import Catalog
+from .errors import ExpectationFailed, TableNotFound
+from .table import TableIO
+
+Frame = Mapping[str, np.ndarray]
+
+
+@dataclass(frozen=True)
+class Expectation:
+    name: str
+    table: str
+    fn: Callable[[Frame], bool]
+    description: str = ""
+
+
+def expectation(table: str, *, name: Optional[str] = None,
+                description: str = ""):
+    """Decorator: ``@expectation('training_data')`` over a frame→bool fn."""
+
+    def deco(fn: Callable[[Frame], bool]) -> Expectation:
+        return Expectation(name or fn.__name__, table, fn, description)
+
+    return deco
+
+
+@dataclass
+class AuditReport:
+    branch: str
+    commit: str
+    passed: bool
+    results: Dict[str, bool] = field(default_factory=dict)
+    errors: Dict[str, str] = field(default_factory=dict)
+
+
+def audit(catalog: Catalog, io: TableIO, branch: str,
+          expectations: Sequence[Expectation]) -> AuditReport:
+    """Run expectations against the branch head (the A of W-A-P)."""
+    commit = catalog.head(branch)
+    tables = catalog.tables(branch)
+    results: Dict[str, bool] = {}
+    errors: Dict[str, str] = {}
+    cache: Dict[str, Dict[str, np.ndarray]] = {}
+    for exp in expectations:
+        try:
+            if exp.table not in tables:
+                raise TableNotFound(exp.table)
+            if exp.table not in cache:
+                cache[exp.table] = io.read(tables[exp.table])
+            results[exp.name] = bool(exp.fn(cache[exp.table]))
+        except Exception as e:  # an erroring expectation fails the audit
+            results[exp.name] = False
+            errors[exp.name] = f"{type(e).__name__}: {e}"
+    return AuditReport(branch=branch, commit=commit,
+                       passed=all(results.values()) if results else True,
+                       results=results, errors=errors)
+
+
+def publish(catalog: Catalog, io: TableIO, src_branch: str,
+            expectations: Sequence[Expectation], *,
+            dst_branch: str = "main", author: str = "system",
+            clock=time.time) -> str:
+    """The P of W-A-P: merge into ``dst`` only if the audit passes.
+
+    This is the ONLY path that writes to a protected ``main`` — the audit
+    report is stamped into the merge commit metadata so the publication is
+    itself auditable."""
+    report = audit(catalog, io, src_branch, expectations)
+    if not report.passed:
+        failed = sorted(n for n, ok in report.results.items() if not ok)
+        raise ExpectationFailed(
+            f"audit failed on {src_branch}: {failed} "
+            f"(errors: {report.errors})")
+    # stamp the audit into a commit on the source branch, then merge
+    catalog.commit(
+        src_branch, {}, f"audit passed ({len(report.results)} expectations)",
+        author=author,
+        meta={"audit": {"results": report.results, "commit": report.commit,
+                        "ts": clock()}},
+    )
+    return catalog.merge(src_branch, dst_branch, author=author,
+                         _wap_token=True)
+
+
+# ----------------------------------------------------------- common checks
+def not_empty(table: str) -> Expectation:
+    return Expectation(f"{table}_not_empty", table,
+                       lambda f: all(v.shape[0] > 0 for v in f.values()),
+                       "table has rows")
+
+
+def no_nans(table: str, columns: Optional[Sequence[str]] = None) -> Expectation:
+    def fn(f: Frame) -> bool:
+        for k, v in f.items():
+            if columns is not None and k not in columns:
+                continue
+            if np.asarray(v).dtype.kind == "f" and np.isnan(v).any():
+                return False
+        return True
+
+    return Expectation(f"{table}_no_nans", table, fn, "no NaNs in float cols")
+
+
+def column_range(table: str, column: str, lo: float, hi: float) -> Expectation:
+    def fn(f: Frame) -> bool:
+        v = np.asarray(f[column])
+        return bool(v.size) and float(v.min()) >= lo and float(v.max()) <= hi
+
+    return Expectation(f"{table}_{column}_in_[{lo},{hi}]", table, fn)

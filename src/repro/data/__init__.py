@@ -1,0 +1,11 @@
+"""repro.data — deterministic, catalog-backed data pipeline."""
+
+from .corpus import BOS, EOS, PAD, generate_documents
+from .loader import DeterministicLoader, batch_rows, permuted_index
+from .pipeline import (build_data_pipeline, packing_node, seed_corpus,
+                       stats_node)
+
+__all__ = ["generate_documents", "EOS", "BOS", "PAD",
+           "DeterministicLoader", "batch_rows", "permuted_index",
+           "build_data_pipeline", "packing_node", "stats_node",
+           "seed_corpus"]

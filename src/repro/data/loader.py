@@ -1,0 +1,83 @@
+"""Stateless deterministic batch indexing.
+
+Iterator state is ONE integer (the step): batch membership is a pure
+function of (seed, epoch, step), via a Feistel permutation of row indices.
+This is what lets a checkpoint commit capture the data-iterator state as a
+single number and resume bit-exactly — and lets any worker (or a restarted
+one) compute its shard of any batch without coordination.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+def _feistel(x: np.ndarray, n_rounds: int, k0: int,
+             half_bits: int, mask: np.uint32) -> np.ndarray:
+    """Format-preserving permutation over [0, 2^(2*half_bits))."""
+    l = (x >> np.uint32(half_bits)) & mask
+    r = x & mask
+    for i in range(n_rounds):
+        key = np.uint32((k0 + i * 0x9E3779B1) & 0xFFFFFFFF)
+        f = r * np.uint32(0x85EBCA6B) + key
+        f ^= f >> np.uint32(13)
+        f = (f * np.uint32(0xC2B2AE35)) & mask
+        l, r = r, (l ^ f) & mask
+    return (l << np.uint32(half_bits)) | r
+
+
+def permuted_index(i: np.ndarray, n: int, seed: int,
+                   epoch: int) -> np.ndarray:
+    """Pseudorandom permutation of [0, n), evaluated pointwise.
+
+    Cycle-walking a Feistel network: ONLY out-of-range values are
+    re-encrypted, so the restriction to [0, n) is a true bijection.
+    Domain size is < 4n ⇒ expected walk length < 4.
+    """
+    bits = max(2, int(np.ceil(np.log2(max(n, 2)))))
+    half = (bits + 1) // 2
+    mask = np.uint32((1 << half) - 1)
+    k0 = (seed * 1_000_003 + epoch) & 0xFFFFFFFF
+    out = _feistel(np.asarray(i, np.uint32), 4, k0, half, mask)
+    for _ in range(256):
+        oor = out >= n
+        if not oor.any():
+            break
+        out = np.where(oor, _feistel(out, 4, k0, half, mask), out)
+    else:  # pragma: no cover — walk lengths this long are impossible
+        raise RuntimeError("cycle walk did not terminate")
+    return out.astype(np.int64)
+
+
+def batch_rows(step: int, *, n_rows: int, global_batch: int,
+               seed: int) -> Tuple[np.ndarray, int]:
+    """Row ids of batch ``step`` (+ the epoch it falls in)."""
+    batches_per_epoch = max(n_rows // global_batch, 1)
+    epoch = step // batches_per_epoch
+    within = step % batches_per_epoch
+    base = within * global_batch + np.arange(global_batch)
+    rows = permuted_index(base % n_rows, n_rows, seed, epoch)
+    return rows, epoch
+
+
+class DeterministicLoader:
+    """Batches from a materialized packed table (host → device feed)."""
+
+    def __init__(self, tokens: np.ndarray, *, global_batch: int, seed: int):
+        self.tokens = tokens
+        self.global_batch = global_batch
+        self.seed = seed
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rows, epoch = batch_rows(step, n_rows=self.tokens.shape[0],
+                                 global_batch=self.global_batch,
+                                 seed=self.seed)
+        return {"tokens": self.tokens[rows], "rows": rows,
+                "epoch": np.int64(epoch)}
+
+    def iterate(self, start_step: int, n_steps: int
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        for s in range(start_step, start_step + n_steps):
+            yield self.batch(s)

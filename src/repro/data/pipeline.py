@@ -1,0 +1,66 @@
+"""The training data pipeline AS a catalog pipeline (the paper's technique
+applied to the training substrate).
+
+Stages are ``@model`` nodes — raw_docs → packed_{seq} — materialized as
+tables on a branch, so every training run's input data is an immutable
+commit: replaying a training run replays its exact token stream.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import Model, Pipeline, model
+from . import corpus
+
+
+def packing_node(seq_len: int, *, name: str = "packed"):
+    """Pack ragged documents into dense (rows, seq_len) training sequences:
+    concat with EOS separators, chunk, drop the ragged tail."""
+
+    @model(name=name)
+    def packed(docs=Model("raw_docs")):
+        toks, lengths = docs["tokens"], docs["length"]
+        flat = np.empty(int(lengths.sum()) + len(lengths), np.int32)
+        off = 0
+        for row, L in zip(toks, lengths):
+            flat[off:off + L] = row[:L]
+            flat[off + L] = corpus.EOS
+            off += L + 1
+        n_rows = off // seq_len
+        seqs = flat[:n_rows * seq_len].reshape(n_rows, seq_len)
+        return {"tokens": seqs,
+                "seq_id": np.arange(n_rows, dtype=np.int64)}
+
+    return packed
+
+
+def stats_node(src: str = "packed"):
+    """Data-quality stats table consumed by WAP expectations."""
+
+    @model(name="data_stats")
+    def data_stats(packed=Model(src)):
+        t = packed["tokens"]
+        return {
+            "n_rows": np.array([t.shape[0]], np.int64),
+            "seq_len": np.array([t.shape[1]], np.int64),
+            "min_token": np.array([t.min()], np.int64),
+            "max_token": np.array([t.max()], np.int64),
+            "eos_frac": np.array([(t == corpus.EOS).mean()], np.float64),
+        }
+
+    return data_stats
+
+
+def build_data_pipeline(seq_len: int) -> Pipeline:
+    return Pipeline([packing_node(seq_len), stats_node()])
+
+
+def seed_corpus(lake, branch: str, *, n_docs: int, seed: int,
+                vocab_size: int, mean_len: int = 512, author="system"):
+    """Land the raw corpus on a branch (the 'source_table' of Fig. 1)."""
+    docs = corpus.generate_documents(n_docs=n_docs, seed=seed,
+                                     vocab_size=vocab_size,
+                                     mean_len=mean_len)
+    return lake.write_table(branch, "raw_docs", docs, author=author,
+                            message=f"raw corpus seed={seed} n={n_docs}")

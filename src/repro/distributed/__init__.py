@@ -1,0 +1,14 @@
+"""repro.distributed — mesh/sharding policy + compiled-HLO roofline analysis."""
+
+from .analysis import (CollectiveStats, Roofline, parse_collectives,
+                       roofline_from_compiled, HBM_BW, ICI_BW, PEAK_FLOPS)
+from .sharding import (batch_specs, cache_specs, data_axis_size,
+                       make_activation_constraint, model_axis_size, named,
+                       opt_state_specs, param_specs)
+
+__all__ = [
+    "param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+    "make_activation_constraint", "named", "data_axis_size",
+    "model_axis_size", "Roofline", "CollectiveStats", "parse_collectives",
+    "roofline_from_compiled", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+]

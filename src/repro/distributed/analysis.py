@@ -1,0 +1,446 @@
+"""Roofline analysis from compiled HLO (the dry-run "profiler").
+
+No hardware timers exist in the dry-run; the three roofline terms are
+derived from the compiled artifact (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs / peak_FLOPs
+    memory     = HLO_bytes / HBM_bw
+    collective = Σ per-collective link-bytes / ICI_bw
+
+``cost_analysis()`` provides FLOPs/bytes of the *per-device* partitioned
+module; collective bytes are parsed out of the optimized HLO text with the
+standard per-algorithm link-byte formulas (ring all-gather moves
+out_bytes·(g-1)/g per device, all-reduce twice that, etc.).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+# TPU v5e-like hardware model (per assignment)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (assume 1 link per hop here)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "%all-gather.3 = bf16[8,128,2048]{2,1,0} all-gather(..."
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    link_bytes: float = 0.0  # per-device bytes over ICI (algorithm-weighted)
+
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return default
+
+
+# A computation header starts at column 0: "%name (" or "ENTRY %name ("
+# (ops are indented; params may be nested tuples, so don't match the arrow)
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s+\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if line[:1] in ("%", "E"):  # column-0 header (%name / ENTRY %name)
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Dynamic execution count per computation: while bodies run trip-count
+    times (nested whiles multiply).  Trip counts are recovered from the
+    largest integer literal in the loop condition (XLA inlines static
+    bounds); a body with no recoverable bound gets ×1 (conservative)."""
+    # while edges: (enclosing computation) -> (cond, body) with trip count;
+    # call edges (fusion bodies, reduce to_apply, conditional branches,
+    # calls) propagate the caller's multiplier unchanged.
+    while_edges: Dict[str, List[tuple]] = {}
+    call_edges: Dict[str, List[str]] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            for cond, body in _WHILE_RE.findall(line):
+                while_edges.setdefault(name, []).append((cond, body))
+            for callee in _CALLS_RE.findall(line):
+                call_edges.setdefault(name, []).append(callee)
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                for callee in re.findall(r"%[\w\.\-]+", mb.group(1)):
+                    call_edges.setdefault(name, []).append(callee)
+
+    def trip_count(cond: str) -> float:
+        consts = [int(c) for c in _CONST_RE.findall(
+            "\n".join(comps.get(cond, [])))]
+        consts = [c for c in consts if c > 1]
+        return float(max(consts)) if consts else 1.0
+
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    # iterate to fixpoint (the computation graph is a DAG; a few passes)
+    for _ in range(16):
+        changed = False
+        for caller, pairs in while_edges.items():
+            for cond, body in pairs:
+                m = mult.get(caller, 1.0) * trip_count(cond)
+                for target in (body, cond):
+                    if target in mult and mult[target] < m:
+                        mult[target] = m
+                        changed = True
+        for caller, callees in call_edges.items():
+            m = mult.get(caller, 1.0)
+            for target in callees:
+                if target in mult and mult[target] < m:
+                    mult[target] = m
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)(%[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branches=\{([^}]*)\}")
+_DEF_RE = re.compile(r"^\s*(%[\w\.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\)")
+_DIMS_ATTR_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+}
+_OPCODE_RE = re.compile(
+    r"\}\s*([a-z][a-z0-9\-]*)\(|\s([a-z][a-z0-9\-]*)\(%")
+
+# ops that do not touch HBM (metadata / layout only)
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _parse_shapes(text_after_eq: str):
+    """All shapes on the RHS of an '=' (tuple results give several)."""
+    head = text_after_eq.split("(", 1)[0]
+    return [( d, s) for d, s in _SHAPE_RE.findall(head)]
+
+
+def _bytes_of(shapes) -> int:
+    return sum(_shape_bytes(d, s) for d, s in shapes)
+
+
+class HloProgram:
+    """While-aware FLOP/byte accounting parsed from optimized HLO text.
+
+    ``cost_analysis()`` visits while bodies ONCE (verified empirically), so a
+    scanned L-layer model under-reports by ~L×.  This analyzer multiplies
+    every op by its computation's dynamic execution count (trip counts
+    recovered from loop-condition constants) and resolves operand shapes for
+    dot FLOPs.  Fusion-body internals are excluded from byte accounting (the
+    fusion call line carries the HBM traffic)."""
+
+    def __init__(self, hlo_text: str):
+        self.comps = _split_computations(hlo_text)
+        self.mults = _computation_multipliers(self.comps)
+        # name → shapes, name → opcode line index
+        self.shapes: Dict[str, list] = {}
+        self.fusion_bodies: set = set()
+        self.slicing_fusions: set = set()  # callees containing dyn-slice/DUS
+        for name, lines in self.comps.items():
+            for line in lines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                self.shapes[m.group(1)] = _parse_shapes(m.group(2))
+                if "fusion(" in line or "custom-call" in line:
+                    for callee in _CALLS_RE.findall(line):
+                        self.fusion_bodies.add(callee)
+        for name, lines in self.comps.items():
+            body = "\n".join(lines)
+            if "dynamic-slice(" in body or "dynamic-update-slice(" in body:
+                self.slicing_fusions.add(name)
+        # trip count of the innermost enclosing while loop per computation
+        # (for slice-aware byte accounting of stacked scan buffers):
+        # while bodies get their own trip; fusions called from a body
+        # inherit it.
+        self.trips: Dict[str, float] = {}
+        call_edges: Dict[str, List[str]] = {}
+        for name, lines in self.comps.items():
+            for line in lines:
+                for cond, body in _WHILE_RE.findall(line):
+                    consts = [int(c) for c in _CONST_RE.findall(
+                        "\n".join(self.comps.get(cond, [])))]
+                    consts = [c for c in consts if c > 1]
+                    if consts:
+                        t = float(max(consts))
+                        self.trips[body] = t
+                        self.trips[cond] = t
+                for callee in _CALLS_RE.findall(line):
+                    call_edges.setdefault(name, []).append(callee)
+        for _ in range(8):  # propagate caller trips to callees (fixpoint)
+            changed = False
+            for caller, callees in call_edges.items():
+                t = self.trips.get(caller)
+                if t is None:
+                    continue
+                for c in callees:
+                    if c not in self.trips:
+                        self.trips[c] = t
+                        changed = True
+            if not changed:
+                break
+        # computation params: "%name (p: f32[..], q: (s32[], ...)) -> ..."
+        # parameters also appear as "parameter(N)" op lines inside bodies,
+        # which the loop above already captured.
+
+    # ------------------------------------------------------------- flops
+    def _dot_flops(self, line: str) -> float:
+        m = _DEF_RE.match(line)
+        if not m:
+            return 0.0
+        result = _parse_shapes(m.group(2))
+        out_elems = 1
+        for d, s in result:
+            for x in s.split(","):
+                if x:
+                    out_elems *= int(x)
+        ops = _OPND_RE.search(line)
+        k = 1
+        if ops:
+            lhs = ops.group(1).split(",")[0].strip()
+            lhs_shapes = self.shapes.get(lhs)
+            mc = _DIMS_ATTR_RE["lhs_c"].search(line)
+            if lhs_shapes and mc and mc.group(1):
+                dims = [int(x) for x in mc.group(1).split(",") if x]
+                lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",") if x]
+                for d in dims:
+                    if d < len(lhs_dims):
+                        k *= lhs_dims[d]
+        return 2.0 * out_elems * k
+
+    def flops_bytes(self) -> tuple:
+        """(flops, hbm_bytes) per device, while-aware."""
+        flops = 0.0
+        nbytes = 0.0
+        for comp, lines in self.comps.items():
+            w = self.mults.get(comp, 1.0)
+            in_fusion = comp in self.fusion_bodies
+            for line in lines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                rest = m.group(2)
+                if " dot(" in rest or rest.startswith("dot("):
+                    flops += w * self._dot_flops(line)
+                elif "convolution(" in rest:
+                    # approximate: 2 × out × (kernel elems) — convs here are
+                    # tiny depthwise causal convs
+                    out_shapes = _parse_shapes(rest)
+                    flops += w * 2.0 * _bytes_of(out_shapes)
+                if in_fusion:
+                    continue  # fusion internals: no HBM traffic
+                mop = re.search(r"(?:^|\s|\))([a-z][a-z0-9\-]+)\(", rest)
+                opcode = mop.group(1) if mop else ""
+                if opcode in _FREE_OPS or opcode.endswith("-done"):
+                    continue
+                # slice-aware charging: an op (or fusion) that dynamic-
+                # slices/updates a stacked scan buffer touches one slice per
+                # iteration, not the whole (trip, ...) stack.
+                trip = self.trips.get(comp, 1.0)
+                slicing = ("dynamic-slice" in rest
+                           or "dynamic-update-slice" in rest)
+                if not slicing and opcode == "fusion":
+                    for callee in _CALLS_RE.findall(rest):
+                        if callee in self.slicing_fusions:
+                            slicing = True
+                            break
+
+                def charge(shapes_list) -> float:
+                    b = 0.0
+                    for d, s in shapes_list:
+                        sz = _shape_bytes(d, s)
+                        lead = int(s.split(",")[0]) if s else 0
+                        if slicing and trip > 1 and lead == int(trip):
+                            sz = sz / trip  # one slice of the stack
+                        b += sz
+                    return b
+
+                rbytes2 = charge(_parse_shapes(rest))
+                obytes = 0.0
+                opnds = _OPND_RE.search(rest)
+                if opnds:
+                    for nm in opnds.group(1).split(","):
+                        obytes += charge(self.shapes.get(nm.strip(), []))
+                nbytes += w * (rbytes2 + obytes)
+        return flops, nbytes
+
+
+def parse_collectives(hlo_text: str, *, n_devices: int) -> CollectiveStats:
+    """Sum result bytes + per-device link bytes of every collective op,
+    weighted by dynamic execution count (while-loop trip counts) — a
+    collective inside the layer scan counts n_layers times."""
+    comps = _split_computations(hlo_text)
+    mults = _computation_multipliers(comps)
+    stats = CollectiveStats()
+    for comp_name, lines in comps.items():
+        weight = mults.get(comp_name, 1.0)
+        for line in lines:
+            kind: Optional[str] = None
+            rbytes = 0
+            # tuple results FIRST — _OP_RE would otherwise match only the
+            # first tuple element and undercount bundled collectives
+            mt = _TUPLE_OP_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                rbytes = sum(_shape_bytes(d, s)
+                             for d, s in _SHAPE_RE.findall(mt.group(1)))
+            else:
+                m = _OP_RE.search(line)
+                if m:
+                    kind = m.group(3)
+                    rbytes = _shape_bytes(m.group(1), m.group(2))
+            if kind is None or "-done" in line:
+                continue
+            g = _group_size(line, n_devices)
+            frac = (g - 1) / g if g > 1 else 0.0
+            if kind == "all-reduce":
+                link = 2.0 * rbytes * frac  # reduce-scatter + all-gather
+            elif kind == "all-gather":
+                link = rbytes * frac        # rbytes = gathered output
+            elif kind == "reduce-scatter":
+                link = rbytes * (g - 1)     # rbytes = scattered shard
+            elif kind == "all-to-all":
+                link = rbytes * frac
+            else:  # collective-permute
+                link = float(rbytes)
+            stats.counts[kind] = stats.counts.get(kind, 0) + int(weight)
+            stats.result_bytes[kind] = (stats.result_bytes.get(kind, 0)
+                                        + int(rbytes * weight))
+            stats.link_bytes += link * weight
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_link_bytes: float
+    n_devices: int
+    model_flops_total: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline lower bound: no overlap assumption → max of terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — remat/dispatch waste detector."""
+        total_hlo = self.flops_per_device * self.n_devices
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU: useful flops / (peak × step LB)."""
+        denom = self.step_time_lb * PEAK_FLOPS * self.n_devices
+        return self.model_flops_total / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_link_bytes": self.collective_link_bytes,
+            "n_devices": self.n_devices,
+            "model_flops_total": self.model_flops_total,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb": self.step_time_lb,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline_from_compiled(compiled, *, n_devices: int,
+                           model_flops_total: float = 0.0,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    """Three roofline terms from the compiled per-device module.
+
+    FLOPs/bytes come from the while-aware text analyzer (``HloProgram``) —
+    ``cost_analysis()`` visits loop bodies once and under-reports scanned
+    models by ~n_layers× (verified; raw values still recorded upstream)."""
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    prog = HloProgram(text)
+    flops, nbytes = prog.flops_bytes()
+    stats = parse_collectives(text, n_devices=n_devices)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_link_bytes=stats.link_bytes,
+        n_devices=n_devices,
+        model_flops_total=model_flops_total,
+    ), stats

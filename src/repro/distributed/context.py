@@ -1,0 +1,24 @@
+"""Ambient mesh context: lets deep model code (e.g. the shard_map MoE
+dispatch) find the active mesh without threading it through every call."""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: list = []
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    _CURRENT.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _CURRENT.pop()

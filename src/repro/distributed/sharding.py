@@ -1,0 +1,273 @@
+"""Sharding rules: map parameter/batch/cache pytrees → PartitionSpecs.
+
+Mesh axes (launch/mesh.py): ("pod", "data", "model") multi-pod, or
+("data", "model") single-pod.  Policy (DESIGN.md §5):
+
+- FSDP (ZeRO-3): parameters shard their *non-TP* matrix dim over
+  ("pod","data"); XLA SPMD inserts all-gathers on use / reduce-scatters on
+  grads.
+- TP: attention heads (q/o), FFN hidden, vocab shard over "model".
+- EP: MoE experts shard over "model" when E % |model| == 0, otherwise the
+  per-expert FFN dim shards over "model" (TP-in-expert fallback — e.g.
+  qwen2-moe's 60 experts on a 16-wide model axis).
+- SSM mixers: FSDP only (the fused z|x|B|C|dt projection does not split
+  cleanly across "model"; real Mamba TP would split the projections —
+  recorded as a known deviation).
+- Batch/activations: batch over ("pod","data"); long-context decode with
+  batch < |data| shards the KV cache sequence dim over "data" instead
+  (context parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+FSDP = ("pod", "data")  # logical data axes (present subset used at runtime)
+
+
+def _axes(mesh: Mesh, *names):
+    """Keep only axes present in the mesh; None if none survive."""
+    present = [n for n in names if n in mesh.axis_names]
+    if not present:
+        return None
+    return tuple(present) if len(present) > 1 else present[0]
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in FSDP]))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *,
+                fsdp: bool = True, tp: bool = True,
+                serving: bool = False,
+                fsdp_axes: Optional[tuple] = None) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``models.lm.init_params`` structure.
+
+    ``serving=True`` switches to an inference layout (§Perf): weights keep
+    their TP sharding but the FSDP axis moves OFF contracting dims (D) onto
+    output dims (F / heads) — ZeRO-3-style gathering of weights every layer
+    is a training trade; at serve time it shows up as a per-layer
+    partial-sum all-reduce of activations, which this layout removes."""
+    fa = fsdp_axes if fsdp_axes is not None else FSDP
+    dp = _axes(mesh, *fa) if fsdp else None
+    mp = _axes(mesh, "model") if tp else None
+    dpn = (int(np.prod([mesh.shape[a] for a in mesh.axis_names if a in fa]))
+           if fsdp else 0)
+    mpn = model_axis_size(mesh) if tp else 0
+
+    def _d_any(n):
+        return dp if _div(n, max(dpn, 1)) and dpn > 1 else None
+
+    def d(n):
+        """fsdp axis for a CONTRACTING/feature dim — dropped in the serving
+        layout (it would force per-layer weight gathers / partial-sum
+        all-reduces with no optimizer-state payoff at inference)."""
+        return None if serving else _d_any(n)
+
+    def m(n):  # model axis if divisible
+        return mp if _div(n, max(mpn, 1)) and mpn > 1 else None
+
+    D, V = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": P(m(V), d(D)),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(m(V), d(D))
+    if cfg.n_frontend_embeds:
+        specs["connector"] = P(d(D), m(D))
+
+    L = cfg.n_layers
+    layers: Dict[str, Any] = {"ln1": P(None, None)}
+    if cfg.is_moe or cfg.d_ff:
+        layers["ln2"] = P(None, None)
+    if cfg.has_attention:
+        H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        layers["attn"] = {
+            "wq": P(None, d(D), m(H * dh)),
+            "wk": P(None, d(D), m(KV * dh)),
+            "wv": P(None, d(D), m(KV * dh)),
+            "wo": P(None, m(H * dh), d(D)),
+        }
+        if cfg.qkv_bias:
+            layers["attn"]["bq"] = P(None, m(H * dh))
+            layers["attn"]["bk"] = P(None, m(KV * dh))
+            layers["attn"]["bv"] = P(None, m(KV * dh))
+    if cfg.has_ssm:
+        di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+        proj_in = 2 * di + 2 * ns + nh
+        layers["ssm"] = {
+            "in_proj": P(None, d(D), None),
+            "conv_w": P(None, None, None),
+            "A_log": P(None, None),
+            "D": P(None, None),
+            "dt_bias": P(None, None),
+            "norm": P(None, None),
+            "out_proj": P(None, None, d(D)),
+        }
+    if cfg.is_moe:
+        E, F = cfg.n_experts, cfg.expert_d_ff
+        if _div(E, max(mpn, 1)) and mpn > 1:  # expert parallelism
+            e_ax, f_ax = mp, None
+        else:                                  # TP-in-expert fallback
+            e_ax, f_ax = None, m(F)
+        # serving: expert tensors are the memory heavyweight (no optimizer
+        # state to amortize) — shard F over the data axes instead of D so
+        # weights still fit per-chip without contracting-dim partial sums
+        # on the gate/up matmuls.
+        fd = _d_any(F) if serving and e_ax is not None else f_ax
+        layers["moe"] = {
+            "router": P(None, d(D), None),
+            "w_gate": P(None, e_ax, d(D), fd),
+            "w_up": P(None, e_ax, d(D), fd),
+            "w_down": P(None, e_ax, fd, d(D)),
+        }
+        if cfg.n_shared_experts:
+            Fs = cfg.n_shared_experts * F
+            layers["moe"]["shared_gate"] = P(None, None)
+            layers["moe"]["shared_w_gate"] = P(None, d(D), m(Fs))
+            layers["moe"]["shared_w_up"] = P(None, d(D), m(Fs))
+            layers["moe"]["shared_w_down"] = P(None, m(Fs), d(D))
+    elif cfg.d_ff:
+        layers["mlp"] = {
+            "w_gate": P(None, d(D), m(cfg.d_ff)),
+            "w_up": P(None, d(D), m(cfg.d_ff)),
+            "w_down": P(None, m(cfg.d_ff), d(D)),
+        }
+    specs["layers"] = layers
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, *, global_batch: int,
+                fsdp_axes: Optional[tuple] = None) -> Dict[str, Any]:
+    fa = fsdp_axes if fsdp_axes is not None else FSDP
+    dp = _axes(mesh, *fa)
+    dpn = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a in fa]))
+    b = dp if _div(global_batch, dpn) and dpn > 1 else None
+    out = {"tokens": P(b, None)}
+    if cfg.n_frontend_embeds:
+        out["extra_embeds"] = P(b, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int,
+                max_len: int = 0) -> Dict[str, Any]:
+    """KV/state cache sharding policy:
+
+    - batch divisible by |data axes| → shard batch over them; otherwise
+      shard the cache SEQUENCE over "data" (context parallelism — the
+      long_500k batch=1 case).
+    - kv heads shard over "model" when divisible; otherwise the cache
+      sequence shards over "model" (sequence-parallel decode — partial
+      softmax + all-reduce, the standard TPU serving layout for GQA models
+      whose few kv heads can't fill the TP axis)."""
+    dp = _axes(mesh, *FSDP)
+    dpn = data_axis_size(mesh)
+    mp = _axes(mesh, "model")
+    mpn = model_axis_size(mesh)
+    batch_sharded = _div(batch, dpn) and dpn > 1
+    b = dp if batch_sharded else None
+    seq_data = None if batch_sharded else (
+        _axes(mesh, "data") if "data" in mesh.axis_names else None)
+    specs: Dict[str, Any] = {"pos": P()}
+    if cfg.has_attention:
+        kv_heads_fit = _div(cfg.n_kv_heads, max(mpn, 1)) and mpn > 1
+        kv_ax = mp if kv_heads_fit else None
+        seq_model = None if kv_heads_fit else (
+            mp if _div(max_len, max(mpn, 1)) and mpn > 1 else None)
+        seq_axes = []
+        for a in (seq_data, seq_model):
+            if a is None:
+                continue
+            seq_axes.extend(a if isinstance(a, tuple) else (a,))
+        seq = (tuple(seq_axes) if len(seq_axes) > 1
+               else seq_axes[0] if seq_axes else None)
+        specs["k"] = P(None, b, seq, kv_ax, None)
+        specs["v"] = P(None, b, seq, kv_ax, None)
+    if cfg.has_ssm:
+        nh_ax = mp if _div(cfg.ssm_heads, max(mpn, 1)) and mpn > 1 else None
+        specs["h"] = P(None, b, nh_ax, None, None)
+        specs["conv"] = P(None, b, None, None)
+    return specs
+
+
+def opt_state_specs(param_spec_tree, has_master: bool, compress: bool):
+    """AdamWState spec: mu/nu/master mirror the param specs."""
+    from ..optim.adamw import AdamWState
+
+    return AdamWState(
+        step=P(),
+        mu=param_spec_tree,
+        nu=param_spec_tree,
+        master=param_spec_tree if has_master else None,
+        ef=param_spec_tree if compress else None,
+    )
+
+
+def make_activation_constraint(cfg: ModelConfig, mesh: Mesh, *,
+                               moe_constraints: bool = False,
+                               fsdp_axes: Optional[tuple] = None):
+    """The ``ac`` hook threaded through the model: named activation points →
+    with_sharding_constraint.  This is where sequence-parallel / TP activation
+    layouts are pinned so XLA doesn't invent pathological reshards.
+
+    ``moe_constraints`` pins the MoE dispatch buffers to the EP layout
+    (experts over "model", capacity over data) — a §Perf optimization: the
+    unconstrained baseline lets SPMD propagation replicate the (E, C, D)
+    buffer."""
+    fa = fsdp_axes if fsdp_axes is not None else FSDP
+    dp = _axes(mesh, *fa)
+    mp = _axes(mesh, "model") if fa == FSDP else None
+    dpn = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a in fa]))
+    mpn = model_axis_size(mesh)
+
+    table = {
+        "hidden": P(dp, None, None),
+        "residual": P(dp, None, None),
+        "q": P(dp, None, mp, None),
+        "attn_out": P(dp, None, mp, None),
+        "mlp_out": P(dp, None, None),
+    }
+    if moe_constraints and cfg.is_moe:
+        ep = _div(cfg.n_experts, max(mpn, 1)) and mpn > 1
+        if ep:
+            # experts over model ONLY: the scatter from dp-sharded tokens
+            # to mp-sharded expert rows lowers to an all-to-all.  Sharding
+            # capacity over data as well was measured to force a massive
+            # redistribution (§Perf iteration log) — don't.
+            table["moe_buf"] = P(mp, None, None)
+        table["moe_tokens"] = P(dp, None)
+
+    def ac(x, name=None):
+        spec = table.get(name)
+        if spec is None or len(spec) != x.ndim:
+            return x
+        # NB: internal constraints may be uneven (GSPMD pads) — and padded
+        # head sharding measurably beats dropping the constraint (§Perf:
+        # removing the uneven q/attn_out pin nearly doubled yi-34b's
+        # collective term).  Only jit INPUTS require even shards.
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return ac
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

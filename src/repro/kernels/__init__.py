@@ -1,0 +1,6 @@
+"""repro.kernels — Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jitted public wrapper) and <name>/ref.py (pure-jnp
+oracle); tests sweep shapes/dtypes in interpret mode against the oracle.
+"""

@@ -1,0 +1,37 @@
+"""Public fingerprint API: digests for arrays and whole pytrees.
+
+Used by the checkpoint layer to content-address device-resident tensors
+(params, optimizer state) when committing to the catalog — the paper's
+"immutable reference to data" without a device→host copy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .kernel import fingerprint
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tensor_digest(arr: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """(8,) uint32 digest of one array (kernel path)."""
+    return fingerprint(arr, interpret=interpret)
+
+
+def tensor_digest_hex(arr) -> str:
+    return ref.digest_hex(tensor_digest(jnp.asarray(arr)))
+
+
+def tree_digest_hex(tree) -> str:
+    """Order-stable digest of a whole pytree: digest of leaf digests."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    parts = []
+    for path, leaf in sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        parts.append(np.asarray(tensor_digest(jnp.asarray(leaf))))
+    stacked = jnp.asarray(np.concatenate(parts).astype(np.uint32))
+    return ref.digest_hex(ref.fingerprint_ref(stacked))

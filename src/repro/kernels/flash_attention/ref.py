@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Identical math to ``repro.models.attention.gqa_attention`` but kept here as a
+standalone, dependency-light reference so kernel tests compare kernel output
+against exactly this function.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def mha_reference(
+    q: jnp.ndarray,  # (B, H, S, d)
+    k: jnp.ndarray,  # (B, H, T, d)
+    v: jnp.ndarray,  # (B, H, T, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap_ * jnp.tanh(logits / softcap_) \
+            if (softcap_ := softcap) else logits
+    S, T = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(S)[:, None] + (T - S)  # right-aligned queries
+    kv_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_reference(q, k, v, **kw):
+    """q: (B, Hq, S, d), k/v: (B, Hkv, T, d) with Hq % Hkv == 0."""
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    groups = Hq // Hkv
+    qg = q.reshape(B, Hkv, groups, S, d)
+    out = jax.vmap(lambda qq, kk, vv: mha_reference(
+        qq.reshape(B * Hkv, 1, S, d).reshape(B, Hkv, S, d), kk, vv, **kw),
+        in_axes=(2, None, None), out_axes=2)(qg, k, v)
+    return out.reshape(B, Hq, S, d)

@@ -1,0 +1,156 @@
+"""Chunked SSD (Mamba-2) — Pallas TPU kernels.
+
+TPU adaptation of the SSD algorithm (DESIGN.md §6): the sequence is split
+into chunks; all *intra-chunk* work (quadratic in chunk length, dense matmul
+— MXU food) and the *per-chunk state contributions* run chunk-parallel in
+kernel 1; a tiny O(n_chunks) associative recurrence over (nh, hd, ns) states
+runs outside; kernel 2 folds the carried-in states back into the outputs.
+Grid cell = (batch, head, chunk); one cell's working set (Q×Q decay matrix +
+Q×hd inputs + Q×ns B/C tiles) is sized for VMEM at Q=128–256.
+
+The CUDA version's warp-level scan has no TPU analogue — the two-pass
+chunk-parallel decomposition + outer scan IS the TPU-idiomatic equivalent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                  y_ref, state_ref, segtot_ref):
+    """Per (batch, head, chunk): intra-chunk output + state contribution."""
+    x = x_ref[...].astype(jnp.float32)        # (Q, hd)
+    dt = dt_ref[...].astype(jnp.float32)      # (Q,)
+    A = a_ref[0].astype(jnp.float32)          # scalar decay rate (this head)
+    Bm = b_ref[...].astype(jnp.float32)       # (Q, ns)
+    Cm = c_ref[...].astype(jnp.float32)       # (Q, ns)
+    Q = x.shape[0]
+
+    dA = dt * A                                # (Q,) log-decay per step
+    seg = jnp.cumsum(dA)                       # (Q,)
+    rel = seg[:, None] - seg[None, :]          # (Q, Q)
+    causal = jax.lax.iota(jnp.int32, Q)[:, None] >= \
+        jax.lax.iota(jnp.int32, Q)[None, :]
+    L = jnp.exp(jnp.where(causal, rel, -1e30))  # mask pre-exp (no inf)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    W = cb * L
+    xdt = x * dt[:, None]                      # (Q, hd)
+    y_ref[...] = jax.lax.dot_general(
+        W, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    seg_tot = seg[-1]
+    decay_out = jnp.exp(seg_tot - seg)         # (Q,)
+    state = jax.lax.dot_general(
+        xdt * decay_out[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (hd, ns)
+    state_ref[...] = state.astype(state_ref.dtype)
+    segtot_ref[0] = seg_tot.astype(segtot_ref.dtype)
+
+
+def _carry_kernel(y_ref, c_ref, dt_ref, a_ref, hprev_ref, o_ref):
+    """Per (batch, head, chunk): add the inter-chunk term C·h_prev·decay."""
+    y = y_ref[...].astype(jnp.float32)         # (Q, hd)
+    Cm = c_ref[...].astype(jnp.float32)        # (Q, ns)
+    dt = dt_ref[...].astype(jnp.float32)       # (Q,)
+    A = a_ref[0].astype(jnp.float32)
+    h = hprev_ref[...].astype(jnp.float32)     # (hd, ns)
+    seg = jnp.cumsum(dt * A)                   # (Q,)
+    y_int = jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (Q, hd)
+    o_ref[...] = (y + y_int * jnp.exp(seg)[:, None]).astype(o_ref.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,     # (B, S, nh, hd)
+    dt: jnp.ndarray,    # (B, S, nh)
+    A: jnp.ndarray,     # (nh,)
+    Bmat: jnp.ndarray,  # (B, S, ns)
+    Cmat: jnp.ndarray,  # (B, S, ns)
+    *,
+    chunk: int = 128,
+    h0=None,
+    interpret: bool = False,
+):
+    """Two-pass chunk-parallel SSD.  Returns (y (B,S,nh,hd), h_final)."""
+    Bsz, S, nh, hd = x.shape
+    ns = Bmat.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    N = S // chunk
+
+    xc = x.reshape(Bsz, N, chunk, nh, hd)
+    dtc = dt.reshape(Bsz, N, chunk, nh)
+    Bc = Bmat.reshape(Bsz, N, chunk, ns)
+    Cc = Cmat.reshape(Bsz, N, chunk, ns)
+
+    grid = (Bsz, nh, N)
+    y_intra, states, segtot = pl.pallas_call(
+        _chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, None, hd),
+                         lambda b, h, n: (b, n, 0, h, 0)),
+            pl.BlockSpec((None, None, chunk, None),
+                         lambda b, h, n: (b, n, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, n: (h,)),
+            pl.BlockSpec((None, None, chunk, ns),
+                         lambda b, h, n: (b, n, 0, 0)),
+            pl.BlockSpec((None, None, chunk, ns),
+                         lambda b, h, n: (b, n, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, None, hd),
+                         lambda b, h, n: (b, n, 0, h, 0)),
+            pl.BlockSpec((None, None, None, hd, ns),
+                         lambda b, h, n: (b, n, h, 0, 0)),
+            pl.BlockSpec((None, None, 1), lambda b, h, n: (b, n, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, N, chunk, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, N, nh, hd, ns), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, N, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, A.astype(jnp.float32), Bc, Cc)
+
+    # ---- tiny outer recurrence over chunk states (O(N), off the kernel) ----
+    def carry(h, inp):
+        st, seg_tot = inp  # (B, nh, hd, ns), (B, nh)
+        h_new = h * jnp.exp(seg_tot)[..., None, None] + st
+        return h_new, h    # emit h_prev for each chunk
+
+    h_init = (jnp.zeros((Bsz, nh, hd, ns), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        carry, h_init, (jnp.moveaxis(states, 1, 0),
+                        jnp.moveaxis(segtot, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, N, nh, hd, ns)
+
+    y = pl.pallas_call(
+        _carry_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, None, hd),
+                         lambda b, h, n: (b, n, 0, h, 0)),
+            pl.BlockSpec((None, None, chunk, ns),
+                         lambda b, h, n: (b, n, 0, 0)),
+            pl.BlockSpec((None, None, chunk, None),
+                         lambda b, h, n: (b, n, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, n: (h,)),
+            pl.BlockSpec((None, None, None, hd, ns),
+                         lambda b, h, n: (b, n, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, chunk, None, hd),
+                               lambda b, h, n: (b, n, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, N, chunk, nh, hd), x.dtype),
+        interpret=interpret,
+    )(y_intra, Cc, dtc, A.astype(jnp.float32), h_prevs)
+
+    return y.reshape(Bsz, S, nh, hd), h_final

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the SSD kernels: sequential state-space recurrence.
+
+Deliberately the *naive O(S) sequential scan* — a different algorithm from
+the chunked kernels — so kernel tests validate the chunk decomposition math
+itself, not just a re-implementation of it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(
+    x: jnp.ndarray,     # (B, S, nh, hd)
+    dt: jnp.ndarray,    # (B, S, nh)  (already softplus'd)
+    A: jnp.ndarray,     # (nh,) negative
+    Bmat: jnp.ndarray,  # (B, S, ns)
+    Cmat: jnp.ndarray,  # (B, S, ns)
+    h0: Optional[jnp.ndarray] = None,  # (B, nh, hd, ns)
+):
+    Bsz, S, nh, hd = x.shape
+    ns = Bmat.shape[-1]
+    h = (jnp.zeros((Bsz, nh, hd, ns), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt.astype(jnp.float32) * A[None, :])  # (B, nh)
+        upd = jnp.einsum("bhd,bs->bhds",
+                         xt.astype(jnp.float32) * dtt[..., None],
+                         Bt.astype(jnp.float32))
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhds,bs->bhd", h, Ct.astype(jnp.float32))
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    h_final, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final

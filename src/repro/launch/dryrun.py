@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  1. abstract params / optimizer state / inputs (ShapeDtypeStruct — zero
+     allocation; the FULL configs are exercised only here);
+  2. jit(train_step | prefill_step | decode_step) with explicit
+     in_/out_shardings from the sharding policy;
+  3. .lower().compile() — success proves the distribution config is
+     coherent (shardings consistent, collectives supported, HLO sound);
+  4. memory_analysis() + cost_analysis() + collective parse → one JSON
+     per cell under results/dryrun/ (resumable across invocations).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, full_config
+from repro.distributed import (analysis, batch_specs, cache_specs, named,
+                               opt_state_specs, param_specs,
+                               make_activation_constraint)
+from repro.models import config as mcfg
+from repro.models import init_cache, init_params
+from repro.models.config import SHAPES, shape_applicable
+from repro.optim import adamw
+from repro.runtime.steps import (build_decode_step, build_prefill_step,
+                                 build_train_step, input_specs)
+from repro.launch.mesh import make_production_mesh
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+DRY_ARCHS = [a for a in ARCH_IDS if a != "paper-demo"]
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _analytic_memory(cfg, shape, mesh, *, training: bool) -> dict:
+    """Bytes/device from the sharding policy (CPU memory_analysis is often
+    unavailable — this is the 'proves it fits' accounting)."""
+    n_dev = mesh.devices.size
+    pbytes = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+    out = {"params_bytes_per_device": pbytes / n_dev}
+    if training:
+        master = 0 if cfg.param_dtype == "float32" else 4 * cfg.param_count()
+        opt = 8 * cfg.param_count() + master
+        out["opt_bytes_per_device"] = opt / n_dev
+    else:
+        kvb = 0
+        if cfg.has_attention:
+            kvb += (2 * cfg.n_layers * shape.global_batch * shape.seq_len
+                    * cfg.n_kv_heads * cfg.d_head
+                    * jnp.dtype(cfg.compute_dtype).itemsize)
+        if cfg.has_ssm:
+            kvb += (4 * cfg.n_layers * shape.global_batch * cfg.ssm_heads
+                    * cfg.ssm_head_dim * cfg.ssm_state)
+        out["cache_bytes_per_device"] = kvb / n_dev
+    out["total_known_bytes_per_device"] = sum(out.values())
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               attention_impl: str = "chunked",
+               remat: bool = True,
+               fsdp: bool = True, tp: bool = True,
+               donate: bool = True,
+               cfg_overrides: dict | None = None,
+               moe_constraints: bool = False,
+               serving_layout: bool = False,
+               pure_fsdp: bool = False):
+    """Returns (lowered, compiled, context dict)."""
+    cfg = full_config(arch).with_(attention_impl=attention_impl,
+                                  **(cfg_overrides or {}))
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return None, None, {"status": "skipped",
+                            "reason": "shape inapplicable (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # pure_fsdp (§Perf): no TP; parameters + batch shard over EVERY mesh
+    # axis — per-layer weight all-gathers replace activation all-reduces.
+    fsdp_axes = ("pod", "data", "model") if pure_fsdp else None
+    if pure_fsdp:
+        tp = False
+    pspecs = param_specs(cfg, mesh, fsdp=fsdp, tp=tp,
+                         serving=serving_layout and shape.kind != "train",
+                         fsdp_axes=fsdp_axes)
+    ac = make_activation_constraint(cfg, mesh,
+                                    moe_constraints=moe_constraints,
+                                    fsdp_axes=fsdp_axes)
+    params_abs = _abstract(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+    from repro.distributed.context import use_mesh
+    with mesh, use_mesh(mesh):
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            opt_abs = _abstract(lambda p: adamw.init(p, opt_cfg), params_abs)
+            ospecs = opt_state_specs(pspecs, has_master=(
+                cfg.param_dtype != "float32"), compress=False)
+            bspecs = batch_specs(cfg, mesh, global_batch=shape.global_batch,
+                                 fsdp_axes=fsdp_axes)
+            step = build_train_step(cfg, opt_config=opt_cfg, ac=ac,
+                                    remat=remat)
+            in_sh = (named(mesh, pspecs), named(mesh, ospecs),
+                     named(mesh, bspecs))
+            out_sh = (named(mesh, pspecs), named(mesh, ospecs), None)
+            jfn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=(0, 1) if donate else ())
+            batch_abs = {k: v for k, v in
+                         input_specs(cfg, shape).items()}
+            lowered = jfn.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            cspecs = cache_specs(cfg, mesh, batch=shape.global_batch,
+                                 max_len=shape.seq_len)
+            cache_abs = _abstract(lambda: init_cache(
+                cfg, shape.global_batch, shape.seq_len, cfg.compute_dtype))
+            step = build_prefill_step(cfg, max_len=shape.seq_len, ac=ac)
+            ins = input_specs(cfg, shape)
+            bspecs = batch_specs(cfg, mesh, global_batch=shape.global_batch,
+                                 fsdp_axes=fsdp_axes)
+            in_sh = (named(mesh, pspecs),
+                     named(mesh, bspecs["tokens"]),
+                     named(mesh, cspecs))
+            args = [params_abs, ins["tokens"], cache_abs]
+            if cfg.n_frontend_embeds:
+                in_sh = in_sh + (named(mesh, bspecs["extra_embeds"]),)
+                args.append(ins["extra_embeds"])
+            jfn = jax.jit(step, in_shardings=in_sh,
+                          donate_argnums=(2,) if donate else ())
+            lowered = jfn.lower(*args)
+        else:  # decode
+            cspecs = cache_specs(cfg, mesh, batch=shape.global_batch,
+                                 max_len=shape.seq_len)
+            cache_abs = _abstract(lambda: init_cache(
+                cfg, shape.global_batch, shape.seq_len, cfg.compute_dtype))
+            step = build_decode_step(cfg, ac=ac)
+            ins = input_specs(cfg, shape)
+            in_sh = (named(mesh, pspecs),
+                     named(mesh, P(None)),
+                     named(mesh, cspecs))
+            jfn = jax.jit(step, in_shardings=in_sh,
+                          donate_argnums=(2,) if donate else ())
+            lowered = jfn.lower(params_abs, ins["token"], cache_abs)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    training = shape.kind == "train"
+    model_flops = (cfg.model_flops_per_token(training=training)
+                   * shape.global_batch
+                   * (shape.seq_len if not shape.is_decode else 1))
+    ctx = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "attention_impl": attention_impl,
+        "compile_seconds": compile_s,
+        "model_flops_total": model_flops,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    return lowered, compiled, ctx
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path = RESULTS, skip_existing: bool = False,
+             **lower_kw) -> dict:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if skip_existing and out_path.exists():
+        return json.loads(out_path.read_text())
+    t_start = time.time()
+    try:
+        lowered, compiled, ctx = lower_cell(arch, shape_name,
+                                            multi_pod=multi_pod, **lower_kw)
+        if compiled is None:  # skipped
+            record = {**ctx, "arch": arch, "shape": shape_name,
+                      "mesh": mesh_tag}
+        else:
+            n_dev = ctx["n_devices"]
+            hlo_text = compiled.as_text()
+            roof, coll = analysis.roofline_from_compiled(
+                compiled, n_devices=n_dev,
+                model_flops_total=ctx["model_flops_total"],
+                hlo_text=hlo_text)
+            try:  # raw XLA cost analysis (loop-body-once; for reference)
+                ca = compiled.cost_analysis()
+                ca = ca[0] if isinstance(ca, list) else ca
+                ctx["xla_cost_analysis"] = {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                }
+            except Exception:
+                pass
+            cfg = full_config(arch)
+            shape = SHAPES[shape_name]
+            record = {
+                **ctx,
+                "memory_analysis": _mem_dict(compiled),
+                "analytic_memory": _analytic_memory(
+                    cfg, shape, make_production_mesh(multi_pod=multi_pod),
+                    training=shape.kind == "train"),
+                "roofline": roof.to_dict(),
+                "collectives": {
+                    "counts": coll.counts,
+                    "result_bytes": coll.result_bytes,
+                    "link_bytes_per_device": coll.link_bytes,
+                },
+                "wall_seconds": time.time() - t_start,
+            }
+    except Exception as e:
+        record = {"status": "error", "arch": arch, "shape": shape_name,
+                  "mesh": mesh_tag, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:],
+                  "wall_seconds": time.time() - t_start}
+    out_path.write_text(json.dumps(record, indent=2, default=float))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=DRY_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--attention-impl", default="chunked",
+                    choices=["chunked", "xla"])
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for a in DRY_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for mp in meshes:
+        for a, s in cells:
+            rec = run_cell(a, s, multi_pod=mp,
+                           skip_existing=args.skip_existing,
+                           attention_impl=args.attention_impl)
+            jax.clear_caches()  # keep the sweep's memory bounded
+            status = rec.get("status")
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" compile={rec['compile_seconds']:.1f}s"
+                         f" bottleneck={r['bottleneck']}"
+                         f" t=({r['t_compute']:.3f},{r['t_memory']:.3f},"
+                         f"{r['t_collective']:.3f})s")
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{rec.get('mesh')}] {a} × {s}: {status}{extra}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""``repro`` CLI — the paper's bauplan-style command surface (§4–5):
+
+  repro branch <user.branch> [--from REF]      create a CoW branch
+  repro checkout <ref>                         resolve + print a ref
+  repro run --pipeline data --branch B         run a pipeline, get a run_id
+  repro run --id RUN_ID --branch B             REPLAY a past run (Listing 3)
+  repro query "SELECT COUNT(*) FROM t" --ref R tiny read-path query
+  repro log <ref> / branches / runs            inspect the catalog
+
+"CLI is all you need": no catalog service to provision, no client API to
+learn — the same ergonomics claim the paper demonstrates, over the tensor
+lake.  Example session in examples/quickstart.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+import numpy as np
+
+from repro.core import Lake
+from repro.data import build_data_pipeline
+
+
+def _pipeline(name: str, seq_len: int):
+    if name == "data":
+        return build_data_pipeline(seq_len)
+    raise SystemExit(f"unknown pipeline {name!r} (built-in: data)")
+
+
+_QUERY_RE = re.compile(
+    r"^\s*select\s+(count\(\*\)|[\w,\s*]+)\s+from\s+(\w+)\s*"
+    r"(?:where\s+(\w+)\s*(=|>|<|>=|<=)\s*([-\d.]+))?\s*$", re.I)
+
+
+def _query(lake: Lake, sql: str, ref: str):
+    """Minimal SELECT over one table — the paper's Listing 3 read path.
+    (Full engines read the same snapshots via the Iceberg-like manifests.)"""
+    m = _QUERY_RE.match(sql)
+    if not m:
+        raise SystemExit(
+            "supported: SELECT count(*)|cols FROM table [WHERE col OP num]")
+    proj, table, wcol, wop, wval = m.groups()
+    cols = lake.read_table(ref, table)
+    if wcol:
+        import operator
+        ops = {"=": operator.eq, ">": operator.gt, "<": operator.lt,
+               ">=": operator.ge, "<=": operator.le}
+        mask = ops[wop](cols[wcol], float(wval))
+        cols = {k: v[mask] for k, v in cols.items()}
+    n = next(iter(cols.values())).shape[0] if cols else 0
+    if proj.strip().lower() == "count(*)":
+        print(n)
+        return
+    names = [c.strip() for c in proj.split(",") if c.strip() != "*"] \
+        or list(cols)
+    for i in range(min(n, 20)):
+        print({k: np.asarray(cols[k][i]).tolist() for k in names})
+    if n > 20:
+        print(f"... ({n} rows)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="repro")
+    ap.add_argument("--lake", default=".lake")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("branch")
+    b.add_argument("name")
+    b.add_argument("--from", dest="from_ref", default="main")
+    b.add_argument("--author", default=None)
+
+    c = sub.add_parser("checkout")
+    c.add_argument("ref")
+
+    r = sub.add_parser("run")
+    r.add_argument("--pipeline", default="data")
+    r.add_argument("--seq-len", type=int, default=256)
+    r.add_argument("--branch", required=True)
+    r.add_argument("--id", dest="run_id", default=None,
+                   help="replay this run id instead of a fresh run")
+    r.add_argument("--author", default="cli")
+
+    q = sub.add_parser("query")
+    q.add_argument("sql")
+    q.add_argument("--ref", default="main")
+
+    lg = sub.add_parser("log")
+    lg.add_argument("ref")
+
+    sub.add_parser("branches")
+    sub.add_parser("runs")
+
+    args = ap.parse_args(argv)
+    lake = Lake(args.lake)
+
+    if args.cmd == "branch":
+        author = args.author or args.name.split(".")[0]
+        digest = lake.catalog.create_branch(args.name, args.from_ref,
+                                            author=author)
+        print(f"{args.name} -> {digest[:12]} (copy-on-write)")
+    elif args.cmd == "checkout":
+        print(lake.catalog.resolve(args.ref))
+    elif args.cmd == "run":
+        pipe = _pipeline(args.pipeline, args.seq_len)
+        if args.run_id:
+            rep = lake.replay(args.run_id, pipe, branch=args.branch,
+                              author=args.author)
+            print(json.dumps({"replayed": args.run_id,
+                              "replay_run_id": rep.replay_run_id,
+                              "branch": rep.branch,
+                              "bit_exact": rep.bit_exact}))
+        else:
+            res = lake.run(pipe, branch=args.branch, author=args.author)
+            print(json.dumps({"run_id": res.run_id,
+                              "commit": res.commit[:12],
+                              "outputs": list(res.outputs)}))
+    elif args.cmd == "query":
+        _query(lake, args.sql, args.ref)
+    elif args.cmd == "log":
+        for d in lake.catalog.log(args.ref):
+            info = lake.catalog.commit_info(d)
+            print(f"{d[:12]} {info.author:12s} {info.message}")
+    elif args.cmd == "branches":
+        for name in sorted(lake.catalog.branches()):
+            print(name)
+    elif args.cmd == "runs":
+        for rid in lake.ledger.runs():
+            print(rid)
+
+
+if __name__ == "__main__":
+    main()

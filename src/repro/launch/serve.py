@@ -1,0 +1,56 @@
+"""Serving driver: load a checkpoint commit from the lake and serve batched
+requests (weights pinned to an immutable catalog ref).
+
+  PYTHONPATH=src python -m repro.launch.serve --lake /tmp/lake \
+      --ref trainer.run-run0 --arch paper-demo --smoke --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import full_config, smoke_config
+from repro.core import Lake
+from repro.serving import BatchedServer, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lake", required=True)
+    ap.add_argument("--ref", required=True,
+                    help="branch / tag / commit with a checkpoint")
+    ap.add_argument("--arch", default="paper-demo")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else full_config(args.arch)
+    lake = Lake(args.lake)
+    from repro.checkpoint import latest_checkpoint
+    commit = latest_checkpoint(lake, args.ref) or args.ref
+    engine = ServeEngine.from_catalog(
+        lake, commit, cfg, max_len=args.max_len, batch_size=args.batch_size)
+    server = BatchedServer(engine)
+
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, args.max_len - args.gen_tokens))
+        prompt = rng.integers(3, cfg.vocab_size, size=plen).astype(np.int32)
+        server.submit(rid, prompt, args.gen_tokens)
+    served = 0
+    while server.queue:
+        served += server.step()
+    print(f"served {served} requests from model commit "
+          f"{engine.model_commit[:12]}")
+    for rid in sorted(server.completed)[:3]:
+        res = server.completed[rid]
+        print(f"  req {rid}: {res.tokens[0][:8].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

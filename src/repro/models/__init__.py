@@ -1,0 +1,11 @@
+"""repro.models — unified model zoo for the assigned architectures."""
+
+from .config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from .lm import (decode_step, forward, init_cache, init_params, layer_flags,
+                 lm_loss)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+    "init_params", "forward", "decode_step", "init_cache", "lm_loss",
+    "layer_flags",
+]

@@ -1,0 +1,210 @@
+"""Attention: GQA with causal / sliding-window masks, full-sequence (train /
+prefill) and single-token decode over a KV cache.
+
+The XLA einsum path is the default (and the dry-run path); the Pallas flash
+kernel (``repro.kernels.flash_attention``) is selected with
+``attention_impl="pallas"`` and is validated against this code in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (bf16-safe)
+
+
+def _causal_window_mask(q_len: int, kv_len: int, *, q_offset: int,
+                        window: Optional[int]) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask. q position i attends kv position j iff
+    j <= i+q_offset and (window is None or i+q_offset - j < window)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    mask = kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    return mask
+
+
+def gqa_attention(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, T, KV, dh)
+    v: jnp.ndarray,          # (B, T, KV, dh)
+    *,
+    q_offset: int = 0,
+    is_global: jnp.ndarray | bool = True,  # scalar flag (scanned per layer)
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # decode: cache fill level
+    impl: str = "xla",
+    block: int = 1024,
+    block_remat: bool = False,
+) -> jnp.ndarray:
+    if impl == "chunked" and kv_valid_len is None:
+        return chunked_gqa_attention(
+            q, k, v, q_offset=q_offset, is_global=is_global, window=window,
+            attn_softcap=attn_softcap, block=block, block_remat=block_remat)
+    return _dense_gqa_attention(
+        q, k, v, q_offset=q_offset, is_global=is_global, window=window,
+        attn_softcap=attn_softcap, kv_valid_len=kv_valid_len)
+
+
+def _dense_gqa_attention(
+    q, k, v, *, q_offset=0, is_global=True, window=None,
+    attn_softcap=None, kv_valid_len=None,
+) -> jnp.ndarray:
+    """Grouped-query attention with optional sliding window + logit softcap.
+
+    ``is_global`` may be a traced scalar bool: when False the sliding-window
+    constraint is applied — this lets one scanned layer body serve both the
+    local and global layers of e.g. gemma-2 with uniform stacked params.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    scale = dh ** -0.5
+
+    qg = q.reshape(B, S, KV, groups, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    logits = softcap(logits, attn_softcap)
+
+    causal = _causal_window_mask(S, T, q_offset=q_offset, window=None)
+    if window is not None:
+        local = _causal_window_mask(S, T, q_offset=q_offset, window=window)
+        glob = jnp.asarray(is_global, bool)
+        mask = jnp.where(glob, causal, local)
+    else:
+        mask = causal
+    if kv_valid_len is not None:
+        mask = mask & (jnp.arange(T)[None, :] < kv_valid_len)
+    logits = jnp.where(mask[None, None, None, :, :], logits.astype(
+        jnp.float32), NEG_INF)
+
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, dh)
+
+
+def chunked_gqa_attention(
+    q: jnp.ndarray,          # (B, S, H, dh)
+    k: jnp.ndarray,          # (B, T, KV, dh)
+    v: jnp.ndarray,          # (B, T, KV, dh)
+    *,
+    q_offset: int = 0,
+    is_global: jnp.ndarray | bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    block: int = 1024,
+    block_remat: bool = False,
+) -> jnp.ndarray:
+    """Flash-style attention in pure jnp: online softmax over KV blocks via
+    ``lax.scan`` — never materializes the (S, T) logits.  This is the
+    XLA-lowerable twin of the Pallas kernel (same algorithm, same memory
+    behavior: O(S·block) temporaries instead of O(S·T)) and the default
+    impl for long-context shapes (DESIGN.md §6, EXPERIMENTS.md §Perf).
+
+    ``block_remat=True`` additionally checkpoints the per-block body:
+    without it, autodiff saves each block's logits/probs for the backward
+    (an O(S·T) stack — exactly what flash-attention-backward avoids by
+    in-kernel recompute); with it, blocks are recomputed during the
+    backward, trading ~1 extra block forward for O(S·T) saved bytes."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    scale = dh ** -0.5
+    blk = min(block, T)
+    padT = (-T) % blk
+    if padT:
+        k = jnp.pad(k, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padT), (0, 0), (0, 0)))
+    nblk = (T + padT) // blk
+
+    qg = (q.reshape(B, S, KV, groups, dh) * scale)
+    q_pos = jnp.arange(S) + q_offset
+    glob = jnp.asarray(is_global, bool)
+
+    kb = jnp.moveaxis(k.reshape(B, nblk, blk, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, blk, KV, dh), 1, 0)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = xs
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_j).astype(jnp.float32)
+        logits = softcap(logits, attn_softcap)
+        kv_pos = j * blk + jnp.arange(blk)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < T)
+        if window is not None:
+            local = mask & ((q_pos[:, None] - kv_pos[None, :]) < window)
+            mask = jnp.where(glob, mask, local)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), v_j).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KV, groups, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, groups, S), jnp.float32)
+    acc0 = jnp.zeros((B, KV, groups, S, dh), jnp.float32)
+    body_fn = jax.checkpoint(body) if block_remat else body
+    (m, l, acc), _ = jax.lax.scan(
+        body_fn, (m0, l0, acc0), (jnp.arange(nblk), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,S,dh)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------- KV cache
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, dh)
+    k_new: jnp.ndarray,        # (B, 1, KV, dh)
+    v_new: jnp.ndarray,        # (B, 1, KV, dh)
+    k_cache: jnp.ndarray,      # (B, T, KV, dh)
+    v_cache: jnp.ndarray,      # (B, T, KV, dh)
+    pos: jnp.ndarray,          # scalar int32: index to write / current length
+    *,
+    is_global: jnp.ndarray | bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+):
+    """One decode step: insert k/v at ``pos`` and attend over the cache.
+
+    Returns (attn_out (B,1,H,dh), new_k_cache, new_v_cache).
+    Sliding-window layers may use a ring cache of size ``window`` — handled
+    by the caller choosing T = window and pos % window (see serving/).
+    """
+    T = k_cache.shape[1]
+    write_idx = pos % T
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), write_idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), write_idx, axis=1)
+
+    B, _, H, dh = q.shape
+    KV = k_cache.shape[2]
+    groups = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, KV, groups, dh)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache) * scale
+    logits = softcap(logits, attn_softcap)
+
+    kv_idx = jnp.arange(T)
+    # absolute position of each slot in a ring cache
+    abs_pos = jnp.where(kv_idx <= write_idx, pos - write_idx + kv_idx,
+                        pos - T - write_idx + kv_idx)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        local = valid & ((pos - abs_pos) < window)
+        valid = jnp.where(jnp.asarray(is_global, bool), valid, local)
+    logits = jnp.where(valid[None, None, None, :],
+                       logits.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache)
+    return out.reshape(B, 1, H, dh), k_cache, v_cache

@@ -1,0 +1,204 @@
+"""Model configuration for every assigned architecture family.
+
+One dataclass covers dense GQA transformers, SSMs (Mamba-2/SSD), hybrids
+(parallel attn+SSM heads) and MoE — families differ only in per-layer branch
+flags, so a single scan-over-layers apply fn serves all ten architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | ssm | hybrid | moe
+    n_layers: int
+    d_model: int
+    vocab_size: int
+
+    # attention (ignored for family == "ssm")
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None   # window size for local layers
+    global_every: int = 1                  # 1 = all global; 2 = alternate l/g
+    global_layers: Tuple[int, ...] = ()    # explicit extra global layers
+    attn_softcap: Optional[float] = None   # gemma2: 50.0
+    final_softcap: Optional[float] = None  # gemma2: 30.0
+
+    # dense mlp
+    d_ff: int = 0
+    mlp_act: str = "silu"  # silu (swiglu) | gelu
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # §Perf: dtype of the EP combine payload (None = fp32 baseline)
+    moe_combine_dtype: Optional[str] = None
+    # §Perf: "dense" = pjit-propagated dispatch (baseline);
+    # "ep" = hand-scheduled shard_map expert parallelism (one psum/layer)
+    moe_impl: str = "dense"
+
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # modality frontend stub (audio / vision): number of prepended
+    # precomputed embeddings supplied by input_specs()
+    frontend: str = "none"  # none | audio | vision
+    n_frontend_embeds: int = 0
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # attention implementation: "chunked" (flash-style streaming, default —
+    # the XLA twin of the Pallas kernel), "xla" (dense logits; ablation),
+    # "pallas" (TPU kernel; interpret-validated on CPU)
+    attention_impl: str = "chunked"
+    attn_block: int = 1024
+    # remat the per-kv-block attention body (flash-bwd-style recompute);
+    # beyond-paper §Perf optimization — off in the paper-faithful baseline
+    attn_block_remat: bool = False
+
+    # ------------------------------------------------------------- derived
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family in ("dense", "hybrid", "moe")
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_moe(self) -> bool:
+        return self.family == "moe"
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context without a full-attention
+        layer attending over the whole cache?  (DESIGN.md shape-skip rule:
+        SSM yes; hybrid with only sliding-window globals yes; anything with
+        a full-attention layer no.)"""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid":
+            return True  # sliding-window attn + SSM state (see configs)
+        return False
+
+    def layer_is_global(self, i: int) -> bool:
+        """Per-layer attention span flag (scanned through the layer stack)."""
+        if self.sliding_window is None:
+            return True
+        if i in self.global_layers:
+            return True
+        if self.global_every > 1:
+            return (i % self.global_every) == (self.global_every - 1)
+        return not self.global_layers  # window-only unless listed
+
+    # ---------------------------------------------------------- accounting
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params within ties)."""
+        D, L, V = self.d_model, self.n_layers, self.vocab_size
+        n = V * D  # embed
+        if not self.tie_embeddings:
+            n += V * D
+        n += D  # final norm
+        if self.n_frontend_embeds:
+            n += D * D  # modality connector
+        has_mlp_block = self.is_moe or self.d_ff > 0
+        per_layer = D * (2 if has_mlp_block else 1)  # pre-mixer (+ pre-mlp)
+        if self.has_attention:
+            H, KV, dh = self.n_heads, self.n_kv_heads, self.d_head
+            per_layer += D * H * dh + 2 * D * KV * dh + H * dh * D
+            if self.qkv_bias:
+                per_layer += (H + 2 * KV) * dh
+        if self.has_ssm:
+            di, ns, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            proj_in = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+            per_layer += D * proj_in
+            per_layer += self.ssm_conv * (di + 2 * ns)  # conv over x,B,C
+            per_layer += 2 * nh + nh  # A_log, D, dt_bias
+            per_layer += di * D  # out proj
+            per_layer += di  # gated rmsnorm
+        if self.is_moe:
+            E, F = self.n_experts, self.expert_d_ff
+            per_layer += D * E  # router
+            per_layer += E * (3 * D * F)
+            if self.n_shared_experts:
+                per_layer += 3 * D * (self.n_shared_experts * F)
+                per_layer += D  # shared-expert gate
+        elif self.d_ff:
+            per_layer += 3 * D * self.d_ff
+        return n + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top-k routed + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        D, L, F = self.d_model, self.n_layers, self.expert_d_ff
+        inactive = (self.n_experts - self.top_k) * 3 * D * F
+        return self.param_count() - L * inactive
+
+    def model_flops_per_token(self, *, training: bool = True) -> float:
+        """6·N_active (fwd+bwd) or 2·N_active (fwd) — the §Roofline MODEL_FLOPS."""
+        mult = 6.0 if training else 2.0
+        return mult * self.active_param_count()
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One cell of the (arch × shape) grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """DESIGN.md §Arch-applicability shape-skip rule."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

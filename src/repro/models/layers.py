@@ -1,0 +1,77 @@
+"""Shared neural building blocks (pure jnp, shape-polymorphic, scan-friendly)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             *, zero_centered: bool = True) -> jnp.ndarray:
+    """RMSNorm in fp32 with (1+scale) gemma-style parametrization."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if zero_centered \
+        else scale.astype(jnp.float32)
+    return (y * w).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_angles(positions: jnp.ndarray, d_head: int,
+                theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions: (..., d_head/2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., n_heads, d_head); cos/sin broadcast over the head axis."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+               w_down: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    """Gated MLP: act(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    if act == "silu":
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(
+            x.dtype) * u
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def embed_tokens(tokens: jnp.ndarray, embedding: jnp.ndarray,
+                 *, scale_by_dim: bool = False) -> jnp.ndarray:
+    out = jnp.take(embedding, tokens, axis=0)
+    if scale_by_dim:  # gemma convention
+        out = out * jnp.asarray(out.shape[-1] ** 0.5, out.dtype)
+    return out
+
+
+def unembed(x: jnp.ndarray, embedding: jnp.ndarray,
+            cap: Optional[float] = None) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, embedding)
+    return softcap(logits, cap)

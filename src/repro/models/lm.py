@@ -1,0 +1,397 @@
+"""Unified decoder LM covering all assigned families.
+
+One scan-over-layers apply function serves dense / ssm / hybrid / moe:
+per-layer differences are either static config (family branches) or *scanned
+per-layer flags* (e.g. gemma-2's alternating local/global attention and
+hymba's three full-attention layers become a boolean vector threaded through
+``lax.scan``), so the traced HLO contains exactly ONE layer body regardless
+of depth — compact HLO is what makes 94-layer dry-runs compile quickly and
+keeps TPU compile times sane at scale.
+
+Multimodal archs (musicgen/internvl2) take precomputed frontend embeddings
+(the assignment's "modality frontend is a STUB") which pass through a trained
+connector and replace the first ``n_frontend_embeds`` sequence positions.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import (apply_rope, embed_tokens, mlp_swiglu, rms_norm,
+                     rope_angles, softcap, unembed)
+from .moe import moe_layer
+
+Params = Dict[str, Any]
+Identity = lambda x, name=None: x  # noqa: E731  (activation-sharding hook)
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# =============================================================== init params
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Real initialization (smoke tests / examples).  The dry-run never calls
+    this — it uses ``jax.eval_shape(init_params, ...)`` stand-ins."""
+    pd = _dtype(cfg.param_dtype)
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    keys = iter(jax.random.split(key, 64))
+
+    def dense(k, *shape, scale=None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(pd)
+
+    p: Params = {
+        "embed": dense(next(keys), V, D, scale=0.02),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense(next(keys), V, D, scale=0.02)
+    if cfg.n_frontend_embeds:
+        p["connector"] = dense(next(keys), D, D)
+
+    layers: Params = {"ln1": jnp.zeros((L, D), jnp.float32)}
+    if cfg.is_moe or cfg.d_ff:
+        layers["ln2"] = jnp.zeros((L, D), jnp.float32)
+    if cfg.has_attention:
+        H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        layers["attn"] = {
+            "wq": dense(next(keys), L, D, H * dh),
+            "wk": dense(next(keys), L, D, KV * dh),
+            "wv": dense(next(keys), L, D, KV * dh),
+            "wo": dense(next(keys), L, H * dh, D),
+        }
+        if cfg.qkv_bias:
+            layers["attn"]["bq"] = jnp.zeros((L, H * dh), pd)
+            layers["attn"]["bk"] = jnp.zeros((L, KV * dh), pd)
+            layers["attn"]["bv"] = jnp.zeros((L, KV * dh), pd)
+    if cfg.has_ssm:
+        di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+        proj_in = 2 * di + 2 * ns + nh
+        conv_dim = di + 2 * ns
+        layers["ssm"] = {
+            "in_proj": dense(next(keys), L, D, proj_in),
+            "conv_w": dense(next(keys), L, cfg.ssm_conv, conv_dim, scale=0.5),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.linspace(1.0, 16.0, nh), (L, nh))).astype(jnp.float32),
+            "D": jnp.ones((L, nh), jnp.float32),
+            "dt_bias": jnp.zeros((L, nh), jnp.float32),
+            "norm": jnp.zeros((L, di), jnp.float32),
+            "out_proj": dense(next(keys), L, di, D),
+        }
+    if cfg.is_moe:
+        E, F = cfg.n_experts, cfg.expert_d_ff
+        layers["moe"] = {
+            "router": dense(next(keys), L, D, E, scale=0.02),
+            "w_gate": dense(next(keys), L, E, D, F),
+            "w_up": dense(next(keys), L, E, D, F),
+            "w_down": dense(next(keys), L, E, F, D),
+        }
+        if cfg.n_shared_experts:
+            Fs = cfg.n_shared_experts * F
+            layers["moe"]["shared_gate"] = dense(next(keys), L, D, scale=0.02)
+            layers["moe"]["shared_w_gate"] = dense(next(keys), L, D, Fs)
+            layers["moe"]["shared_w_up"] = dense(next(keys), L, D, Fs)
+            layers["moe"]["shared_w_down"] = dense(next(keys), L, Fs, D)
+    elif cfg.d_ff:
+        layers["mlp"] = {
+            "w_gate": dense(next(keys), L, D, cfg.d_ff),
+            "w_up": dense(next(keys), L, D, cfg.d_ff),
+            "w_down": dense(next(keys), L, cfg.d_ff, D),
+        }
+    p["layers"] = layers
+    return p
+
+
+def layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) bool — True where the layer attends globally (scanned)."""
+    return jnp.asarray([cfg.layer_is_global(i) for i in range(cfg.n_layers)])
+
+
+# ================================================================ layer body
+def _attn_branch(cfg: ModelConfig, lp: Params, h: jnp.ndarray,
+                 is_global, cos, sin, ac: Callable,
+                 cache: Optional[dict], pos) -> Tuple[jnp.ndarray, dict]:
+    B, S, D = h.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    a = lp["attn"]
+    q = jnp.einsum("bsd,dk->bsk", h, a["wq"])
+    k = jnp.einsum("bsd,dk->bsk", h, a["wk"])
+    v = jnp.einsum("bsd,dk->bsk", h, a["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + a["bq"], k + a["bk"], v + a["bv"]
+    q = ac(q.reshape(B, S, H, dh), "q")
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache: dict = {}
+    if cfg.attention_impl == "pallas":
+        from ..kernels.flash_attention.ops import flash_gqa
+        attn_full = lambda q_, k_, v_: flash_gqa(  # noqa: E731
+            q_, k_, v_, True, cfg.sliding_window, cfg.attn_softcap)
+    else:
+        attn_full = lambda q_, k_, v_: attn_lib.gqa_attention(  # noqa: E731
+            q_, k_, v_, is_global=is_global, window=cfg.sliding_window,
+            attn_softcap=cfg.attn_softcap, impl=cfg.attention_impl,
+            block=cfg.attn_block, block_remat=cfg.attn_block_remat)
+    if cache is None:  # training: full self-attention
+        out = attn_full(q, k, v)
+    elif S > 1:  # prefill: attend within prompt, emit cache
+        out = attn_full(q, k, v)
+        T = cache["k"].shape[1]
+        pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+        new_cache = {"k": jnp.pad(k.astype(cache["k"].dtype), pad),
+                     "v": jnp.pad(v.astype(cache["v"].dtype), pad)}
+    else:  # decode: one token against the cache
+        out, k_c, v_c = attn_lib.decode_attention(
+            q, k, v, cache["k"], cache["v"], pos,
+            is_global=is_global, window=cfg.sliding_window,
+            attn_softcap=cfg.attn_softcap)
+        new_cache = {"k": k_c, "v": v_c}
+    out = ac(out, "attn_out")
+    return jnp.einsum("bsk,kd->bsd", out.reshape(B, S, H * dh), a["wo"]), \
+        new_cache
+
+
+def _ssm_branch(cfg: ModelConfig, lp: Params, h: jnp.ndarray, ac: Callable,
+                cache: Optional[dict]) -> Tuple[jnp.ndarray, dict]:
+    B, S, D = h.shape
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    s = lp["ssm"]
+    zxbcdt = jnp.einsum("bsd,dp->bsp", h, s["in_proj"])
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    A = -jnp.exp(s["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + s["dt_bias"][None, None, :])
+
+    new_cache: dict = {}
+    if cache is None or S > 1:  # train / prefill: chunked SSD
+        tail = None if cache is None else cache["conv"]
+        conv, new_tail = ssm_lib.causal_conv1d(conv_in, s["conv_w"], tail)
+        conv = jax.nn.silu(conv.astype(jnp.float32)).astype(h.dtype)
+        xs, Bc, Cc = jnp.split(conv, [di, di + ns], axis=-1)
+        chunk = min(cfg.ssm_chunk, S)
+        y, h_fin = ssm_lib.ssd_scan(
+            xs.reshape(B, S, nh, hd), dt, A, Bc, Cc, chunk=chunk,
+            h0=None if cache is None else cache["h"])
+        y = y + xs.reshape(B, S, nh, hd) * s["D"][None, None, :, None]
+        if cache is not None:
+            new_cache = {"h": h_fin, "conv": new_tail}
+    else:  # decode: O(1) state update
+        tail = cache["conv"]
+        full = jnp.concatenate([tail, conv_in], axis=1)  # (B, K, convdim)
+        conv = jnp.einsum("bkc,kc->bc", full, s["conv_w"])[:, None, :]
+        conv = jax.nn.silu(conv.astype(jnp.float32)).astype(h.dtype)
+        xs, Bc, Cc = jnp.split(conv, [di, di + ns], axis=-1)
+        y, h_new = ssm_lib.ssd_decode_step(
+            xs.reshape(B, nh, hd), dt[:, 0], A, Bc[:, 0], Cc[:, 0],
+            cache["h"])
+        y = y[:, None] + xs.reshape(B, 1, nh, hd) * s["D"][None, None, :, None]
+        new_cache = {"h": h_new, "conv": full[:, 1:, :]}
+    y = ssm_lib.gated_rms_norm(y.reshape(B, S, di), z, s["norm"],
+                               cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, s["out_proj"]), new_cache
+
+
+def _mlp_branch(cfg: ModelConfig, lp: Params, h: jnp.ndarray, ac: Callable
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        m = lp["moe"]
+        mesh = None
+        if cfg.moe_impl == "ep":
+            from ..distributed.context import current_mesh
+            mesh = current_mesh()
+        if (mesh is not None and "model" in mesh.axis_names
+                and cfg.n_experts % int(mesh.shape["model"]) == 0):
+            from .moe import moe_layer_ep
+            y, metrics = moe_layer_ep(
+                h, m["router"], m["w_gate"], m["w_up"], m["w_down"],
+                mesh=mesh, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.mlp_act,
+                dp_axes=("pod", "data"))
+        else:
+            y, metrics = moe_layer(
+                h, m["router"], m["w_gate"], m["w_up"], m["w_down"],
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                act=cfg.mlp_act, ac=ac,
+                combine_dtype=cfg.moe_combine_dtype)
+        aux = metrics.aux_loss
+        if cfg.n_shared_experts:
+            sh = mlp_swiglu(h, m["shared_w_gate"], m["shared_w_up"],
+                            m["shared_w_down"], cfg.mlp_act)
+            g = jax.nn.sigmoid(jnp.einsum(
+                "bsd,d->bs", h.astype(jnp.float32),
+                m["shared_gate"].astype(jnp.float32)))
+            y = y + sh * g[..., None].astype(h.dtype)
+        return y, aux
+    mlpp = lp["mlp"]
+    y = mlp_swiglu(h, mlpp["w_gate"], mlpp["w_up"], mlpp["w_down"],
+                   cfg.mlp_act)
+    y = ac(y, "mlp_out")
+    return y, aux
+
+
+def _layer(cfg: ModelConfig, lp: Params, x: jnp.ndarray, is_global,
+           cos, sin, ac: Callable, cache: Optional[dict], pos
+           ) -> Tuple[jnp.ndarray, dict, jnp.ndarray]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_cache: dict = {}
+    mix = jnp.zeros_like(x)
+    if cfg.has_attention:
+        a_cache = None
+        if cache is not None and "k" in cache:
+            a_cache = {"k": cache["k"], "v": cache["v"]}
+        a_out, a_new = _attn_branch(cfg, lp, h, is_global, cos, sin, ac,
+                                    a_cache, pos)
+        mix = mix + a_out
+        new_cache.update(a_new)
+    if cfg.has_ssm:
+        s_cache = None
+        if cache is not None:
+            s_cache = {"h": cache["h"], "conv": cache["conv"]}
+        s_out, s_new = _ssm_branch(cfg, lp, h, ac, s_cache)
+        mix = mix + s_out
+        new_cache.update(s_new)
+    if cfg.has_attention and cfg.has_ssm:  # hybrid: mean-combine branches
+        mix = mix * 0.5
+    x = x + ac(mix.astype(x.dtype), "residual")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe or cfg.d_ff:  # mamba2 layers are mixer-only (no MLP)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        mlp_out, aux = _mlp_branch(cfg, lp, h2, ac)
+        x = x + mlp_out.astype(x.dtype)
+    return ac(x, "hidden"), new_cache, aux
+
+
+# ================================================================== forward
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            *, ac: Callable = Identity, cache: Optional[dict] = None,
+            pos=None, remat: bool = True):
+    """Full-sequence forward (training / prefill).
+
+    Returns (logits, new_cache_stack, aux_loss).  ``cache``, if given, is the
+    stacked (L, ...) cache pytree to fill during prefill.
+    """
+    cd = _dtype(cfg.compute_dtype)
+    x = embed_tokens(tokens, params["embed"],
+                     scale_by_dim=cfg.final_softcap is not None).astype(cd)
+    if cfg.n_frontend_embeds:
+        fe = jnp.einsum("bpd,de->bpe", extra_embeds.astype(cd),
+                        params["connector"])
+        x = jnp.concatenate([fe, x[:, cfg.n_frontend_embeds:, :]], axis=1) \
+            if x.shape[1] > cfg.n_frontend_embeds else fe[:, :x.shape[1]]
+    x = ac(x, "hidden")
+    S = x.shape[1]
+    positions = jnp.arange(S) + (0 if pos is None else pos)
+    cos, sin = (rope_angles(positions, cfg.d_head, cfg.rope_theta)
+                if cfg.has_attention else (None, None))
+    flags = layer_flags(cfg)
+
+    def body(carry, xs):
+        lp, flag, cache_l = xs
+        x, aux = carry
+        x, new_cache_l, aux_l = _layer(cfg, lp, x, flag, cos, sin, ac,
+                                       cache_l, pos)
+        return (x, aux + aux_l), new_cache_l
+
+    body_fn = jax.checkpoint(body) if remat else body
+    layer_cache = None
+    if cache is not None:
+        layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+    xs = (params["layers"], flags, layer_cache)
+    (x, aux), new_cache = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                       xs)
+    if cache is not None:
+        new_cache["pos"] = jnp.asarray(S if pos is None else pos + S,
+                                       jnp.int32)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, emb, cfg.final_softcap)
+    return logits, new_cache, aux
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
+                cache: dict, *, ac: Callable = Identity):
+    """One-token decode: token (B,), cache pytree with leading L dims and a
+    scalar ``pos``.  Returns (logits (B, V), new_cache)."""
+    cd = _dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = embed_tokens(token[:, None], params["embed"],
+                     scale_by_dim=cfg.final_softcap is not None).astype(cd)
+    x = ac(x, "hidden")
+    cos, sin = (rope_angles(pos[None], cfg.d_head, cfg.rope_theta)
+                if cfg.has_attention else (None, None))
+    if cos is not None:
+        cos, sin = cos[None], sin[None]  # (B=1 broadcast, 1, half)
+    flags = layer_flags(cfg)
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x, xs):
+        lp, flag, cache_l = xs
+        x, new_cache_l, _ = _layer(cfg, lp, x, flag, cos, sin, ac, cache_l,
+                                   pos)
+        return x, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], flags,
+                                          layer_cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, emb, cfg.final_softcap)
+    new_cache["pos"] = pos + 1
+    return logits[:, 0, :], new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: str = "bfloat16") -> dict:
+    """Stacked (L, ...) KV/state cache + scalar position."""
+    L = cfg.n_layers
+    cd = _dtype(dtype)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        KV, dh = cfg.n_kv_heads, cfg.d_head
+        cache["k"] = jnp.zeros((L, batch, max_len, KV, dh), cd)
+        cache["v"] = jnp.zeros((L, batch, max_len, KV, dh), cd)
+    if cfg.has_ssm:
+        nh, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.ssm_d_inner + 2 * ns
+        cache["h"] = jnp.zeros((L, batch, nh, hd, ns), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), cd)
+    return cache
+
+
+# ===================================================================== loss
+def lm_loss(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            *, ac: Callable = Identity, remat: bool = True):
+    """Next-token cross-entropy (fp32 log-softmax), masking frontend slots.
+    Returns (loss, metrics dict)."""
+    logits, _, aux = forward(cfg, params, tokens, extra_embeds, ac=ac,
+                             remat=remat)
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1, :].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = jnp.ones_like(nll)
+    if cfg.n_frontend_embeds:
+        keep = jnp.arange(nll.shape[1]) >= cfg.n_frontend_embeds
+        mask = mask * keep[None, :]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}

@@ -1,0 +1,142 @@
+"""Mamba-2 (SSD — state-space duality) mixer, pure-jnp model path.
+
+The chunked SSD algorithm: within-chunk terms are dense matmuls (MXU-friendly
+"attention-like" quadratic-in-chunk work), across-chunk terms are a scan over
+a small recurrent state (B, nh, hd, ns).  The Pallas kernel in
+``repro.kernels.mamba_ssd`` implements the same chunk body with explicit VMEM
+tiling; this module is the oracle and the CPU/dry-run path.
+
+Decode is O(1): a single state update per token — this is why the SSM/hybrid
+archs are the ones that run the ``long_500k`` shape (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray          # (B, nh, hd, ns) recurrent state
+    conv: jnp.ndarray       # (B, d_conv-1, conv_dim) causal-conv tail
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C).
+    Returns (y, new_tail) where new_tail carries the last K-1 inputs."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else tail
+    return y, new_tail
+
+
+def ssd_scan(
+    x: jnp.ndarray,     # (B, S, nh, hd)  inputs per head
+    dt: jnp.ndarray,    # (B, S, nh)      softplus'd step sizes
+    A: jnp.ndarray,     # (nh,)           negative decay rates
+    Bmat: jnp.ndarray,  # (B, S, ns)      input projection (n_groups=1)
+    Cmat: jnp.ndarray,  # (B, S, ns)      output projection
+    *,
+    chunk: int = 256,
+    h0: Optional[jnp.ndarray] = None,
+):
+    """Chunked SSD: returns (y (B,S,nh,hd), h_final (B,nh,hd,ns)).
+
+    Recurrence (per head):  h_t = exp(dt_t A) h_{t-1} + dt_t B_t xᵀ_t
+                            y_t = C_t · h_t
+    """
+    Bsz, S, nh, hd = x.shape
+    ns = Bmat.shape[-1]
+    S_orig = S
+    if S % chunk:  # pad with dt=0 steps: decay=1, contribution=0 ⇒ identity
+        pad = chunk - (S % chunk)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nchunks = S // chunk
+
+    xc = x.reshape(Bsz, nchunks, chunk, nh, hd)
+    dtc = dt.reshape(Bsz, nchunks, chunk, nh).astype(jnp.float32)
+    Bc = Bmat.reshape(Bsz, nchunks, chunk, ns)
+    Cc = Cmat.reshape(Bsz, nchunks, chunk, ns)
+
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]  # log-decay per step
+    seg = jnp.cumsum(dA, axis=2)                           # (B,N,Q,nh)
+    seg_total = seg[:, :, -1:, :]                          # (B,N,1,nh)
+
+    # within-chunk "attention": L[t,k] = exp(seg_t - seg_k) for t >= k.
+    # Mask BEFORE exp: masked entries have rel > 0 (cumsum decreases), and
+    # exp(+big)=inf under a where() poisons the backward with inf·0 = NaN.
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]    # (B,N,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    rel = jnp.where(causal[None, None, :, :, None], rel, -1e30)
+    L = jnp.exp(rel)
+    cb = jnp.einsum("bnts,bnks->bntk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                # (B,N,Q,Q)
+    W = cb[..., None] * L                                  # (B,N,Q,Q,nh)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]          # (B,N,Q,nh,hd)
+    y_intra = jnp.einsum("bntkh,bnkhd->bnthd", W, xdt)
+
+    # chunk -> carried state contribution: decay-to-end ⊗ (B x dt)
+    decay_out = jnp.exp(seg_total - seg)                   # (B,N,Q,nh)
+    chunk_state = jnp.einsum("bnks,bnkhd->bnhds",
+                             Bc.astype(jnp.float32),
+                             xdt * decay_out[..., None])   # (B,N,nh,hd,ns)
+
+    def body(h, inputs):
+        cs, st, c_chunk, seg_chunk = inputs
+        # inter-chunk output: read previous state through C with decay-in
+        decay_in = jnp.exp(seg_chunk)                      # (B,Q,nh)
+        y_int = jnp.einsum("bts,bhds->bthd", c_chunk.astype(jnp.float32), h)
+        y_int = y_int * decay_in[..., None]
+        h_new = h * jnp.exp(st)[:, 0, :, None, None] + cs
+        return h_new, y_int
+
+    h0 = (jnp.zeros((Bsz, nh, hd, ns), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+    xs = (
+        jnp.moveaxis(chunk_state, 1, 0),
+        jnp.moveaxis(seg_total, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(seg, 1, 0),
+    )
+    h_final, y_inter = jax.lax.scan(body, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1).reshape(Bsz, nchunks, chunk, nh, hd)
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hd)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,     # (B, nh, hd)
+    dt: jnp.ndarray,    # (B, nh)
+    A: jnp.ndarray,     # (nh,)
+    Bvec: jnp.ndarray,  # (B, ns)
+    Cvec: jnp.ndarray,  # (B, ns)
+    h: jnp.ndarray,     # (B, nh, hd, ns) fp32
+):
+    """O(1) per-token state update (long-context decode path)."""
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])  # (B, nh)
+    upd = jnp.einsum("bhd,bs->bhds", x.astype(jnp.float32) * dtf[..., None],
+                     Bvec.astype(jnp.float32))
+    h_new = h * decay[..., None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", h_new, Cvec.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def gated_rms_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba-2 output gate: RMSNorm(y * silu(z)) * (1+scale)."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    out = g * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(y.dtype)

@@ -1,0 +1,8 @@
+"""repro.optim — from-scratch AdamW (+ WSD/cosine schedules, grad clipping,
+int8 error-feedback gradient compression)."""
+
+from .adamw import AdamWConfig, AdamWState, apply, compress_int8, init
+from .schedules import SCHEDULES, constant, cosine, wsd
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "apply", "compress_int8",
+           "SCHEDULES", "wsd", "cosine", "constant"]

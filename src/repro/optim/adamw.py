@@ -1,0 +1,113 @@
+"""AdamW with fp32 master weights + optional int8 error-feedback gradient
+compression (the distributed-optimization trick for cross-pod all-reduce).
+
+Implemented from scratch (no optax dependency) as pure pytree functions so
+the optimizer state is an ordinary pytree: it shards with the same
+PartitionSpecs as the parameters (ZeRO-style) and checkpoints as catalog
+tables like everything else.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray            # () int32
+    mu: Any                      # fp32 pytree
+    nu: Any                      # fp32 pytree
+    master: Any                  # fp32 master params (None if params are fp32)
+    ef: Any                      # error-feedback residual (None if no compression)
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compress_grads: bool = False   # int8 EF compression of the grad tree
+
+
+def _zeros_like_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def init(params, config: AdamWConfig) -> AdamWState:
+    needs_master = any(x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda x: x.astype(jnp.float32), params)
+              if needs_master else None)
+    ef = _zeros_like_f32(params) if config.compress_grads else None
+    return AdamWState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                      _zeros_like_f32(params), master, ef)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_int8(g: jnp.ndarray, residual: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 quantization: returns (q, scale, new_residual).
+    The all-reduce then moves 1 byte/grad instead of 4 — the classic
+    bandwidth-term optimization for slow cross-pod links."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def apply(grads, state: AdamWState, params, *, lr, config: AdamWConfig):
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    clip_coef = jnp.minimum(1.0, config.grad_clip / (gnorm + 1e-12)) \
+        if config.grad_clip else 1.0
+
+    if config.compress_grads:
+        def comp(g, r):
+            q, scale, new_r = compress_int8(g, r)
+            return q.astype(jnp.float32) * scale, new_r
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(state.ef)
+        pairs = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+        grads = treedef.unflatten([p[0] for p in pairs])
+        new_ef = treedef.unflatten([p[1] for p in pairs])
+    else:
+        new_ef = state.ef
+
+    step = state.step + 1
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    masters = state.master if state.master is not None else params
+
+    def upd(p_master, p, g, m, v):
+        g = g.astype(jnp.float32) * clip_coef
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        pm = p_master.astype(jnp.float32)
+        pm = pm - lr * (delta + config.weight_decay * pm)
+        return pm, pm.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, masters, params, grads, state.mu, state.nu)
+    # unzip the 4-tuples
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[3], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_state = AdamWState(
+        step, new_mu, new_nu,
+        new_master if state.master is not None else None, new_ef)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,42 @@
+"""LR schedules.  WSD (warmup-stable-decay) is a first-class citizen because
+minicpm-2b (assigned arch) was trained with it; cosine covers the rest.
+
+WSD's stable phase is also what makes mid-run branching cheap to reason
+about: any checkpoint in the stable phase is a valid branch point with the
+same LR (the catalog's branch-from-commit semantics pair naturally with it).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, floor: float = 0.0):
+    """Warmup-Stable-Decay (minicpm): linear warmup → flat → 1-sqrt decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+    t = (step - warmup_steps - stable_steps) / max(decay_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    decay = peak_lr * (1.0 - jnp.sqrt(t)) + floor * jnp.sqrt(t)
+    return jnp.where(step < warmup_steps, warm,
+                     jnp.where(step < warmup_steps + stable_steps,
+                               peak_lr, decay))
+
+
+def cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+           floor_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps)
+                 / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_ratio + (1 - floor_ratio)
+                     * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)
+
+
+SCHEDULES = {"wsd": wsd, "cosine": cosine, "constant": constant}

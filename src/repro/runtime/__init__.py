@@ -1,0 +1,9 @@
+"""repro.runtime — step builders + fault-tolerant trainer."""
+
+from .steps import (build_decode_step, build_prefill_step, build_train_step,
+                    input_specs, synthetic_batch)
+from .trainer import StepRecord, Trainer, TrainerConfig
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "input_specs", "synthetic_batch", "Trainer", "TrainerConfig",
+           "StepRecord"]

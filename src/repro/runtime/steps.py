@@ -1,0 +1,103 @@
+"""Jit-ready train / prefill / decode step builders.
+
+These are the terminal DAG nodes of a training/serving pipeline (paper §2:
+"running P is the composition of transformations") — and exactly what the
+multi-pod dry-run lowers and compiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import config as mcfg
+from ..models import lm
+from ..optim import adamw
+from ..optim.schedules import SCHEDULES
+
+
+def build_train_step(cfg: mcfg.ModelConfig, *,
+                     opt_config: adamw.AdamWConfig = adamw.AdamWConfig(),
+                     schedule: str = "cosine",
+                     schedule_kw: Optional[dict] = None,
+                     ac: Callable = lm.Identity,
+                     remat: bool = True):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+    skw = dict(schedule_kw or {"peak_lr": 3e-4, "warmup_steps": 100,
+                               "total_steps": 10_000})
+    sched = SCHEDULES[schedule]
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return lm.lm_loss(cfg, p, batch["tokens"],
+                              batch.get("extra_embeds"), ac=ac, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = sched(opt_state.step, **skw)
+        params, opt_state, opt_metrics = adamw.apply(
+            grads, opt_state, params, lr=lr, config=opt_config)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: mcfg.ModelConfig, *, max_len: int,
+                       ac: Callable = lm.Identity):
+    """(params, tokens, cache) → (last_logits, cache)."""
+
+    def prefill_step(params, tokens, cache, extra_embeds=None):
+        logits, cache, _ = lm.forward(cfg, params, tokens, extra_embeds,
+                                      ac=ac, cache=cache, pos=0, remat=True)
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: mcfg.ModelConfig, *, ac: Callable = lm.Identity,
+                      greedy: bool = True):
+    """(params, token, cache) → (next_token, logits, cache)."""
+    serve_cfg = cfg.with_(capacity_factor=-1.0) if cfg.is_moe else cfg
+
+    def decode_one(params, token, cache):
+        logits, cache = lm.decode_step(serve_cfg, params, token, cache, ac=ac)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_one
+
+
+def synthetic_batch(cfg: mcfg.ModelConfig, *, batch: int, seq: int,
+                    key=None) -> Dict[str, Any]:
+    """Materialized random batch (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0,
+                                        cfg.vocab_size, dtype=jnp.int32)}
+    if cfg.n_frontend_embeds:
+        out["extra_embeds"] = jax.random.normal(
+            k2, (batch, cfg.n_frontend_embeds, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def input_specs(cfg: mcfg.ModelConfig, shape: mcfg.ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a grid cell —
+    weak-type-correct, shardable, zero allocation (dry-run contract)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        out = {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.n_frontend_embeds:
+        out["extra_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_embeds, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return out

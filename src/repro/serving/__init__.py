@@ -1,0 +1,5 @@
+"""repro.serving — commit-pinned batched serving (prefill + KV-cache decode)."""
+
+from .engine import BatchedServer, GenerationResult, Request, ServeEngine
+
+__all__ = ["ServeEngine", "BatchedServer", "Request", "GenerationResult"]

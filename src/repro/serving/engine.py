@@ -1,0 +1,122 @@
+"""Serving engine: batched prefill + decode over a KV cache, pinned to a
+catalog commit (the paper's read path, Fig. 3: ref → snapshot → files →
+in-memory — here ref → checkpoint commit → params → device).
+
+The engine records which commit its weights came from; every response can
+therefore cite an immutable model identity — serving inherits the paper's
+reproducibility story.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import checkpoint as ckpt
+from ..core import Lake
+from ..models import init_cache
+from ..models.config import ModelConfig
+from ..runtime.steps import build_decode_step, build_prefill_step
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, n_generated)
+    model_commit: Optional[str]
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
+                 batch_size: int, model_commit: Optional[str] = None,
+                 ac=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.model_commit = model_commit
+        ac = ac if ac is not None else (lambda x, name=None: x)
+        self._prefill = jax.jit(build_prefill_step(cfg, max_len=max_len,
+                                                   ac=ac))
+        self._decode = jax.jit(build_decode_step(cfg, ac=ac))
+
+    @classmethod
+    def from_catalog(cls, lake: Lake, ref: str, cfg: ModelConfig, *,
+                     max_len: int, batch_size: int, mesh=None,
+                     param_specs=None, ac=None) -> "ServeEngine":
+        """Load weights from a checkpoint commit — the serving side of
+        'immutable reference to code and input data'."""
+        commit = lake.catalog.resolve(ref)
+        params, _, _ = ckpt.restore(lake, commit, mesh=mesh,
+                                    param_specs=param_specs)
+        return cls(cfg, params, max_len=max_len, batch_size=batch_size,
+                   model_commit=commit, ac=ac)
+
+    # ------------------------------------------------------------- generate
+    def generate(self, prompts: np.ndarray, *, n_tokens: int,
+                 extra_embeds=None) -> GenerationResult:
+        """Greedy batched generation. prompts: (B, P) int32."""
+        B, P = prompts.shape
+        assert B == self.batch_size, (B, self.batch_size)
+        assert P + n_tokens <= self.max_len
+        cache = init_cache(self.cfg, B, self.max_len,
+                           dtype=self.cfg.compute_dtype)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, extra_embeds)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for _ in range(n_tokens - 1):
+            tok, _, cache = self._decode(self.params, tok, cache)
+            out.append(np.asarray(tok))
+        return GenerationResult(tokens=np.stack(out, axis=1),
+                                model_commit=self.model_commit,
+                                prompt_len=P)
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray
+    n_tokens: int
+
+
+class BatchedServer:
+    """Static-batching request server: queue requests, run bucketed batches.
+
+    (Continuous batching is a decode-slot scheduler on top of the same
+    decode step; static bucketing keeps the example deterministic.)"""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self.completed: Dict[int, GenerationResult] = {}
+
+    def submit(self, request_id: int, prompt: np.ndarray, n_tokens: int):
+        self.queue.append(Request(request_id, prompt, n_tokens))
+
+    def step(self) -> int:
+        """Serve one batch; returns number of requests completed."""
+        if not self.queue:
+            return 0
+        bs = self.engine.batch_size
+        batch, self.queue = self.queue[:bs], self.queue[bs:]
+        P = max(r.prompt.shape[0] for r in batch)
+        n_gen = max(r.n_tokens for r in batch)
+        prompts = np.zeros((bs, P), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, P - r.prompt.shape[0]:] = r.prompt  # left-pad
+        while len(batch) < bs:  # pad the batch with copies of slot 0
+            batch.append(batch[0])
+        res = self.engine.generate(prompts, n_tokens=n_gen)
+        done = 0
+        for i, r in enumerate(batch[:bs]):
+            if r.request_id not in self.completed:
+                self.completed[r.request_id] = GenerationResult(
+                    tokens=res.tokens[i:i + 1, :r.n_tokens],
+                    model_commit=res.model_commit, prompt_len=P)
+                done += 1
+        return done

@@ -1,0 +1,43 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and only the dry-run,
+# forces 512 host devices in its own process — see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import Lake
+
+
+@pytest.fixture()
+def lake(tmp_path):
+    """A throwaway lake with a deterministic clock (monotone, test-stable)."""
+    t = [1_700_000_000.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return Lake(tmp_path / "lake", clock=clock)
+
+
+@pytest.fixture()
+def source_cols():
+    rng = np.random.default_rng(0)
+    n = 257  # intentionally not a multiple of any chunk size
+    return {
+        "c1": rng.normal(size=n).astype(np.float32),
+        "c2": rng.integers(0, 1000, size=n).astype(np.int64),
+        "c3": (np.arange(n) % 7).astype(np.int32),
+        "transaction_ts": np.arange(n, dtype=np.int64),
+    }
+
+
+@pytest.fixture()
+def seeded_lake(lake, source_cols):
+    snap = lake.io.write_snapshot(source_cols)
+    lake.catalog.commit("main", {"source_table": snap}, "seed",
+                        _wap_token=True)
+    return lake

@@ -1,0 +1,136 @@
+"""While-aware HLO analyzer: trip-count weighting, slice-aware bytes,
+tuple collectives — on synthetic HLO with known ground truth."""
+
+import textwrap
+
+import pytest
+
+from repro.distributed import analysis
+
+
+def _prog(text):
+    return analysis.HloProgram(textwrap.dedent(text))
+
+
+def test_dot_inside_while_weighted_by_trip_count():
+    prog = _prog("""\
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p0 = f32[8,8]{1,0} parameter(0)
+      %w = f32[8,8]{1,0} parameter(1)
+      %d = f32[8,8]{1,0} dot(%p0, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %c = s32[] constant(24)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+    }
+    """)
+    flops, _ = prog.flops_bytes()
+    assert flops == 24 * 2 * 8 * 8 * 8
+
+
+def test_fusion_called_from_while_inherits_weight():
+    prog = _prog("""\
+    %fused_computation (p: f32[4,4]) -> f32[4,4] {
+      %p0 = f32[4,4]{1,0} parameter(0)
+      %q0 = f32[4,4]{1,0} parameter(1)
+      %d = f32[4,4]{1,0} dot(%p0, %q0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    %body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+      %f = f32[4,4]{1,0} fusion(%x, %y), kind=kOutput, calls=%fused_computation
+      ROOT %t = (s32[], f32[4,4]) tuple(%i, %f)
+    }
+
+    %cond (p: (s32[], f32[4,4])) -> pred[] {
+      %c = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+      %w = (s32[], f32[4,4]) while(%init), condition=%cond, body=%body
+    }
+    """)
+    flops, _ = prog.flops_bytes()
+    assert flops == 10 * 2 * 4 * 4 * 4
+
+
+def test_slice_aware_bytes_for_stacked_buffers():
+    """A DUS into a (trip, …) stack must be charged one slice per iter."""
+    prog = _prog("""\
+    %body (p: (s32[], f32[12,8,8])) -> (s32[], f32[12,8,8]) {
+      %stack = f32[12,8,8]{2,1,0} parameter(1)
+      %upd = f32[1,8,8]{2,1,0} parameter(2)
+      %dus = f32[12,8,8]{2,1,0} dynamic-update-slice(%stack, %upd, %i)
+      ROOT %t = (s32[], f32[12,8,8]) tuple(%i, %dus)
+    }
+
+    %cond (p: (s32[], f32[12,8,8])) -> pred[] {
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[12,8,8]) -> f32[12,8,8] {
+      %w = (s32[], f32[12,8,8]) while(%init), condition=%cond, body=%body
+    }
+    """)
+    _, nbytes = prog.flops_bytes()
+    # DUS: result (12,8,8)/12 + operand stack (12,8,8)/12 + update (1,8,8),
+    # ×12 iterations = 3 slices/iter × 12 × 256 bytes
+    slice_bytes = 8 * 8 * 4
+    assert nbytes == pytest.approx(12 * 3 * slice_bytes)
+
+
+def test_tuple_all_reduce_counts_all_elements():
+    hlo = textwrap.dedent("""\
+    ENTRY %main (a: f32[8]) -> f32[8] {
+      %z = (f32[128]{0}, f32[64]{0}, f32[32]{0}) all-reduce(%p, %q, %r), replica_groups={{0,1}}
+    }
+    """)
+    stats = analysis.parse_collectives(hlo, n_devices=2)
+    assert stats.result_bytes["all-reduce"] == (128 + 64 + 32) * 4
+
+
+def test_nested_while_multiplies():
+    prog = _prog("""\
+    %inner_body (p: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+      %p0 = f32[2,2]{1,0} parameter(0)
+      %q0 = f32[2,2]{1,0} parameter(1)
+      %d = f32[2,2]{1,0} dot(%p0, %q0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[2,2]) tuple(%i, %d)
+    }
+
+    %inner_cond (p: (s32[], f32[2,2])) -> pred[] {
+      %c = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %outer_body (p: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+      %w2 = (s32[], f32[2,2]) while(%init2), condition=%inner_cond, body=%inner_body
+      ROOT %t = (s32[], f32[2,2]) tuple(%i, %g)
+    }
+
+    %outer_cond (p: (s32[], f32[2,2])) -> pred[] {
+      %c = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[2,2]) -> f32[2,2] {
+      %w = (s32[], f32[2,2]) while(%init), condition=%outer_cond, body=%outer_body
+    }
+    """)
+    flops, _ = prog.flops_bytes()
+    assert flops == 7 * 5 * 2 * 2 * 2 * 2  # nested trips multiply
+
+
+def test_roofline_mfu_bound_sane():
+    r = analysis.Roofline(flops_per_device=1e12, bytes_per_device=1e9,
+                          collective_link_bytes=0, n_devices=2,
+                          model_flops_total=1.5e12)
+    assert 0 < r.mfu_bound <= 1.0
+    assert r.useful_flops_ratio == pytest.approx(0.75)

@@ -1,0 +1,218 @@
+"""Catalog semantics: commits, branches, merges, time-travel, namespacing.
+
+Property tests check the Git-semantics invariants the paper relies on:
+branch = O(1) ref write; merge of disjoint table sets is conflict-free;
+time-travel returns the commit that was HEAD at that time.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Catalog, Lake, MergeConflict, ObjectStore,
+                        PermissionDenied)
+from repro.core.errors import RefNotFound, ReproError, TableNotFound
+
+
+def _snap(lake, value=0.0, n=4):
+    return lake.io.write_snapshot({"v": np.full(n, value, np.float32)})
+
+
+# ------------------------------------------------------------------- commits
+def test_root_commit_exists(lake):
+    head = lake.catalog.head("main")
+    info = lake.catalog.commit_info(head)
+    assert info.parents == ()
+    assert info.tables == {}
+
+
+def test_multi_table_transaction(lake):
+    s1, s2 = _snap(lake, 1), _snap(lake, 2)
+    c = lake.catalog.commit("main", {"t1": s1, "t2": s2}, "both at once",
+                            _wap_token=True)
+    tables = lake.catalog.tables(c)
+    assert tables == {"t1": s1, "t2": s2}
+
+
+def test_delete_table_via_none(lake):
+    s1 = _snap(lake, 1)
+    lake.catalog.commit("main", {"t1": s1}, "add", _wap_token=True)
+    lake.catalog.commit("main", {"t1": None}, "drop", _wap_token=True)
+    assert "t1" not in lake.catalog.tables("main")
+
+
+def test_log_first_parent(lake):
+    for i in range(3):
+        lake.catalog.commit("main", {"t": _snap(lake, i)}, f"c{i}",
+                            _wap_token=True)
+    log = lake.catalog.log("main")
+    assert len(log) == 4  # 3 commits + root
+    msgs = [lake.catalog.commit_info(d).message for d in log]
+    assert msgs == ["c2", "c1", "c0", "repository root"]
+
+
+# ------------------------------------------------------------------ branches
+def test_branch_is_copy_on_write(lake):
+    """Branching writes ONE ref and zero objects (paper §5.4)."""
+    lake.catalog.commit("main", {"big": _snap(lake, 1, n=100_000)}, "big",
+                        _wap_token=True)
+    n_before = len(list(lake.store.iter_objects()))
+    lake.catalog.create_branch("richard.debug", "main", author="richard")
+    n_after = len(list(lake.store.iter_objects()))
+    assert n_after == n_before  # no data copied
+    assert (lake.catalog.tables("richard.debug")
+            == lake.catalog.tables("main"))
+
+
+def test_branch_namespacing(lake):
+    lake.catalog.create_branch("richard.x", "main", author="richard")
+    with pytest.raises(PermissionDenied):
+        lake.catalog.commit("richard.x", {}, "np", author="alice")
+    with pytest.raises(PermissionDenied):
+        lake.catalog.create_branch("richard.y", "main", author="alice")
+    # reads are open to everybody
+    assert lake.catalog.tables("richard.x") == {}
+
+
+def test_main_is_wap_protected(lake):
+    with pytest.raises(PermissionDenied):
+        lake.catalog.commit("main", {"t": _snap(lake)}, "direct write",
+                            author="richard")
+
+
+def test_duplicate_branch_rejected(lake):
+    lake.catalog.create_branch("a.b", "main", author="a")
+    with pytest.raises(ReproError):
+        lake.catalog.create_branch("a.b", "main", author="a")
+
+
+def test_delete_branch(lake):
+    lake.catalog.create_branch("a.b", "main", author="a")
+    lake.catalog.delete_branch("a.b")
+    assert "a.b" not in lake.catalog.branches()
+    with pytest.raises(PermissionDenied):
+        lake.catalog.delete_branch("main")
+
+
+# ------------------------------------------------------------------- merges
+def test_fast_forward_merge(lake):
+    lake.catalog.create_branch("dev.x", "main", author="dev")
+    c = lake.catalog.commit("dev.x", {"t": _snap(lake, 5)}, "work",
+                            author="dev")
+    merged = lake.catalog.merge("dev.x", "main", _wap_token=True)
+    assert merged == c  # fast-forward moves the ref, no merge commit
+    assert lake.catalog.head("main") == c
+
+
+def test_three_way_merge_disjoint_tables(lake):
+    lake.catalog.create_branch("a.x", "main", author="a")
+    lake.catalog.create_branch("b.x", "main", author="b")
+    lake.catalog.commit("a.x", {"ta": _snap(lake, 1)}, "a", author="a")
+    lake.catalog.commit("b.x", {"tb": _snap(lake, 2)}, "b", author="b")
+    lake.catalog.merge("a.x", "main", _wap_token=True)
+    m = lake.catalog.merge("b.x", "main", _wap_token=True)
+    tables = lake.catalog.tables(m)
+    assert set(tables) == {"ta", "tb"}
+    info = lake.catalog.commit_info(m)
+    assert len(info.parents) == 2  # true merge commit
+
+
+def test_merge_conflict_same_table(lake):
+    lake.catalog.create_branch("a.x", "main", author="a")
+    lake.catalog.create_branch("b.x", "main", author="b")
+    lake.catalog.commit("a.x", {"t": _snap(lake, 1)}, "a", author="a")
+    lake.catalog.commit("b.x", {"t": _snap(lake, 2)}, "b", author="b")
+    lake.catalog.merge("a.x", "main", _wap_token=True)
+    with pytest.raises(MergeConflict) as ei:
+        lake.catalog.merge("b.x", "main", _wap_token=True)
+    assert ei.value.tables == ["t"]
+
+
+def test_merge_same_snapshot_no_conflict(lake):
+    """Both sides reached the identical snapshot → not a conflict."""
+    s = _snap(lake, 7)
+    lake.catalog.create_branch("a.x", "main", author="a")
+    lake.catalog.create_branch("b.x", "main", author="b")
+    lake.catalog.commit("a.x", {"t": s}, "a", author="a")
+    lake.catalog.commit("b.x", {"t": s}, "b", author="b")
+    lake.catalog.merge("a.x", "main", _wap_token=True)
+    lake.catalog.merge("b.x", "main", _wap_token=True)
+    assert lake.catalog.tables("main")["t"] == s
+
+
+# -------------------------------------------------------------- time travel
+def test_time_travel_at_ts(lake):
+    c1 = lake.catalog.commit("main", {"t": _snap(lake, 1)}, "c1",
+                             _wap_token=True)
+    ts1 = lake.catalog.commit_info(c1).ts
+    lake.catalog.commit("main", {"t": _snap(lake, 2)}, "c2", _wap_token=True)
+    assert lake.catalog.resolve(f"main@{ts1}") == c1
+    assert lake.catalog.resolve("main~1") == c1
+
+
+def test_resolve_prefix_and_tag(lake):
+    c1 = lake.catalog.commit("main", {"t": _snap(lake, 1)}, "c1",
+                             _wap_token=True)
+    assert lake.catalog.resolve(c1[:12]) == c1
+    lake.catalog.create_tag("v1", "main")
+    assert lake.catalog.resolve("v1") == c1
+    with pytest.raises(RefNotFound):
+        lake.catalog.resolve("does-not-exist")
+
+
+def test_diff(lake):
+    s1 = _snap(lake, 1)
+    c1 = lake.catalog.commit("main", {"t": s1}, "c1", _wap_token=True)
+    s2 = _snap(lake, 2)
+    c2 = lake.catalog.commit("main", {"t": s2, "u": s1}, "c2",
+                             _wap_token=True)
+    d = lake.catalog.diff(c1, c2)
+    assert set(d) == {"t", "u"}
+
+
+def test_snapshot_of_missing_table(lake):
+    with pytest.raises(TableNotFound):
+        lake.catalog.snapshot_of("main", "ghost")
+
+
+# ---------------------------------------------------------------- properties
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["ta", "tb", "tc"]),
+                              st.integers(0, 10)), min_size=1, max_size=8))
+def test_property_head_reflects_last_write(tmp_path_factory, ops):
+    """After any sequence of commits, tables(main) == the last write per key
+    and every historical commit remains reachable (immutability)."""
+    lake = Lake(tmp_path_factory.mktemp("lake"), protect_main=False)
+    heads = []
+    expected = {}
+    for name, val in ops:
+        snap = lake.io.write_snapshot({"v": np.full(3, val, np.float32)})
+        heads.append(lake.catalog.commit("main", {name: snap}, "op"))
+        expected[name] = snap
+    assert lake.catalog.tables("main") == expected
+    # every intermediate commit still resolves (nothing was rewritten)
+    for h in heads:
+        lake.catalog.commit_info(h)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_branches=st.integers(1, 5), seed=st.integers(0, 999))
+def test_property_disjoint_merges_commute(tmp_path_factory, n_branches, seed):
+    """Branches touching pairwise-distinct tables always merge cleanly and
+    the final table set is their union."""
+    lake = Lake(tmp_path_factory.mktemp("lake"), protect_main=False)
+    rng = np.random.default_rng(seed)
+    names = []
+    for i in range(n_branches):
+        b = f"u{i}.w"
+        lake.catalog.create_branch(b, "main", author=f"u{i}")
+        t = f"table_{i}"
+        names.append(t)
+        snap = lake.io.write_snapshot(
+            {"v": rng.normal(size=4).astype(np.float32)})
+        lake.catalog.commit(b, {t: snap}, "w", author=f"u{i}")
+    order = rng.permutation(n_branches)
+    for i in order:
+        lake.catalog.merge(f"u{i}.w", "main")
+    assert set(lake.catalog.tables("main")) == set(names)

@@ -1,0 +1,179 @@
+"""Pipeline DAG semantics + run ledger + replay (paper §2, §4–5)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CodeDrift, CycleError, Lake, Model, Pipeline,
+                        RunNotFound, SchemaError, col, lit, model, sql_model)
+
+
+def paper_pipeline(cutoff=50):
+    """Pipeline P from the paper: SQL node + Python node (Listings 1–2)."""
+    final_table = sql_model(
+        "final_table", select=["c1", "c2", "c3"], frm="source_table",
+        where=col("transaction_ts") >= lit(cutoff))
+
+    @model(python="3.11", pip={"scikit-learn": "1.3.0"})
+    def training_data(data=Model("final_table")):
+        return {"x": data["c1"] * 2.0,
+                "y": (data["c3"] > 3).astype(np.float32)}
+
+    return Pipeline([final_table, training_data])
+
+
+# ----------------------------------------------------------------- structure
+def test_topo_order_and_sources():
+    p = paper_pipeline()
+    assert p.order == ["final_table", "training_data"]
+    assert p.source_tables() == ["source_table"]
+
+
+def test_cycle_detected():
+    @model()
+    def a(x=Model("b")):
+        return {"v": x["v"]}
+
+    @model()
+    def b(x=Model("a")):
+        return {"v": x["v"]}
+
+    with pytest.raises(CycleError):
+        Pipeline([a, b])
+
+
+def test_duplicate_node_rejected():
+    @model(name="n")
+    def f1():
+        return {"v": np.zeros(1)}
+
+    @model(name="n")
+    def f2():
+        return {"v": np.ones(1)}
+
+    from repro.core import ReproError
+    with pytest.raises(ReproError):
+        Pipeline([f1, f2])
+
+
+def test_code_hash_changes_with_code():
+    p1 = paper_pipeline(cutoff=50)
+    p2 = paper_pipeline(cutoff=51)  # different WHERE literal
+    assert p1.code_hash() != p2.code_hash()
+    assert (p1.code_manifest()["training_data"]
+            == p2.code_manifest()["training_data"])  # py node unchanged
+
+
+def test_runtime_pins_recorded():
+    p = paper_pipeline()
+    assert p.nodes["training_data"].runtime["pip"] == {
+        "scikit-learn": "1.3.0"}
+    assert p.nodes["final_table"].runtime["lang"] == "sql"
+
+
+# ----------------------------------------------------------------- execution
+def test_run_materializes_all_nodes(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(p, branch="r.dev", author="r")
+    assert set(res.outputs) == {"final_table", "training_data"}
+    td = seeded_lake.read_table("r.dev", "training_data")
+    src = seeded_lake.read_table("main", "source_table")
+    keep = src["transaction_ts"] >= 50
+    np.testing.assert_allclose(td["x"], src["c1"][keep] * 2.0)
+
+
+def test_run_is_single_multi_table_commit(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    before = len(seeded_lake.catalog.log("r.dev"))
+    seeded_lake.run(p, branch="r.dev", author="r")
+    after = len(seeded_lake.catalog.log("r.dev"))
+    assert after == before + 1  # one transaction for the whole DAG
+
+
+def test_node_returning_nothing_rejected(seeded_lake):
+    @model()
+    def bad(data=Model("source_table")):
+        return {}
+
+    seeded_lake.catalog.create_branch("r.d", "main", author="r")
+    with pytest.raises(SchemaError):
+        seeded_lake.run(Pipeline([bad]), branch="r.d", author="r")
+
+
+def test_model_column_projection(seeded_lake):
+    @model()
+    def narrow(data=Model("source_table", columns=["c1"])):
+        assert set(data) == {"c1"}
+        return {"out": data["c1"]}
+
+    seeded_lake.catalog.create_branch("r.d", "main", author="r")
+    res = seeded_lake.run(Pipeline([narrow]), branch="r.d", author="r")
+    assert "narrow" in res.outputs
+
+
+# -------------------------------------------------------------------- ledger
+def test_run_ids_unique_and_enumerable(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    r1 = seeded_lake.run(p, branch="r.dev", author="r")
+    r2 = seeded_lake.run(p, branch="r.dev", author="r")
+    assert r1.run_id != r2.run_id  # data commit differs → new identity
+    assert seeded_lake.ledger.runs() == [r2.run_id, r1.run_id]
+
+
+def test_manifest_covers_table1(seeded_lake):
+    """The run manifest must pin all 4 rows of the paper's Table 1."""
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(p, branch="r.dev", author="r", seed=7)
+    m = seeded_lake.ledger.get(res.run_id)
+    assert m["data_commit"]                       # input data
+    assert m["code"] and m["pipeline_hash"]       # code
+    assert m["runtime"]["python"] and m["runtime"]["jax"]  # runtime
+    assert "hardware" in m                        # hardware
+    assert m["seed"] == 7
+    assert m["node_runtime"]["training_data"]["pip"]
+
+
+def test_unknown_run_raises(seeded_lake):
+    with pytest.raises(RunNotFound):
+        seeded_lake.ledger.get("ffff0000")
+
+
+# -------------------------------------------------------------------- replay
+def test_replay_is_bit_exact(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(p, branch="r.dev", author="r")
+    # production moves on: new data lands on main & dev
+    new = {k: v[:10] for k, v in
+           seeded_lake.read_table("main", "source_table").items()}
+    seeded_lake.write_table("r.dev", "source_table", new, author="r")
+    # replay still sees Monday's data (time travel) → identical outputs
+    rep = seeded_lake.replay(res.run_id, p, branch="r.debug", author="r")
+    assert rep.bit_exact, rep.diffs
+
+
+def test_replay_detects_code_drift(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(p, branch="r.dev", author="r")
+    p_changed = paper_pipeline(cutoff=60)
+    with pytest.raises(CodeDrift):
+        seeded_lake.replay(res.run_id, p_changed, branch="r.debug",
+                           author="r")
+    # explicit opt-in reproduces the "fix the bug" loop of use case #2
+    rep = seeded_lake.replay(res.run_id, p_changed, branch="r.debug",
+                             author="r", allow_code_drift=True)
+    assert not rep.bit_exact  # changed code → changed outputs, as expected
+
+
+def test_replay_records_parent_run(seeded_lake):
+    p = paper_pipeline()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(p, branch="r.dev", author="r")
+    rep = seeded_lake.replay(res.run_id, p, branch="r.debug", author="r")
+    m = seeded_lake.ledger.get(rep.replay_run_id)
+    assert m["parent_run"] == res.run_id
+    assert m["kind"] == "replay"

@@ -1,0 +1,128 @@
+"""Unit + property tests for the content-addressed store and tensorfiles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ObjectStore, SchemaError, sha256_hex
+from repro.core.errors import ObjectNotFound, RefConflict, RefNotFound
+from repro.core import tensorfile as tf
+
+
+# --------------------------------------------------------------------- store
+def test_put_get_roundtrip(tmp_path):
+    store = ObjectStore(tmp_path)
+    data = b"hello tensor lake" * 100
+    digest = store.put(data)
+    assert digest == sha256_hex(data)
+    assert store.get(digest) == data
+    assert store.has(digest)
+    assert store.size(digest) < len(data)  # zstd compressed
+
+
+def test_put_is_idempotent_dedup(tmp_path):
+    store = ObjectStore(tmp_path)
+    d1 = store.put(b"x" * 1000)
+    d2 = store.put(b"x" * 1000)
+    assert d1 == d2
+    assert list(store.iter_objects()) == [d1]
+
+
+def test_missing_object_raises(tmp_path):
+    store = ObjectStore(tmp_path)
+    with pytest.raises(ObjectNotFound):
+        store.get("0" * 64)
+
+
+def test_refs_cas(tmp_path):
+    store = ObjectStore(tmp_path)
+    store.set_ref("head", "aaa")
+    assert store.get_ref("head") == "aaa"
+    store.cas_ref("head", "aaa", "bbb")
+    assert store.get_ref("head") == "bbb"
+    with pytest.raises(RefConflict):
+        store.cas_ref("head", "aaa", "ccc")  # stale expectation
+    with pytest.raises(RefNotFound):
+        store.get_ref("nope")
+
+
+def test_small_objects_stored_raw(tmp_path):
+    store = ObjectStore(tmp_path)
+    d = store.put(b"tiny")
+    assert store.get(d) == b"tiny"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.binary(min_size=0, max_size=4096))
+def test_property_content_addressing(tmp_path_factory, data):
+    """Same bytes → same digest; get(put(x)) == x."""
+    store = ObjectStore(tmp_path_factory.mktemp("s"))
+    digest = store.put(data)
+    assert store.get(digest) == data
+    assert store.put(data) == digest
+
+
+# ---------------------------------------------------------------- tensorfile
+DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("row_shape", [(), (3,), (2, 4)])
+def test_tensorfile_roundtrip_dtypes(dtype, row_shape):
+    rng = np.random.default_rng(1)
+    arr = rng.integers(0, 2, size=(17, *row_shape)).astype(dtype)
+    blob, meta = tf.encode({"a": arr, "b": np.arange(17)})
+    out = tf.decode(blob)
+    np.testing.assert_array_equal(out["a"], arr)
+    assert meta["nrows"] == 17
+
+
+def test_tensorfile_bfloat16_roundtrip():
+    import ml_dtypes
+
+    arr = np.arange(32, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    blob, _ = tf.encode({"a": arr.reshape(8, 4)})
+    out = tf.decode(blob)
+    np.testing.assert_array_equal(out["a"], arr.reshape(8, 4))
+
+
+def test_tensorfile_ragged_rejected():
+    with pytest.raises(SchemaError):
+        tf.encode({"a": np.zeros(3), "b": np.zeros(4)})
+
+
+def test_tensorfile_stats():
+    blob, meta = tf.encode({"a": np.array([1.0, np.nan, 3.0], np.float32)})
+    st_ = meta["stats"]["a"]
+    assert st_["nan_count"] == 1
+    assert st_["min"] == 1.0 and st_["max"] == 3.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    cols=st.lists(st.sampled_from("abcdef"), min_size=1, max_size=4,
+                  unique=True),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_tensorfile_roundtrip(n, cols, dtype, seed):
+    """encode∘decode is the identity, and the digest is deterministic."""
+    rng = np.random.default_rng(seed)
+    data = {c: rng.integers(-5, 5, size=(n, 2)).astype(dtype) for c in cols}
+    blob1, _ = tf.encode(data)
+    blob2, _ = tf.encode(data)
+    assert sha256_hex(blob1) == sha256_hex(blob2)  # deterministic encode
+    out = tf.decode(blob1)
+    for c in cols:
+        np.testing.assert_array_equal(out[c], data[c])
+
+
+def test_schema_project_and_compat():
+    s = tf.Schema.of({"a": np.zeros((2, 3)), "b": np.zeros(2)})
+    assert s.names() == ["a", "b"]
+    p = s.project(["a"])
+    assert p.names() == ["a"]
+    with pytest.raises(SchemaError):
+        s.check_compatible(p)

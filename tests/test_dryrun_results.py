@@ -1,0 +1,60 @@
+"""Regression lock on the recorded dry-run grid (results/dryrun/*.json):
+every (arch × shape × mesh) cell must be ok or a DESIGN.md-sanctioned skip.
+
+(The grid itself is produced by ``python -m repro.launch.dryrun --all
+--both-meshes``; these tests gate that its committed artifacts stay
+coherent — they skip gracefully when the grid has not been generated.)"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+EXPECTED_SKIPS = {  # long_500k on full-attention archs (DESIGN.md)
+    ("yi-34b", "long_500k"), ("gemma2-9b", "long_500k"),
+    ("minicpm-2b", "long_500k"), ("qwen2.5-14b", "long_500k"),
+    ("qwen2-moe-a2.7b", "long_500k"), ("qwen3-moe-235b-a22b", "long_500k"),
+    ("musicgen-large", "long_500k"), ("internvl2-76b", "long_500k"),
+}
+
+
+def _records():
+    if not RESULTS.exists():
+        pytest.skip("dry-run grid not generated")
+    recs = [json.loads(p.read_text()) for p in sorted(RESULTS.glob("*.json"))]
+    if not recs:
+        pytest.skip("dry-run grid empty")
+    return recs
+
+
+def test_grid_complete_and_error_free():
+    recs = _records()
+    by_status = {}
+    for r in recs:
+        by_status.setdefault(r["status"], []).append(
+            (r["arch"], r["shape"], r.get("mesh")))
+    assert not by_status.get("error"), by_status.get("error")
+    # 10 archs × 4 shapes × 2 meshes = 80 cells
+    assert len(recs) == 80
+    skipped = {(a, s) for a, s, _ in by_status.get("skipped", [])}
+    assert skipped == EXPECTED_SKIPS
+
+
+def test_ok_cells_carry_roofline_terms():
+    for r in _records():
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        assert rl["t_compute"] >= 0
+        assert rl["t_memory"] > 0
+        assert rl["bottleneck"] in ("compute", "memory", "collective")
+        assert rl["flops_per_device"] > 0
+        assert r["collectives"]["counts"], (r["arch"], r["shape"])
+
+
+def test_multipod_cells_use_512_devices():
+    for r in _records():
+        if r["status"] == "ok" and r["mesh"] == "2x16x16":
+            assert r["n_devices"] == 512

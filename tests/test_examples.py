@@ -1,0 +1,38 @@
+"""The runnable examples run end-to-end (subprocess, real CLI surface)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, os.path.join("examples", script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout, cwd=ROOT)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    return out.stdout
+
+
+def test_quickstart_paper_use_cases():
+    out = _run("quickstart.py")
+    assert "bit_exact=True" in out
+    assert "code drift detected" in out
+    assert "published to main" in out
+
+
+def test_debug_branch_cli_session():
+    out = _run("debug_branch.py")
+    assert '"bit_exact": true' in out
+    assert "repro branch richard.debug" in out
+
+
+def test_serve_example():
+    out = _run("serve_lm.py")
+    assert "served 10 requests" in out
+    assert "identical generations" in out

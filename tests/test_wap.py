@@ -1,0 +1,89 @@
+"""Write-Audit-Publish gate (paper §5.5) + expectations."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ExpectationFailed, Model, Pipeline, audit,
+                        column_range, expectation, model, no_nans, not_empty,
+                        publish)
+
+
+def _dev_branch_with_table(lake, cols, author="r", branch="r.dev"):
+    lake.catalog.create_branch(branch, "main", author=author)
+    lake.write_table(branch, "training_data", cols, author=author)
+    return branch
+
+
+def test_audit_pass(lake):
+    b = _dev_branch_with_table(lake, {"x": np.ones(5, np.float32)})
+    rep = audit(lake.catalog, lake.io, b, [not_empty("training_data"),
+                                           no_nans("training_data")])
+    assert rep.passed and all(rep.results.values())
+
+
+def test_audit_fail_on_nans(lake):
+    b = _dev_branch_with_table(
+        lake, {"x": np.array([1.0, np.nan], np.float32)})
+    rep = audit(lake.catalog, lake.io, b, [no_nans("training_data")])
+    assert not rep.passed
+
+
+def test_audit_fail_on_missing_table(lake):
+    lake.catalog.create_branch("r.dev", "main", author="r")
+    rep = audit(lake.catalog, lake.io, "r.dev", [not_empty("ghost")])
+    assert not rep.passed
+    assert "ghost_not_empty" in rep.errors
+
+
+def test_publish_gates_main(lake):
+    """The paper's empty-table bug: publish must refuse an empty table."""
+    b = _dev_branch_with_table(lake, {"x": np.ones(5, np.float32)})
+
+    @expectation("training_data")
+    def has_enough_rows(f):
+        return f["x"].shape[0] >= 100  # fails: only 5 rows
+
+    with pytest.raises(ExpectationFailed):
+        publish(lake.catalog, lake.io, b, [has_enough_rows], author="r")
+    assert "training_data" not in lake.catalog.tables("main")
+
+    # relax the gate → publish lands on main with audit metadata
+    head = publish(lake.catalog, lake.io, b, [not_empty("training_data")],
+                   author="r")
+    assert "training_data" in lake.catalog.tables("main")
+    # the audit trail is recorded in the history of the merged branch
+    log = lake.catalog.log(head, first_parent=False)
+    audits = [lake.catalog.commit_info(d).meta.get("audit")
+              for d in log]
+    assert any(a for a in audits if a)
+
+
+def test_column_range_expectation(lake):
+    b = _dev_branch_with_table(lake, {"p": np.linspace(0, 1, 11)})
+    ok = audit(lake.catalog, lake.io, b, [column_range("training_data",
+                                                       "p", 0.0, 1.0)])
+    assert ok.passed
+    bad = audit(lake.catalog, lake.io, b, [column_range("training_data",
+                                                        "p", 0.0, 0.5)])
+    assert not bad.passed
+
+
+def test_full_wap_cycle_with_pipeline(seeded_lake):
+    """End-to-end: branch → run DAG → audit → publish (the CI/CD pattern)."""
+    from repro.core import col, lit, sql_model
+
+    final_table = sql_model("final_table", select=["c1"],
+                            frm="source_table",
+                            where=col("transaction_ts") >= lit(0))
+
+    @model()
+    def training_data(data=Model("final_table")):
+        return {"x": data["c1"]}
+
+    pipe = Pipeline([final_table, training_data])
+    seeded_lake.catalog.create_branch("ci.run", "main", author="ci")
+    seeded_lake.run(pipe, branch="ci.run", author="ci")
+    publish(seeded_lake.catalog, seeded_lake.io, "ci.run",
+            [not_empty("training_data"), no_nans("training_data")],
+            author="ci")
+    assert "training_data" in seeded_lake.catalog.tables("main")
