@@ -16,7 +16,18 @@ _SEP = "/"
 
 
 def _path_str(path) -> str:
-    return jax.tree_util.keystr(path, simple=True, separator=_SEP)
+    try:
+        return jax.tree_util.keystr(path, simple=True, separator=_SEP)
+    except TypeError:  # jax < 0.5: keystr has no simple/separator kwargs
+        parts = []
+        for k in path:
+            for attr in ("key", "idx", "name"):
+                if hasattr(k, attr):
+                    parts.append(str(getattr(k, attr)))
+                    break
+            else:
+                parts.append(str(k))
+        return _SEP.join(parts)
 
 
 def leaves_to_columns(tree) -> Dict[str, np.ndarray]:

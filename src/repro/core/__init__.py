@@ -15,8 +15,10 @@ from .errors import (CodeDrift, CycleError, ExpectationFailed, MergeConflict,
 from .frame import Expr, col, lit, nrows, select, where
 from .ledger import (ReplayReport, RunLedger, mesh_fingerprint, run_pipeline,
                      runtime_fingerprint)
-from .pipeline import (Model, Node, Pipeline, RunResult, code_hash_of, execute,
-                       model, sql_model)
+from .pipeline import (ExecutionReport, Model, Node, NodeStat, Pipeline,
+                       RunResult, code_hash_of, execute, is_cache_safe, model,
+                       sql_model)
+from .runcache import RunCache, node_key
 from .store import ObjectStore, sha256_hex
 from .table import ManifestEntry, Snapshot, TableIO
 from .tensorfile import ColumnSpec, Schema
@@ -40,6 +42,7 @@ class Lake:
                                clock=clock)
         self.io = TableIO(self.store)
         self.ledger = RunLedger(self.store, clock=clock)
+        self.run_cache = RunCache(self.store, clock=clock)
 
     # thin facades used across examples / benchmarks -------------------------
     def write_table(self, branch: str, name: str, cols, *, author="system",
@@ -53,13 +56,16 @@ class Lake:
         return self.io.read(self.catalog.snapshot_of(ref, name), columns)
 
     def run(self, pipeline: Pipeline, *, branch: str, author="system",
-            config=None, seed=None, mesh=None) -> RunResult:
+            config=None, seed=None, mesh=None, use_cache=True,
+            jobs=None) -> RunResult:
         return run_pipeline(pipeline, self.catalog, self.io, self.ledger,
                             branch=branch, author=author, config=config,
-                            seed=seed, mesh=mesh)
+                            seed=seed, mesh=mesh, cache=self.run_cache,
+                            use_cache=use_cache, jobs=jobs)
 
     def replay(self, run_id: str, pipeline: Pipeline, *, branch: str,
                author="system", **kw) -> ReplayReport:
+        kw.setdefault("cache", self.run_cache)
         return self.ledger.replay(run_id, pipeline, self.catalog, self.io,
                                   branch=branch, author=author, **kw)
 
@@ -68,6 +74,7 @@ __all__ = [
     "Lake", "Catalog", "Commit", "ObjectStore", "TableIO", "Snapshot",
     "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
+    "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",
     "ReplayReport", "Expectation", "expectation", "audit", "publish",
     "AuditReport", "not_empty", "no_nans", "column_range", "col", "lit",
     "Expr", "select", "where", "nrows", "sha256_hex", "code_hash_of",

@@ -210,6 +210,16 @@ class Catalog:
     def tables(self, ref: str) -> Dict[str, str]:
         return dict(self._load_commit(self.resolve(ref)).tables)
 
+    def input_digests(self, ref: str,
+                      names: Optional[Sequence[str]] = None) -> Dict[str, str]:
+        """Snapshot digests of (a subset of) tables at ``ref`` — the data half
+        of a node's run-cache key: a pipeline reading these tables is
+        re-executed iff one of these digests (or its code) changes."""
+        tables = self.tables(ref)
+        if names is None:
+            return tables
+        return {n: tables[n] for n in names if n in tables}
+
     def snapshot_of(self, ref: str, table: str) -> str:
         tables = self.tables(ref)
         if table not in tables:

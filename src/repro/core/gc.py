@@ -21,6 +21,7 @@ import msgpack
 
 from .catalog import _BRANCH_PREFIX, _TAG_PREFIX, Catalog, Commit
 from .ledger import _RUNS_HEAD
+from .runcache import CACHE_REF_PREFIX
 from .store import ObjectStore
 
 
@@ -59,13 +60,31 @@ def _mark_snapshot(store: ObjectStore, digest: str, live: Set[str]):
         digest = snap.get("parent")
 
 
-def collect(store: ObjectStore, *, dry_run: bool = False) -> GCReport:
-    """Mark from all refs; sweep unreachable objects."""
+def collect(store: ObjectStore, *, dry_run: bool = False,
+            drop_cache: bool = False) -> GCReport:
+    """Mark from all refs; sweep unreachable objects.
+
+    Run-cache entries are GC roots (their entry blobs + output snapshots stay
+    live) unless ``drop_cache`` — then the cache refs are deleted first and
+    any snapshot only the cache referenced is swept (a later warm run simply
+    degrades to a miss)."""
+    if drop_cache and not dry_run:
+        for ref in list(store.iter_refs(CACHE_REF_PREFIX)):
+            store.delete_ref(ref)
     live: Set[str] = set()
     for ref in store.iter_refs():
         head = store.get_ref(ref)
         if ref.startswith((_BRANCH_PREFIX, _TAG_PREFIX)):
             _mark_commit(store, head, live)
+        elif ref.startswith(CACHE_REF_PREFIX):  # cache entry -> snapshot
+            if drop_cache:  # dry_run: pretend the cache is gone
+                continue
+            if store.has(head):
+                live.add(head)
+                entry = _unpack(store.get(head))
+                snap = entry.get("snapshot")
+                if snap:
+                    _mark_snapshot(store, snap, live)
         elif ref == _RUNS_HEAD:  # run-ledger chain: links + manifests
             cur = head
             while cur is not None and store.has(cur):

@@ -26,7 +26,8 @@ import msgpack
 
 from .catalog import Catalog
 from .errors import CodeDrift, RefNotFound, RunNotFound
-from .pipeline import Pipeline, RunResult, execute
+from .pipeline import ExecutionReport, Pipeline, RunResult, execute
+from .runcache import RunCache
 from .store import ObjectStore
 from .table import TableIO
 
@@ -97,7 +98,19 @@ class RunLedger:
         mesh=None,
         parent_run: Optional[str] = None,
         kind: str = "pipeline",
+        report: Optional[ExecutionReport] = None,
     ) -> str:
+        executor = {}
+        nodes = {}
+        if report is not None:
+            executor = {
+                "jobs": report.jobs,
+                "cache": report.cache_enabled,
+                "cache_hits": report.cache_hits,
+                "cache_misses": report.cache_misses,
+            }
+            nodes = {name: stat.to_obj()
+                     for name, stat in sorted(report.node_stats.items())}
         manifest = {
             "kind": kind,
             "code": pipeline.code_manifest(),
@@ -113,6 +126,8 @@ class RunLedger:
             "runtime": runtime_fingerprint(),
             "hardware": mesh_fingerprint(mesh),
             "parent_run": parent_run,
+            "executor": executor,  # per-run cache/parallelism settings
+            "nodes": nodes,  # per-node cache hit/miss + wall time
             "ts": self.clock(),
         }
         blob = _pack(manifest)
@@ -161,6 +176,9 @@ class RunLedger:
         author: str = "system",
         allow_code_drift: bool = False,
         verify: bool = True,
+        cache: Optional[RunCache] = None,
+        use_cache: bool = True,
+        jobs: Optional[int] = None,
     ) -> ReplayReport:
         """Re-execute a past run into a (new) debug branch — use case #2.
 
@@ -179,9 +197,11 @@ class RunLedger:
         if branch not in catalog.branches():
             catalog.create_branch(branch, manifest["data_commit"],
                                   author=author)
-        outputs = execute(pipeline, catalog, io, branch=branch, author=author,
-                          params=manifest["config"].get("params"),
-                          read_ref=manifest["data_commit"])
+        report = execute(pipeline, catalog, io, branch=branch, author=author,
+                         params=manifest["config"].get("params"),
+                         read_ref=manifest["data_commit"],
+                         cache=cache, use_cache=use_cache, jobs=jobs)
+        outputs = report.outputs
         replay_id = self.record(
             pipeline=pipeline,
             data_commit=manifest["data_commit"],
@@ -192,6 +212,7 @@ class RunLedger:
             seed=manifest["seed"],
             parent_run=run_id,
             kind="replay",
+            report=report,
         )
         diffs = {}
         if verify:
@@ -214,16 +235,20 @@ def run_pipeline(
     config: Optional[Dict[str, Any]] = None,
     seed: Optional[int] = None,
     mesh=None,
+    cache: Optional[RunCache] = None,
+    use_cache: bool = True,
+    jobs: Optional[int] = None,
 ) -> RunResult:
     """``bauplan run``: execute + record, returning the run id."""
     data_commit = catalog.head(branch)
-    outputs = execute(pipeline, catalog, io, branch=branch, author=author,
-                      params=(config or {}).get("params"))
+    report = execute(pipeline, catalog, io, branch=branch, author=author,
+                     params=(config or {}).get("params"),
+                     cache=cache, use_cache=use_cache, jobs=jobs)
     result_commit = catalog.head(branch)
     run_id = ledger.record(
         pipeline=pipeline, data_commit=data_commit,
-        result_commit=result_commit, branch=branch, outputs=outputs,
-        config=config, seed=seed, mesh=mesh,
+        result_commit=result_commit, branch=branch, outputs=report.outputs,
+        config=config, seed=seed, mesh=mesh, report=report,
     )
     return RunResult(run_id=run_id, commit=result_commit, branch=branch,
-                     outputs=outputs)
+                     outputs=report.outputs, node_stats=report.node_stats)

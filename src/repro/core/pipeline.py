@@ -20,9 +20,13 @@ from __future__ import annotations
 
 import hashlib
 import inspect
+import os
 import textwrap
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+from threading import Lock
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,6 +34,7 @@ from . import frame as F
 from .catalog import Catalog
 from .errors import CycleError, ReproError, SchemaError, TableNotFound
 from .frame import Expr
+from .runcache import RunCache, node_key
 from .table import TableIO
 
 
@@ -41,6 +46,8 @@ class Model:
         self.columns = list(columns) if columns else None
 
     def __repr__(self):
+        if self.columns:
+            return f"Model({self.name!r}, columns={self.columns!r})"
         return f"Model({self.name!r})"
 
 
@@ -48,13 +55,69 @@ def _hash_text(text: str) -> str:
     return hashlib.sha256(text.encode()).hexdigest()
 
 
+def _stable_const(v: Any) -> Optional[str]:
+    """Canonical string for values safe to fold into a code hash: immutable
+    scalars, Model refs, and tuples thereof.  Mutable objects (dicts, arrays,
+    counters) return None — their reprs drift between otherwise identical
+    runs, which would defeat warm caching."""
+    if isinstance(v, (bool, int, float, str, bytes, type(None))):
+        return repr(v)
+    if isinstance(v, Model):
+        return repr(v)
+    if isinstance(v, tuple):
+        parts = [_stable_const(x) for x in v]
+        if all(p is not None for p in parts):
+            return "(" + ",".join(parts) + ")"
+    return None
+
+
+def _captured_values(fn: Callable):
+    """(label, value) pairs for everything a function captures beyond its
+    source text: closure cells and positional + keyword-only defaults."""
+    out = []
+    code = getattr(fn, "__code__", None)
+    cells = getattr(fn, "__closure__", None) or ()
+    for name, cell in zip(getattr(code, "co_freevars", ()), cells):
+        try:
+            out.append((f"closure:{name}", cell.cell_contents))
+        except ValueError:  # unfilled cell
+            continue
+    for i, default in enumerate(getattr(fn, "__defaults__", None) or ()):
+        out.append((f"default:{i}", default))
+    for name, default in sorted(
+            (getattr(fn, "__kwdefaults__", None) or {}).items()):
+        out.append((f"kwdefault:{name}", default))
+    return out
+
+
+def is_cache_safe(fn: Callable) -> bool:
+    """True iff every value ``fn`` captures (closures, defaults) is a stable
+    constant the code hash can cover.  A node capturing something unstable —
+    a mutable container, another function, an arbitrary object — cannot be
+    soundly keyed: two such nodes with identical source would collide.  Those
+    nodes are UNCACHEABLE (always re-executed) rather than silently wrong."""
+    return all(_stable_const(v) is not None for _, v in _captured_values(fn))
+
+
 def code_hash_of(fn: Callable) -> str:
-    """Stable hash of a node's transformation code."""
+    """Stable hash of a node's transformation code.
+
+    Factory-built nodes (``packing_node(seq_len)``) share identical source
+    but differ through closure cells / argument defaults, so hashable
+    constants from both are folded in — two factory instances with different
+    parameters must NOT collide on one code version (they'd cross-hit the
+    run cache and evade code-drift detection).  Unstable captured values are
+    excluded here; ``is_cache_safe`` gates such nodes out of the cache."""
     try:
         src = textwrap.dedent(inspect.getsource(fn))
     except (OSError, TypeError):  # dynamically built fn — hash its repr chain
         src = repr(fn)
-    return _hash_text(src)
+    extras = []
+    for label, value in _captured_values(fn):
+        const = _stable_const(value)
+        if const is not None:
+            extras.append(f"{label}={const}")
+    return _hash_text(src + "\n" + "\n".join(extras))
 
 
 @dataclass
@@ -66,6 +129,7 @@ class Node:
     code_hash: str
     materialize: bool = True
     runtime: Dict[str, Any] = field(default_factory=dict)  # pinned deps (Listing 2)
+    cache_safe: bool = True  # False: captured state the code hash can't cover
 
     def __call__(self, *args, **kwargs):
         return self.fn(*args, **kwargs)
@@ -99,6 +163,7 @@ def model(name: Optional[str] = None, *, materialize: bool = True,
             code_hash=code_hash_of(fn),
             materialize=materialize,
             runtime=runtime,
+            cache_safe=is_cache_safe(fn),
         )
 
     return deco
@@ -144,6 +209,10 @@ class Pipeline:
                 if d in internal:
                     indeg[n.name] += 1
                     children[d].append(n.name)
+        # kept for the executor: internal-edge adjacency + pristine indegrees
+        # (Kahn's loop below consumes ``indeg`` destructively)
+        self.children: Dict[str, List[str]] = children
+        self.indegree: Dict[str, int] = dict(indeg)
         ready = sorted(n for n, k in indeg.items() if k == 0)
         order: List[str] = []
         while ready:
@@ -181,6 +250,58 @@ class RunResult:
     branch: str
     outputs: Dict[str, str]  # node name -> snapshot digest
     metrics: Dict[str, Any] = field(default_factory=dict)
+    node_stats: Dict[str, "NodeStat"] = field(default_factory=dict)
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for s in self.node_stats.values() if s.cache_hit)
+
+    @property
+    def cache_misses(self) -> int:
+        return sum(1 for s in self.node_stats.values() if not s.cache_hit)
+
+
+@dataclass
+class NodeStat:
+    """Per-node execution record kept in the run manifest (Ledger)."""
+    name: str
+    cache_hit: bool
+    wall_s: float
+    snapshot: Optional[str]  # None only for materialize=False with no cache
+    cache_key: Optional[str]  # None when the cache is disabled
+
+    def to_obj(self) -> Dict[str, Any]:
+        return {"cache_hit": self.cache_hit, "wall_s": self.wall_s,
+                "snapshot": self.snapshot, "cache_key": self.cache_key}
+
+
+@dataclass
+class ExecutionReport:
+    """What ``execute`` returns: committed outputs + per-node cache/timing."""
+    outputs: Dict[str, str]  # materialized node -> snapshot digest
+    commit: Optional[str]  # new commit digest, or None if nothing changed
+    node_stats: Dict[str, NodeStat] = field(default_factory=dict)
+    jobs: int = 1
+    cache_enabled: bool = True
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for s in self.node_stats.values() if s.cache_hit)
+
+    @property
+    def cache_misses(self) -> int:
+        return sum(1 for s in self.node_stats.values() if not s.cache_hit)
+
+
+def default_jobs() -> int:
+    return max(1, min(8, os.cpu_count() or 1))
+
+
+@dataclass
+class _NodeOutcome:
+    snapshot: Optional[str]
+    cols: Optional[Dict[str, np.ndarray]]  # None when served from the cache
+    stat: NodeStat
 
 
 def execute(
@@ -192,56 +313,175 @@ def execute(
     author: str = "system",
     params: Optional[Dict[str, Any]] = None,
     read_ref: Optional[str] = None,
-) -> Dict[str, str]:
+    cache: Optional[RunCache] = None,
+    use_cache: bool = True,
+    jobs: Optional[int] = None,
+) -> ExecutionReport:
     """Run the DAG against a branch: read parents from ``read_ref`` (defaults
-    to the branch head), evaluate nodes in topological order, materialize
-    outputs and commit them as ONE multi-table transaction (paper §3:
-    multi-table transactions are crucial for pipelines).
+    to the branch head), evaluate nodes wave-by-wave (independent nodes run
+    concurrently on a thread pool), materialize outputs and commit them as
+    ONE multi-table transaction (paper §3: multi-table transactions are
+    crucial for pipelines).
 
-    Returns {node name -> snapshot digest}.  Ledger bookkeeping (run ids,
-    replay) lives in ``ledger.py`` on top of this primitive.
+    Incremental execution: with ``use_cache`` (default), each node's output is
+    memoized in a :class:`RunCache` under ``(code_hash, sorted input snapshot
+    digests, injected params)`` — see docs/run_cache.md for the exact
+    invalidation contract.  A hit skips the node's function entirely; its
+    downstream consumers read the memoized snapshot lazily, only if they
+    themselves miss.  ``use_cache=False`` (CLI ``--no-cache``) forces a full
+    re-execution and does not read or write cache entries.
+
+    Outputs are content-addressed, so the result commit is bit-identical for
+    any ``jobs`` value and for hit vs. miss paths.  Ledger bookkeeping (run
+    ids, replay) lives in ``ledger.py`` on top of this primitive.
     """
     params = params or {}
     read_ref = read_ref or branch
-    head_tables = catalog.tables(read_ref)
-    cache: Dict[str, Dict[str, np.ndarray]] = {}
+    head_tables = catalog.input_digests(read_ref, pipeline.source_tables())
+    run_cache = (cache or RunCache(catalog.store)) if use_cache else None
+    n_jobs = max(1, jobs) if jobs else default_jobs()
 
-    def fetch(table: str) -> Dict[str, np.ndarray]:
-        if table in cache:
-            return cache[table]
-        if table not in head_tables:
-            raise TableNotFound(f"source table {table!r} not on {read_ref!r}")
-        cols = io.read(head_tables[table])
-        cache[table] = cols
-        return cols
+    lock = Lock()
+    columns: Dict[str, Dict[str, np.ndarray]] = {}  # table/node -> loaded cols
+    outcomes: Dict[str, _NodeOutcome] = {}
 
-    outputs: Dict[str, str] = {}
-    for name in pipeline.order:
+    def load_columns(name: str, snapshot: str) -> Dict[str, np.ndarray]:
+        """Memoized read of a snapshot (source table or cached parent)."""
+        with lock:
+            cached = columns.get(name)
+        if cached is not None:
+            return cached
+        cols = io.read(snapshot)
+        with lock:
+            return columns.setdefault(name, cols)
+
+    internal = set(pipeline.nodes)
+
+    def input_digest(dep: str) -> str:
+        """Identity of one input: parent snapshot digest (internal node) or
+        source-table snapshot digest on ``read_ref`` (the data commit half of
+        the paper's reproducibility contract)."""
+        if dep in internal:
+            snap = outcomes[dep].snapshot
+            if snap is None:  # parent ran uncached & unmaterialized
+                raise ReproError(
+                    f"node {dep!r} has no snapshot for cache keying")
+            return snap
+        if dep not in head_tables:
+            raise TableNotFound(f"source table {dep!r} not on {read_ref!r}")
+        return head_tables[dep]
+
+    def dep_columns(dep: str) -> Dict[str, np.ndarray]:
+        if dep in internal:
+            out = outcomes[dep]
+            if out.cols is not None:
+                return out.cols
+            return load_columns(dep, out.snapshot)
+        return load_columns(dep, head_tables[dep])
+
+    def run_node(name: str) -> _NodeOutcome:
         node = pipeline.nodes[name]
+        # A node capturing unstable state (mutable containers, functions) has
+        # a code hash that can't cover its behavior — never cache it.  Its
+        # output snapshot is still written so descendants can key off it.
+        node_caching = run_cache is not None and node.cache_safe
+        t0 = time.perf_counter()
+        inputs: List[Tuple[str, str]] = []
+        if node_caching:
+            inputs = [(m.name, input_digest(m.name))
+                      for m in node.dep_params.values()]
+        sig = inspect.signature(node.fn)
+        injected = {p: params[p] for p in sig.parameters
+                    if p in params and p not in node.dep_params}
+        key: Optional[str] = None
+        if node_caching:
+            try:
+                key = node_key(node.code_hash, inputs, injected, name=name)
+            except TypeError:  # param with no stable canonical form
+                node_caching = False
+        if key is not None:
+            entry = run_cache.get(key)
+            if entry is not None:
+                return _NodeOutcome(
+                    snapshot=entry["snapshot"], cols=None,
+                    stat=NodeStat(name, True, time.perf_counter() - t0,
+                                  entry["snapshot"], key))
+        if not node_caching:
+            # cache keying didn't walk the inputs — validate sources exist
+            for mref in node.dep_params.values():
+                if mref.name not in internal and mref.name not in head_tables:
+                    raise TableNotFound(
+                        f"source table {mref.name!r} not on {read_ref!r}")
         kwargs: Dict[str, Any] = {}
         for pname, mref in node.dep_params.items():
-            data = fetch(mref.name)
+            data = dep_columns(mref.name)
             if mref.columns:
                 data = F.select(data, mref.columns)
             kwargs[pname] = data
-        sig = inspect.signature(node.fn)
-        for pname in sig.parameters:
-            if pname in params and pname not in kwargs:
-                kwargs[pname] = params[pname]
+        kwargs.update(injected)
         result = node.fn(**kwargs)
         if not isinstance(result, Mapping) or not result:
             raise SchemaError(
                 f"node {name!r} must return a non-empty column mapping")
         result = {k: np.asarray(v) for k, v in result.items()}
-        cache[name] = result
-        if node.materialize:
-            outputs[name] = io.write_snapshot(result)
+        # Persist whenever materializing OR caching (a cache entry must point
+        # at a snapshot so warm descendants can read it without re-running;
+        # an uncacheable node's snapshot is its descendants' cache input).
+        snapshot: Optional[str] = None
+        if node.materialize or run_cache is not None:
+            snapshot = io.write_snapshot(result)
+        if node_caching:
+            run_cache.put(key, node=name, snapshot=snapshot,
+                          code_hash=node.code_hash, inputs=inputs)
+        return _NodeOutcome(
+            snapshot=snapshot, cols=result,
+            stat=NodeStat(name, False, time.perf_counter() - t0,
+                          snapshot, key))
 
+    # -------------------------------------------------- wave scheduling
+    # Dependency-counting scheduler: a node is submitted the moment its last
+    # internal parent finishes, so independent subgraphs overlap freely.
+    # Adjacency + indegrees come from the Pipeline's topo-sort pass.
+    waiting = dict(pipeline.indegree)
+    children = pipeline.children
+
+    ready = [n for n in pipeline.order if waiting[n] == 0]
+    with ThreadPoolExecutor(max_workers=n_jobs) as pool:
+        futures = {pool.submit(run_node, n): n for n in ready}
+        try:
+            while futures:
+                done, _ = wait(futures, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    name = futures.pop(fut)
+                    outcomes[name] = fut.result()  # raises on node failure
+                    for child in children[name]:
+                        waiting[child] -= 1
+                        if waiting[child] == 0:
+                            futures[pool.submit(run_node, child)] = child
+        except BaseException:
+            for fut in futures:
+                fut.cancel()
+            raise
+
+    outputs = {name: out.snapshot for name, out in outcomes.items()
+               if pipeline.nodes[name].materialize and out.snapshot}
+    node_stats = {name: out.stat for name, out in outcomes.items()}
+
+    commit_digest: Optional[str] = None
     if outputs:
-        catalog.commit(
-            branch, outputs,
-            f"pipeline run: {', '.join(pipeline.order)}",
-            author=author,
-            meta={"pipeline_code": pipeline.code_hash()},
-        )
-    return outputs
+        # Warm replay on an unchanged branch is a no-op: skip the commit when
+        # every output table already sits at the same snapshot on the head.
+        current = catalog.tables(branch)
+        if any(current.get(n) != s for n, s in outputs.items()):
+            n_hits = sum(1 for s in node_stats.values() if s.cache_hit)
+            commit_digest = catalog.commit(
+                branch, outputs,
+                f"pipeline run: {', '.join(pipeline.order)}",
+                author=author,
+                meta={"pipeline_code": pipeline.code_hash(),
+                      "cache_hits": n_hits,
+                      "cache_misses": len(node_stats) - n_hits},
+            )
+    return ExecutionReport(outputs=outputs, commit=commit_digest,
+                           node_stats=node_stats, jobs=n_jobs,
+                           cache_enabled=use_cache)

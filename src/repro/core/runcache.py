@@ -1,0 +1,161 @@
+"""Incremental run cache: memoized node outputs keyed by (code, data, params).
+
+The paper's pain point is that pipeline size makes testing/iteration slow; its
+answer is replayable runs pinned by (code version, data commit).  The run
+cache turns that pin into a *speedup*: a node whose code hash, input snapshot
+digests and injected params are all unchanged can return its previous output
+snapshot without executing — replaying a pipeline on an unchanged branch is a
+pure cache lookup, and editing one node re-runs only its downstream cone
+(the edited node's output digest changes, which changes every descendant's
+cache key).
+
+Layout (on top of :class:`~repro.core.store.ObjectStore`):
+
+    ref   cache/<k0k1>/<k2..>   ->  entry blob digest      (mutable pointer)
+    blob  <entry digest>        ->  msgpack {node, snapshot, code_hash,
+                                             inputs, ts}   (immutable)
+
+Cache keys are sha-256 over a canonical msgpack encoding, so they are stable
+across processes and hosts.  The entry is only honored when its output
+snapshot is still present in the store (GC-safe: a swept snapshot simply
+turns the entry into a miss).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+from .errors import ObjectNotFound, RefNotFound
+from .store import ObjectStore
+
+#: ref namespace for cache entries (sharded like objects: cache/ab/cdef...)
+CACHE_REF_PREFIX = "cache/"
+
+
+def _canon_value(v: Any) -> str:
+    """Canonical string for one param value.  Arrays are hashed over their
+    raw bytes — ``repr`` truncates large arrays ("[0., 1., ..., 9999.]"), so
+    two different arrays could collide on one key and serve a stale
+    snapshot.  Containers recurse; scalars keep their full repr.  Arbitrary
+    objects raise TypeError: an opaque ``__repr__`` either hides state (two
+    distinct configs collide) or embeds an address (the key never repeats) —
+    the executor degrades such nodes to uncacheable instead."""
+    if isinstance(v, (bool, int, float, str, bytes, type(None))):
+        return repr(v)
+    if isinstance(v, np.ndarray):
+        data = np.ascontiguousarray(v)
+        return (f"ndarray:{data.dtype.str}:{data.shape}:"
+                f"{hashlib.sha256(data.tobytes()).hexdigest()}")
+    if isinstance(v, (list, tuple)):
+        inner = ",".join(_canon_value(x) for x in v)
+        return f"{type(v).__name__}:[{inner}]"
+    if isinstance(v, dict):
+        inner = ",".join(f"{k!r}:{_canon_value(v[k])}" for k in sorted(v))
+        return f"dict:{{{inner}}}"
+    if isinstance(v, np.generic):  # numpy scalar: dtype matters
+        return f"npscalar:{v.dtype.str}:{v!r}"
+    raise TypeError(
+        f"param value of type {type(v).__name__!r} has no stable cache "
+        "encoding (use scalars, arrays, or containers thereof)")
+
+
+def _canonical_params(params: Mapping[str, Any]) -> List[Tuple[str, str]]:
+    return [(k, _canon_value(params[k])) for k in sorted(params)]
+
+
+def node_key(code_hash: str,
+             input_digests: Sequence[Tuple[str, str]],
+             params: Optional[Mapping[str, Any]] = None,
+             *, name: str = "") -> str:
+    """Cache key of one node: (node name, code hash, sorted input snapshot
+    digests, injected params).  ``input_digests`` is (dep name, snapshot
+    digest) pairs; sorting makes the key independent of declaration order.
+    The name disambiguates factory-built nodes whose source text coincides."""
+    material = msgpack.packb(
+        {
+            "v": 1,
+            "name": name,
+            "code": code_hash,
+            "inputs": sorted((str(n), str(d)) for n, d in input_digests),
+            "params": _canonical_params(params or {}),
+        },
+        use_bin_type=True,
+    )
+    return hashlib.sha256(material).hexdigest()
+
+
+class RunCache:
+    """Node-output memo table backed by the object store.
+
+    Entries are refs (so they are cheap to overwrite/invalidate) pointing at
+    immutable entry blobs; the blobs and the referenced output snapshots are
+    GC roots while the ref exists (see ``gc.collect``).
+    """
+
+    def __init__(self, store: ObjectStore, *, clock=time.time):
+        self.store = store
+        self.clock = clock
+
+    @staticmethod
+    def _ref(key: str) -> str:
+        return f"{CACHE_REF_PREFIX}{key[:2]}/{key[2:]}"
+
+    # ----------------------------------------------------------------- lookup
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """Entry dict for ``key``, or None on miss / stale snapshot."""
+        try:
+            entry_digest = self.store.get_ref(self._ref(key))
+        except RefNotFound:
+            return None
+        try:
+            entry = msgpack.unpackb(self.store.get(entry_digest), raw=False)
+        except ObjectNotFound:
+            return None
+        snapshot = entry.get("snapshot")
+        if not snapshot or not self.store.has(snapshot):
+            return None  # output was GC'd — treat as a miss
+        return entry
+
+    # ------------------------------------------------------------------ store
+    def put(self, key: str, *, node: str, snapshot: str, code_hash: str,
+            inputs: Sequence[Tuple[str, str]]) -> None:
+        entry = {
+            "node": node,
+            "snapshot": snapshot,
+            "code_hash": code_hash,
+            "inputs": sorted((str(n), str(d)) for n, d in inputs),
+            "ts": self.clock(),
+        }
+        digest = self.store.put(msgpack.packb(entry, use_bin_type=True))
+        self.store.set_ref(self._ref(key), digest)
+
+    # ------------------------------------------------------------- management
+    def invalidate(self, key: str) -> bool:
+        try:
+            self.store.delete_ref(self._ref(key))
+            return True
+        except RefNotFound:
+            return False
+
+    def keys(self) -> List[str]:
+        return [r[len(CACHE_REF_PREFIX):].replace("/", "", 1)
+                for r in self.store.iter_refs(CACHE_REF_PREFIX)]
+
+    def clear(self) -> int:
+        """Drop every cache entry (the blobs become GC-collectable)."""
+        n = 0
+        for ref in list(self.store.iter_refs(CACHE_REF_PREFIX)):
+            try:
+                self.store.delete_ref(ref)
+                n += 1
+            except RefNotFound:  # concurrent clear
+                pass
+        return n
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.store.iter_refs(CACHE_REF_PREFIX))

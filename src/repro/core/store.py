@@ -7,6 +7,18 @@ is what makes branches copy-on-write and runs replayable.
 
 The filesystem backend mirrors an S3 key scheme (``objects/ab/cdef...``) so a
 real S3/GCS backend is a drop-in replacement of this one class.
+
+Compression is pluggable per-blob via a codec byte in the framing, so a store
+written with zstd stays readable on a host that only has the stdlib: zstd is
+preferred when the ``zstandard`` package is importable, with a zlib fallback
+otherwise (distinct codec byte — old blobs keep decoding either way).
+
+Refs come in two layouts:
+
+    flat:        ``branch=main``, ``tag=v1.0``, ``runs-head``
+    namespaced:  ``cache/ab/cdef...`` — "/"-separated segments map to
+                 subdirectories, used by the run cache so its (potentially
+                 many) entries shard like objects do
 """
 
 from __future__ import annotations
@@ -15,16 +27,24 @@ import hashlib
 import os
 import tempfile
 import threading
+import zlib
 from pathlib import Path
 from typing import Iterator, Optional
 
-import zstandard as zstd
+try:  # optional: preferred codec when available
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - exercised on the no-zstd CI leg
+    zstd = None
 
 from .errors import ObjectNotFound, RefConflict, RefNotFound
 
 _MAGIC = b"RPR1"  # blob framing: magic + 1 byte codec id
 _CODEC_RAW = b"\x00"
 _CODEC_ZSTD = b"\x01"
+_CODEC_ZLIB = b"\x02"
+
+#: codecs this build can *write* ("auto" = best available compressor)
+WRITE_CODECS = ("auto", "raw", "zlib") + (("zstd",) if zstd else ())
 
 
 def sha256_hex(data: bytes) -> str:
@@ -36,35 +56,68 @@ class ObjectStore:
 
     Objects:  ``put(bytes) -> digest``; ``get(digest) -> bytes``.
     Refs:     ``set_ref/get_ref/cas_ref`` — tiny mutable pointers used only by
-              the catalog for branch heads (everything else is immutable).
+              the catalog for branch heads and the run cache for cache keys
+              (everything else is immutable).
     """
 
     def __init__(self, root: str | os.PathLike, *, compress: bool = True,
-                 level: int = 3):
+                 level: int = 3, codec: str = "auto"):
         self.root = Path(root)
         self.obj_dir = self.root / "objects"
         self.ref_dir = self.root / "refs"
         self.obj_dir.mkdir(parents=True, exist_ok=True)
         self.ref_dir.mkdir(parents=True, exist_ok=True)
         self.compress = compress
-        self._cctx = zstd.ZstdCompressor(level=level)
-        self._dctx = zstd.ZstdDecompressor()
+        if codec not in ("auto", "raw", "zlib", "zstd"):
+            raise ValueError(f"unknown codec {codec!r}")
+        if codec == "zstd" and zstd is None:
+            raise ValueError("codec='zstd' but zstandard is not installed")
+        if codec == "auto":
+            codec = "zstd" if zstd is not None else "zlib"
+        self.codec = codec
+        self.level = level
+        if zstd is not None:
+            self._cctx = zstd.ZstdCompressor(level=level)
+            self._dctx = zstd.ZstdDecompressor()
+        else:
+            self._cctx = self._dctx = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ blobs
     def _path(self, digest: str) -> Path:
         return self.obj_dir / digest[:2] / digest[2:]
 
+    def _encode(self, data: bytes) -> bytes:
+        if not self.compress or len(data) <= 64 or self.codec == "raw":
+            return _MAGIC + _CODEC_RAW + data
+        if self.codec == "zstd":
+            return _MAGIC + _CODEC_ZSTD + self._cctx.compress(data)
+        # zstd levels reach 22 but zlib's cap is 9 — clamp so a store tuned
+        # for zstd keeps working on a host that falls back to zlib
+        return _MAGIC + _CODEC_ZLIB + zlib.compress(data, min(self.level, 9))
+
+    def _decode(self, digest: str, payload: bytes) -> bytes:
+        if payload[:4] != _MAGIC:
+            raise ObjectNotFound(f"corrupt object {digest}")
+        codec, body = payload[4:5], payload[5:]
+        if codec == _CODEC_RAW:
+            return body
+        if codec == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        if codec == _CODEC_ZSTD:
+            if self._dctx is None:
+                raise ObjectNotFound(
+                    f"object {digest} is zstd-compressed but the zstandard "
+                    "package is not installed")
+            return self._dctx.decompress(body)
+        raise ObjectNotFound(f"unknown codec {codec!r} for object {digest}")
+
     def put(self, data: bytes) -> str:
         digest = sha256_hex(data)
         path = self._path(digest)
         if path.exists():  # dedup: content addressing makes re-puts free
             return digest
-        payload = (
-            _MAGIC + _CODEC_ZSTD + self._cctx.compress(data)
-            if self.compress and len(data) > 64
-            else _MAGIC + _CODEC_RAW + data
-        )
+        payload = self._encode(data)
         path.parent.mkdir(parents=True, exist_ok=True)
         # Write-then-rename so readers never observe partial objects.
         fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
@@ -83,10 +136,7 @@ class ObjectStore:
             payload = path.read_bytes()
         except FileNotFoundError:
             raise ObjectNotFound(digest) from None
-        if payload[:4] != _MAGIC:
-            raise ObjectNotFound(f"corrupt object {digest}")
-        codec, body = payload[4:5], payload[5:]
-        data = self._dctx.decompress(body) if codec == _CODEC_ZSTD else body
+        data = self._decode(digest, payload)
         if sha256_hex(data) != digest:
             raise ObjectNotFound(f"digest mismatch for {digest}")
         return data
@@ -111,13 +161,16 @@ class ObjectStore:
 
     # ------------------------------------------------------------------- refs
     def _ref_path(self, name: str) -> Path:
-        if "/" in name or name.startswith("."):
-            raise ValueError(f"bad ref name {name!r}")
-        return self.ref_dir / name
+        parts = name.split("/")
+        for part in parts:
+            if not part or part.startswith("."):
+                raise ValueError(f"bad ref name {name!r}")
+        return self.ref_dir.joinpath(*parts)
 
     def set_ref(self, name: str, digest: str) -> None:
         path = self._ref_path(name)
-        fd, tmp = tempfile.mkstemp(dir=self.ref_dir, prefix=".tmp-")
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
         with os.fdopen(fd, "w") as f:
             f.write(digest)
         os.replace(tmp, path)
@@ -147,7 +200,16 @@ class ObjectStore:
         except FileNotFoundError:
             raise RefNotFound(name) from None
 
-    def iter_refs(self) -> Iterator[str]:
-        for p in sorted(self.ref_dir.iterdir()):
-            if not p.name.startswith("."):
-                yield p.name
+    def iter_refs(self, prefix: str = "") -> Iterator[str]:
+        """All ref names (namespaced refs as ``ns/sub/name``), sorted."""
+        names = []
+        for dirpath, dirnames, filenames in os.walk(self.ref_dir):
+            dirnames[:] = sorted(d for d in dirnames if not d.startswith("."))
+            rel = Path(dirpath).relative_to(self.ref_dir)
+            for fn in filenames:
+                if fn.startswith("."):
+                    continue
+                name = fn if rel == Path(".") else (rel / fn).as_posix()
+                if name.startswith(prefix):
+                    names.append(name)
+        yield from sorted(names)

@@ -1,0 +1,27 @@
+"""jax version compatibility shims for the distributed layer."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; ``jax.experimental.shard_map`` on
+    jax < 0.5 (where ``check_vma`` was spelled ``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
+
+
+def axis_size(name: str) -> int:
+    """``jax.lax.axis_size`` on new jax; on jax < 0.5 ``psum(1, axis)`` is
+    constant-folded to the (static) mapped axis size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)

@@ -15,13 +15,20 @@ For each cell:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
-  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      [--skip-existing] [--no-cache] [--jobs N]
+
+The per-cell JSON under results/dryrun/ doubles as the sweep's cache:
+``--skip-existing`` reuses it, ``--no-cache`` forces recompute even when a
+record exists, and ``--jobs N`` compiles independent cells on N threads
+(XLA compilation releases the GIL for most of its wall time).
 """
 
 import argparse
 import json
 import time
 import traceback
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 import jax
@@ -199,11 +206,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: Path = RESULTS, skip_existing: bool = False,
-             **lower_kw) -> dict:
+             no_cache: bool = False, **lower_kw) -> dict:
     mesh_tag = "2x16x16" if multi_pod else "16x16"
     out_dir.mkdir(parents=True, exist_ok=True)
     out_path = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
-    if skip_existing and out_path.exists():
+    if skip_existing and not no_cache and out_path.exists():
         return json.loads(out_path.read_text())
     t_start = time.time()
     try:
@@ -261,6 +268,10 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="recompute cells even when their JSON record exists")
+    ap.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="compile N independent cells concurrently")
     ap.add_argument("--attention-impl", default="chunked",
                     choices=["chunked", "xla"])
     args = ap.parse_args()
@@ -275,24 +286,39 @@ def main():
         assert args.arch and args.shape, "--arch/--shape or --all"
         cells = [(args.arch, args.shape)]
 
-    for mp in meshes:
-        for a, s in cells:
-            rec = run_cell(a, s, multi_pod=mp,
-                           skip_existing=args.skip_existing,
-                           attention_impl=args.attention_impl)
+    def one(mp, a, s):
+        rec = run_cell(a, s, multi_pod=mp,
+                       skip_existing=args.skip_existing,
+                       no_cache=args.no_cache,
+                       attention_impl=args.attention_impl)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compile={rec['compile_seconds']:.1f}s"
+                     f" bottleneck={r['bottleneck']}"
+                     f" t=({r['t_compute']:.3f},{r['t_memory']:.3f},"
+                     f"{r['t_collective']:.3f})s")
+        elif status == "error":
+            extra = " " + rec["error"][:120]
+        print(f"[{rec.get('mesh')}] {a} × {s}: {status}{extra}", flush=True)
+
+    grid = [(mp, a, s) for mp in meshes for a, s in cells]
+    if args.jobs > 1:
+        # chunk the grid so jax caches are cleared between batches (from the
+        # main thread, with no compile in flight): peak cache memory is
+        # bounded by the args.jobs cells of one chunk, vs one cell when
+        # sequential
+        chunk = args.jobs
+        with ThreadPoolExecutor(max_workers=args.jobs) as pool:
+            for start in range(0, len(grid), chunk):
+                list(pool.map(lambda cell: one(*cell),
+                              grid[start:start + chunk]))
+                jax.clear_caches()
+    else:
+        for cell in grid:
+            one(*cell)
             jax.clear_caches()  # keep the sweep's memory bounded
-            status = rec.get("status")
-            extra = ""
-            if status == "ok":
-                r = rec["roofline"]
-                extra = (f" compile={rec['compile_seconds']:.1f}s"
-                         f" bottleneck={r['bottleneck']}"
-                         f" t=({r['t_compute']:.3f},{r['t_memory']:.3f},"
-                         f"{r['t_collective']:.3f})s")
-            elif status == "error":
-                extra = " " + rec["error"][:120]
-            print(f"[{rec.get('mesh')}] {a} × {s}: {status}{extra}",
-                  flush=True)
 
 
 if __name__ == "__main__":

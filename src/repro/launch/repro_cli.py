@@ -83,6 +83,13 @@ def main(argv=None):
     r.add_argument("--id", dest="run_id", default=None,
                    help="replay this run id instead of a fresh run")
     r.add_argument("--author", default="cli")
+    r.add_argument("--no-cache", action="store_true",
+                   help="ignore the run cache: re-execute every node")
+    r.add_argument("--jobs", type=int, default=None, metavar="N",
+                   help="max concurrent DAG nodes (default: auto)")
+
+    cc = sub.add_parser("cache", help="inspect / clear the run cache")
+    cc.add_argument("action", choices=["stats", "clear"])
 
     q = sub.add_parser("query")
     q.add_argument("sql")
@@ -108,16 +115,25 @@ def main(argv=None):
         pipe = _pipeline(args.pipeline, args.seq_len)
         if args.run_id:
             rep = lake.replay(args.run_id, pipe, branch=args.branch,
-                              author=args.author)
+                              author=args.author,
+                              use_cache=not args.no_cache, jobs=args.jobs)
             print(json.dumps({"replayed": args.run_id,
                               "replay_run_id": rep.replay_run_id,
                               "branch": rep.branch,
                               "bit_exact": rep.bit_exact}))
         else:
-            res = lake.run(pipe, branch=args.branch, author=args.author)
+            res = lake.run(pipe, branch=args.branch, author=args.author,
+                           use_cache=not args.no_cache, jobs=args.jobs)
             print(json.dumps({"run_id": res.run_id,
                               "commit": res.commit[:12],
-                              "outputs": list(res.outputs)}))
+                              "outputs": list(res.outputs),
+                              "cache_hits": res.cache_hits,
+                              "cache_misses": res.cache_misses}))
+    elif args.cmd == "cache":
+        if args.action == "stats":
+            print(json.dumps({"entries": len(lake.run_cache)}))
+        else:
+            print(json.dumps({"cleared": lake.run_cache.clear()}))
     elif args.cmd == "query":
         _query(lake, args.sql, args.ref)
     elif args.cmd == "log":

@@ -1,0 +1,97 @@
+"""Minimal stand-in for ``hypothesis`` when the package is not installed.
+
+The tier-1 suite must collect and run on a bare interpreter (see
+.github/workflows/ci.yml: one matrix leg has no optional deps).  When real
+hypothesis is importable the test modules use it; otherwise they fall back to
+this shim, which expands each ``@given`` into a deterministic, seeded
+``pytest.mark.parametrize`` over a fixed number of random examples.  That
+keeps the property tests meaningful (many concrete cases, reproducible
+failures) without the shrinking/coverage machinery.
+
+Only the strategy surface the suite actually uses is implemented:
+``binary, integers, lists, sampled_from, tuples``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+from typing import Any, Callable, List
+
+import pytest
+
+_N_EXAMPLES = 12  # per property; hypothesis legs run the real 25-50
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.*``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def binary(*, min_size: int = 0, max_size: int = 64) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return rng.getrandbits(8 * n).to_bytes(n, "little") if n else b""
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0, max_size: int = 8,
+              unique: bool = False) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            out: List[Any] = []
+            attempts = 0
+            while len(out) < n and attempts < 100 * (n + 1):
+                v = elem.draw(rng)
+                attempts += 1
+                if unique and v in out:
+                    continue
+                out.append(v)
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+
+def settings(**_kw):
+    """No-op: example count is fixed at ``_N_EXAMPLES`` in the fallback."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*pos: _Strategy, **named: _Strategy):
+    """Expand to ``parametrize`` — positional strategies bind to the
+    rightmost test parameters (hypothesis semantics), named to their names;
+    remaining leading parameters stay pytest fixtures."""
+    def deco(fn):
+        sig_params = list(inspect.signature(fn).parameters)
+        argnames = list(named)
+        if pos:
+            argnames = sig_params[len(sig_params) - len(pos):] + argnames
+        strategies_in_order = list(pos) + [named[k] for k in named]
+        rng = random.Random(f"repro:{fn.__name__}")
+        cases = []
+        for _ in range(_N_EXAMPLES):
+            vals = tuple(s.draw(rng) for s in strategies_in_order)
+            cases.append(vals[0] if len(vals) == 1 else vals)
+        return pytest.mark.parametrize(",".join(argnames), cases)(fn)
+    return deco

@@ -7,8 +7,12 @@ time-travel returns the commit that was HEAD at that time.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.core import (Catalog, Lake, MergeConflict, ObjectStore,
                         PermissionDenied)

@@ -2,8 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.data import (DeterministicLoader, batch_rows, build_data_pipeline,
                         generate_documents, permuted_index, seed_corpus)

@@ -5,8 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.kernels.fingerprint.kernel import fingerprint
 from repro.kernels.fingerprint.ops import tree_digest_hex

@@ -1,0 +1,378 @@
+"""Incremental run cache (docs/run_cache.md): warm replay of an unchanged
+branch executes ZERO node functions; editing one node re-runs exactly its
+downstream cone; ``--no-cache`` forces a full re-execution."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Lake, Model, Pipeline, RunCache, model, node_key
+from repro.core.gc import collect
+
+
+# Execution counters live at MODULE level: nodes reference CALLS as a global,
+# not a closure — a mutable closure would (correctly) make them uncacheable
+# (see is_cache_safe), which is itself covered further down.
+CALLS = {"a": 0, "b": 0, "c": 0, "d": 0}
+
+
+def diamond_v1():
+    """a -> b -> c, plus sibling d (a and d both read source_table)."""
+
+    @model()
+    def a(data=Model("source_table")):
+        CALLS["a"] += 1
+        return {"v": data["c1"]}
+
+    @model()
+    def b(x=Model("a")):
+        CALLS["b"] += 1
+        return {"v": x["v"] * 2.0}
+
+    @model()
+    def c(y=Model("b")):
+        CALLS["c"] += 1
+        return {"v": y["v"] + 1.0}
+
+    @model()
+    def d(data=Model("source_table")):
+        CALLS["d"] += 1
+        return {"v": data["c2"].astype(np.float32)}
+
+    return Pipeline([a, b, c, d])
+
+
+def diamond_v2_edited_b():
+    """Same DAG with b's SOURCE changed (* 3.0): only b's cone re-runs."""
+
+    @model()
+    def a(data=Model("source_table")):
+        CALLS["a"] += 1
+        return {"v": data["c1"]}
+
+    @model()
+    def b(x=Model("a")):
+        CALLS["b"] += 1
+        return {"v": x["v"] * 3.0}
+
+    @model()
+    def c(y=Model("b")):
+        CALLS["c"] += 1
+        return {"v": y["v"] + 1.0}
+
+    @model()
+    def d(data=Model("source_table")):
+        CALLS["d"] += 1
+        return {"v": data["c2"].astype(np.float32)}
+
+    return Pipeline([a, b, c, d])
+
+
+def fresh_calls():
+    CALLS.update({"a": 0, "b": 0, "c": 0, "d": 0})
+    return CALLS
+
+
+# ------------------------------------------------------------------ warm path
+def test_warm_replay_executes_zero_node_functions(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    r1 = seeded_lake.run(pipe, branch="r.dev", author="r")
+    assert calls == {"a": 1, "b": 1, "c": 1, "d": 1}
+    assert r1.cache_misses == 4 and r1.cache_hits == 0
+
+    r2 = seeded_lake.run(pipe, branch="r.dev", author="r")
+    assert calls == {"a": 1, "b": 1, "c": 1, "d": 1}  # zero executions
+    assert r2.cache_hits == 4 and r2.cache_misses == 0
+    assert r2.outputs == r1.outputs  # identical snapshot digests
+    # warm run is a no-op on the branch: no new commit was created
+    assert r2.commit == r1.commit
+
+
+def test_warm_run_recorded_in_ledger_manifest(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    seeded_lake.run(pipe, branch="r.dev", author="r")
+    r2 = seeded_lake.run(pipe, branch="r.dev", author="r")
+    m = seeded_lake.ledger.get(r2.run_id)
+    assert m["executor"]["cache"] is True
+    assert m["executor"]["cache_hits"] == 4
+    assert m["executor"]["cache_misses"] == 0
+    assert set(m["nodes"]) == {"a", "b", "c", "d"}
+    for stat in m["nodes"].values():
+        assert stat["cache_hit"] is True
+        assert stat["wall_s"] >= 0
+        assert stat["snapshot"]
+
+
+# ----------------------------------------------------------- cone invalidation
+def test_editing_one_node_reruns_exactly_its_downstream_cone(seeded_lake):
+    calls = fresh_calls()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    seeded_lake.run(diamond_v1(), branch="r.dev", author="r")
+    assert calls == {"a": 1, "b": 1, "c": 1, "d": 1}
+
+    res = seeded_lake.run(diamond_v2_edited_b(), branch="r.dev",
+                          author="r")
+    # a and d untouched (upstream / sibling); b and its descendant c re-ran
+    assert calls == {"a": 1, "b": 2, "c": 2, "d": 1}
+    stats = {n: s.cache_hit for n, s in res.node_stats.items()}
+    assert stats == {"a": True, "b": False, "c": False, "d": True}
+    # and the re-run produced the edited semantics
+    src = seeded_lake.read_table("main", "source_table")
+    np.testing.assert_allclose(seeded_lake.read_table("r.dev", "b")["v"],
+                               src["c1"] * 3.0)
+
+
+def test_data_change_invalidates_readers(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    seeded_lake.run(pipe, branch="r.dev", author="r")
+    new_src = {k: v[:100] for k, v in
+               seeded_lake.read_table("main", "source_table").items()}
+    seeded_lake.write_table("r.dev", "source_table", new_src, author="r")
+    seeded_lake.run(pipe, branch="r.dev", author="r")
+    # every node sits downstream of source_table -> full re-execution
+    assert calls == {"a": 2, "b": 2, "c": 2, "d": 2}
+
+
+# -------------------------------------------------------------------- opt-out
+def test_no_cache_forces_full_reexecution(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    seeded_lake.run(pipe, branch="r.dev", author="r")
+    res = seeded_lake.run(pipe, branch="r.dev", author="r", use_cache=False)
+    assert calls == {"a": 2, "b": 2, "c": 2, "d": 2}
+    assert res.cache_hits == 0
+    for stat in res.node_stats.values():
+        assert stat.cache_key is None  # cache never consulted
+    m = seeded_lake.ledger.get(res.run_id)
+    assert m["executor"]["cache"] is False
+
+
+def test_replay_uses_cache_and_stays_bit_exact(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    res = seeded_lake.run(pipe, branch="r.dev", author="r")
+    rep = seeded_lake.replay(res.run_id, pipe, branch="r.debug", author="r")
+    assert rep.bit_exact, rep.diffs
+    assert calls == {"a": 1, "b": 1, "c": 1, "d": 1}  # replay fully warm
+    m = seeded_lake.ledger.get(rep.replay_run_id)
+    assert m["executor"]["cache_hits"] == 4
+
+
+# ------------------------------------------------------------------- mechanics
+def test_node_key_hashes_array_params_by_content():
+    """Large-array params must not collide through numpy's truncated repr."""
+    a = np.arange(10_000, dtype=np.float64)
+    b = a.copy()
+    b[5_000] += 1.0  # repr() summarizes both to the same "[0., 1., ...]"
+    assert node_key("ch", [], {"w": a}) != node_key("ch", [], {"w": b})
+    assert node_key("ch", [], {"w": a}) == node_key("ch", [], {"w": a.copy()})
+    # dtype is part of the identity even when values compare equal
+    assert (node_key("ch", [], {"w": np.float32(1.0)})
+            != node_key("ch", [], {"w": np.float64(1.0)}))
+    # containers recurse down to array content
+    assert (node_key("ch", [], {"w": [a, 1]})
+            != node_key("ch", [], {"w": [b, 1]}))
+
+
+def test_missing_source_table_raises_with_and_without_cache(seeded_lake):
+    from repro.core import TableNotFound, execute
+
+    @model()
+    def reader(data=Model("no_such_table")):
+        return {"v": data["x"]}
+
+    seeded_lake.catalog.create_branch("r.miss", "main", author="r")
+    for use_cache in (True, False):
+        with pytest.raises(TableNotFound):
+            execute(Pipeline([reader]), seeded_lake.catalog, seeded_lake.io,
+                    branch="r.miss", author="r", use_cache=use_cache)
+
+
+def test_unstable_closure_makes_node_uncacheable_not_wrong(seeded_lake):
+    """Two pure factory nodes differing only by a LIST closure value share a
+    code hash (lists aren't foldable) — they must re-execute every run, never
+    serve each other's snapshot."""
+    from repro.core import is_cache_safe
+
+    def make(weights):
+        @model(name="scaled")
+        def scaled(data=Model("source_table")):
+            return {"v": data["c1"] * sum(weights)}
+        return scaled
+
+    n1, n2 = make([1.0, 2.0]), make([30.0, 40.0])
+    assert n1.code_hash == n2.code_hash  # the collision that forces the rule
+    assert not n1.cache_safe and not is_cache_safe(n2.fn)
+
+    seeded_lake.catalog.create_branch("r.uc", "main", author="r")
+    seeded_lake.run(Pipeline([n1]), branch="r.uc", author="r")
+    res = seeded_lake.run(Pipeline([n2]), branch="r.uc", author="r")
+    assert res.cache_hits == 0  # would have been a silent wrong hit
+    src = seeded_lake.read_table("main", "source_table")
+    np.testing.assert_allclose(seeded_lake.read_table("r.uc", "scaled")["v"],
+                               src["c1"] * 70.0, rtol=1e-5)
+    # stable factory params (scalars) stay cacheable
+    assert fresh_calls() is CALLS and diamond_v1().nodes["b"].cache_safe
+
+
+def test_uncacheable_parent_does_not_poison_descendants(seeded_lake):
+    """An uncacheable node still snapshots its output, so a cache-safe child
+    keys off the parent's CONTENT: same parent output -> child hits."""
+    def make(weights):
+        @model(name="parent")
+        def parent(data=Model("source_table")):
+            return {"v": data["c1"] * sum(weights)}
+        return parent
+
+    calls = fresh_calls()
+
+    @model()
+    def c(y=Model("parent")):
+        CALLS["c"] += 1
+        return {"v": y["v"] + 1.0}
+
+    seeded_lake.catalog.create_branch("r.mix", "main", author="r")
+    seeded_lake.run(Pipeline([make([2.0]), c]), branch="r.mix", author="r")
+    seeded_lake.run(Pipeline([make([2.0]), c]), branch="r.mix", author="r")
+    assert calls["c"] == 1  # parent re-ran, same digest -> child hit
+    seeded_lake.run(Pipeline([make([5.0]), c]), branch="r.mix", author="r")
+    assert calls["c"] == 2  # parent output changed -> child re-ran
+
+
+def test_kwonly_default_distinguishes_factory_nodes(seeded_lake):
+    """Factory params passed through keyword-only defaults are part of the
+    code hash too — make(2.0) and make(3.0) must not cross-hit."""
+    def make(n):
+        @model(name="pack")
+        def pack(data=Model("source_table"), *, scale=n):
+            return {"v": data["c1"] * scale}
+        return pack
+
+    n1, n2 = make(2.0), make(3.0)
+    assert n1.code_hash != n2.code_hash
+    assert n1.cache_safe and n2.cache_safe
+
+    seeded_lake.catalog.create_branch("r.kw", "main", author="r")
+    seeded_lake.run(Pipeline([n1]), branch="r.kw", author="r")
+    res = seeded_lake.run(Pipeline([n2]), branch="r.kw", author="r")
+    assert res.cache_hits == 0
+    src = seeded_lake.read_table("main", "source_table")
+    np.testing.assert_allclose(seeded_lake.read_table("r.kw", "pack")["v"],
+                               src["c1"] * 3.0, rtol=1e-6)
+
+
+def test_opaque_param_object_degrades_to_uncacheable(seeded_lake):
+    """A param whose type has no stable canonical form (state-hiding repr)
+    must force re-execution, not serve a stale snapshot under one key."""
+    class Config:
+        def __init__(self, scale):
+            self.scale = scale
+
+        def __repr__(self):  # state-free on purpose: the dangerous case
+            return "<Config>"
+
+    from repro.core import execute
+
+    calls = fresh_calls()
+
+    @model()
+    def scaled(data=Model("source_table"), cfg=None):
+        CALLS["a"] += 1
+        return {"v": data["c1"] * cfg.scale}
+
+    pipe = Pipeline([scaled])
+    seeded_lake.catalog.create_branch("r.obj", "main", author="r")
+
+    def run(cfg):
+        return execute(pipe, seeded_lake.catalog, seeded_lake.io,
+                       branch="r.obj", author="r", params={"cfg": cfg})
+
+    run(Config(2.0))
+    res = run(Config(5.0))
+    assert calls["a"] == 2 and res.cache_hits == 0  # no stale hit possible
+    src = seeded_lake.read_table("main", "source_table")
+    np.testing.assert_allclose(seeded_lake.read_table("r.obj", "scaled")["v"],
+                               src["c1"] * 5.0, rtol=1e-6)
+    res = run(Config(5.0))
+    assert calls["a"] == 3  # still uncacheable: correctness over speed
+    assert res.node_stats["scaled"].cache_key is None  # keying was skipped
+
+
+def test_node_key_is_order_insensitive_and_code_sensitive():
+    inputs = [("t1", "d1"), ("t2", "d2")]
+    k1 = node_key("code", inputs, {"p": 1})
+    assert k1 == node_key("code", list(reversed(inputs)), {"p": 1})
+    assert k1 != node_key("other", inputs, {"p": 1})
+    assert k1 != node_key("code", [("t1", "dX"), ("t2", "d2")], {"p": 1})
+    assert k1 != node_key("code", inputs, {"p": 2})
+
+
+def test_cache_entry_survives_roundtrip(tmp_path):
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    key = node_key("abc", [("t", "d")], {})
+    lake.store.put(b"payload")  # arbitrary blob to reference
+    snap = lake.io.write_snapshot({"v": np.arange(4)})
+    lake.run_cache.put(key, node="n", snapshot=snap, code_hash="abc",
+                       inputs=[("t", "d")])
+    entry = lake.run_cache.get(key)
+    assert entry["snapshot"] == snap and entry["node"] == "n"
+    assert key in lake.run_cache.keys()
+    assert lake.run_cache.invalidate(key)
+    assert lake.run_cache.get(key) is None
+
+
+def test_gc_respects_then_drops_cache(seeded_lake):
+    calls = fresh_calls()
+    pipe = diamond_v1()
+    seeded_lake.catalog.create_branch("r.dev", "main", author="r")
+    seeded_lake.run(pipe, branch="r.dev", author="r")
+    collect(seeded_lake.store)  # cache refs are roots: entries stay warm
+    r2 = seeded_lake.run(pipe, branch="r.dev", author="r")
+    assert r2.cache_hits == 4
+    collect(seeded_lake.store, drop_cache=True)
+    assert len(seeded_lake.run_cache) == 0
+    seeded_lake.run(pipe, branch="r.dev", author="r")  # degrades to misses
+    assert calls == {"a": 2, "b": 2, "c": 2, "d": 2}
+    # dropping the cache must never break reads of committed tables
+    assert seeded_lake.read_table("r.dev", "c")["v"].shape[0] > 0
+
+
+# ------------------------------------------------------------------------ CLI
+def test_cli_no_cache_and_jobs_flags(tmp_path, capsys):
+    from repro.data.pipeline import seed_corpus
+    from repro.launch.repro_cli import main
+
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    seed_corpus(lake, "main", n_docs=16, seed=0, vocab_size=64, mean_len=32,
+                author="cli")
+    lake.catalog.create_branch("cli.run", "main", author="cli")
+
+    argv = ["--lake", str(tmp_path / "lake"), "run", "--pipeline", "data",
+            "--seq-len", "32", "--branch", "cli.run", "--jobs", "2"]
+    main(argv)
+    warm = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert warm["cache_misses"] > 0 and warm["cache_hits"] == 0
+
+    main(argv)  # warm: pure cache lookups
+    out = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert out["cache_hits"] > 0 and out["cache_misses"] == 0
+
+    main(argv + ["--no-cache"])  # forced re-execution
+    out = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert out["cache_hits"] == 0 and out["cache_misses"] > 0
+
+    main(["--lake", str(tmp_path / "lake"), "cache", "stats"])
+    stats = json.loads(capsys.readouterr().out.strip())
+    assert stats["entries"] > 0
+    main(["--lake", str(tmp_path / "lake"), "cache", "clear"])
+    cleared = json.loads(capsys.readouterr().out.strip())
+    assert cleared["cleared"] == stats["entries"]
