@@ -7,19 +7,22 @@ Layering (Fig. 2 of the paper):
 plus the run ledger (immutable run_ids, replay) and write-audit-publish.
 """
 
-from .catalog import Catalog, Commit
+from .catalog import Catalog, Commit, remote_tracking_ref
 from .errors import (CodeDrift, CycleError, ExpectationFailed, MergeConflict,
                      ObjectNotFound, PermissionDenied, RefConflict,
-                     RefNotFound, ReproError, RunNotFound, SchemaError,
-                     TableNotFound)
+                     RefNotFound, RemoteError, ReproError, RunNotFound,
+                     SchemaError, SyncError, TableNotFound)
 from .frame import Expr, col, lit, nrows, select, where
 from .ledger import (ReplayReport, RunLedger, mesh_fingerprint, run_pipeline,
                      runtime_fingerprint)
 from .pipeline import (ExecutionReport, Model, Node, NodeStat, Pipeline,
                        RunResult, code_hash_of, execute, is_cache_safe, model,
                        sql_model)
+from .remote import (HTTPTransport, LoopbackTransport, RemoteServer,
+                     RemoteStore, TieredStore, connect, serve_http)
 from .runcache import RunCache, node_key
-from .store import ObjectStore, sha256_hex
+from .store import ObjectStore, StoreBackend, sha256_hex
+from .sync import SyncReport, clone, commit_closure, pull, push
 from .table import ManifestEntry, Snapshot, TableIO
 from .tensorfile import ColumnSpec, Schema
 from .wap import (AuditReport, Expectation, audit, column_range, expectation,
@@ -31,13 +34,20 @@ class Lake:
 
     >>> lake = Lake("/tmp/my_lake")
     >>> lake.catalog.create_branch("richard.debug", "main", author="richard")
+
+    With ``remote=`` the store becomes a :class:`TieredStore`: reads fault
+    through to the remote tier with local write-back, so branch heads and
+    warm run-cache entries published by another host are visible without an
+    explicit pull (writes still land locally until pushed).
     """
 
-    def __init__(self, root, *, protect_main: bool = True, clock=None):
+    def __init__(self, root, *, protect_main: bool = True, clock=None,
+                 remote=None):
         import time as _time
 
         clock = clock or _time.time
-        self.store = ObjectStore(root)
+        self.store = ObjectStore(root) if remote is None \
+            else TieredStore(ObjectStore(root), remote)
         self.catalog = Catalog(self.store, protect_main=protect_main,
                                clock=clock)
         self.io = TableIO(self.store)
@@ -71,7 +81,10 @@ class Lake:
 
 
 __all__ = [
-    "Lake", "Catalog", "Commit", "ObjectStore", "TableIO", "Snapshot",
+    "Lake", "Catalog", "Commit", "ObjectStore", "StoreBackend", "TableIO",
+    "RemoteStore", "RemoteServer", "TieredStore", "LoopbackTransport",
+    "HTTPTransport", "connect", "serve_http", "push", "pull", "clone",
+    "SyncReport", "commit_closure", "remote_tracking_ref", "Snapshot",
     "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
     "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",
@@ -83,4 +96,5 @@ __all__ = [
     "ReproError", "ObjectNotFound", "RefNotFound", "RefConflict",
     "TableNotFound", "SchemaError", "MergeConflict", "PermissionDenied",
     "CycleError", "ExpectationFailed", "CodeDrift", "RunNotFound",
+    "RemoteError", "SyncError",
 ]

@@ -31,6 +31,16 @@ from .store import ObjectStore
 
 _BRANCH_PREFIX = "branch="
 _TAG_PREFIX = "tag="
+#: namespace for remote-tracking refs: ``remote/<name>/branch=<b>`` records
+#: where ``<b>`` pointed on remote ``<name>`` at the last push/pull.  These
+#: are GC roots (see ``gc.collect``) — objects reachable only through a
+#: remote-tracking ref must survive a local sweep or the next replay of a
+#: pulled branch would break.
+REMOTE_REF_PREFIX = "remote/"
+
+
+def remote_tracking_ref(remote_name: str, branch: str) -> str:
+    return f"{REMOTE_REF_PREFIX}{remote_name}/{_BRANCH_PREFIX}{branch}"
 
 
 def _pack(obj) -> bytes:
@@ -125,6 +135,12 @@ class Catalog:
             return self.store.get_ref(_TAG_PREFIX + ref)
         except RefNotFound:
             pass
+        if "/" in ref:  # remote-tracking: ``origin/main`` (git spelling)
+            rname, _, branch = ref.partition("/")
+            try:
+                return self.store.get_ref(remote_tracking_ref(rname, branch))
+            except RefNotFound:
+                pass
         if self.store.has(ref):
             return ref
         # commit digest prefix

@@ -51,3 +51,11 @@ class CodeDrift(ReproError):
 
 class RunNotFound(ReproError):
     """Unknown run id in the ledger."""
+
+
+class RemoteError(ReproError):
+    """A remote store request failed (transport fault, protocol error)."""
+
+
+class SyncError(ReproError):
+    """push/pull/clone could not complete (diverged refs, missing remote)."""

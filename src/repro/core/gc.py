@@ -2,9 +2,12 @@
 
 Immutable content-addressed objects accumulate forever (every commit,
 snapshot, tensorfile and run manifest).  Real lakehouses expire unreachable
-data; here: roots = every branch/tag head + every run-ledger link; mark =
-walk commits → snapshots → manifest files (+ run manifests → result
-commits); sweep = delete unmarked objects.
+data; here: roots = every branch/tag head (including remote-tracking refs
+``remote/<name>/branch=<b>`` left by push/pull) + every run-ledger link;
+mark = walk commits → snapshots → manifest files (+ run manifests → result
+commits); sweep = delete unmarked objects.  On a ``TieredStore`` the sweep
+only touches the local tier — the shared remote is never collected from a
+client.
 
 Because branches are the only mutable state, deleting a branch is what makes
 its unique history collectable — a paper-consistent retention story
@@ -68,13 +71,25 @@ def collect(store: ObjectStore, *, dry_run: bool = False,
     live) unless ``drop_cache`` — then the cache refs are deleted first and
     any snapshot only the cache referenced is swept (a later warm run simply
     degrades to a miss)."""
+    # On a TieredStore, collect strictly the local tier: marking through the
+    # tiered view would fault every remote blob over the network into the
+    # local store (read-through write-back), turning gc into a full mirror.
+    # Local refs (incl. remote-tracking refs, which live locally) are the
+    # roots; mark walks simply stop at objects that only exist remotely.
+    store = getattr(store, "local", store)
     if drop_cache and not dry_run:
         for ref in list(store.iter_refs(CACHE_REF_PREFIX)):
             store.delete_ref(ref)
     live: Set[str] = set()
     for ref in store.iter_refs():
         head = store.get_ref(ref)
-        if ref.startswith((_BRANCH_PREFIX, _TAG_PREFIX)):
+        # Commit roots: local branches/tags AND remote-tracking refs
+        # (``remote/<name>/branch=<b>``).  History reachable only through a
+        # remote-tracking ref — e.g. a pulled branch whose local ref was
+        # deleted — must survive, or replaying it after gc would break.
+        basename = ref.rsplit("/", 1)[-1]
+        if basename.startswith((_BRANCH_PREFIX, _TAG_PREFIX)) and \
+                not ref.startswith(CACHE_REF_PREFIX):
             _mark_commit(store, head, live)
         elif ref.startswith(CACHE_REF_PREFIX):  # cache entry -> snapshot
             if drop_cache:  # dry_run: pretend the cache is gone
@@ -111,6 +126,6 @@ def collect(store: ObjectStore, *, dry_run: bool = False,
             continue
         freed += store.size(digest)
         if not dry_run:
-            store._path(digest).unlink()
+            store.delete_object(digest)
         swept += 1
     return GCReport(live=len(live), swept=swept, bytes_freed=freed)

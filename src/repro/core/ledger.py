@@ -158,6 +158,27 @@ class RunLedger:
     def runs(self) -> List[str]:
         return [link["run_id"] for link in self._iter_links()]
 
+    def links(self):
+        """Chain links newest-first: ``{run_id, manifest, prev}`` dicts.
+        Exposed for push/pull, which graft missing manifests onto the
+        destination's own chain instead of copying link blobs (the chains
+        on two hosts interleave differently but reference identical,
+        content-addressed manifests)."""
+        return self._iter_links()
+
+    def graft(self, run_id: str, manifest_digest: str) -> None:
+        """Append an existing (transferred) manifest to this store's chain.
+        The manifest blob must already be in the store; the run keeps its
+        original id so replay-by-id works across hosts."""
+        try:
+            prev = self.store.get_ref(_RUNS_HEAD)
+        except RefNotFound:
+            prev = None
+        link = self.store.put(_pack({"run_id": run_id,
+                                     "manifest": manifest_digest,
+                                     "prev": prev}))
+        self.store.set_ref(_RUNS_HEAD, link)
+
     def get(self, run_id: str) -> Dict[str, Any]:
         for link in self._iter_links():
             if link["run_id"] == run_id or link["run_id"].startswith(run_id):

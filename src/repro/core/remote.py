@@ -1,0 +1,523 @@
+"""Remote object-store tier: the "S3 + Nessie service" half of the paper.
+
+The local :class:`~repro.core.store.ObjectStore` makes a replay reproducible
+*on the host that ran it*; this module is what makes it reproducible anywhere.
+Three pieces:
+
+``RemoteServer`` / transports
+    A server speaking the :class:`~repro.core.store.StoreBackend` wire
+    contract over msgpack request/response dicts.  The operations map 1:1
+    onto an S3-style service (keys are the same ``objects/ab/cdef...``
+    layout the filesystem store uses):
+
+        ================  ===========================================
+        wire op           S3/real-service equivalent
+        ================  ===========================================
+        put_object        PutObject (idempotent: content addressed)
+        get_object        GetObject (digest-verified by the client)
+        head_objects      batched HeadObject
+        list_objects      ListObjectsV2 w/ ContinuationToken
+        get_ref/set_ref   tiny pointer objects
+        cas_ref           conditional put (DynamoDB / If-Match)
+        list_refs         paged pointer listing (name, digest) pairs
+        ================  ===========================================
+
+    Two transports ship: ``LoopbackTransport`` (in-process, still goes
+    through a full msgpack encode/decode so only wire-safe types survive)
+    and ``HTTPTransport`` + :func:`serve_http` (stdlib http.server loopback
+    — one POST endpoint carrying msgpack bodies).
+
+``RemoteStore``
+    The client: implements ``StoreBackend``, so catalogs, run caches,
+    ledgers and the sync layer use a remote exactly like a local directory.
+    Idempotent requests retry on transient transport faults.
+
+``TieredStore``
+    local→remote read-through with local write-back: ``get`` serves from
+    the local tier, faults to the remote and persists the blob locally;
+    refs read local-first with remote fallback; all writes land locally.
+    A warm run-cache hit on host B can therefore reuse host A's node
+    outputs without an explicit pull (see docs/remote_store.md for the
+    trust model).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+import msgpack
+
+from .errors import (ObjectNotFound, RefConflict, RefNotFound, RemoteError,
+                     ReproError)
+from .store import ObjectStore, StoreBackend, sha256_hex
+
+#: ref value meaning "must not exist" in wire CAS (msgpack has no Optional
+#: on the sentinel side of If-Match semantics)
+_ABSENT = ""
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+# --------------------------------------------------------------------- server
+class RemoteServer:
+    """Serves the wire contract over any :class:`StoreBackend` (usually a
+    plain filesystem :class:`ObjectStore` — which is exactly what makes the
+    S3-key layout claim true: the served tree IS the S3 key scheme)."""
+
+    def __init__(self, store: StoreBackend):
+        self.store = store
+
+    # Each op returns a plain dict; errors are returned (not raised) so the
+    # transport layer stays exception-free and HTTP responses stay 200.
+    def handle(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            op = request.get("op")
+            fn = getattr(self, f"_op_{op}", None)
+            if fn is None:
+                return {"error": "bad_request", "message": f"unknown op {op!r}"}
+            return fn(request)
+        except ObjectNotFound as e:
+            return {"error": "object_not_found", "message": str(e)}
+        except RefNotFound as e:
+            return {"error": "ref_not_found", "message": str(e)}
+        except RefConflict as e:
+            return {"error": "ref_conflict", "message": str(e)}
+        except (KeyError, TypeError, ValueError) as e:
+            return {"error": "bad_request", "message": repr(e)}
+
+    def handle_bytes(self, payload: bytes) -> bytes:
+        """msgpack-framed entry point shared by every transport."""
+        try:
+            request = _unpack(payload)
+        except Exception as e:  # noqa: BLE001 - malformed frame
+            return _pack({"error": "bad_request", "message": repr(e)})
+        return _pack(self.handle(request))
+
+    # objects -----------------------------------------------------------
+    def _op_put_object(self, req):
+        data = req["data"]
+        digest = req["digest"]
+        if sha256_hex(data) != digest:
+            return {"error": "bad_request",
+                    "message": f"content does not hash to {digest}"}
+        # idempotent: ObjectStore.put dedups on existing digests
+        return {"digest": self.store.put(data)}
+
+    def _op_get_object(self, req):
+        return {"data": self.store.get(req["digest"])}
+
+    def _op_head_objects(self, req):
+        return {"present": sorted(self.store.has_many(req["digests"]))}
+
+    def _op_list_objects(self, req):
+        page, nxt = self.store.list_objects(
+            page_token=req.get("token") or None,
+            limit=int(req.get("limit") or 1000))
+        return {"digests": page, "next": nxt}
+
+    def _op_size_object(self, req):
+        return {"size": self.store.size(req["digest"])}
+
+    # refs --------------------------------------------------------------
+    def _op_get_ref(self, req):
+        return {"digest": self.store.get_ref(req["name"])}
+
+    def _op_set_ref(self, req):
+        self.store.set_ref(req["name"], req["digest"])
+        return {}
+
+    def _op_cas_ref(self, req):
+        expected = req.get("expected", _ABSENT)
+        self.store.cas_ref(req["name"],
+                           None if expected == _ABSENT else expected,
+                           req["new"])
+        return {}
+
+    def _op_delete_ref(self, req):
+        self.store.delete_ref(req["name"])
+        return {}
+
+    def _op_list_refs(self, req):
+        page, nxt = self.store.list_refs(
+            req.get("prefix") or "",
+            page_token=req.get("token") or None,
+            limit=int(req.get("limit") or 1000))
+        return {"refs": [[n, d] for n, d in page], "next": nxt}
+
+
+# ----------------------------------------------------------------- transports
+class LoopbackTransport:
+    """In-process transport.  Still round-trips through msgpack so requests
+    are held to exactly what the wire can carry."""
+
+    def __init__(self, server: RemoteServer):
+        self.server = server
+
+    def request(self, payload: bytes) -> bytes:
+        return self.server.handle_bytes(payload)
+
+    def close(self) -> None:
+        pass
+
+
+class HTTPTransport:
+    """Client side of the HTTP loopback: POST msgpack frames to ``/rpc``.
+
+    Connections are per-thread (http.client is not thread-safe) so a
+    ``--jobs N`` executor can fault blobs concurrently through one store.
+    """
+
+    def __init__(self, url: str, *, timeout: float = 30.0):
+        import urllib.parse
+
+        parsed = urllib.parse.urlsplit(url)
+        if parsed.scheme not in ("http", "https"):
+            raise ValueError(f"unsupported scheme {parsed.scheme!r}")
+        self.scheme = parsed.scheme
+        self.host = parsed.hostname or "127.0.0.1"
+        self.port = parsed.port or (443 if parsed.scheme == "https" else 80)
+        self.timeout = timeout
+        self._local = threading.local()
+
+    def _conn(self):
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            import http.client
+
+            cls = (http.client.HTTPSConnection if self.scheme == "https"
+                   else http.client.HTTPConnection)
+            conn = cls(self.host, self.port, timeout=self.timeout)
+            self._local.conn = conn
+        return conn
+
+    def request(self, payload: bytes) -> bytes:
+        conn = self._conn()
+        try:
+            conn.request("POST", "/rpc", body=payload,
+                         headers={"Content-Type": "application/x-msgpack",
+                                  "Content-Length": str(len(payload))})
+            resp = conn.getresponse()
+            body = resp.read()
+            if resp.status != 200:
+                raise RemoteError(f"HTTP {resp.status} from remote")
+            return body
+        except RemoteError:
+            # drop the (possibly wedged) connection; retry policy lives in
+            # RemoteStore, not here
+            self.close()
+            raise
+        except Exception as e:  # http.client + socket raise a small zoo;
+            # normalize to RemoteError so RemoteStore's idempotent-op retry
+            # sees every transient fault (ECONNREFUSED, ECONNRESET, ...)
+            self.close()
+            raise RemoteError(f"transport failure: {e!r}") from e
+
+    def close(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            try:
+                conn.close()
+            finally:
+                self._local.conn = None
+
+
+def serve_http(store: StoreBackend, *, host: str = "127.0.0.1",
+               port: int = 0):
+    """Start a loopback HTTP server for ``store`` on a daemon thread.
+
+    Returns ``(httpd, url)``; ``port=0`` picks a free port.  Call
+    ``httpd.shutdown()`` to stop (tests) or ``httpd.serve_forever()`` is
+    already running so just keep the process alive (``repro serve``).
+    """
+    import http.server
+
+    server = RemoteServer(store)
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def do_POST(self):  # noqa: N802 - stdlib naming
+            if self.path != "/rpc":
+                self.send_error(404)
+                return
+            length = int(self.headers.get("Content-Length", 0))
+            body = server.handle_bytes(self.rfile.read(length))
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-msgpack")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):  # quiet: tests run many requests
+            pass
+
+    httpd = http.server.ThreadingHTTPServer((host, port), Handler)
+    httpd.daemon_threads = True
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    url = f"http://{httpd.server_address[0]}:{httpd.server_address[1]}"
+    return httpd, url
+
+
+# ----------------------------------------------------------------- the client
+_RETRYABLE_OPS = frozenset({
+    # all idempotent: re-sending after an ambiguous failure cannot corrupt
+    # state.  cas_ref is deliberately NOT here — a retry after a success
+    # that was lost in transit would double-apply the swap.
+    "put_object", "get_object", "head_objects", "list_objects",
+    "size_object", "get_ref", "set_ref", "delete_ref", "list_refs",
+})
+
+
+class RemoteStore:
+    """StoreBackend client over a transport — a drop-in store replacement.
+
+    >>> remote = RemoteStore(LoopbackTransport(RemoteServer(ObjectStore(p))))
+    >>> remote.put(b"blob")  # content-addressed PUT over the wire
+    """
+
+    def __init__(self, transport, *, retries: int = 2):
+        self.transport = transport
+        self.retries = retries
+
+    # ------------------------------------------------------------ plumbing
+    def _call(self, op: str, **kwargs) -> Dict[str, Any]:
+        request = {"op": op, **kwargs}
+        payload = _pack(request)
+        attempts = 1 + (self.retries if op in _RETRYABLE_OPS else 0)
+        last: Optional[Exception] = None
+        for _ in range(attempts):
+            try:
+                reply = _unpack(self.transport.request(payload))
+                break
+            except RemoteError as e:
+                last = e
+        else:
+            raise RemoteError(f"{op}: transport failed after "
+                              f"{attempts} attempts") from last
+        if not isinstance(reply, dict):
+            raise RemoteError(f"{op}: malformed reply from server "
+                              f"({type(reply).__name__})")
+        err = reply.get("error")
+        if err:
+            msg = reply.get("message", "")
+            if err == "object_not_found":
+                raise ObjectNotFound(msg)
+            if err == "ref_not_found":
+                raise RefNotFound(msg)
+            if err == "ref_conflict":
+                raise RefConflict(msg)
+            raise RemoteError(f"{op}: {err}: {msg}")
+        return reply
+
+    def close(self) -> None:
+        self.transport.close()
+
+    # ------------------------------------------------------------- objects
+    def put(self, data: bytes) -> str:
+        digest = sha256_hex(data)
+        return self._call("put_object", digest=digest, data=data)["digest"]
+
+    def get(self, digest: str) -> bytes:
+        data = self._call("get_object", digest=digest)["data"]
+        if sha256_hex(data) != digest:  # never trust the wire
+            raise ObjectNotFound(f"digest mismatch for {digest} from remote")
+        return data
+
+    def has(self, digest: str) -> bool:
+        return bool(self.has_many([digest]))
+
+    def has_many(self, digests: Iterable[str]) -> Set[str]:
+        digests = list(digests)
+        if not digests:
+            return set()
+        return set(self._call("head_objects", digests=digests)["present"])
+
+    def size(self, digest: str) -> int:
+        return self._call("size_object", digest=digest)["size"]
+
+    def delete_object(self, digest: str) -> bool:
+        raise RemoteError("remote objects are immutable; GC runs remote-side")
+
+    def list_objects(self, *, page_token: Optional[str] = None,
+                     limit: int = 1000
+                     ) -> Tuple[List[str], Optional[str]]:
+        reply = self._call("list_objects", token=page_token or "",
+                           limit=limit)
+        return list(reply["digests"]), reply.get("next") or None
+
+    def iter_objects(self) -> Iterator[str]:
+        token: Optional[str] = None
+        while True:
+            page, token = self.list_objects(page_token=token)
+            yield from page
+            if token is None:
+                return
+
+    # ---------------------------------------------------------------- refs
+    def set_ref(self, name: str, digest: str) -> None:
+        self._call("set_ref", name=name, digest=digest)
+
+    def get_ref(self, name: str) -> str:
+        return self._call("get_ref", name=name)["digest"]
+
+    def cas_ref(self, name: str, expected: Optional[str], new: str) -> None:
+        self._call("cas_ref", name=name,
+                   expected=_ABSENT if expected is None else expected,
+                   new=new)
+
+    def delete_ref(self, name: str) -> None:
+        self._call("delete_ref", name=name)
+
+    def list_refs(self, prefix: str = "", *,
+                  page_token: Optional[str] = None, limit: int = 1000
+                  ) -> Tuple[List[Tuple[str, str]], Optional[str]]:
+        reply = self._call("list_refs", prefix=prefix,
+                           token=page_token or "", limit=limit)
+        return [(n, d) for n, d in reply["refs"]], reply.get("next") or None
+
+    def iter_refs(self, prefix: str = "") -> Iterator[str]:
+        token: Optional[str] = None
+        while True:
+            page, token = self.list_refs(prefix, page_token=token)
+            for name, _digest in page:
+                yield name
+            if token is None:
+                return
+
+
+# -------------------------------------------------------------------- tiering
+class TieredStore:
+    """local→remote read-through with local write-back.
+
+    * ``get``: local hit, else fetch from the remote, persist locally
+      (write-back), return — so a blob is paid for once per host;
+    * ``has``/``has_many``: local first, remainder asked remotely;
+    * refs: read local-first with remote fallback (a run-cache key that only
+      host A has still hits on host B); every write lands locally only —
+      publishing to the remote is an explicit ``push``, never a side effect;
+    * enumeration (``iter_objects``/``list_objects``/``delete_object``) is
+      local-tier only: GC sweeps the cache tier, never the shared remote.
+    """
+
+    def __init__(self, local: ObjectStore, remote: StoreBackend):
+        self.local = local
+        self.remote = remote
+
+    @property
+    def root(self):
+        return self.local.root
+
+    # ------------------------------------------------------------- objects
+    def put(self, data: bytes) -> str:
+        return self.local.put(data)
+
+    def get(self, digest: str) -> bytes:
+        try:
+            return self.local.get(digest)
+        except ObjectNotFound:
+            data = self.remote.get(digest)
+            self.local.put(data)  # write-back: next read is local
+            return data
+
+    def has(self, digest: str) -> bool:
+        return self.local.has(digest) or self.remote.has(digest)
+
+    def has_many(self, digests: Iterable[str]) -> Set[str]:
+        digests = list(digests)
+        present = self.local.has_many(digests)
+        rest = [d for d in digests if d not in present]
+        if rest:
+            present |= self.remote.has_many(rest)
+        return present
+
+    def size(self, digest: str) -> int:
+        try:
+            return self.local.size(digest)
+        except ObjectNotFound:
+            return self.remote.size(digest)
+
+    def delete_object(self, digest: str) -> bool:
+        return self.local.delete_object(digest)
+
+    def iter_objects(self) -> Iterator[str]:
+        return self.local.iter_objects()
+
+    def list_objects(self, *, page_token: Optional[str] = None,
+                     limit: int = 1000):
+        return self.local.list_objects(page_token=page_token, limit=limit)
+
+    # ---------------------------------------------------------------- refs
+    def set_ref(self, name: str, digest: str) -> None:
+        self.local.set_ref(name, digest)
+
+    def get_ref(self, name: str) -> str:
+        try:
+            return self.local.get_ref(name)
+        except RefNotFound:
+            return self.remote.get_ref(name)
+
+    def cas_ref(self, name: str, expected: Optional[str], new: str) -> None:
+        # CAS against the *tiered* view (a branch head may only exist
+        # remotely yet) but always write locally — under the local store's
+        # cross-process ref guard, so two processes sharing one lake
+        # directory cannot both win (same linearizability as the plain
+        # ObjectStore.cas_ref).
+        with self.local.ref_guard():
+            try:
+                current: Optional[str] = self.get_ref(name)
+            except RefNotFound:
+                current = None
+            if current != expected:
+                raise RefConflict(
+                    f"ref {name}: expected {expected!r}, found {current!r}")
+            self.local.set_ref(name, new)
+
+    def delete_ref(self, name: str) -> None:
+        self.local.delete_ref(name)
+
+    def iter_refs(self, prefix: str = "") -> Iterator[str]:
+        names = set(self.local.iter_refs(prefix))
+        try:
+            names.update(self.remote.iter_refs(prefix))
+        except ReproError:  # unreachable remote: degrade to the local tier
+            pass
+        yield from sorted(names)
+
+    def list_refs(self, prefix: str = "", *,
+                  page_token: Optional[str] = None, limit: int = 1000
+                  ) -> Tuple[List[Tuple[str, str]], Optional[str]]:
+        limit = max(1, limit)
+        page: List[Tuple[str, str]] = []
+        last: Optional[str] = None
+        for name in self.iter_refs(prefix):
+            if page_token is not None and name <= page_token:
+                continue
+            try:
+                page.append((name, self.get_ref(name)))
+            except RefNotFound:
+                continue
+            last = name
+            if len(page) >= limit:
+                return page, last
+        return page, None
+
+
+# ----------------------------------------------------------------- connectors
+def connect(url_or_path: str, *, retries: int = 2) -> RemoteStore:
+    """Open a remote store from a URL (``http://host:port``) or a
+    filesystem path (served through an in-process loopback, so every access
+    still exercises the full wire contract)."""
+    if url_or_path.startswith(("http://", "https://")):
+        return RemoteStore(HTTPTransport(url_or_path), retries=retries)
+    path = url_or_path[len("file://"):] if url_or_path.startswith("file://") \
+        else url_or_path
+    return RemoteStore(LoopbackTransport(RemoteServer(ObjectStore(path))),
+                       retries=retries)

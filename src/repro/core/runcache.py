@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import hashlib
 import time
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Dict, Iterator, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import msgpack
 import numpy as np
@@ -133,6 +134,36 @@ class RunCache:
         }
         digest = self.store.put(msgpack.packb(entry, use_bin_type=True))
         self.store.set_ref(self._ref(key), digest)
+
+    # --------------------------------------------------------------- transfer
+    @staticmethod
+    def key_of_ref(ref_name: str) -> str:
+        """Cache key encoded in a ``cache/ab/cdef...`` ref name."""
+        return ref_name[len(CACHE_REF_PREFIX):].replace("/", "", 1)
+
+    def entry_refs(self) -> Iterator[Tuple[str, str]]:
+        """All ``(key, entry blob digest)`` pairs, paged under the hood —
+        what push/pull enumerate to compute the run-cache closure."""
+        token: Optional[str] = None
+        while True:
+            page, token = self.store.list_refs(CACHE_REF_PREFIX,
+                                               page_token=token, limit=500)
+            for name, digest in page:
+                yield self.key_of_ref(name), digest
+            if token is None:
+                return
+
+    def adopt(self, key: str, entry_digest: str) -> bool:
+        """Point ``key`` at an entry blob transferred from another store.
+        Returns False when the key already holds that exact entry."""
+        ref = self._ref(key)
+        try:
+            if self.store.get_ref(ref) == entry_digest:
+                return False
+        except RefNotFound:
+            pass
+        self.store.set_ref(ref, entry_digest)
+        return True
 
     # ------------------------------------------------------------- management
     def invalidate(self, key: str) -> bool:

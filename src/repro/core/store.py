@@ -28,13 +28,20 @@ import os
 import tempfile
 import threading
 import zlib
+from contextlib import contextmanager
 from pathlib import Path
-from typing import Iterator, Optional
+from typing import (Iterable, Iterator, List, Optional, Protocol, Set, Tuple,
+                    runtime_checkable)
 
 try:  # optional: preferred codec when available
     import zstandard as zstd
 except ImportError:  # pragma: no cover - exercised on the no-zstd CI leg
     zstd = None
+
+try:  # POSIX file locking for cross-process CAS; absent on Windows
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX fallback: thread lock only
+    fcntl = None
 
 from .errors import ObjectNotFound, RefConflict, RefNotFound
 
@@ -49,6 +56,50 @@ WRITE_CODECS = ("auto", "raw", "zlib") + (("zstd",) if zstd else ())
 
 def sha256_hex(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+@runtime_checkable
+class StoreBackend(Protocol):
+    """The object-store wire contract every backend speaks.
+
+    Extracted from the filesystem :class:`ObjectStore` so that a remote
+    backend (:class:`repro.core.remote.RemoteStore`), a tiered composite
+    (:class:`repro.core.remote.TieredStore`), or a real S3/GCS client is a
+    drop-in replacement anywhere a store is accepted (catalog, run cache,
+    ledger, table IO, sync).  Semantics every implementation must honor:
+
+    * **objects** are immutable and content addressed — ``put`` is
+      idempotent, ``get`` verifies the digest, partially written objects are
+      never observable;
+    * **refs** are tiny mutable pointers with atomic ``cas_ref``
+      (linearizable per ref name);
+    * **listing** is paged and sorted so closure transfers can resume;
+    * **exists** checks batch (``has_many``) so transfers can dedup without
+      a round-trip per object.
+    """
+
+    # objects -----------------------------------------------------------
+    def put(self, data: bytes) -> str: ...
+    def get(self, digest: str) -> bytes: ...
+    def has(self, digest: str) -> bool: ...
+    def has_many(self, digests: Iterable[str]) -> Set[str]: ...
+    def size(self, digest: str) -> int: ...
+    def delete_object(self, digest: str) -> bool: ...
+    def iter_objects(self) -> Iterator[str]: ...
+    def list_objects(self, *, page_token: Optional[str] = None,
+                     limit: int = 1000
+                     ) -> Tuple[List[str], Optional[str]]: ...
+
+    # refs --------------------------------------------------------------
+    def set_ref(self, name: str, digest: str) -> None: ...
+    def get_ref(self, name: str) -> str: ...
+    def cas_ref(self, name: str, expected: Optional[str],
+                new: str) -> None: ...
+    def delete_ref(self, name: str) -> None: ...
+    def iter_refs(self, prefix: str = "") -> Iterator[str]: ...
+    def list_refs(self, prefix: str = "", *,
+                  page_token: Optional[str] = None, limit: int = 1000
+                  ) -> Tuple[List[Tuple[str, str]], Optional[str]]: ...
 
 
 class ObjectStore:
@@ -144,6 +195,19 @@ class ObjectStore:
     def has(self, digest: str) -> bool:
         return self._path(digest).exists()
 
+    def has_many(self, digests: Iterable[str]) -> Set[str]:
+        """Subset of ``digests`` present in the store (batched exists —
+        one call per transfer chunk instead of one round-trip per object)."""
+        return {d for d in digests if self.has(d)}
+
+    def delete_object(self, digest: str) -> bool:
+        """Remove one object (GC sweep).  Idempotent: missing → False."""
+        try:
+            self._path(digest).unlink()
+            return True
+        except FileNotFoundError:
+            return False
+
     def size(self, digest: str) -> int:
         """On-disk (compressed) size — used by benchmarks."""
         try:
@@ -158,6 +222,24 @@ class ObjectStore:
             for obj in sorted(sub.iterdir()):
                 if not obj.name.startswith("."):
                     yield sub.name + obj.name
+
+    def list_objects(self, *, page_token: Optional[str] = None,
+                     limit: int = 1000
+                     ) -> Tuple[List[str], Optional[str]]:
+        """One page of object digests in sorted order.
+
+        ``page_token`` is the last digest of the previous page (exclusive
+        resume point — the same shape as S3 ListObjectsV2 continuation
+        tokens over the ``objects/ab/cdef...`` key layout)."""
+        limit = max(1, limit)
+        page: List[str] = []
+        for digest in self.iter_objects():
+            if page_token is not None and digest <= page_token:
+                continue
+            page.append(digest)
+            if len(page) >= limit:
+                return page, digest
+        return page, None
 
     # ------------------------------------------------------------------- refs
     def _ref_path(self, name: str) -> Path:
@@ -181,9 +263,26 @@ class ObjectStore:
         except FileNotFoundError:
             raise RefNotFound(name) from None
 
+    @contextmanager
+    def ref_guard(self):
+        """Exclusive critical section over this store's refs, across
+        threads, instances AND processes (exclusive ``flock`` on a sidecar
+        lock file).  ``cas_ref`` runs inside it; composites like
+        ``TieredStore`` borrow it so their read-compare-write against a
+        merged ref view stays linearizable too.  Not reentrant."""
+        with self._lock, open(self.ref_dir / ".cas-lock", "w") as lockf:
+            if fcntl is not None:
+                fcntl.flock(lockf, fcntl.LOCK_EX)  # released on close
+            yield
+
     def cas_ref(self, name: str, expected: Optional[str], new: str) -> None:
-        """Compare-and-set a ref (atomicity of catalog commits)."""
-        with self._lock:
+        """Compare-and-set a ref (atomicity of catalog commits).
+
+        Linearizable across *instances and processes* sharing one store
+        directory, not just threads of one instance — two servers fronting
+        the same tree cannot both win a race (the contract ``RemoteStore``
+        clients and push's ref handoff rely on)."""
+        with self.ref_guard():
             current: Optional[str]
             try:
                 current = self.get_ref(name)
@@ -213,3 +312,26 @@ class ObjectStore:
                 if name.startswith(prefix):
                     names.append(name)
         yield from sorted(names)
+
+    def list_refs(self, prefix: str = "", *,
+                  page_token: Optional[str] = None, limit: int = 1000
+                  ) -> Tuple[List[Tuple[str, str]], Optional[str]]:
+        """One page of ``(name, digest)`` pairs in sorted name order.
+
+        Returning the value with the name saves the per-ref ``get_ref``
+        round-trip a remote sync would otherwise pay.  Refs deleted between
+        the directory walk and the read are skipped (no torn pages)."""
+        limit = max(1, limit)
+        page: List[Tuple[str, str]] = []
+        last: Optional[str] = None
+        for name in self.iter_refs(prefix):
+            if page_token is not None and name <= page_token:
+                continue
+            try:
+                page.append((name, self.get_ref(name)))
+            except RefNotFound:  # concurrently deleted
+                continue
+            last = name
+            if len(page) >= limit:
+                return page, last
+        return page, None

@@ -1,0 +1,384 @@
+"""Git-remote semantics for the catalog: ``push`` / ``pull`` / ``clone``.
+
+What moves when a branch syncs (the paper's "full pipeline reproducibility
+with a few CLI commands", made multi-host):
+
+1. the branch's **commit closure** — every ancestor commit, every table
+   snapshot those commits reference, every tensorfile those snapshots
+   manifest;
+2. the branch's **run-cache closure** — cache entries whose input snapshot
+   digests are satisfied by the commit closure (computed to a fixpoint so a
+   chain of hits through unmaterialized intermediates transfers whole), plus
+   the output snapshots those entries point at;
+3. the branch's **run manifests** — ledger entries recorded on the branch
+   whose data/result commits are inside the closure, grafted onto the
+   destination's own chain under their original run ids (so
+   ``repro run --id`` replays cross-host).
+
+Transfer rules that make this safe over a flaky wire:
+
+* objects are copied **dependencies-first**, so any object present on the
+  destination has its full closure present — an interrupted transfer leaves
+  orphans at worst, never a torn closure, and a rerun resumes by skipping
+  completed subtrees (dedup via batched ``has_many``);
+* refs move **last** and only via compare-and-set: the destination branch
+  head either still points at fully-transferred history or the push/pull
+  fails with a conflict — readers never observe a head without its objects;
+* non-fast-forward updates are refused unless ``force`` (the freshly
+  initialized empty root commit every new catalog starts with is exempt,
+  so cloning/pulling ``main`` into a new lake just works).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+import msgpack
+
+from .catalog import _BRANCH_PREFIX, remote_tracking_ref
+from .errors import ObjectNotFound, RefNotFound, SyncError
+from .ledger import RunLedger
+from .runcache import RunCache
+from .store import ObjectStore, StoreBackend
+
+_HAS_CHUNK = 256  # digests per batched-exists request
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+# ------------------------------------------------------------------ transfer
+@dataclass
+class SyncReport:
+    direction: str  # "push" | "pull"
+    branch: str
+    head: str
+    objects_sent: int = 0
+    objects_skipped: int = 0
+    bytes_sent: int = 0
+    cache_entries: int = 0
+    runs: int = 0
+    ref_updated: bool = False
+
+    def summary(self) -> str:
+        return (f"{self.direction} {self.branch}: head={self.head[:12]} "
+                f"objects={self.objects_sent} (+{self.objects_skipped} "
+                f"deduped) bytes={self.bytes_sent} "
+                f"cache_entries={self.cache_entries} runs={self.runs} "
+                f"ref_updated={self.ref_updated}")
+
+
+class _ClosureTransfer:
+    """Copies dependency closures src → dst, deps-first.
+
+    Invariant: a blob is written to dst only after everything it references
+    is on dst.  ``done`` holds digests known to be on dst (either just
+    written or discovered via batched exists) — anything in it is pruned
+    together with its entire sub-closure, which is what makes a re-run of an
+    interrupted transfer resume instead of restart.
+    """
+
+    _COMMIT, _SNAPSHOT, _BLOB = "c", "s", "b"
+
+    def __init__(self, src: StoreBackend, dst: StoreBackend,
+                 report: SyncReport):
+        self.src = src
+        self.dst = dst
+        self.report = report
+        self.done: Set[str] = set()
+        self._visited: Set[str] = set()
+
+    def _prime(self, digests: Iterable[str]) -> None:
+        """Batched exists against dst; present digests become prune points."""
+        unknown = [d for d in dict.fromkeys(digests) if d not in self.done]
+        for i in range(0, len(unknown), _HAS_CHUNK):
+            present = self.dst.has_many(unknown[i:i + _HAS_CHUNK])
+            self.report.objects_skipped += len(present)
+            self.done.update(present)
+
+    def _put(self, digest: str, blob: bytes) -> None:
+        written = self.dst.put(blob)
+        if written != digest:  # defensive: src handed us corrupt bytes
+            raise SyncError(f"transfer of {digest} produced {written}")
+        self.report.objects_sent += 1
+        self.report.bytes_sent += len(blob)
+        self.done.add(digest)
+
+    def transfer_commit(self, digest: str) -> None:
+        self._walk(self._COMMIT, digest)
+
+    def transfer_snapshot(self, digest: str) -> None:
+        self._walk(self._SNAPSHOT, digest)
+
+    def _children(self, kind: str, blob: bytes) -> List[Tuple[str, str]]:
+        if kind == self._COMMIT:
+            obj = _unpack(blob)
+            return ([(self._COMMIT, p) for p in obj.get("parents", [])]
+                    + [(self._SNAPSHOT, s)
+                       for s in sorted(obj.get("tables", {}).values())])
+        if kind == self._SNAPSHOT:
+            obj = _unpack(blob)
+            out = [(self._BLOB, entry[0])
+                   for entry in obj.get("manifest", [])]
+            if obj.get("parent"):
+                out.append((self._SNAPSHOT, obj["parent"]))
+            return out
+        return []  # leaf tensorfile
+
+    def _walk(self, kind: str, root: str) -> None:
+        # Iterative post-order: a (digest, blob) frame is re-pushed as
+        # "expanded" and only written once every child frame has drained —
+        # metadata blobs ride the stack, leaf tensorfiles never do.
+        self._prime([root])
+        stack: List[Tuple[str, str, bool, Optional[bytes]]] = \
+            [(kind, root, False, None)]
+        while stack:
+            k, digest, expanded, blob = stack.pop()
+            if expanded:
+                self._put(digest, blob)
+                continue
+            if digest in self.done or digest in self._visited:
+                continue
+            self._visited.add(digest)
+            blob = self.src.get(digest)
+            children = self._children(k, blob)
+            self._prime(d for _k, d in children)
+            stack.append((k, digest, True, blob))
+            stack.extend((ck, cd, False, None) for ck, cd in children
+                         if cd not in self.done)
+
+
+# ------------------------------------------------------------------ closures
+def commit_closure(store: StoreBackend, head: str) -> Set[str]:
+    """Every digest reachable from ``head``: commits, snapshots,
+    tensorfiles.  Walks ``store`` directly, so call it on the side that has
+    the objects locally (push: before transfer; pull: after)."""
+    closure: Set[str] = set()
+    stack: List[Tuple[str, str]] = [("c", head)]
+    while stack:
+        kind, digest = stack.pop()
+        if digest in closure:
+            continue
+        closure.add(digest)
+        if kind == "b":
+            continue
+        obj = _unpack(store.get(digest))
+        if kind == "c":
+            stack.extend(("c", p) for p in obj.get("parents", []))
+            stack.extend(("s", s) for s in obj.get("tables", {}).values())
+        else:  # snapshot
+            stack.extend(("b", e[0]) for e in obj.get("manifest", []))
+            if obj.get("parent"):
+                stack.append(("s", obj["parent"]))
+    return closure
+
+
+def _is_empty_root(store: StoreBackend, digest: str) -> bool:
+    """The parentless zero-table commit a fresh catalog initializes ``main``
+    with.  Histories on two hosts always diverge at this commit (it embeds a
+    timestamp), so fast-forward checks treat it as replaceable."""
+    try:
+        obj = _unpack(store.get(digest))
+    except ObjectNotFound:
+        return False
+    return not obj.get("parents") and not obj.get("tables")
+
+
+def _select_cache_entries(
+    cache: RunCache, store: StoreBackend, closure: Set[str]
+) -> List[Tuple[str, str, bytes, Optional[str]]]:
+    """Cache entries shippable with a branch: entries whose input digests
+    are all inside the branch closure — iterated to a fixpoint so an entry
+    keyed on another entry's (possibly unmaterialized) output snapshot
+    qualifies once that entry is selected.  Returns
+    ``(key, entry_digest, entry_blob, output_snapshot)`` tuples."""
+    entries = []
+    for key, entry_digest in cache.entry_refs():
+        try:
+            blob = store.get(entry_digest)
+        except ObjectNotFound:  # dangling ref (concurrent GC)
+            continue
+        entries.append((key, entry_digest, blob, _unpack(blob)))
+    available = set(closure)
+    selected: List[Tuple[str, str, bytes, Optional[str]]] = []
+    picked: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for key, entry_digest, blob, entry in entries:
+            if key in picked:
+                continue
+            inputs = [d for _name, d in entry.get("inputs", [])]
+            if all(d in available for d in inputs):
+                snapshot = entry.get("snapshot")
+                selected.append((key, entry_digest, blob, snapshot))
+                picked.add(key)
+                if snapshot:
+                    available.add(snapshot)
+                changed = True
+    return selected
+
+
+def _sync_cache(src: StoreBackend, dst: StoreBackend,
+                xfer: _ClosureTransfer, closure: Set[str],
+                report: SyncReport) -> None:
+    src_cache, dst_cache = RunCache(src), RunCache(dst)
+    selected = _select_cache_entries(src_cache, src, closure)
+    xfer._prime(entry_digest for _k, entry_digest, _b, _s in selected)
+    for key, entry_digest, blob, snapshot in selected:
+        if snapshot:  # output closure first: an adopted ref must be warm
+            xfer.transfer_snapshot(snapshot)
+        if entry_digest not in xfer.done:
+            xfer._put(entry_digest, blob)
+        if dst_cache.adopt(key, entry_digest):
+            report.cache_entries += 1
+
+
+def _sync_runs(src: StoreBackend, dst: StoreBackend,
+               xfer: _ClosureTransfer, closure: Set[str], branch: str,
+               report: SyncReport) -> None:
+    src_ledger, dst_ledger = RunLedger(src), RunLedger(dst)
+    have = set(dst_ledger.runs())
+    picked = []
+    for link in src_ledger.links():
+        run_id, manifest_digest = link["run_id"], link["manifest"]
+        if run_id in have:
+            continue
+        try:
+            blob = src.get(manifest_digest)
+        except ObjectNotFound:
+            continue
+        manifest = _unpack(blob)
+        # only runs recorded on this branch whose pinned commits made the
+        # trip — a manifest must never reference objects the destination
+        # cannot resolve
+        if manifest.get("branch") != branch:
+            continue
+        if manifest.get("data_commit") not in closure:
+            continue
+        if manifest.get("result_commit") not in closure:
+            continue
+        picked.append((run_id, manifest_digest, blob))
+    xfer._prime(digest for _r, digest, _b in picked)
+    for run_id, manifest_digest, blob in reversed(picked):  # oldest first
+        if manifest_digest not in xfer.done:
+            xfer._put(manifest_digest, blob)
+        dst_ledger.graft(run_id, manifest_digest)
+        report.runs += 1
+
+
+# ----------------------------------------------------------------- push/pull
+def push(local: StoreBackend, remote: StoreBackend, branch: str, *,
+         remote_name: str = "origin", force: bool = False,
+         cache_entries: bool = True, runs: bool = True) -> SyncReport:
+    """Publish a branch: closure transfer, then a CAS-guarded ref update.
+
+    Refuses non-fast-forward updates (the remote head must be an ancestor
+    of the pushed head) unless ``force``.
+    """
+    branch_ref = _BRANCH_PREFIX + branch
+    try:
+        head = local.get_ref(branch_ref)
+    except RefNotFound:
+        raise SyncError(f"local branch {branch!r} does not exist") from None
+    try:
+        remote_head: Optional[str] = remote.get_ref(branch_ref)
+    except RefNotFound:
+        remote_head = None
+
+    report = SyncReport("push", branch, head)
+    closure = commit_closure(local, head)
+    if (remote_head is not None and remote_head != head
+            and remote_head not in closure and not force
+            and not _is_empty_root(remote, remote_head)):
+        raise SyncError(
+            f"push {branch!r}: remote head {remote_head[:12]} is not an "
+            "ancestor of the pushed head (non-fast-forward); pull first "
+            "or push with force=True")
+
+    xfer = _ClosureTransfer(local, remote, report)
+    xfer.transfer_commit(head)
+    if cache_entries:
+        _sync_cache(local, remote, xfer, closure, report)
+    if runs:
+        _sync_runs(local, remote, xfer, closure, branch, report)
+
+    if remote_head != head:
+        remote.cas_ref(branch_ref, remote_head, head)
+        report.ref_updated = True
+    local.set_ref(remote_tracking_ref(remote_name, branch), head)
+    return report
+
+
+def pull(local: StoreBackend, remote: StoreBackend, branch: str, *,
+         remote_name: str = "origin", force: bool = False,
+         cache_entries: bool = True, runs: bool = True) -> SyncReport:
+    """Fetch a branch's closure and fast-forward the local branch to it.
+
+    The remote-tracking ref (``remote/<name>/branch=<b>``) is updated as
+    soon as the closure has landed — it is the GC root that keeps fetched
+    history alive even when the local branch diverges or is deleted.
+    """
+    branch_ref = _BRANCH_PREFIX + branch
+    try:
+        remote_head = remote.get_ref(branch_ref)
+    except RefNotFound:
+        raise SyncError(
+            f"pull {branch!r}: remote has no such branch") from None
+
+    report = SyncReport("pull", branch, remote_head)
+    xfer = _ClosureTransfer(remote, local, report)
+    xfer.transfer_commit(remote_head)
+    closure = commit_closure(local, remote_head)  # everything is local now
+    local.set_ref(remote_tracking_ref(remote_name, branch), remote_head)
+
+    try:
+        local_head: Optional[str] = local.get_ref(branch_ref)
+    except RefNotFound:
+        local_head = None
+    if local_head != remote_head:
+        if (local_head is not None and local_head not in closure
+                and not force and not _is_empty_root(local, local_head)):
+            raise SyncError(
+                f"pull {branch!r}: local head {local_head[:12]} has "
+                "diverged from the remote (non-fast-forward); push first "
+                "or pull with force=True")
+        local.cas_ref(branch_ref, local_head, remote_head)
+        report.ref_updated = True
+
+    if cache_entries:
+        _sync_cache(remote, local, xfer, closure, report)
+    if runs:
+        _sync_runs(remote, local, xfer, closure, branch, report)
+    return report
+
+
+def clone(remote: StoreBackend, dest_root, *, branch: Optional[str] = None,
+          remote_name: str = "origin", cache_entries: bool = True,
+          runs: bool = True) -> Tuple[ObjectStore, List[SyncReport]]:
+    """Materialize a fresh local store from a remote: pull one branch, or
+    every remote branch when ``branch`` is None."""
+    local = ObjectStore(dest_root)
+    if branch is not None:
+        branches: Sequence[str] = [branch]
+    else:
+        names: List[str] = []
+        token: Optional[str] = None
+        while True:
+            page, token = remote.list_refs(_BRANCH_PREFIX, page_token=token)
+            names.extend(name[len(_BRANCH_PREFIX):] for name, _d in page)
+            if token is None:
+                break
+        if not names:
+            raise SyncError("clone: remote has no branches")
+        branches = sorted(names)
+    reports = [pull(local, remote, b, remote_name=remote_name,
+                    cache_entries=cache_entries, runs=runs)
+               for b in branches]
+    return local, reports

@@ -7,6 +7,15 @@
   repro query "SELECT COUNT(*) FROM t" --ref R tiny read-path query
   repro log <ref> / branches / runs            inspect the catalog
 
+Multi-host (git-remote semantics over the object store — see
+docs/remote_store.md):
+
+  repro remote add origin URL                  name a remote (http:// or path)
+  repro push --branch B [--remote origin]      publish closure + cache + runs
+  repro pull --branch B [--remote origin]      fetch + fast-forward
+  repro clone URL DEST [--branch B]            new lake from a remote
+  repro serve --root DIR --port P              loopback object-store server
+
 "CLI is all you need": no catalog service to provision, no client API to
 learn — the same ergonomics claim the paper demonstrates, over the tensor
 lake.  Example session in examples/quickstart.py.
@@ -18,10 +27,12 @@ import argparse
 import json
 import re
 import sys
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import Lake
+from repro.core import Lake, ObjectStore, SyncError, connect, serve_http
+from repro.core import sync as sync_mod
 from repro.data import build_data_pipeline
 
 
@@ -63,6 +74,42 @@ def _query(lake: Lake, sql: str, ref: str):
         print(f"... ({n} rows)")
 
 
+def _remotes_dir(lake: Lake) -> Path:
+    return Path(lake.store.root) / "remotes"
+
+
+def _resolve_remote(lake: Lake, spec: str):
+    """A remote spec is a configured name (``repro remote add``) or a
+    URL/path used directly.  A bare name that is neither configured nor an
+    existing directory is an error — silently creating an empty store named
+    after a typo'd remote would make a push look published when nothing
+    left the machine."""
+    if "://" in spec:
+        return connect(spec)
+    if "/" not in spec and "\\" not in spec:
+        cfg = _remotes_dir(lake) / spec
+        if cfg.exists():
+            return connect(cfg.read_text().strip())
+        if not Path(spec).is_dir():
+            raise SystemExit(
+                f"unknown remote {spec!r}: configure it with "
+                f"`repro remote add {spec} URL` or pass a URL/path")
+    return connect(spec)
+
+
+def _add_sync_args(p):
+    p.add_argument("--branch", required=True)
+    p.add_argument("--remote", default="origin",
+                   help="configured remote name, or a URL/path")
+    p.add_argument("--force", action="store_true",
+                   help="allow a non-fast-forward ref update")
+    p.add_argument("--no-cache-entries", action="store_true",
+                   help="skip run-cache entry transfer (see the trust "
+                        "model in docs/remote_store.md)")
+    p.add_argument("--no-runs", action="store_true",
+                   help="skip run-ledger manifest transfer")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(prog="repro")
     ap.add_argument("--lake", default=".lake")
@@ -101,7 +148,56 @@ def main(argv=None):
     sub.add_parser("branches")
     sub.add_parser("runs")
 
+    rm = sub.add_parser("remote", help="manage named remotes")
+    rm_sub = rm.add_subparsers(dest="remote_cmd", required=True)
+    rm_add = rm_sub.add_parser("add")
+    rm_add.add_argument("name")
+    rm_add.add_argument("url", help="http(s)://host:port or a store path")
+    rm_sub.add_parser("list")
+
+    _add_sync_args(sub.add_parser(
+        "push", help="publish a branch closure to a remote"))
+    _add_sync_args(sub.add_parser(
+        "pull", help="fetch a branch closure from a remote"))
+
+    cl = sub.add_parser("clone", help="materialize a lake from a remote")
+    cl.add_argument("url")
+    cl.add_argument("dest")
+    cl.add_argument("--branch", default=None,
+                    help="single branch (default: every remote branch)")
+
+    sv = sub.add_parser("serve", help="serve a store over loopback HTTP")
+    sv.add_argument("--root", default=None,
+                    help="store directory (default: the --lake store)")
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument("--port", type=int, default=8750)
+
     args = ap.parse_args(argv)
+
+    if args.cmd == "clone":  # no existing lake needed
+        remote = connect(args.url)
+        _local, reports = sync_mod.clone(remote, args.dest,
+                                         branch=args.branch)
+        dest_remotes = Path(args.dest) / "remotes"
+        dest_remotes.mkdir(parents=True, exist_ok=True)
+        (dest_remotes / "origin").write_text(args.url)
+        for rep in reports:
+            print(rep.summary())
+        return
+    if args.cmd == "serve":
+        import time as _time
+
+        root = args.root or args.lake
+        httpd, url = serve_http(ObjectStore(root), host=args.host,
+                                port=args.port)
+        print(f"serving {root} at {url}", flush=True)
+        try:  # the serve_http daemon thread accepts requests; just block
+            while True:
+                _time.sleep(3600)
+        except KeyboardInterrupt:
+            httpd.shutdown()
+        return
+
     lake = Lake(args.lake)
 
     if args.cmd == "branch":
@@ -146,6 +242,32 @@ def main(argv=None):
     elif args.cmd == "runs":
         for rid in lake.ledger.runs():
             print(rid)
+    elif args.cmd == "remote":
+        if args.remote_cmd == "add":
+            if "/" in args.name or "\\" in args.name or \
+                    args.name.startswith("."):
+                raise SystemExit(f"bad remote name {args.name!r}")
+            _remotes_dir(lake).mkdir(parents=True, exist_ok=True)
+            (_remotes_dir(lake) / args.name).write_text(args.url)
+            print(f"{args.name} -> {args.url}")
+        else:
+            d = _remotes_dir(lake)
+            if d.is_dir():
+                for cfg in sorted(d.iterdir()):
+                    print(f"{cfg.name}\t{cfg.read_text().strip()}")
+    elif args.cmd in ("push", "pull"):
+        remote = _resolve_remote(lake, args.remote)
+        fn = sync_mod.push if args.cmd == "push" else sync_mod.pull
+        try:
+            rep = fn(lake.store, remote, args.branch,
+                     remote_name=args.remote if "/" not in args.remote
+                     else "origin",
+                     force=args.force,
+                     cache_entries=not args.no_cache_entries,
+                     runs=not args.no_runs)
+        except SyncError as e:
+            raise SystemExit(str(e)) from None
+        print(rep.summary())
 
 
 if __name__ == "__main__":

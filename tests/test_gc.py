@@ -77,3 +77,39 @@ def test_gc_preserves_tags(lake):
     lake.catalog.delete_branch("u.rel")
     collect(lake.store)
     assert lake.read_table("v1.0", "model")["v"][0] == 5.0
+
+
+def test_gc_keeps_remote_tracking_refs_alive(tmp_path):
+    """Regression: objects reachable ONLY through a remote-tracking ref
+    (``remote/<name>/branch=<b>``) must survive gc — deleting the local
+    branch after a pull used to make the pulled history sweepable, breaking
+    any subsequent replay of that branch."""
+    from repro.core import (Lake, LoopbackTransport, ObjectStore,
+                            RemoteServer, RemoteStore, pull, push)
+
+    lake_a = Lake(tmp_path / "a", protect_main=False)
+    _write(lake_a, "main", "t", 3.0, n=4096)
+    lake_a.catalog.create_branch("u.exp", "main", author="u")
+    _write(lake_a, "u.exp", "scratch", 7.0, n=4096)
+    remote = RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "r"))))
+    push(lake_a.store, remote, "u.exp")
+
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    # fetch without cache entries so ONLY refs keep the history alive
+    pull(lake_b.store, remote, "u.exp", cache_entries=False)
+    lake_b.catalog.delete_branch("u.exp")  # tracking ref is now the sole root
+
+    rep = collect(lake_b.store)
+    # the pulled closure stayed: recreate the branch from the tracking ref
+    # and replay it green
+    head = lake_b.catalog.resolve("origin/u.exp")
+    lake_b.catalog.create_branch("u.exp2", head, author="u")
+    assert lake_b.read_table("u.exp2", "scratch")["v"][0] == 7.0
+    assert lake_b.read_table("u.exp2", "t")["v"][0] == 3.0
+
+    # control: dropping the tracking ref makes that history collectable
+    lake_b.catalog.delete_branch("u.exp2")
+    lake_b.store.delete_ref("remote/origin/branch=u.exp")
+    rep2 = collect(lake_b.store)
+    assert rep2.swept > 0

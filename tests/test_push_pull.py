@@ -1,0 +1,327 @@
+"""Cross-host replay end-to-end: host A pushes a branch, host B pulls into a
+fresh store and replays — bit-identical output digests, 100% warm run-cache
+hits.  This is the paper's reproducibility claim stretched across machines:
+the (code version, data commit) pin travels with the branch, and so does the
+memoized work.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (Lake, Model, ObjectStore, Pipeline, RemoteServer,
+                        RemoteStore, LoopbackTransport, SyncError, clone,
+                        col, lit, model, pull, push, serve_http, sql_model)
+from repro.core.errors import RefNotFound
+from repro.launch import repro_cli
+
+
+# --------------------------------------------------------------- test fixture
+def paper_demo_pipeline(feature_scale: float = 2.0) -> Pipeline:
+    """The Listings 1-2 shape: sql filter -> features -> two consumers."""
+    final_table = sql_model(
+        "final_table", select=["c1", "c2", "c3"], frm="source_table",
+        where=col("transaction_ts") >= lit(50))
+
+    @model()
+    def features(data=Model("final_table")):
+        return {"f0": np.sin(data["c1"]) * feature_scale,
+                "f1": np.sqrt(np.abs(data["c2"]).astype(np.float64)),
+                "c3": data["c3"]}
+
+    @model()
+    def training_data(data=Model("features")):
+        return {"x": np.tanh(data["f0"] + data["f1"]),
+                "y": (data["c3"] > 3).astype(np.float32)}
+
+    @model()
+    def data_stats(data=Model("features")):
+        return {"mean_f0": np.array([data["f0"].mean()]),
+                "n": np.array([data["f0"].shape[0]], np.int64)}
+
+    return Pipeline([final_table, features, training_data, data_stats])
+
+
+def make_lake(tmp_path, name, *, t0=1_700_000_000.0, remote=None) -> Lake:
+    t = [t0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return Lake(tmp_path / name, clock=clock, remote=remote)
+
+
+@pytest.fixture()
+def host_a(tmp_path, source_cols):
+    """Host A: seeded lake with a branch the demo pipeline ran on (cold)."""
+    lake = make_lake(tmp_path, "host_a")
+    snap = lake.io.write_snapshot(source_cols)
+    lake.catalog.commit("main", {"source_table": snap}, "seed",
+                        _wap_token=True)
+    lake.catalog.create_branch("alice.exp", "main", author="alice")
+    result = lake.run(paper_demo_pipeline(), branch="alice.exp",
+                      author="alice")
+    assert result.cache_misses == 4 and result.cache_hits == 0
+    return lake, result
+
+
+@pytest.fixture()
+def remote(tmp_path):
+    return RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "remote"))))
+
+
+# ------------------------------------------------------------ the money test
+def test_cross_host_replay_bit_identical_and_fully_warm(tmp_path, host_a,
+                                                        remote):
+    """Push from A, pull into an empty B, replay with --jobs 4: identical
+    digests, 100% run-cache hits (acceptance floor is >= 95%)."""
+    lake_a, run_a = host_a
+    rep = push(lake_a.store, remote, "alice.exp")
+    assert rep.ref_updated and rep.objects_sent > 0
+    assert rep.cache_entries == 4 and rep.runs == 1
+
+    # a different host: fresh store directory, different wall clock
+    lake_b = make_lake(tmp_path, "host_b", t0=1_800_000_000.0)
+    prep = pull(lake_b.store, remote, "alice.exp")
+    assert prep.ref_updated
+    assert lake_b.catalog.head("alice.exp") == lake_a.catalog.head(
+        "alice.exp")
+
+    run_b = lake_b.run(paper_demo_pipeline(), branch="alice.exp",
+                       author="alice", jobs=4)
+    assert run_b.outputs == run_a.outputs  # bit-identical digests
+    total = run_b.cache_hits + run_b.cache_misses
+    assert run_b.cache_hits / total == 1.0  # 100% warm
+
+    # the table bytes themselves round-tripped
+    for table in ("training_data", "data_stats"):
+        a = lake_a.read_table("alice.exp", table)
+        b = lake_b.read_table("alice.exp", table)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_cross_host_replay_by_run_id(tmp_path, host_a, remote):
+    """``repro run --id`` on host B replays host A's run id bit-exactly —
+    the ledger manifest travelled with the branch."""
+    lake_a, run_a = host_a
+    push(lake_a.store, remote, "alice.exp")
+    lake_b = make_lake(tmp_path, "host_b")
+    pull(lake_b.store, remote, "alice.exp")
+    assert run_a.run_id in lake_b.ledger.runs()
+    report = lake_b.replay(run_a.run_id, paper_demo_pipeline(),
+                           branch="alice.debug", author="alice", jobs=4)
+    assert report.bit_exact
+
+
+def test_push_is_incremental_and_dedup_aware(host_a, remote):
+    lake_a, _ = host_a
+    first = push(lake_a.store, remote, "alice.exp")
+    second = push(lake_a.store, remote, "alice.exp")
+    assert second.objects_sent == 0  # everything deduped via batched exists
+    assert second.objects_skipped > 0
+    assert second.ref_updated is False
+    assert first.objects_sent > 0
+
+    # one more commit -> only the delta moves
+    lake_a.write_table("alice.exp", "extra",
+                       {"v": np.arange(8, dtype=np.float32)}, author="alice")
+    third = push(lake_a.store, remote, "alice.exp")
+    assert third.ref_updated
+    assert 0 < third.objects_sent <= 3  # tensorfile + snapshot + commit
+
+
+def test_push_refuses_non_fast_forward(tmp_path, host_a, remote):
+    lake_a, _ = host_a
+    push(lake_a.store, remote, "alice.exp")
+    # host B pulls, commits, pushes — then A (now stale) tries to push
+    lake_b = make_lake(tmp_path, "host_b")
+    pull(lake_b.store, remote, "alice.exp")
+    lake_b.write_table("alice.exp", "b_table",
+                       {"v": np.ones(4, np.float32)}, author="alice")
+    push(lake_b.store, remote, "alice.exp")
+
+    lake_a.write_table("alice.exp", "a_table",
+                       {"v": np.zeros(4, np.float32)}, author="alice")
+    with pytest.raises(SyncError):
+        push(lake_a.store, remote, "alice.exp")
+    push(lake_a.store, remote, "alice.exp", force=True)  # explicit override
+
+
+def test_pull_refuses_diverged_local(tmp_path, host_a, remote):
+    lake_a, _ = host_a
+    push(lake_a.store, remote, "alice.exp")
+    lake_b = make_lake(tmp_path, "host_b")
+    pull(lake_b.store, remote, "alice.exp")
+    # both sides commit -> B's pull must refuse
+    lake_b.write_table("alice.exp", "t_b", {"v": np.ones(4, np.float32)},
+                       author="alice")
+    lake_a.write_table("alice.exp", "t_a", {"v": np.zeros(4, np.float32)},
+                       author="alice")
+    push(lake_a.store, remote, "alice.exp", force=True)
+    with pytest.raises(SyncError):
+        pull(lake_b.store, remote, "alice.exp")
+    pull(lake_b.store, remote, "alice.exp", force=True)
+    assert lake_b.catalog.head("alice.exp") == lake_a.catalog.head(
+        "alice.exp")
+
+
+def test_pull_main_into_fresh_lake(tmp_path, host_a, remote):
+    """Every new catalog seeds ``main`` with its own empty root commit; a
+    pull must recognize it as replaceable, not a divergence."""
+    lake_a, _ = host_a
+    push(lake_a.store, remote, "main")
+    lake_b = make_lake(tmp_path, "host_b")  # has its OWN root commit on main
+    rep = pull(lake_b.store, remote, "main")
+    assert rep.ref_updated
+    assert lake_b.catalog.head("main") == lake_a.catalog.head("main")
+    cols = lake_b.read_table("main", "source_table")
+    assert cols["c1"].shape[0] == 257
+
+
+def test_clone_all_branches(tmp_path, host_a, remote):
+    lake_a, run_a = host_a
+    push(lake_a.store, remote, "main")
+    push(lake_a.store, remote, "alice.exp")
+    _store, reports = clone(remote, tmp_path / "cloned")
+    assert {r.branch for r in reports} == {"main", "alice.exp"}
+    lake_c = Lake(tmp_path / "cloned")
+    run_c = lake_c.run(paper_demo_pipeline(), branch="alice.exp",
+                       author="alice", jobs=4)
+    assert run_c.outputs == run_a.outputs
+    assert run_c.cache_misses == 0
+
+
+def test_remote_tracking_ref_and_resolution(tmp_path, host_a, remote):
+    lake_a, _ = host_a
+    push(lake_a.store, remote, "alice.exp")
+    head = lake_a.catalog.head("alice.exp")
+    assert lake_a.store.get_ref("remote/origin/branch=alice.exp") == head
+    assert lake_a.catalog.resolve("origin/alice.exp") == head
+
+    lake_b = make_lake(tmp_path, "host_b")
+    pull(lake_b.store, remote, "alice.exp")
+    assert lake_b.catalog.resolve("origin/alice.exp") == head
+
+
+def test_tiered_store_shares_cache_without_pull(tmp_path, host_a, remote):
+    """Host B mounts the remote as a read-through tier: branch heads and
+    warm cache entries are visible with ZERO explicit sync commands."""
+    lake_a, run_a = host_a
+    push(lake_a.store, remote, "alice.exp")
+    lake_b = make_lake(tmp_path, "host_b", remote=remote)
+    run_b = lake_b.run(paper_demo_pipeline(), branch="alice.exp",
+                       author="alice", jobs=4)
+    assert run_b.outputs == run_a.outputs
+    assert run_b.cache_misses == 0
+    # B's writes stayed local: the remote branch head is unmoved
+    assert remote.get_ref("branch=alice.exp") == lake_a.catalog.head(
+        "alice.exp")
+
+
+def test_push_pull_over_http(tmp_path, host_a):
+    """The same e2e through real sockets (loopback HTTP server)."""
+    from repro.core import connect
+
+    lake_a, run_a = host_a
+    httpd, url = serve_http(ObjectStore(tmp_path / "http_remote"))
+    try:
+        remote = connect(url)
+        push(lake_a.store, remote, "alice.exp")
+        lake_b = make_lake(tmp_path, "host_b")
+        pull(lake_b.store, remote, "alice.exp")
+        run_b = lake_b.run(paper_demo_pipeline(), branch="alice.exp",
+                           author="alice", jobs=4)
+        assert run_b.outputs == run_a.outputs
+        assert run_b.cache_misses == 0
+    finally:
+        httpd.shutdown()
+
+
+def test_edited_node_after_pull_reruns_only_downstream(tmp_path, host_a,
+                                                      remote):
+    """Cache semantics survive the trip: editing one node on host B re-runs
+    only its downstream cone, everything upstream still hits."""
+    lake_a, _ = host_a
+    push(lake_a.store, remote, "alice.exp")
+    lake_b = make_lake(tmp_path, "host_b")
+    pull(lake_b.store, remote, "alice.exp")
+    edited = paper_demo_pipeline(feature_scale=3.0)
+    run_b = lake_b.run(edited, branch="alice.exp", author="alice")
+    assert run_b.cache_hits == 1   # final_table (upstream of the edit)
+    assert run_b.cache_misses == 3  # features + both consumers
+
+
+def test_pull_without_cache_entries_is_cold(tmp_path, host_a, remote):
+    """--no-cache-entries pull: history arrives, memoized work does not —
+    the knob the trust model in docs/remote_store.md prescribes for
+    untrusted remotes."""
+    lake_a, run_a = host_a
+    push(lake_a.store, remote, "alice.exp")
+    lake_b = make_lake(tmp_path, "host_b")
+    rep = pull(lake_b.store, remote, "alice.exp", cache_entries=False)
+    assert rep.cache_entries == 0
+    run_b = lake_b.run(paper_demo_pipeline(), branch="alice.exp",
+                       author="alice")
+    assert run_b.cache_hits == 0 and run_b.cache_misses == 4
+    assert run_b.outputs == run_a.outputs  # recomputed, still bit-identical
+
+
+# -------------------------------------------------------------------- the CLI
+def test_cli_push_pull_clone_roundtrip(tmp_path, capsys):
+    """The paper's 'a few CLI commands' claim, cross-host: run, remote add,
+    push, clone, warm replay by run id."""
+    lake_a_dir = str(tmp_path / "cli_a")
+    remote_dir = str(tmp_path / "cli_remote")
+    lake_b_dir = str(tmp_path / "cli_b")
+
+    lake = Lake(lake_a_dir, protect_main=False)
+    from repro.data.pipeline import seed_corpus
+
+    seed_corpus(lake, "main", n_docs=30, seed=0, vocab_size=256, mean_len=48)
+    lake.catalog.create_branch("u.exp", "main", author="u")
+
+    repro_cli.main(["--lake", lake_a_dir, "run", "--branch", "u.exp",
+                    "--seq-len", "64", "--author", "u"])
+    run_id = json.loads(capsys.readouterr().out.strip())["run_id"]
+
+    repro_cli.main(["--lake", lake_a_dir, "remote", "add", "origin",
+                    remote_dir])
+    repro_cli.main(["--lake", lake_a_dir, "push", "--branch", "u.exp"])
+    out = capsys.readouterr().out
+    assert "push u.exp" in out and "ref_updated=True" in out
+
+    repro_cli.main(["clone", remote_dir, lake_b_dir, "--branch", "u.exp"])
+    capsys.readouterr()
+    repro_cli.main(["--lake", lake_b_dir, "run", "--id", run_id, "--branch",
+                    "u.dbg", "--seq-len", "64", "--author", "u",
+                    "--jobs", "4"])
+    replay = json.loads(capsys.readouterr().out.strip())
+    assert replay["bit_exact"] is True
+
+    # clone recorded its origin -> pull works with defaults
+    repro_cli.main(["--lake", lake_b_dir, "pull", "--branch", "u.exp"])
+    assert "pull u.exp" in capsys.readouterr().out
+
+
+def test_cli_push_unknown_branch_exits(tmp_path):
+    lake_dir = str(tmp_path / "lake")
+    Lake(lake_dir)
+    with pytest.raises(SystemExit):
+        repro_cli.main(["--lake", lake_dir, "push", "--branch", "ghost",
+                        "--remote", str(tmp_path / "r")])
+
+
+def test_cli_unconfigured_remote_name_errors(tmp_path, monkeypatch):
+    """A bare remote name that was never `remote add`-ed must fail loudly —
+    not silently create an empty store directory and 'push' into it."""
+    monkeypatch.chdir(tmp_path)
+    lake_dir = str(tmp_path / "lake")
+    Lake(lake_dir)
+    with pytest.raises(SystemExit, match="unknown remote"):
+        repro_cli.main(["--lake", lake_dir, "push", "--branch", "main",
+                        "--remote", "orign"])
+    assert not (tmp_path / "orign").exists()
