@@ -7,7 +7,8 @@ Layering (Fig. 2 of the paper):
 plus the run ledger (immutable run_ids, replay) and write-audit-publish.
 """
 
-from .catalog import Catalog, Commit, remote_tracking_ref
+from .catalog import (Catalog, Commit, remote_tracking_ref,
+                      remote_tracking_tag_ref)
 from .errors import (CodeDrift, CycleError, ExpectationFailed, MergeConflict,
                      ObjectNotFound, PermissionDenied, RefConflict,
                      RefNotFound, RemoteError, ReproError, RunNotFound,
@@ -22,7 +23,8 @@ from .remote import (HTTPTransport, LoopbackTransport, RemoteServer,
                      RemoteStore, TieredStore, connect, serve_http)
 from .runcache import RunCache, node_key
 from .store import ObjectStore, StoreBackend, sha256_hex
-from .sync import SyncReport, clone, commit_closure, pull, push
+from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
+                   pull_refs, push, push_refs)
 from .table import ManifestEntry, Snapshot, TableIO
 from .tensorfile import ColumnSpec, Schema
 from .wap import (AuditReport, Expectation, audit, column_range, expectation,
@@ -84,7 +86,9 @@ __all__ = [
     "Lake", "Catalog", "Commit", "ObjectStore", "StoreBackend", "TableIO",
     "RemoteStore", "RemoteServer", "TieredStore", "LoopbackTransport",
     "HTTPTransport", "connect", "serve_http", "push", "pull", "clone",
-    "SyncReport", "commit_closure", "remote_tracking_ref", "Snapshot",
+    "push_refs", "pull_refs", "SyncReport", "MultiSyncReport",
+    "commit_closure", "remote_tracking_ref", "remote_tracking_tag_ref",
+    "Snapshot",
     "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
     "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",

@@ -31,16 +31,21 @@ from .store import ObjectStore
 
 _BRANCH_PREFIX = "branch="
 _TAG_PREFIX = "tag="
-#: namespace for remote-tracking refs: ``remote/<name>/branch=<b>`` records
-#: where ``<b>`` pointed on remote ``<name>`` at the last push/pull.  These
-#: are GC roots (see ``gc.collect``) — objects reachable only through a
-#: remote-tracking ref must survive a local sweep or the next replay of a
-#: pulled branch would break.
+#: namespace for remote-tracking refs: ``remote/<name>/branch=<b>`` (and
+#: ``remote/<name>/tag=<t>`` for synced tags) records where the ref pointed
+#: on remote ``<name>`` at the last push/pull.  These are GC roots (see
+#: ``gc.collect``) — objects reachable only through a remote-tracking ref
+#: must survive a local sweep or the next replay of a pulled branch/tag
+#: would break.
 REMOTE_REF_PREFIX = "remote/"
 
 
 def remote_tracking_ref(remote_name: str, branch: str) -> str:
     return f"{REMOTE_REF_PREFIX}{remote_name}/{_BRANCH_PREFIX}{branch}"
+
+
+def remote_tracking_tag_ref(remote_name: str, tag: str) -> str:
+    return f"{REMOTE_REF_PREFIX}{remote_name}/{_TAG_PREFIX}{tag}"
 
 
 def _pack(obj) -> bytes:
@@ -127,6 +132,11 @@ class Catalog:
                     raise RefNotFound(f"{ref}: ran out of history")
                 digest = parents[0]
             return digest
+        if ref.startswith((_BRANCH_PREFIX, _TAG_PREFIX)):
+            # fully-qualified spelling (``tag=v1.0`` / ``branch=main``) —
+            # the exact names sync reports and ref listings print, so they
+            # round-trip straight back into resolve
+            return self.store.get_ref(ref)
         try:
             return self.head(ref)
         except RefNotFound:
@@ -136,11 +146,13 @@ class Catalog:
         except RefNotFound:
             pass
         if "/" in ref:  # remote-tracking: ``origin/main`` (git spelling)
-            rname, _, branch = ref.partition("/")
-            try:
-                return self.store.get_ref(remote_tracking_ref(rname, branch))
-            except RefNotFound:
-                pass
+            rname, _, leaf = ref.partition("/")
+            for tracking in (remote_tracking_ref(rname, leaf),
+                             remote_tracking_tag_ref(rname, leaf)):
+                try:
+                    return self.store.get_ref(tracking)
+                except RefNotFound:
+                    pass
         if self.store.has(ref):
             return ref
         # commit digest prefix
@@ -195,6 +207,9 @@ class Catalog:
         digest = self.resolve(ref)
         self.store.set_ref(_TAG_PREFIX + name, digest)
         return digest
+
+    def delete_tag(self, name: str) -> None:
+        self.store.delete_ref(_TAG_PREFIX + name)
 
     def commit(
         self,

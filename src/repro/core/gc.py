@@ -22,7 +22,8 @@ from typing import Set
 
 import msgpack
 
-from .catalog import _BRANCH_PREFIX, _TAG_PREFIX, Catalog, Commit
+from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, REMOTE_REF_PREFIX,
+                      Catalog, Commit)
 from .ledger import _RUNS_HEAD
 from .runcache import CACHE_REF_PREFIX
 from .store import ObjectStore
@@ -37,6 +38,26 @@ class GCReport:
     live: int
     swept: int
     bytes_freed: int
+
+
+def _is_commit_root(ref: str) -> bool:
+    """Refs whose target commit roots a live closure: local branches/tags
+    (``branch=main``, ``tag=v1.0``) and remote-tracking refs left by
+    push/pull (``remote/<name>/branch=<b>``, ``remote/<name>/tag=<t>``).
+
+    Matched on the prefix *after* the remote namespace, never on the ref
+    path's basename: ref names may themselves contain ``/`` (a tag like
+    ``release/v1`` shards into subdirectories), and basename matching
+    silently dropped those from the root set — a tag synced from a remote
+    stopped protecting its closure the moment the local branch pointing at
+    the same history was deleted (regression test in tests/test_gc.py)."""
+    if ref.startswith((_BRANCH_PREFIX, _TAG_PREFIX)):
+        return True
+    if ref.startswith(REMOTE_REF_PREFIX):
+        rest = ref[len(REMOTE_REF_PREFIX):].split("/", 1)
+        return len(rest) == 2 and rest[1].startswith((_BRANCH_PREFIX,
+                                                      _TAG_PREFIX))
+    return False
 
 
 def _mark_commit(store: ObjectStore, digest: str, live: Set[str]):
@@ -84,12 +105,11 @@ def collect(store: ObjectStore, *, dry_run: bool = False,
     for ref in store.iter_refs():
         head = store.get_ref(ref)
         # Commit roots: local branches/tags AND remote-tracking refs
-        # (``remote/<name>/branch=<b>``).  History reachable only through a
-        # remote-tracking ref — e.g. a pulled branch whose local ref was
-        # deleted — must survive, or replaying it after gc would break.
-        basename = ref.rsplit("/", 1)[-1]
-        if basename.startswith((_BRANCH_PREFIX, _TAG_PREFIX)) and \
-                not ref.startswith(CACHE_REF_PREFIX):
+        # (``remote/<name>/branch=<b>``, ``remote/<name>/tag=<t>``).
+        # History reachable only through a remote-tracking ref — e.g. a
+        # pulled branch or synced tag whose local ref was deleted — must
+        # survive, or replaying it after gc would break.
+        if _is_commit_root(ref):
             _mark_commit(store, head, live)
         elif ref.startswith(CACHE_REF_PREFIX):  # cache entry -> snapshot
             if drop_cache:  # dry_run: pretend the cache is gone

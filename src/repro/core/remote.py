@@ -16,9 +16,12 @@ Three pieces:
         put_object        PutObject (idempotent: content addressed)
         get_object        GetObject (digest-verified by the client)
         head_objects      batched HeadObject
+        get_objects       batched GetObject (one frame per leaf chunk)
+        put_objects       batched PutObject (one frame per leaf chunk)
         list_objects      ListObjectsV2 w/ ContinuationToken
         get_ref/set_ref   tiny pointer objects
         cas_ref           conditional put (DynamoDB / If-Match)
+        cas_refs          transactional multi-item conditional write
         list_refs         paged pointer listing (name, digest) pairs
         ================  ===========================================
 
@@ -44,7 +47,8 @@ Three pieces:
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Set, Tuple)
 
 import msgpack
 
@@ -116,6 +120,20 @@ class RemoteServer:
     def _op_head_objects(self, req):
         return {"present": sorted(self.store.has_many(req["digests"]))}
 
+    def _op_get_objects(self, req):
+        # batched GetObject: one frame carries a whole leaf chunk, so a
+        # closure transfer pays one round-trip per chunk, not per blob
+        return {"objects": [[d, self.store.get(d)] for d in req["digests"]]}
+
+    def _op_put_objects(self, req):
+        digests = []
+        for digest, data in req["objects"]:
+            if sha256_hex(data) != digest:
+                return {"error": "bad_request",
+                        "message": f"content does not hash to {digest}"}
+            digests.append(self.store.put(data))
+        return {"digests": digests}
+
     def _op_list_objects(self, req):
         page, nxt = self.store.list_objects(
             page_token=req.get("token") or None,
@@ -138,6 +156,15 @@ class RemoteServer:
         self.store.cas_ref(req["name"],
                            None if expected == _ABSENT else expected,
                            req["new"])
+        return {}
+
+    def _op_cas_refs(self, req):
+        # server-side multi-ref CAS: the whole batch commits or none of it
+        # does, under the backing store's ref guard (multi-ref push atomicity
+        # holds even with two servers fronting one tree)
+        self.store.cas_refs([
+            (name, None if expected == _ABSENT else expected, new)
+            for name, expected, new in req["updates"]])
         return {}
 
     def _op_delete_ref(self, req):
@@ -269,9 +296,10 @@ def serve_http(store: StoreBackend, *, host: str = "127.0.0.1",
 # ----------------------------------------------------------------- the client
 _RETRYABLE_OPS = frozenset({
     # all idempotent: re-sending after an ambiguous failure cannot corrupt
-    # state.  cas_ref is deliberately NOT here — a retry after a success
-    # that was lost in transit would double-apply the swap.
+    # state.  cas_ref / cas_refs are deliberately NOT here — a retry after
+    # a success that was lost in transit would double-apply the swap.
     "put_object", "get_object", "head_objects", "list_objects",
+    "get_objects", "put_objects",
     "size_object", "get_ref", "set_ref", "delete_ref", "list_refs",
 })
 
@@ -340,6 +368,35 @@ class RemoteStore:
             return set()
         return set(self._call("head_objects", digests=digests)["present"])
 
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        digests = list(digests)
+        if not digests:
+            return {}
+        reply = self._call("get_objects", digests=digests)
+        out: Dict[str, bytes] = {}
+        for digest, data in reply["objects"]:
+            if sha256_hex(data) != digest:  # never trust the wire
+                raise ObjectNotFound(
+                    f"digest mismatch for {digest} from remote")
+            out[digest] = data
+        missing = [d for d in digests if d not in out]
+        if missing:
+            raise ObjectNotFound(
+                f"remote returned {len(out)}/{len(digests)} objects "
+                f"(first missing: {missing[0]})")
+        return out
+
+    def put_many(self, blobs: Sequence[bytes]) -> List[str]:
+        blobs = list(blobs)
+        if not blobs:
+            return []
+        items = [[sha256_hex(b), b] for b in blobs]
+        digests = list(self._call("put_objects", objects=items)["digests"])
+        if digests != [d for d, _b in items]:
+            raise RemoteError("put_objects: server acknowledged different "
+                              "digests than were sent")
+        return digests
+
     def size(self, digest: str) -> int:
         return self._call("size_object", digest=digest)["size"]
 
@@ -372,6 +429,12 @@ class RemoteStore:
         self._call("cas_ref", name=name,
                    expected=_ABSENT if expected is None else expected,
                    new=new)
+
+    def cas_refs(self, updates: Sequence[Tuple[str, Optional[str], str]]
+                 ) -> None:
+        self._call("cas_refs", updates=[
+            [name, _ABSENT if expected is None else expected, new]
+            for name, expected, new in updates])
 
     def delete_ref(self, name: str) -> None:
         self._call("delete_ref", name=name)
@@ -438,6 +501,24 @@ class TieredStore:
             present |= self.remote.has_many(rest)
         return present
 
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        rest: List[str] = []
+        for d in digests:
+            try:
+                out[d] = self.local.get(d)
+            except ObjectNotFound:
+                rest.append(d)
+        if rest:
+            fetched = self.remote.get_many(rest)
+            for d, data in fetched.items():
+                self.local.put(data)  # write-back, same as single get
+                out[d] = data
+        return out
+
+    def put_many(self, blobs: Sequence[bytes]) -> List[str]:
+        return self.local.put_many(blobs)
+
     def size(self, digest: str) -> int:
         try:
             return self.local.size(digest)
@@ -479,6 +560,24 @@ class TieredStore:
                 raise RefConflict(
                     f"ref {name}: expected {expected!r}, found {current!r}")
             self.local.set_ref(name, new)
+
+    def cas_refs(self, updates: Sequence[Tuple[str, Optional[str], str]]
+                 ) -> None:
+        # validate every expectation against the *tiered* view, apply every
+        # write locally — all inside the local store's cross-process guard,
+        # so the batch is all-or-nothing exactly like ObjectStore.cas_refs
+        with self.local.ref_guard():
+            for name, expected, _new in updates:
+                try:
+                    current: Optional[str] = self.get_ref(name)
+                except RefNotFound:
+                    current = None
+                if current != expected:
+                    raise RefConflict(
+                        f"ref {name}: expected {expected!r}, found "
+                        f"{current!r} (no ref in this batch was updated)")
+            for name, _expected, new in updates:
+                self.local.set_ref(name, new)
 
     def delete_ref(self, name: str) -> None:
         self.local.delete_ref(name)

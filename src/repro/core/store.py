@@ -30,8 +30,8 @@ import threading
 import zlib
 from contextlib import contextmanager
 from pathlib import Path
-from typing import (Iterable, Iterator, List, Optional, Protocol, Set, Tuple,
-                    runtime_checkable)
+from typing import (Dict, Iterable, Iterator, List, Optional, Protocol,
+                    Sequence, Set, Tuple, runtime_checkable)
 
 try:  # optional: preferred codec when available
     import zstandard as zstd
@@ -72,10 +72,12 @@ class StoreBackend(Protocol):
       idempotent, ``get`` verifies the digest, partially written objects are
       never observable;
     * **refs** are tiny mutable pointers with atomic ``cas_ref``
-      (linearizable per ref name);
+      (linearizable per ref name) and all-or-nothing ``cas_refs`` across
+      several names (the multi-ref push contract);
     * **listing** is paged and sorted so closure transfers can resume;
-    * **exists** checks batch (``has_many``) so transfers can dedup without
-      a round-trip per object.
+    * **exists** checks batch (``has_many``) and blob reads/writes batch
+      (``get_many``/``put_many``) so transfers can dedup and pipeline
+      without a round-trip per object.
     """
 
     # objects -----------------------------------------------------------
@@ -83,6 +85,8 @@ class StoreBackend(Protocol):
     def get(self, digest: str) -> bytes: ...
     def has(self, digest: str) -> bool: ...
     def has_many(self, digests: Iterable[str]) -> Set[str]: ...
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]: ...
+    def put_many(self, blobs: Sequence[bytes]) -> List[str]: ...
     def size(self, digest: str) -> int: ...
     def delete_object(self, digest: str) -> bool: ...
     def iter_objects(self) -> Iterator[str]: ...
@@ -95,6 +99,8 @@ class StoreBackend(Protocol):
     def get_ref(self, name: str) -> str: ...
     def cas_ref(self, name: str, expected: Optional[str],
                 new: str) -> None: ...
+    def cas_refs(self, updates: Sequence[Tuple[str, Optional[str], str]]
+                 ) -> None: ...
     def delete_ref(self, name: str) -> None: ...
     def iter_refs(self, prefix: str = "") -> Iterator[str]: ...
     def list_refs(self, prefix: str = "", *,
@@ -200,6 +206,16 @@ class ObjectStore:
         one call per transfer chunk instead of one round-trip per object)."""
         return {d for d in digests if self.has(d)}
 
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        """Batched read.  Local disk gains nothing from batching, but the
+        remote backends do — this keeps the wire contract uniform so the
+        transfer engine can pipeline leaf blobs in chunks everywhere."""
+        return {d: self.get(d) for d in digests}
+
+    def put_many(self, blobs: Sequence[bytes]) -> List[str]:
+        """Batched write, digests returned in input order."""
+        return [self.put(b) for b in blobs]
+
     def delete_object(self, digest: str) -> bool:
         """Remove one object (GC sweep).  Idempotent: missing → False."""
         try:
@@ -292,6 +308,28 @@ class ObjectStore:
                 raise RefConflict(
                     f"ref {name}: expected {expected!r}, found {current!r}")
             self.set_ref(name, new)
+
+    def cas_refs(self, updates: Sequence[Tuple[str, Optional[str], str]]
+                 ) -> None:
+        """All-or-nothing compare-and-set across several refs.
+
+        Every expectation is validated inside ONE ref-guard critical section
+        before any ref moves, so a single stale expectation leaves every ref
+        untouched — the atomicity contract a multi-ref push rides on (one
+        conflicting branch rolls back the entire ref update).  Same
+        cross-thread/-instance/-process linearizability as ``cas_ref``."""
+        with self.ref_guard():
+            for name, expected, _new in updates:
+                try:
+                    current: Optional[str] = self.get_ref(name)
+                except RefNotFound:
+                    current = None
+                if current != expected:
+                    raise RefConflict(
+                        f"ref {name}: expected {expected!r}, found "
+                        f"{current!r} (no ref in this batch was updated)")
+            for name, _expected, new in updates:
+                self.set_ref(name, new)
 
     def delete_ref(self, name: str) -> None:
         try:

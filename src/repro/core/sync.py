@@ -1,17 +1,17 @@
 """Git-remote semantics for the catalog: ``push`` / ``pull`` / ``clone``.
 
-What moves when a branch syncs (the paper's "full pipeline reproducibility
-with a few CLI commands", made multi-host):
+What moves when refs sync (the paper's "full pipeline reproducibility with a
+few CLI commands", made multi-host):
 
-1. the branch's **commit closure** — every ancestor commit, every table
-   snapshot those commits reference, every tensorfile those snapshots
-   manifest;
-2. the branch's **run-cache closure** — cache entries whose input snapshot
-   digests are satisfied by the commit closure (computed to a fixpoint so a
-   chain of hits through unmaterialized intermediates transfers whole), plus
-   the output snapshots those entries point at;
-3. the branch's **run manifests** — ledger entries recorded on the branch
-   whose data/result commits are inside the closure, grafted onto the
+1. the **commit closure** of every pushed/pulled branch and tag — ancestor
+   commits, the table snapshots those commits reference, the tensorfiles
+   those snapshots manifest;
+2. the **run-cache closure** — cache entries whose input snapshot digests
+   are satisfied by the commit closure (computed to a fixpoint so a chain of
+   hits through unmaterialized intermediates transfers whole), plus the
+   output snapshots those entries point at;
+3. the **run manifests** — ledger entries recorded on a synced branch whose
+   data/result commits are inside the closure, grafted onto the
    destination's own chain under their original run ids (so
    ``repro run --id`` replays cross-host).
 
@@ -21,28 +21,53 @@ Transfer rules that make this safe over a flaky wire:
   destination has its full closure present — an interrupted transfer leaves
   orphans at worst, never a torn closure, and a rerun resumes by skipping
   completed subtrees (dedup via batched ``has_many``);
-* refs move **last** and only via compare-and-set: the destination branch
-  head either still points at fully-transferred history or the push/pull
-  fails with a conflict — readers never observe a head without its objects;
-* non-fast-forward updates are refused unless ``force`` (the freshly
-  initialized empty root commit every new catalog starts with is exempt,
-  so cloning/pulling ``main`` into a new lake just works).
+* refs move **last** and via **all-or-nothing compare-and-set**
+  (``cas_refs``): a multi-ref push either lands every branch and tag or none
+  of them — one stale branch rolls back the entire ref update — and readers
+  never observe a head without its objects;
+* non-fast-forward branch updates (and tag clobbers) are refused unless
+  ``force`` (the freshly initialized empty root commit every new catalog
+  starts with is exempt, so cloning/pulling ``main`` into a new lake just
+  works).
+
+Transfers are **concurrent**: a coordinator/worker engine
+(:class:`_TransferEngine`, same shape as the parallel DAG executor in
+``pipeline.execute``) walks the closure graph deps-first and pipelines
+batched exists checks, blob gets and content-addressed puts across a bounded
+worker pool, so independent subtrees move in parallel.  ``jobs=1`` degrades
+to the sequential behavior; every invariant above holds for any ``jobs``
+(pinned by ``tests/sync_conformance.py``, which runs the same contract suite
+over every backend × transport × concurrency combination).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterable, List, Optional, Sequence, Set, Tuple
+import os
+import queue
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from fnmatch import fnmatchcase
+from typing import (Dict, Iterable, List, Optional, Sequence, Set, Tuple)
 
 import msgpack
 
-from .catalog import _BRANCH_PREFIX, remote_tracking_ref
-from .errors import ObjectNotFound, RefNotFound, SyncError
+from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, remote_tracking_ref,
+                      remote_tracking_tag_ref)
+from .errors import (ObjectNotFound, RefConflict, RefNotFound, RemoteError,
+                     SyncError)
 from .ledger import RunLedger
 from .runcache import RunCache
 from .store import ObjectStore, StoreBackend
 
 _HAS_CHUNK = 256  # digests per batched-exists request
+_BLOB_CHUNK = 8   # leaf blobs per batched get/put request
+
+
+def _default_jobs() -> int:
+    """Transfer workers: I/O bound, so not tied to core count."""
+    env = os.environ.get("REPRO_SYNC_JOBS")
+    return max(1, int(env)) if env else 8
 
 
 def _pack(obj) -> bytes:
@@ -53,7 +78,7 @@ def _unpack(blob: bytes):
     return msgpack.unpackb(blob, raw=False)
 
 
-# ------------------------------------------------------------------ transfer
+# ------------------------------------------------------------------- reports
 @dataclass
 class SyncReport:
     direction: str  # "push" | "pull"
@@ -74,48 +99,92 @@ class SyncReport:
                 f"ref_updated={self.ref_updated}")
 
 
-class _ClosureTransfer:
-    """Copies dependency closures src → dst, deps-first.
+@dataclass
+class MultiSyncReport:
+    """Accounting for one atomic multi-ref push/pull.
 
-    Invariant: a blob is written to dst only after everything it references
-    is on dst.  ``done`` holds digests known to be on dst (either just
-    written or discovered via batched exists) — anything in it is pruned
-    together with its entire sub-closure, which is what makes a re-run of an
-    interrupted transfer resume instead of restart.
+    Byte/object counts are **exact and dedup-aware**: every transferred
+    object is counted once in ``objects_sent`` (with its uncompressed size
+    in ``bytes_sent``) no matter how many branches/tags reach it, and every
+    closure digest the destination already had is counted once in
+    ``objects_skipped``."""
+
+    direction: str  # "push" | "pull"
+    branches: Dict[str, str]  # branch name -> head digest synced
+    tags: Dict[str, str] = field(default_factory=dict)  # tag -> digest
+    updated_refs: List[str] = field(default_factory=list)
+    objects_sent: int = 0
+    objects_skipped: int = 0
+    bytes_sent: int = 0
+    cache_entries: int = 0
+    runs: int = 0
+
+    def summary(self) -> str:
+        names = sorted(self.branches)
+        names += [f"tag:{t}" for t in sorted(self.tags)]
+        return (f"{self.direction} [{', '.join(names)}]: "
+                f"objects={self.objects_sent} (+{self.objects_skipped} "
+                f"deduped) bytes={self.bytes_sent} "
+                f"cache_entries={self.cache_entries} runs={self.runs} "
+                f"refs_updated={len(self.updated_refs)}")
+
+
+# ------------------------------------------------------------------ transfer
+def _get_many(store: StoreBackend, digests: Sequence[str]
+              ) -> Dict[str, bytes]:
+    if len(digests) > 1:
+        return store.get_many(digests)
+    return {d: store.get(d) for d in digests}
+
+
+def _put_many(store: StoreBackend, blobs: Sequence[bytes]) -> List[str]:
+    if len(blobs) > 1:
+        return store.put_many(blobs)
+    return [store.put(b) for b in blobs]
+
+
+class _TransferEngine:
+    """Concurrent deps-first closure copier src → dst.
+
+    Coordinator/worker split, mirroring the parallel DAG executor
+    (``pipeline.execute``): worker threads do ONLY store I/O — batched
+    exists checks, blob gets, content-addressed puts — while all graph
+    bookkeeping (discovery, dependency counts, put eligibility) happens on
+    the coordinating thread, so the deps-first invariant needs no locks.
+
+    Invariant: a blob is written to dst strictly after everything it
+    references is on dst, for any worker count — so a crash at any point
+    leaves orphans at worst, never a torn closure, and a re-run resumes by
+    pruning subtrees the destination already has (batched ``has_many``).
+    ``done`` (digests known on dst) persists across :meth:`run` calls, so
+    later phases (cache entries, run manifests) dedup against everything a
+    previous phase already moved.
     """
 
     _COMMIT, _SNAPSHOT, _BLOB = "c", "s", "b"
 
-    def __init__(self, src: StoreBackend, dst: StoreBackend,
-                 report: SyncReport):
+    def __init__(self, src: StoreBackend, dst: StoreBackend, report,
+                 *, jobs: Optional[int] = None):
         self.src = src
         self.dst = dst
-        self.report = report
-        self.done: Set[str] = set()
-        self._visited: Set[str] = set()
+        self.report = report  # any object with the Sync*Report counters
+        self.jobs = max(1, jobs) if jobs is not None else _default_jobs()
+        # jobs=1 preserves the PR-2 wire pattern — one blob per round-trip,
+        # the finest resume granularity; with a pool, gets/puts pipeline in
+        # chunks (one wire frame per chunk, one coordinator wakeup per
+        # chunk — per-object events made the coordinator the bottleneck)
+        self._chunk = 1 if self.jobs == 1 else _BLOB_CHUNK
+        self.done: Set[str] = set()       # digests known to be on dst
+        self._seen: Dict[str, str] = {}   # digest -> kind, once discovered
+        self._waiters: Dict[str, List[str]] = {}  # child -> parent digests
+        self._npending: Dict[str, int] = {}  # parent -> children not done
+        self._payload: Dict[str, bytes] = {}  # expanded, awaiting children
+        self._to_check: List[str] = []
+        self._to_fetch: List[Tuple[str, str]] = []   # (kind, digest)
+        self._to_copy: List[str] = []
+        self._to_put: List[Tuple[str, bytes]] = []   # deps done, write now
 
-    def _prime(self, digests: Iterable[str]) -> None:
-        """Batched exists against dst; present digests become prune points."""
-        unknown = [d for d in dict.fromkeys(digests) if d not in self.done]
-        for i in range(0, len(unknown), _HAS_CHUNK):
-            present = self.dst.has_many(unknown[i:i + _HAS_CHUNK])
-            self.report.objects_skipped += len(present)
-            self.done.update(present)
-
-    def _put(self, digest: str, blob: bytes) -> None:
-        written = self.dst.put(blob)
-        if written != digest:  # defensive: src handed us corrupt bytes
-            raise SyncError(f"transfer of {digest} produced {written}")
-        self.report.objects_sent += 1
-        self.report.bytes_sent += len(blob)
-        self.done.add(digest)
-
-    def transfer_commit(self, digest: str) -> None:
-        self._walk(self._COMMIT, digest)
-
-    def transfer_snapshot(self, digest: str) -> None:
-        self._walk(self._SNAPSHOT, digest)
-
+    # ------------------------------------------------------------ plumbing
     def _children(self, kind: str, blob: bytes) -> List[Tuple[str, str]]:
         if kind == self._COMMIT:
             obj = _unpack(blob)
@@ -131,27 +200,185 @@ class _ClosureTransfer:
             return out
         return []  # leaf tensorfile
 
-    def _walk(self, kind: str, root: str) -> None:
-        # Iterative post-order: a (digest, blob) frame is re-pushed as
-        # "expanded" and only written once every child frame has drained —
-        # metadata blobs ride the stack, leaf tensorfiles never do.
-        self._prime([root])
-        stack: List[Tuple[str, str, bool, Optional[bytes]]] = \
-            [(kind, root, False, None)]
-        while stack:
-            k, digest, expanded, blob = stack.pop()
-            if expanded:
-                self._put(digest, blob)
-                continue
-            if digest in self.done or digest in self._visited:
-                continue
-            self._visited.add(digest)
-            blob = self.src.get(digest)
-            children = self._children(k, blob)
-            self._prime(d for _k, d in children)
-            stack.append((k, digest, True, blob))
-            stack.extend((ck, cd, False, None) for ck, cd in children
-                         if cd not in self.done)
+    def _want(self, kind: str, digest: str, parent: Optional[str]) -> bool:
+        """Record that ``parent`` needs ``digest`` on dst; True iff the
+        parent has to wait for it (i.e. it is not already known there)."""
+        if digest in self.done:
+            return False
+        if parent is not None:
+            self._waiters.setdefault(digest, []).append(parent)
+        if digest not in self._seen:
+            self._seen[digest] = kind
+            self._to_check.append(digest)
+        return True
+
+    # ------------------------------------------------------- worker tasks
+    def _task_check(self, chunk: List[str]):
+        return ("checked", chunk, self.dst.has_many(chunk))
+
+    def _task_fetch(self, items: List[Tuple[str, str]]):
+        blobs = _get_many(self.src, [d for _k, d in items])
+        return ("fetched", [(k, d, blobs[d]) for k, d in items])
+
+    def _task_copy(self, digests: List[str]):
+        blobs = _get_many(self.src, digests)
+        written = _put_many(self.dst, [blobs[d] for d in digests])
+        for digest, got in zip(digests, written):
+            if got != digest:  # defensive: src handed us corrupt bytes
+                raise SyncError(f"transfer of {digest} produced {got}")
+        return ("copied", [(d, len(blobs[d])) for d in digests])
+
+    def _task_put(self, items: List[Tuple[str, bytes]]):
+        written = _put_many(self.dst, [b for _d, b in items])
+        for (digest, blob), got in zip(items, written):
+            if got != digest:
+                raise SyncError(f"transfer of {digest} produced {got}")
+        return ("put", [(d, len(b)) for d, b in items])
+
+    # -------------------------------------------------------- coordinator
+    def _finish(self, digest: str) -> None:
+        """``digest`` is now on dst: release parents whose last missing
+        child this was (their put becomes eligible only now — deps-first)."""
+        self.done.add(digest)
+        for parent in self._waiters.pop(digest, ()):
+            self._npending[parent] -= 1
+            if self._npending[parent] == 0:
+                del self._npending[parent]
+                self._to_put.append((parent, self._payload.pop(parent)))
+
+    def _flush(self, submit) -> None:
+        for i in range(0, len(self._to_check), _HAS_CHUNK):
+            submit(self._task_check, self._to_check[i:i + _HAS_CHUNK])
+        self._to_check = []
+        for i in range(0, len(self._to_fetch), self._chunk):
+            submit(self._task_fetch, self._to_fetch[i:i + self._chunk])
+        self._to_fetch = []
+        for i in range(0, len(self._to_copy), self._chunk):
+            submit(self._task_copy, self._to_copy[i:i + self._chunk])
+        self._to_copy = []
+        for i in range(0, len(self._to_put), self._chunk):
+            submit(self._task_put, self._to_put[i:i + self._chunk])
+        self._to_put = []
+
+    def _handle(self, event) -> None:
+        if event[0] == "checked":
+            _tag, chunk, present = event
+            for digest in chunk:
+                if digest in present:
+                    self.report.objects_skipped += 1
+                    self._finish(digest)
+                elif self._seen[digest] == self._BLOB:
+                    self._to_copy.append(digest)  # leaf: fetch+put, batched
+                else:
+                    self._to_fetch.append((self._seen[digest], digest))
+        elif event[0] == "fetched":
+            for kind, digest, blob in event[1]:
+                children = dict.fromkeys(self._children(kind, blob))
+                pending = sum(1 for ck, cd in children
+                              if self._want(ck, cd, digest))
+                if pending == 0:
+                    self._to_put.append((digest, blob))
+                else:
+                    self._npending[digest] = pending
+                    self._payload[digest] = blob
+        else:  # "copied" | "put" — objects landed on dst
+            for digest, nbytes in event[1]:
+                self.report.objects_sent += 1
+                self.report.bytes_sent += nbytes
+                self._finish(digest)
+
+    @staticmethod
+    def _worker(events: "queue.Queue", fn, args) -> None:
+        try:
+            events.put(("ok", fn(*args)))
+        except BaseException as e:  # noqa: BLE001 - re-raised by coordinator
+            events.put(("err", e))
+
+    def run(self, roots: Iterable[Tuple[str, str]]) -> None:
+        """Transfer the closures of ``(kind, digest)`` roots, concurrently,
+        deps-first.  Blocks until every reachable missing object is on dst
+        (or raises, leaving only complete sub-closures behind)."""
+        for kind, digest in dict.fromkeys(roots):
+            self._want(kind, digest, None)
+        if not self._to_check:
+            return
+        if self.jobs == 1:
+            self._run_inline()
+        else:
+            self._run_pool()
+
+    def _run_inline(self) -> None:
+        """Sequential mode: a plain task loop on the calling thread — the
+        PR-2 wire pattern (one object per round-trip, deps-first) with zero
+        thread handoffs.  The reference behavior the conformance harness
+        holds the pool path to."""
+        tasks: "deque" = deque()
+
+        def submit(fn, *args):
+            tasks.append((fn, args))
+
+        self._flush(submit)
+        while tasks:
+            fn, args = tasks.popleft()
+            self._handle(fn(*args))
+            self._flush(submit)
+
+    def _run_pool(self) -> None:
+        """Concurrent mode.  Workers report through one event queue rather
+        than ``futures.wait(FIRST_COMPLETED)``: a completion wakes the
+        coordinator through a single condition variable instead of
+        re-registering a waiter with every pending future each round, and
+        bursts of completions drain in one pass before the next flush —
+        thread wakeups are the scarce resource on small hosts, so the
+        engine pays one per *chunk*, never one per object."""
+        events: "queue.Queue" = queue.Queue()
+        inflight = 0
+        with ThreadPoolExecutor(max_workers=self.jobs) as pool:
+            def submit(fn, *args):
+                nonlocal inflight
+                inflight += 1
+                pool.submit(self._worker, events, fn, args)
+
+            self._flush(submit)
+            try:
+                while inflight:
+                    batch = [events.get()]
+                    while True:  # drain the burst, then flush once
+                        try:
+                            batch.append(events.get_nowait())
+                        except queue.Empty:
+                            break
+                    inflight -= len(batch)
+                    for status, payload in batch:
+                        if status == "err":
+                            raise payload
+                        self._handle(payload)
+                    self._flush(submit)
+            except BaseException:
+                pool.shutdown(wait=False, cancel_futures=True)
+                raise
+
+    def put_blobs(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """Write already-held blobs (cache entries, run manifests) to dst,
+        batched and dedup-aware, with the same exact accounting as
+        :meth:`run`.  Call only after the blobs' own dependencies landed."""
+        fresh = [(d, b) for d, b in dict(items).items() if d not in self.done]
+        present: Set[str] = set()
+        for i in range(0, len(fresh), _HAS_CHUNK):
+            present |= self.dst.has_many([d for d, _b in
+                                          fresh[i:i + _HAS_CHUNK]])
+        self.report.objects_skipped += len(present)
+        self.done.update(present)
+        todo = [(d, b) for d, b in fresh if d not in present]
+        for i in range(0, len(todo), _BLOB_CHUNK):
+            chunk = todo[i:i + _BLOB_CHUNK]
+            written = _put_many(self.dst, [b for _d, b in chunk])
+            for (digest, blob), got in zip(chunk, written):
+                if got != digest:
+                    raise SyncError(f"transfer of {digest} produced {got}")
+                self.report.objects_sent += 1
+                self.report.bytes_sent += len(blob)
+                self.done.add(digest)
 
 
 # ------------------------------------------------------------------ closures
@@ -226,23 +453,24 @@ def _select_cache_entries(
 
 
 def _sync_cache(src: StoreBackend, dst: StoreBackend,
-                xfer: _ClosureTransfer, closure: Set[str],
-                report: SyncReport) -> None:
+                engine: _TransferEngine, closure: Set[str], report) -> None:
     src_cache, dst_cache = RunCache(src), RunCache(dst)
     selected = _select_cache_entries(src_cache, src, closure)
-    xfer._prime(entry_digest for _k, entry_digest, _b, _s in selected)
-    for key, entry_digest, blob, snapshot in selected:
-        if snapshot:  # output closure first: an adopted ref must be warm
-            xfer.transfer_snapshot(snapshot)
-        if entry_digest not in xfer.done:
-            xfer._put(entry_digest, blob)
+    # output-snapshot closures first (one concurrent pass, deduped against
+    # everything already transferred), entry blobs strictly after: an
+    # adopted ref must be warm, never dangling
+    engine.run((engine._SNAPSHOT, snapshot)
+               for _k, _d, _b, snapshot in selected if snapshot)
+    engine.put_blobs([(entry_digest, blob)
+                      for _k, entry_digest, blob, _s in selected])
+    for key, entry_digest, _blob, _snapshot in selected:
         if dst_cache.adopt(key, entry_digest):
             report.cache_entries += 1
 
 
 def _sync_runs(src: StoreBackend, dst: StoreBackend,
-               xfer: _ClosureTransfer, closure: Set[str], branch: str,
-               report: SyncReport) -> None:
+               engine: _TransferEngine, closure: Set[str],
+               branches: Set[str], report) -> None:
     src_ledger, dst_ledger = RunLedger(src), RunLedger(dst)
     have = set(dst_ledger.runs())
     picked = []
@@ -255,130 +483,351 @@ def _sync_runs(src: StoreBackend, dst: StoreBackend,
         except ObjectNotFound:
             continue
         manifest = _unpack(blob)
-        # only runs recorded on this branch whose pinned commits made the
-        # trip — a manifest must never reference objects the destination
-        # cannot resolve
-        if manifest.get("branch") != branch:
+        # only runs recorded on a synced branch whose pinned commits made
+        # the trip — a manifest must never reference objects the
+        # destination cannot resolve
+        if manifest.get("branch") not in branches:
             continue
         if manifest.get("data_commit") not in closure:
             continue
         if manifest.get("result_commit") not in closure:
             continue
         picked.append((run_id, manifest_digest, blob))
-    xfer._prime(digest for _r, digest, _b in picked)
-    for run_id, manifest_digest, blob in reversed(picked):  # oldest first
-        if manifest_digest not in xfer.done:
-            xfer._put(manifest_digest, blob)
+    engine.put_blobs([(digest, blob) for _r, digest, blob in picked])
+    for run_id, manifest_digest, _blob in reversed(picked):  # oldest first
         dst_ledger.graft(run_id, manifest_digest)
         report.runs += 1
 
 
+# --------------------------------------------------------------- ref helpers
+def _list_ref_names(store: StoreBackend, prefix: str) -> List[str]:
+    names: List[str] = []
+    token: Optional[str] = None
+    while True:
+        page, token = store.list_refs(prefix, page_token=token)
+        names.extend(name[len(prefix):] for name, _d in page)
+        if token is None:
+            return names
+
+
+def _match_refs(store: StoreBackend, prefix: str,
+                patterns: Iterable[str]) -> List[str]:
+    """Expand branch/tag patterns against ``store``'s refs: a pattern with
+    glob characters matches every existing name (zero matches is fine, like
+    git); a literal name passes through untouched (existence is checked by
+    the caller, which can say *which* side is missing it)."""
+    out: List[str] = []
+    names: Optional[List[str]] = None
+    for pat in patterns:
+        if any(ch in pat for ch in "*?["):
+            if names is None:
+                names = _list_ref_names(store, prefix)
+            out.extend(n for n in names if fnmatchcase(n, pat))
+        else:
+            out.append(pat)
+    return list(dict.fromkeys(out))
+
+
+def _cas_refs(store: StoreBackend,
+              updates: Sequence[Tuple[str, Optional[str], str]]) -> None:
+    """All-or-nothing ref update, with a CAS-with-rollback fallback for
+    stores that only speak the PR-2 contract — a backend object missing
+    ``cas_refs`` entirely, or a ``RemoteStore`` fronting an old server
+    that rejects the op as unknown (the server refuses *before* touching
+    any ref, so falling back is safe).  The fallback is best-effort: the
+    window between a conflict and its rollback is visible to concurrent
+    readers, which native ``cas_refs`` never exposes."""
+    native = getattr(store, "cas_refs", None)
+    if native is not None:
+        try:
+            native(updates)
+            return
+        except RemoteError as e:
+            if not ("bad_request" in str(e) and "unknown op" in str(e)):
+                raise
+    applied: List[Tuple[str, Optional[str], str]] = []
+    try:
+        for name, expected, new in updates:
+            store.cas_ref(name, expected, new)
+            applied.append((name, expected, new))
+    except RefConflict:
+        for name, expected, new in reversed(applied):
+            if expected is None:
+                store.delete_ref(name)
+            else:
+                store.cas_ref(name, new, expected)
+        raise
+
+
 # ----------------------------------------------------------------- push/pull
+def push_refs(local: StoreBackend, remote: StoreBackend,
+              branches: Sequence[str], *, tags: Sequence[str] = (),
+              remote_name: str = "origin", force: bool = False,
+              cache_entries: bool = True, runs: bool = True,
+              jobs: Optional[int] = None) -> MultiSyncReport:
+    """Atomic multi-ref push: several branches plus tags move in ONE
+    deps-first transfer (shared subtrees dedup across refs), then every ref
+    lands via one all-or-nothing ``cas_refs`` — a fast-forward conflict on
+    any branch, or a tag clobber, leaves every ref on both sides unchanged.
+
+    ``branches``/``tags`` accept glob patterns, expanded against the local
+    refs.  Fast-forward and tag-immutability preflights run before any byte
+    moves; the CAS re-validates at commit time, so a racing pusher loses
+    with a conflict instead of splitting the ref set.
+    """
+    branch_names = _match_refs(local, _BRANCH_PREFIX, branches)
+    tag_names = _match_refs(local, _TAG_PREFIX, tags)
+    if not branch_names and not tag_names:
+        raise SyncError("push: no branches or tags matched")
+
+    heads: Dict[str, str] = {}
+    for branch in branch_names:
+        try:
+            heads[branch] = local.get_ref(_BRANCH_PREFIX + branch)
+        except RefNotFound:
+            raise SyncError(
+                f"local branch {branch!r} does not exist") from None
+    tag_digests: Dict[str, str] = {}
+    for tag in tag_names:
+        try:
+            tag_digests[tag] = local.get_ref(_TAG_PREFIX + tag)
+        except RefNotFound:
+            raise SyncError(f"local tag {tag!r} does not exist") from None
+
+    report = MultiSyncReport("push", dict(heads), dict(tag_digests))
+    closures = {b: commit_closure(local, h) for b, h in heads.items()}
+    closure: Set[str] = set().union(
+        *closures.values(),
+        *(commit_closure(local, d) for d in tag_digests.values())) \
+        if (closures or tag_digests) else set()
+
+    # preflight every ref before moving a single byte
+    updates: List[Tuple[str, Optional[str], str]] = []
+    for branch, head in heads.items():
+        ref = _BRANCH_PREFIX + branch
+        try:
+            current: Optional[str] = remote.get_ref(ref)
+        except RefNotFound:
+            current = None
+        if current == head:
+            continue
+        if (current is not None and current not in closures[branch]
+                and not force and not _is_empty_root(remote, current)):
+            raise SyncError(
+                f"push {branch!r}: remote head {current[:12]} is not an "
+                "ancestor of the pushed head (non-fast-forward); pull "
+                "first or push with force=True — no ref was updated")
+        updates.append((ref, current, head))
+    for tag, digest in tag_digests.items():
+        ref = _TAG_PREFIX + tag
+        try:
+            current = remote.get_ref(ref)
+        except RefNotFound:
+            current = None
+        if current == digest:
+            continue
+        if current is not None and not force:
+            raise SyncError(
+                f"push tag {tag!r}: already exists on the remote at "
+                f"{current[:12]} (tags are immutable; use force=True to "
+                "clobber) — no ref was updated")
+        updates.append((ref, current, digest))
+
+    engine = _TransferEngine(local, remote, report, jobs=jobs)
+    engine.run([(engine._COMMIT, h) for h in heads.values()]
+               + [(engine._COMMIT, d) for d in tag_digests.values()])
+    if cache_entries:
+        _sync_cache(local, remote, engine, closure, report)
+    if runs:
+        _sync_runs(local, remote, engine, closure, set(heads), report)
+
+    if updates:
+        try:
+            _cas_refs(remote, updates)
+        except RefConflict as e:
+            raise SyncError(
+                f"push: ref update conflicted ({e}); every ref was left "
+                "unchanged — pull and retry") from e
+        report.updated_refs = [name for name, _e, _n in updates]
+    for branch, head in heads.items():
+        local.set_ref(remote_tracking_ref(remote_name, branch), head)
+    for tag, digest in tag_digests.items():
+        local.set_ref(remote_tracking_tag_ref(remote_name, tag), digest)
+    return report
+
+
+def pull_refs(local: StoreBackend, remote: StoreBackend,
+              branches: Sequence[str], *, tags: Sequence[str] = (),
+              remote_name: str = "origin", force: bool = False,
+              cache_entries: bool = True, runs: bool = True,
+              jobs: Optional[int] = None,
+              _shared_done: Optional[Set[str]] = None) -> MultiSyncReport:
+    """Atomic multi-ref pull: fetch the closures of several remote branches
+    and tags in one concurrent transfer, then fast-forward every local ref
+    with one all-or-nothing ``cas_refs``.
+
+    Remote-tracking refs (``remote/<name>/branch=<b>``, ``.../tag=<t>``) are
+    written as soon as the closure has landed — before the local branch
+    update, so even a refused fast-forward leaves the fetched history
+    GC-rooted and resolvable as ``<name>/<ref>``.
+    """
+    branch_names = _match_refs(remote, _BRANCH_PREFIX, branches)
+    tag_names = _match_refs(remote, _TAG_PREFIX, tags)
+    if not branch_names and not tag_names:
+        raise SyncError("pull: no branches or tags matched")
+
+    heads: Dict[str, str] = {}
+    for branch in branch_names:
+        try:
+            heads[branch] = remote.get_ref(_BRANCH_PREFIX + branch)
+        except RefNotFound:
+            raise SyncError(
+                f"pull {branch!r}: remote has no such branch") from None
+    tag_digests: Dict[str, str] = {}
+    for tag in tag_names:
+        try:
+            tag_digests[tag] = remote.get_ref(_TAG_PREFIX + tag)
+        except RefNotFound:
+            raise SyncError(
+                f"pull tag {tag!r}: remote has no such tag") from None
+
+    report = MultiSyncReport("pull", dict(heads), dict(tag_digests))
+    engine = _TransferEngine(remote, local, report, jobs=jobs)
+    if _shared_done is not None:
+        # clone threads one dedup set through its per-branch pulls, so a
+        # closure shared by many branches is checked against the
+        # destination once, not once per branch
+        engine.done = _shared_done
+    engine.run([(engine._COMMIT, h) for h in heads.values()]
+               + [(engine._COMMIT, d) for d in tag_digests.values()])
+
+    # everything is local now — closures walk the local store
+    closures = {b: commit_closure(local, h) for b, h in heads.items()}
+    closure: Set[str] = set().union(
+        *closures.values(),
+        *(commit_closure(local, d) for d in tag_digests.values())) \
+        if (closures or tag_digests) else set()
+    for branch, head in heads.items():
+        local.set_ref(remote_tracking_ref(remote_name, branch), head)
+    for tag, digest in tag_digests.items():
+        local.set_ref(remote_tracking_tag_ref(remote_name, tag), digest)
+
+    updates: List[Tuple[str, Optional[str], str]] = []
+    for branch, head in heads.items():
+        ref = _BRANCH_PREFIX + branch
+        try:
+            current: Optional[str] = local.get_ref(ref)
+        except RefNotFound:
+            current = None
+        if current == head:
+            continue
+        if (current is not None and current not in closures[branch]
+                and not force and not _is_empty_root(local, current)):
+            raise SyncError(
+                f"pull {branch!r}: local head {current[:12]} has diverged "
+                "from the remote (non-fast-forward); push first or pull "
+                "with force=True — no local ref was updated")
+        updates.append((ref, current, head))
+    for tag, digest in tag_digests.items():
+        ref = _TAG_PREFIX + tag
+        try:
+            current = local.get_ref(ref)
+        except RefNotFound:
+            current = None
+        if current == digest:
+            continue
+        if current is not None and not force:
+            raise SyncError(
+                f"pull tag {tag!r}: exists locally at {current[:12]} with "
+                "a different target (tags are immutable; use force=True to "
+                "clobber) — no local ref was updated")
+        updates.append((ref, current, digest))
+    if updates:
+        try:
+            _cas_refs(local, updates)
+        except RefConflict as e:
+            raise SyncError(
+                f"pull: ref update conflicted ({e}); every local ref was "
+                "left unchanged") from e
+        report.updated_refs = [name for name, _e, _n in updates]
+
+    if cache_entries:
+        _sync_cache(remote, local, engine, closure, report)
+    if runs:
+        _sync_runs(remote, local, engine, closure, set(heads), report)
+    return report
+
+
+def _single_report(multi: MultiSyncReport, direction: str,
+                   branch: str) -> SyncReport:
+    return SyncReport(
+        direction, branch, multi.branches[branch],
+        objects_sent=multi.objects_sent,
+        objects_skipped=multi.objects_skipped,
+        bytes_sent=multi.bytes_sent,
+        cache_entries=multi.cache_entries,
+        runs=multi.runs,
+        ref_updated=(_BRANCH_PREFIX + branch) in multi.updated_refs)
+
+
 def push(local: StoreBackend, remote: StoreBackend, branch: str, *,
          remote_name: str = "origin", force: bool = False,
-         cache_entries: bool = True, runs: bool = True) -> SyncReport:
-    """Publish a branch: closure transfer, then a CAS-guarded ref update.
-
-    Refuses non-fast-forward updates (the remote head must be an ancestor
-    of the pushed head) unless ``force``.
-    """
-    branch_ref = _BRANCH_PREFIX + branch
-    try:
-        head = local.get_ref(branch_ref)
-    except RefNotFound:
-        raise SyncError(f"local branch {branch!r} does not exist") from None
-    try:
-        remote_head: Optional[str] = remote.get_ref(branch_ref)
-    except RefNotFound:
-        remote_head = None
-
-    report = SyncReport("push", branch, head)
-    closure = commit_closure(local, head)
-    if (remote_head is not None and remote_head != head
-            and remote_head not in closure and not force
-            and not _is_empty_root(remote, remote_head)):
-        raise SyncError(
-            f"push {branch!r}: remote head {remote_head[:12]} is not an "
-            "ancestor of the pushed head (non-fast-forward); pull first "
-            "or push with force=True")
-
-    xfer = _ClosureTransfer(local, remote, report)
-    xfer.transfer_commit(head)
-    if cache_entries:
-        _sync_cache(local, remote, xfer, closure, report)
-    if runs:
-        _sync_runs(local, remote, xfer, closure, branch, report)
-
-    if remote_head != head:
-        remote.cas_ref(branch_ref, remote_head, head)
-        report.ref_updated = True
-    local.set_ref(remote_tracking_ref(remote_name, branch), head)
-    return report
+         cache_entries: bool = True, runs: bool = True,
+         tags: Sequence[str] = (),
+         jobs: Optional[int] = None) -> SyncReport:
+    """Publish one branch (plus optional tags): closure transfer, then a
+    CAS-guarded ref update.  Refuses non-fast-forward updates (the remote
+    head must be an ancestor of the pushed head) unless ``force``."""
+    multi = push_refs(local, remote, [branch], tags=tags,
+                      remote_name=remote_name, force=force,
+                      cache_entries=cache_entries, runs=runs, jobs=jobs)
+    return _single_report(multi, "push", branch)
 
 
 def pull(local: StoreBackend, remote: StoreBackend, branch: str, *,
          remote_name: str = "origin", force: bool = False,
-         cache_entries: bool = True, runs: bool = True) -> SyncReport:
-    """Fetch a branch's closure and fast-forward the local branch to it.
+         cache_entries: bool = True, runs: bool = True,
+         tags: Sequence[str] = (),
+         jobs: Optional[int] = None) -> SyncReport:
+    """Fetch one branch's closure (plus optional tags) and fast-forward the
+    local branch to it.
 
     The remote-tracking ref (``remote/<name>/branch=<b>``) is updated as
     soon as the closure has landed — it is the GC root that keeps fetched
     history alive even when the local branch diverges or is deleted.
     """
-    branch_ref = _BRANCH_PREFIX + branch
-    try:
-        remote_head = remote.get_ref(branch_ref)
-    except RefNotFound:
-        raise SyncError(
-            f"pull {branch!r}: remote has no such branch") from None
-
-    report = SyncReport("pull", branch, remote_head)
-    xfer = _ClosureTransfer(remote, local, report)
-    xfer.transfer_commit(remote_head)
-    closure = commit_closure(local, remote_head)  # everything is local now
-    local.set_ref(remote_tracking_ref(remote_name, branch), remote_head)
-
-    try:
-        local_head: Optional[str] = local.get_ref(branch_ref)
-    except RefNotFound:
-        local_head = None
-    if local_head != remote_head:
-        if (local_head is not None and local_head not in closure
-                and not force and not _is_empty_root(local, local_head)):
-            raise SyncError(
-                f"pull {branch!r}: local head {local_head[:12]} has "
-                "diverged from the remote (non-fast-forward); push first "
-                "or pull with force=True")
-        local.cas_ref(branch_ref, local_head, remote_head)
-        report.ref_updated = True
-
-    if cache_entries:
-        _sync_cache(remote, local, xfer, closure, report)
-    if runs:
-        _sync_runs(remote, local, xfer, closure, branch, report)
-    return report
+    multi = pull_refs(local, remote, [branch], tags=tags,
+                      remote_name=remote_name, force=force,
+                      cache_entries=cache_entries, runs=runs, jobs=jobs)
+    return _single_report(multi, "pull", branch)
 
 
 def clone(remote: StoreBackend, dest_root, *, branch: Optional[str] = None,
           remote_name: str = "origin", cache_entries: bool = True,
-          runs: bool = True) -> Tuple[ObjectStore, List[SyncReport]]:
+          runs: bool = True, tags: Sequence[str] = ("*",),
+          jobs: Optional[int] = None) -> Tuple[ObjectStore, List[SyncReport]]:
     """Materialize a fresh local store from a remote: pull one branch, or
-    every remote branch when ``branch`` is None."""
+    every remote branch when ``branch`` is None.  Remote tags ride along by
+    default (``tags=("*",)``; pass ``()`` to skip them) — their closures
+    dedup against the branch pulls, so they are usually ref-only writes."""
     local = ObjectStore(dest_root)
     if branch is not None:
         branches: Sequence[str] = [branch]
     else:
-        names: List[str] = []
-        token: Optional[str] = None
-        while True:
-            page, token = remote.list_refs(_BRANCH_PREFIX, page_token=token)
-            names.extend(name[len(_BRANCH_PREFIX):] for name, _d in page)
-            if token is None:
-                break
+        names = _list_ref_names(remote, _BRANCH_PREFIX)
         if not names:
             raise SyncError("clone: remote has no branches")
         branches = sorted(names)
-    reports = [pull(local, remote, b, remote_name=remote_name,
-                    cache_entries=cache_entries, runs=runs)
-               for b in branches]
+    done: Set[str] = set()  # dedup shared closures across the branch pulls
+    reports = []
+    for b in branches:
+        multi = pull_refs(local, remote, [b], remote_name=remote_name,
+                          cache_entries=cache_entries, runs=runs, jobs=jobs,
+                          _shared_done=done)
+        reports.append(_single_report(multi, "pull", b))
+    tag_names = _match_refs(remote, _TAG_PREFIX, tags)
+    if tag_names:
+        pull_refs(local, remote, [], tags=tag_names,
+                  remote_name=remote_name, cache_entries=False,
+                  runs=False, jobs=jobs, _shared_done=done)
     return local, reports

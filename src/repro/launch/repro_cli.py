@@ -12,9 +12,13 @@ docs/remote_store.md):
 
   repro remote add origin URL                  name a remote (http:// or path)
   repro push --branch B [--remote origin]      publish closure + cache + runs
+  repro push main 'exp/*' --tags 'v*'          atomic multi-ref push (globs;
+                                               all refs land or none do)
   repro pull --branch B [--remote origin]      fetch + fast-forward
-  repro clone URL DEST [--branch B]            new lake from a remote
+  repro clone URL DEST [--branch B]            new lake from a remote (+tags)
   repro serve --root DIR --port P              loopback object-store server
+
+Transfers are concurrent (--jobs N workers; --jobs 1 = sequential).
 
 "CLI is all you need": no catalog service to provision, no client API to
 learn — the same ergonomics claim the paper demonstrates, over the tensor
@@ -98,11 +102,21 @@ def _resolve_remote(lake: Lake, spec: str):
 
 
 def _add_sync_args(p):
-    p.add_argument("--branch", required=True)
+    p.add_argument("refspecs", nargs="*", metavar="BRANCH",
+                   help="branch names or globs; several move as ONE atomic "
+                        "multi-ref operation (all refs update or none do)")
+    p.add_argument("--branch", default=None,
+                   help="single branch (kept for scripts; same as one "
+                        "positional BRANCH)")
+    p.add_argument("--tags", action="append", default=None, metavar="PATTERN",
+                   help="also sync tags matching PATTERN (glob; repeatable)")
     p.add_argument("--remote", default="origin",
                    help="configured remote name, or a URL/path")
     p.add_argument("--force", action="store_true",
-                   help="allow a non-fast-forward ref update")
+                   help="allow a non-fast-forward ref update / tag clobber")
+    p.add_argument("--jobs", type=int, default=None, metavar="N",
+                   help="concurrent transfer workers (default: 8; 1 = "
+                        "sequential)")
     p.add_argument("--no-cache-entries", action="store_true",
                    help="skip run-cache entry transfer (see the trust "
                         "model in docs/remote_store.md)")
@@ -165,6 +179,10 @@ def main(argv=None):
     cl.add_argument("dest")
     cl.add_argument("--branch", default=None,
                     help="single branch (default: every remote branch)")
+    cl.add_argument("--no-tags", action="store_true",
+                    help="skip pulling remote tags")
+    cl.add_argument("--jobs", type=int, default=None, metavar="N",
+                    help="concurrent transfer workers")
 
     sv = sub.add_parser("serve", help="serve a store over loopback HTTP")
     sv.add_argument("--root", default=None,
@@ -176,8 +194,9 @@ def main(argv=None):
 
     if args.cmd == "clone":  # no existing lake needed
         remote = connect(args.url)
-        _local, reports = sync_mod.clone(remote, args.dest,
-                                         branch=args.branch)
+        _local, reports = sync_mod.clone(
+            remote, args.dest, branch=args.branch,
+            tags=() if args.no_tags else ("*",), jobs=args.jobs)
         dest_remotes = Path(args.dest) / "remotes"
         dest_remotes.mkdir(parents=True, exist_ok=True)
         (dest_remotes / "origin").write_text(args.url)
@@ -257,14 +276,25 @@ def main(argv=None):
                     print(f"{cfg.name}\t{cfg.read_text().strip()}")
     elif args.cmd in ("push", "pull"):
         remote = _resolve_remote(lake, args.remote)
-        fn = sync_mod.push if args.cmd == "push" else sync_mod.pull
+        branches = ([args.branch] if args.branch else []) + args.refspecs
+        tags = args.tags or []
+        if not branches and not tags:
+            raise SystemExit(f"{args.cmd}: name at least one branch "
+                             "(--branch or positional) or --tags")
+        remote_name = args.remote if "/" not in args.remote else "origin"
+        kw = dict(remote_name=remote_name, force=args.force,
+                  cache_entries=not args.no_cache_entries,
+                  runs=not args.no_runs, jobs=args.jobs)
         try:
-            rep = fn(lake.store, remote, args.branch,
-                     remote_name=args.remote if "/" not in args.remote
-                     else "origin",
-                     force=args.force,
-                     cache_entries=not args.no_cache_entries,
-                     runs=not args.no_runs)
+            if (len(branches) == 1 and not tags
+                    and not any(ch in branches[0] for ch in "*?[")):
+                # single literal branch: the PR-2 surface, unchanged output
+                fn = sync_mod.push if args.cmd == "push" else sync_mod.pull
+                rep = fn(lake.store, remote, branches[0], **kw)
+            else:
+                fn = (sync_mod.push_refs if args.cmd == "push"
+                      else sync_mod.pull_refs)
+                rep = fn(lake.store, remote, branches, tags=tags, **kw)
         except SyncError as e:
             raise SystemExit(str(e)) from None
         print(rep.summary())

@@ -1,0 +1,357 @@
+"""Sync conformance harness: one contract suite, every configuration.
+
+The push/pull/clone layer promises the same semantics no matter how a store
+is reached or how many transfer workers move the closure.  This module
+states that contract ONCE as a list of checks and runs it against every
+
+    backend   ×  transport  ×  concurrency
+    (fs, tiered) (direct, loopback, http)  (--jobs 1, --jobs N)
+
+combination — "correct-by-design" sync treated as a testable interface
+rather than an emergent property of one happy path:
+
+* **round-trip**: push → pull reproduces heads, closures and table bytes
+  bit-identically;
+* **accounting**: ``SyncReport``/``MultiSyncReport`` byte/object counts are
+  exact and dedup-aware, including when the remote already holds part of
+  the closure;
+* **atomicity**: a multi-ref push with one failing fast-forward leaves
+  every ref on both sides unchanged, and the ``cas_refs`` primitive is
+  all-or-nothing through every transport;
+* **tags**: tag refs round-trip (push/pull/resolve) and root their closure
+  against gc on both tiers;
+* **concurrency safety**: two overlapping pushes never corrupt refs or
+  lose blobs.
+
+Run standalone (the CI leg) or through the pytest wrapper
+(``tests/test_sync_conformance.py``):
+
+    PYTHONPATH=src python -m tests.sync_conformance --jobs 1
+    PYTHONPATH=src python -m tests.sync_conformance --jobs 8
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import shutil
+import tempfile
+import threading
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
+                        RemoteStore, SyncError, commit_closure, connect,
+                        pull, pull_refs, push, push_refs, serve_http)
+from repro.core.errors import RefConflict, RefNotFound
+from repro.core.gc import collect
+
+BACKENDS = ("fs", "tiered")
+TRANSPORTS = ("direct", "loopback", "http")
+
+
+@dataclass(frozen=True)
+class Combo:
+    backend: str    # local lake flavor: plain ObjectStore or TieredStore
+    transport: str  # how the remote is reached
+    jobs: int       # transfer concurrency (1 = sequential)
+
+    @property
+    def ident(self) -> str:
+        return f"{self.backend}/{self.transport}/jobs={self.jobs}"
+
+
+class SyncContext:
+    """One check's world: a fresh remote store plus lake/remote factories
+    wired for one combo.  ``remote_store`` is the ground-truth filesystem
+    tree behind every transport — checks use it as the oracle."""
+
+    def __init__(self, combo: Combo, root: Path):
+        self.combo = combo
+        self.root = Path(root)
+        self.remote_store = ObjectStore(self.root / "remote")
+        self._server = RemoteServer(self.remote_store)
+        self._httpd = None
+        self._url: Optional[str] = None
+
+    def remote(self):
+        """A client handle onto the shared remote — one per call, so
+        concurrent pushers never share a transport."""
+        if self.combo.transport == "direct":
+            return self.remote_store
+        if self.combo.transport == "loopback":
+            return RemoteStore(LoopbackTransport(self._server))
+        if self._httpd is None:
+            self._httpd, self._url = serve_http(self.remote_store)
+        return connect(self._url)
+
+    def lake(self, name: str) -> Lake:
+        if self.combo.backend == "tiered":
+            return Lake(self.root / name, protect_main=False,
+                        remote=self.remote())
+        return Lake(self.root / name, protect_main=False)
+
+    def close(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+
+
+def _seed(lake: Lake, branch: str, tables: int = 3, scale: float = 1.0,
+          n: int = 96) -> None:
+    for i in range(tables):
+        lake.write_table(branch, f"t{i}",
+                         {"v": np.arange(n, dtype=np.float32) * scale + i},
+                         author=branch.split(".")[0])
+
+
+def _closure_on_remote(ctx: SyncContext, store, head: str) -> None:
+    for digest in commit_closure(store, head):
+        assert ctx.remote_store.has(digest), \
+            f"closure digest {digest[:12]} missing on remote"
+
+
+# ------------------------------------------------------------------- checks
+def check_round_trip(ctx: SyncContext) -> None:
+    """push → pull: heads, closures and table bytes are bit-identical."""
+    a = ctx.lake("a")
+    _seed(a, "main")
+    a.catalog.create_branch("u.exp", "main", author="u")
+    _seed(a, "u.exp", tables=2, scale=3.0)
+    rep = push(a.store, ctx.remote(), "u.exp", jobs=ctx.combo.jobs)
+    assert rep.ref_updated and rep.objects_sent > 0
+    head = a.catalog.head("u.exp")
+    _closure_on_remote(ctx, a.store, head)
+
+    b = ctx.lake("b")
+    prep = pull(b.store, ctx.remote(), "u.exp", jobs=ctx.combo.jobs)
+    if ctx.combo.backend == "fs":
+        assert prep.ref_updated
+    # a tiered lake already sees the remote head through the tier, so the
+    # pull is legitimately a ref-noop there — head equality is the contract
+    assert b.catalog.head("u.exp") == head
+    for table in ("t0", "t1"):
+        av, bv = a.read_table("u.exp", table), b.read_table("u.exp", table)
+        np.testing.assert_array_equal(av["v"], bv["v"])
+
+
+def check_accounting_exact(ctx: SyncContext) -> None:
+    """Counts are exact and dedup-aware, also when the remote already has
+    part of the closure (objects land once, bytes match blob sizes)."""
+    a = ctx.lake("a")
+    _seed(a, "main")
+    a.catalog.create_branch("u.exp", "main", author="u")
+    _seed(a, "u.exp", tables=2, scale=2.0)
+
+    before = set(ctx.remote_store.iter_objects())
+    first = push(a.store, ctx.remote(), "main", jobs=ctx.combo.jobs)
+    after_main = set(ctx.remote_store.iter_objects())
+    new = after_main - before
+    assert first.objects_sent == len(new)
+    assert first.bytes_sent == sum(len(a.store.get(d)) for d in new)
+
+    # second push of a branch sharing all of main's history: only the delta
+    second = push(a.store, ctx.remote(), "u.exp", jobs=ctx.combo.jobs)
+    after_exp = set(ctx.remote_store.iter_objects())
+    delta = after_exp - after_main
+    assert second.objects_sent == len(delta)
+    assert second.bytes_sent == sum(len(a.store.get(d)) for d in delta)
+
+    # identical re-push: nothing sent, dedup visible, counts stay exact
+    third = push(a.store, ctx.remote(), "u.exp", jobs=ctx.combo.jobs)
+    assert third.objects_sent == 0 and third.bytes_sent == 0
+    assert third.objects_skipped > 0
+    assert set(ctx.remote_store.iter_objects()) == after_exp
+
+
+def check_multi_ref_atomic(ctx: SyncContext) -> None:
+    """One stale branch fails the preflight / CAS → every ref on both
+    sides stays exactly where it was."""
+    a = ctx.lake("a")
+    _seed(a, "main")
+    a.catalog.create_branch("u.one", "main", author="u")
+    a.catalog.create_branch("u.two", "main", author="u")
+    _seed(a, "u.one", tables=1, scale=5.0)
+    _seed(a, "u.two", tables=1, scale=7.0)
+    multi = push_refs(a.store, ctx.remote(), ["u.one", "u.two"],
+                      jobs=ctx.combo.jobs)
+    assert set(multi.updated_refs) == {"branch=u.one", "branch=u.two"}
+
+    # another host advances u.one on the remote → A is now stale on u.one
+    b = ctx.lake("b")
+    pull(b.store, ctx.remote(), "u.one", jobs=ctx.combo.jobs)
+    _seed(b, "u.one", tables=1, scale=9.0)
+    push(b.store, ctx.remote(), "u.one", jobs=ctx.combo.jobs)
+
+    _seed(a, "u.one", tables=1, scale=11.0)  # diverges from B's push
+    _seed(a, "u.two", tables=1, scale=13.0)
+    remote_before = {r: d for r, d in
+                     ctx.remote_store.list_refs("branch=")[0]}
+    local_before = {r: a.store.get_ref(r)
+                    for r in a.store.iter_refs("remote/")}
+    try:
+        push_refs(a.store, ctx.remote(), ["u.one", "u.two"],
+                  jobs=ctx.combo.jobs)
+        raise AssertionError("non-fast-forward push did not fail")
+    except SyncError:
+        pass
+    remote_after = {r: d for r, d in
+                    ctx.remote_store.list_refs("branch=")[0]}
+    assert remote_after == remote_before, "a remote ref moved despite fail"
+    local_after = {r: a.store.get_ref(r)
+                   for r in a.store.iter_refs("remote/")}
+    assert local_after == local_before, "a tracking ref moved despite fail"
+
+    # the CAS primitive itself is all-or-nothing through the transport:
+    # one good update + one stale expectation → neither applies
+    remote = ctx.remote()
+    good_new = a.catalog.head("u.two")
+    try:
+        remote.cas_refs([("branch=u.two", remote_before["branch=u.two"],
+                          good_new),
+                         ("branch=u.one", "0" * 64, good_new)])
+        raise AssertionError("cas_refs with a stale expectation succeeded")
+    except RefConflict:
+        pass
+    assert {r: d for r, d in ctx.remote_store.list_refs("branch=")[0]} \
+        == remote_before
+
+
+def check_tags_round_trip(ctx: SyncContext) -> None:
+    """Tags travel with push/pull, resolve by every spelling, and root
+    their closures against gc on both tiers."""
+    a = ctx.lake("a")
+    _seed(a, "main")
+    a.catalog.create_branch("u.rel", "main", author="u")
+    _seed(a, "u.rel", tables=1, scale=4.0)
+    tagged = a.catalog.create_tag("v1.0", "u.rel")
+    push(a.store, ctx.remote(), "u.rel", tags=["v1.0"], jobs=ctx.combo.jobs)
+    assert ctx.remote_store.get_ref("tag=v1.0") == tagged
+
+    b = ctx.lake("b")
+    pull(b.store, ctx.remote(), "u.rel", tags=["v*"], jobs=ctx.combo.jobs)
+    assert b.catalog.resolve("v1.0") == tagged
+    assert b.catalog.resolve("tag=v1.0") == tagged
+    assert b.catalog.resolve("origin/v1.0") == tagged
+    np.testing.assert_array_equal(b.read_table("v1.0", "t0")["v"],
+                                  a.read_table("u.rel", "t0")["v"])
+
+    # local tier: branch gone, tag is the only root → closure survives gc
+    # (on a tiered lake the branch ref may only ever have existed remotely)
+    for ref in ("branch=u.rel", "remote/origin/branch=u.rel"):
+        try:
+            b.store.delete_ref(ref)
+        except RefNotFound:
+            pass
+    collect(b.store)
+    assert b.read_table("v1.0", "t0")["v"][0] == a.read_table(
+        "u.rel", "t0")["v"][0]
+    # remote tier: same story on the server's own store
+    ctx.remote_store.delete_ref("branch=u.rel")
+    collect(ctx.remote_store)
+    for digest in commit_closure(b.store, tagged):
+        assert ctx.remote_store.has(digest)
+
+
+def check_concurrent_pushes(ctx: SyncContext) -> None:
+    """Two overlapping pushes (shared base history, distinct branches) run
+    concurrently: no lost blobs, no corrupted refs, both heads land."""
+    a = ctx.lake("a")
+    _seed(a, "main")
+    a.catalog.create_branch("u.one", "main", author="u")
+    a.catalog.create_branch("u.two", "main", author="u")
+    _seed(a, "u.one", tables=2, scale=5.0)
+    _seed(a, "u.two", tables=2, scale=7.0)
+
+    errors: List[BaseException] = []
+
+    def pusher(branch: str) -> None:
+        try:
+            push(a.store, ctx.remote(), branch, jobs=ctx.combo.jobs)
+        except BaseException as e:  # noqa: BLE001 - collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=pusher, args=(b,))
+               for b in ("u.one", "u.two")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, f"concurrent pushes failed: {errors!r}"
+    for branch in ("u.one", "u.two"):
+        head = a.catalog.head(branch)
+        assert ctx.remote_store.get_ref(f"branch={branch}") == head
+        _closure_on_remote(ctx, a.store, head)
+
+
+CHECKS: List[Callable[[SyncContext], None]] = [
+    check_round_trip,
+    check_accounting_exact,
+    check_multi_ref_atomic,
+    check_tags_round_trip,
+    check_concurrent_pushes,
+]
+
+
+# ------------------------------------------------------------------- runner
+def run_check(check: Callable[[SyncContext], None], combo: Combo,
+              root: Path) -> None:
+    """One check in a fresh world; raises on contract violation."""
+    ctx = SyncContext(combo, root)
+    try:
+        check(ctx)
+    finally:
+        ctx.close()
+
+
+def run_matrix(jobs: int, *, backends=BACKENDS, transports=TRANSPORTS,
+               verbose: bool = True) -> List[str]:
+    failures: List[str] = []
+    for backend in backends:
+        for transport in transports:
+            combo = Combo(backend, transport, jobs)
+            for check in CHECKS:
+                tmp = tempfile.mkdtemp(prefix="sync-conf-")
+                try:
+                    run_check(check, combo, Path(tmp))
+                    if verbose:
+                        print(f"PASS {combo.ident:28s} {check.__name__}")
+                except BaseException as e:  # noqa: BLE001 - harness report
+                    failures.append(f"{combo.ident} {check.__name__}: {e!r}")
+                    if verbose:
+                        print(f"FAIL {combo.ident:28s} {check.__name__}: "
+                              f"{e!r}")
+                finally:
+                    shutil.rmtree(tmp, ignore_errors=True)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="sync conformance matrix (backend × transport × jobs)")
+    ap.add_argument("--jobs", type=int, default=8,
+                    help="transfer concurrency (1 = sequential path)")
+    ap.add_argument("--backends", default=",".join(BACKENDS))
+    ap.add_argument("--transports", default=",".join(TRANSPORTS))
+    args = ap.parse_args(argv)
+    failures = run_matrix(args.jobs,
+                          backends=tuple(args.backends.split(",")),
+                          transports=tuple(args.transports.split(",")))
+    n_combos = (len(args.backends.split(","))
+                * len(args.transports.split(",")))
+    total = n_combos * len(CHECKS)
+    print(f"\nsync conformance: {total - len(failures)}/{total} passed "
+          f"(jobs={args.jobs})")
+    for f in failures:
+        print(f"  FAILED: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -79,6 +79,48 @@ def test_gc_preserves_tags(lake):
     assert lake.read_table("v1.0", "model")["v"][0] == 5.0
 
 
+def test_gc_roots_synced_tags_after_branch_deletion(tmp_path):
+    """Regression: gc must root tags synced from a remote even when the
+    local branch pointing at them was deleted.  Root detection used to
+    match on the ref *path basename*, so any tag whose name contains "/"
+    (``release/v1`` shards into a subdirectory) fell out of the root set —
+    after deleting the branch, gc swept the tag's closure and the synced
+    tag dangled."""
+    from repro.core import (Lake, LoopbackTransport, ObjectStore,
+                            RemoteServer, RemoteStore, pull, push)
+
+    lake_a = Lake(tmp_path / "a", protect_main=False)
+    lake_a.catalog.create_branch("u.rel", "main", author="u")
+    _write(lake_a, "u.rel", "model", 5.0, n=2048)
+    lake_a.catalog.create_tag("release/v1", "u.rel")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "r"))))
+    push(lake_a.store, remote, "u.rel", tags=["release/*"])
+
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    pull(lake_b.store, remote, "u.rel", tags=["release/*"])
+    lake_b.catalog.delete_branch("u.rel")
+    lake_b.store.delete_ref("remote/origin/branch=u.rel")
+    collect(lake_b.store)
+    # the tag (and its remote-tracking twin) kept the closure alive
+    assert lake_b.read_table("release/v1", "model")["v"][0] == 5.0
+    assert lake_b.catalog.resolve("origin/release/v1") == \
+        lake_b.catalog.resolve("release/v1")
+
+    # ... even when only the remote-tracking tag ref remains
+    lake_b.catalog.delete_tag("release/v1")
+    collect(lake_b.store)
+    head = lake_b.catalog.resolve("origin/release/v1")
+    lake_b.catalog.create_branch("u.back", head, author="u")
+    assert lake_b.read_table("u.back", "model")["v"][0] == 5.0
+
+    # control: with the tracking ref gone too, the history is collectable
+    lake_b.catalog.delete_branch("u.back")
+    lake_b.store.delete_ref("remote/origin/tag=release/v1")
+    rep = collect(lake_b.store)
+    assert rep.swept > 0
+
+
 def test_gc_keeps_remote_tracking_refs_alive(tmp_path):
     """Regression: objects reachable ONLY through a remote-tracking ref
     (``remote/<name>/branch=<b>``) must survive gc — deleting the local

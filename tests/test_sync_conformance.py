@@ -1,0 +1,343 @@
+"""Pytest wrapper over the sync conformance harness + targeted regressions.
+
+The matrix (``sync_conformance.run_check``) pins the contract over
+backend × transport × concurrency; the named tests below pin the specific
+claims this layer makes:
+
+* seeded thread-fuzz: random interleavings of two concurrent pushes of
+  overlapping closures never corrupt refs or lose blobs;
+* ``SyncReport`` accounting is exact when the remote already holds part of
+  the closure (dedup was previously only exercised implicitly);
+* tag semantics: ``resolve("tag=...")`` round-trips through
+  push/pull/clone, and gc on both tiers keeps tag-rooted closures alive;
+* a multi-ref push with one failing fast-forward leaves every ref (local
+  and remote) unchanged.
+"""
+
+import random
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
+                        RemoteStore, SyncError, clone, commit_closure, pull,
+                        push, push_refs)
+from repro.core.gc import collect
+from sync_conformance import CHECKS, Combo, run_check
+
+_FAST_TRANSPORTS = ("direct", "loopback")  # http exercised on the slow leg
+
+
+@pytest.mark.parametrize("backend", ("fs", "tiered"))
+@pytest.mark.parametrize("transport", _FAST_TRANSPORTS)
+@pytest.mark.parametrize("jobs", (1, 4))
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_matrix(tmp_path, backend, transport, jobs, check):
+    run_check(check, Combo(backend, transport, jobs), tmp_path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("jobs", (1, 8))
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_matrix_http(tmp_path, jobs, check):
+    run_check(check, Combo("fs", "http", jobs), tmp_path)
+
+
+# ----------------------------------------------------- seeded thread-fuzz
+class JitterTransport:
+    """Seeded per-request sleep before forwarding: randomizes how two
+    concurrent transfers interleave, reproducibly."""
+
+    def __init__(self, inner, seed: int, max_delay: float = 0.0015):
+        self.inner = inner
+        self.rng = random.Random(seed)
+        self.max_delay = max_delay
+        self._lock = threading.Lock()
+
+    def request(self, payload: bytes) -> bytes:
+        with self._lock:
+            delay = self.rng.random() * self.max_delay
+        time.sleep(delay)
+        return self.inner.request(payload)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def _overlapping_lake(root: Path) -> Lake:
+    """Two branches sharing base history — their closures overlap on every
+    object main reaches."""
+    lake = Lake(root, protect_main=False)
+    lake.write_table("main", "base",
+                     {"v": np.arange(128, dtype=np.float32)})
+    for i, branch in enumerate(("u.one", "u.two")):
+        lake.catalog.create_branch(branch, "main", author="u")
+        lake.write_table(branch, f"t{i}",
+                         {"v": np.full(64, float(i), np.float32)},
+                         author="u")
+    return lake
+
+
+def _assert_remote_intact(lake: Lake, remote_store: ObjectStore,
+                          branches) -> None:
+    for branch in branches:
+        head = remote_store.get_ref(f"branch={branch}")
+        for digest in commit_closure(lake.store, head):
+            assert remote_store.has(digest), \
+                f"{branch}: closure digest {digest[:12]} lost"
+        remote_store.get(head)  # digest-verified read
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_fuzz_concurrent_overlapping_pushes(tmp_path_factory, seed):
+    """Property: however two pushes of overlapping closures interleave,
+    the remote ends with both heads and both complete closures."""
+    root = tmp_path_factory.mktemp("fuzz")
+    lake = _overlapping_lake(root / "lake")
+    remote_store = ObjectStore(root / "remote")
+    server = RemoteServer(remote_store)
+
+    errors = []
+
+    def pusher(branch: str, idx: int) -> None:
+        remote = RemoteStore(JitterTransport(
+            LoopbackTransport(server), seed + idx))
+        try:
+            push(lake.store, remote, branch, jobs=4)
+        except BaseException as e:  # noqa: BLE001 - surfaced via the assert
+            errors.append((branch, e))
+
+    threads = [threading.Thread(target=pusher, args=(b, i))
+               for i, b in enumerate(("u.one", "u.two"))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, f"concurrent pushes failed: {errors!r}"
+    for branch in ("u.one", "u.two"):
+        assert remote_store.get_ref(f"branch={branch}") == \
+            lake.catalog.head(branch)
+    _assert_remote_intact(lake, remote_store, ("u.one", "u.two"))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_fuzz_concurrent_divergent_pushes_one_wins(tmp_path_factory, seed):
+    """Property: two hosts racing divergent heads of the SAME branch never
+    corrupt the ref — exactly one wins, the loser gets a clean SyncError,
+    and whichever head the ref holds has its full closure present."""
+    root = tmp_path_factory.mktemp("fuzz-div")
+    remote_store = ObjectStore(root / "remote")
+    server = RemoteServer(remote_store)
+    seeder = RemoteStore(LoopbackTransport(server))
+
+    lake_a = _overlapping_lake(root / "a")
+    push(lake_a.store, seeder, "u.one")
+    lake_b = Lake(root / "b", protect_main=False)
+    pull(lake_b.store, seeder, "u.one")
+    # both sides commit different data on top of the shared head
+    lake_a.write_table("u.one", "side_a",
+                       {"v": np.full(32, 1.0, np.float32)}, author="u")
+    lake_b.write_table("u.one", "side_b",
+                       {"v": np.full(32, 2.0, np.float32)}, author="u")
+
+    outcomes = {}
+
+    def pusher(name: str, lake: Lake, idx: int) -> None:
+        remote = RemoteStore(JitterTransport(
+            LoopbackTransport(server), seed + idx))
+        try:
+            outcomes[name] = push(lake.store, remote, "u.one", jobs=4)
+        except SyncError as e:
+            outcomes[name] = e
+
+    threads = [threading.Thread(target=pusher, args=(n, lk, i))
+               for i, (n, lk) in enumerate((("a", lake_a), ("b", lake_b)))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    winners = [n for n, out in outcomes.items()
+               if not isinstance(out, Exception)]
+    assert len(winners) >= 1, f"both pushes failed: {outcomes!r}"
+    final = remote_store.get_ref("branch=u.one")
+    heads = {"a": lake_a.catalog.head("u.one"),
+             "b": lake_b.catalog.head("u.one")}
+    assert final in heads.values()
+    winner_lake = lake_a if final == heads["a"] else lake_b
+    for digest in commit_closure(winner_lake.store, final):
+        assert remote_store.has(digest)
+
+
+# --------------------------------------------- exact accounting regression
+def test_sync_report_exact_when_remote_has_partial_closure(tmp_path):
+    """Regression: byte/object accounting stays exact when the remote
+    already holds part of the closure — every counted object corresponds
+    to exactly one new remote blob, bytes match uncompressed sizes, and
+    nothing is double-counted across the commit/cache/run phases."""
+    lake = _overlapping_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+
+    push(lake.store, remote, "u.one", jobs=4)
+    before = set(remote_store.iter_objects())
+
+    # u.two shares main's whole history with u.one — a large overlap the
+    # second push must skip without losing count of what it did send
+    report = push(lake.store, remote, "u.two", jobs=4)
+    after = set(remote_store.iter_objects())
+    new = after - before
+    # grafted ledger links are destination-side bookkeeping written by the
+    # ledger, not transferred objects — exclude them from the oracle
+    graft_links = {d for d in new
+                   if b"manifest" in remote_store.get(d)
+                   and b"run_id" in remote_store.get(d)}
+    assert report.objects_sent == len(new - graft_links)
+    assert report.bytes_sent == sum(len(lake.store.get(d))
+                                    for d in new - graft_links)
+    assert report.objects_skipped > 0
+
+    # an identical re-push moves nothing and still reports exactly that
+    again = push(lake.store, remote, "u.two", jobs=4)
+    assert again.objects_sent == 0 and again.bytes_sent == 0
+    assert set(remote_store.iter_objects()) == after
+
+
+# ------------------------------------------------------------ tag semantics
+def _tagged_lake(root: Path) -> Lake:
+    lake = Lake(root, protect_main=False)
+    lake.write_table("main", "base",
+                     {"v": np.arange(64, dtype=np.float32)})
+    lake.catalog.create_branch("u.rel", "main", author="u")
+    lake.write_table("u.rel", "model",
+                     {"w": np.full(64, 5.0, np.float32)}, author="u")
+    lake.catalog.create_tag("v1.0", "u.rel")
+    return lake
+
+
+def test_tag_resolve_round_trips_through_push_pull_clone(tmp_path):
+    lake_a = _tagged_lake(tmp_path / "a")
+    tagged = lake_a.catalog.resolve("tag=v1.0")
+    assert tagged == lake_a.catalog.resolve("v1.0")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    push(lake_a.store, remote, "u.rel", tags=["*"])
+
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    pull(lake_b.store, remote, "u.rel", tags=["*"])
+    assert lake_b.catalog.resolve("tag=v1.0") == tagged
+    assert lake_b.catalog.resolve("origin/v1.0") == tagged
+    np.testing.assert_array_equal(lake_b.read_table("tag=v1.0", "model")["w"],
+                                  lake_a.read_table("v1.0", "model")["w"])
+
+    # clone pulls tags by default
+    _store, _reports = clone(remote, tmp_path / "c", branch="u.rel")
+    lake_c = Lake(tmp_path / "c", protect_main=False)
+    assert lake_c.catalog.resolve("tag=v1.0") == tagged
+    assert lake_c.read_table("v1.0", "model")["w"][0] == 5.0
+
+
+def test_gc_on_both_tiers_keeps_tag_rooted_closures(tmp_path):
+    lake_a = _tagged_lake(tmp_path / "a")
+    tagged = lake_a.catalog.resolve("v1.0")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    push(lake_a.store, remote, "u.rel", tags=["v1.0"])
+
+    # local tier: pull, drop the branch, gc — the tag still resolves
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    pull(lake_b.store, remote, "u.rel", tags=["v1.0"])
+    lake_b.catalog.delete_branch("u.rel")
+    lake_b.store.delete_ref("remote/origin/branch=u.rel")
+    collect(lake_b.store)
+    assert lake_b.read_table("v1.0", "model")["w"][0] == 5.0
+
+    # remote tier: the branch is deleted server-side; the tag alone must
+    # keep the closure alive through a remote-side gc
+    remote_store.delete_ref("branch=u.rel")
+    collect(remote_store)
+    for digest in commit_closure(lake_a.store, tagged):
+        assert remote_store.has(digest)
+
+
+def test_push_rejects_tag_clobber_without_force(tmp_path):
+    lake = _tagged_lake(tmp_path / "a")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    push(lake.store, remote, "u.rel", tags=["v1.0"])
+
+    lake.write_table("u.rel", "model",
+                     {"w": np.full(64, 6.0, np.float32)}, author="u")
+    lake.catalog.delete_tag("v1.0")
+    lake.catalog.create_tag("v1.0", "u.rel")  # same name, new target
+    with pytest.raises(SyncError, match="immutable"):
+        push(lake.store, remote, "u.rel", tags=["v1.0"])
+    # the refused push updated NOTHING, branch ref included
+    assert remote_store.get_ref("branch=u.rel") != \
+        lake.catalog.head("u.rel")
+    push(lake.store, remote, "u.rel", tags=["v1.0"], force=True)
+    assert remote_store.get_ref("tag=v1.0") == lake.catalog.head("u.rel")
+
+
+def test_push_falls_back_when_server_lacks_cas_refs(tmp_path):
+    """Compatibility: a server speaking only the PR-2 wire contract (no
+    ``cas_refs`` op) still accepts pushes — the client degrades to
+    per-ref CAS-with-rollback instead of aborting after the transfer."""
+    class Pr2Server(RemoteServer):
+        _op_cas_refs = None  # getattr finds None -> "unknown op" reply
+
+    lake = _overlapping_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(Pr2Server(remote_store)))
+    rep = push_refs(lake.store, remote, ["u.one", "u.two"])
+    assert set(rep.updated_refs) == {"branch=u.one", "branch=u.two"}
+    for branch in ("u.one", "u.two"):
+        assert remote_store.get_ref(f"branch={branch}") == \
+            lake.catalog.head(branch)
+
+
+# -------------------------------------------- multi-ref rollback, explicit
+def test_multi_ref_push_failed_ff_leaves_every_ref_unchanged(tmp_path):
+    """Acceptance: a multi-ref push where one ref fast-forward fails leaves
+    every ref — local tracking refs and remote heads — unchanged."""
+    lake_a = _overlapping_lake(tmp_path / "a")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    push_refs(lake_a.store, remote, ["u.one", "u.two"])
+
+    # another host moves u.one forward on the remote
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    pull(lake_b.store, remote, "u.one")
+    lake_b.write_table("u.one", "b_only",
+                       {"v": np.ones(16, np.float32)}, author="u")
+    push(lake_b.store, remote, "u.one")
+
+    # A diverges on u.one and advances u.two, then pushes both
+    lake_a.write_table("u.one", "a_only",
+                       {"v": np.zeros(16, np.float32)}, author="u")
+    lake_a.write_table("u.two", "a_two",
+                       {"v": np.zeros(16, np.float32)}, author="u")
+    remote_refs_before = dict(remote_store.list_refs("branch=")[0])
+    local_refs_before = {r: lake_a.store.get_ref(r)
+                         for r in lake_a.store.iter_refs("remote/")}
+    with pytest.raises(SyncError):
+        push_refs(lake_a.store, remote, ["u.one", "u.two"])
+    assert dict(remote_store.list_refs("branch=")[0]) == remote_refs_before
+    assert {r: lake_a.store.get_ref(r)
+            for r in lake_a.store.iter_refs("remote/")} == local_refs_before
+    # u.two in particular did NOT advance even though its own FF was clean
+    assert remote_store.get_ref("branch=u.two") != \
+        lake_a.catalog.head("u.two")
