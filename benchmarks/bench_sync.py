@@ -1,17 +1,28 @@
-"""Concurrent vs sequential closure transfer over a latency-bearing wire.
+"""Closure-transfer benchmarks: concurrency and wire-frame compression.
 
-PR 2's closure transfer paid one round-trip per blob; the concurrent engine
-pipelines batched exists checks, blob gets and puts across a worker pool, so
-a wide closure (many independent tensorfiles under one commit) transfers in
-parallel.  This benchmark pushes the SAME ≥200-blob closure twice — once with
-``jobs=1`` (the sequential path: one object per round-trip, PR 2's exact
-wire pattern) and once with a worker pool — through a loopback transport
-that charges a fixed per-request latency (the only cost a real network adds
-that the loopback lacks), and checks:
+**Concurrency** (PR 3): PR 2's closure transfer paid one round-trip per
+blob; the concurrent engine pipelines batched exists checks, blob gets and
+puts across a worker pool, so a wide closure (many independent tensorfiles
+under one commit) transfers in parallel.  The benchmark pushes the SAME
+≥200-blob closure twice — once with ``jobs=1`` (the sequential path: one
+object per round-trip, PR 2's exact wire pattern) and once with a worker
+pool — through a loopback transport that charges a fixed per-request
+latency, and checks:
 
   * concurrent push ≥ 3x faster than sequential;
   * the two remotes end **bit-identical**: same object digests (content
     addressing makes digest equality byte equality), same refs.
+
+**Wire-frame compression** (PR 4): large tensorfile blobs cross the wire
+as their framed at-rest payloads — compressed once at the original write,
+decoded only for digest verification, never recompressed per hop.  The
+benchmark pushes a tensorfile-heavy, compressible closure twice through a
+byte-counting transport — once with compressed frames (the default), once
+with ``compress_wire=False`` — and checks:
+
+  * compressed frames move measurably fewer bytes on the wire;
+  * the two remotes are bit-identical (no digest drift: every closure
+    digest decodes to identical content on both).
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_sync
 """
@@ -31,6 +42,9 @@ from .common import emit
 N_TABLES = 110          # 1 commit + N snapshots + N tensorfiles ≥ 200 blobs
 LATENCY_S = 0.008       # per-request wire latency charged by the transport
 JOBS_CONCURRENT = 4     # modest pool: the win must not need many cores
+N_TENSOR_TABLES = 24    # wire-compression leg: fewer, fatter tensorfiles
+TENSOR_ROWS = 8192      # compressible float32 payloads, ~32 KiB each
+MAX_WIRE_RATIO = 0.8    # compressed wire bytes must be ≤ 80% of raw
 
 
 class LatencyTransport:
@@ -63,6 +77,53 @@ def build_wide_lake(root: Path) -> Lake:
     lake.catalog.commit("main", snaps, "wide seed", _wap_token=True)
     lake.catalog.create_branch("bench.wide", "main", author="bench")
     return lake
+
+
+class ByteCountingTransport:
+    """Counts every byte crossing the wire, both directions."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def request(self, payload: bytes) -> bytes:
+        self.bytes_out += len(payload)
+        reply = self.inner.request(payload)
+        self.bytes_in += len(reply)
+        return reply
+
+    def close(self) -> None:
+        self.inner.close()
+
+    @property
+    def total(self) -> int:
+        return self.bytes_out + self.bytes_in
+
+
+def build_tensor_lake(root: Path) -> Lake:
+    """A tensorfile-heavy branch with *compressible* payloads (structured
+    float32 ramps — the shape real activations/weights statistics take far
+    more often than white noise)."""
+    lake = Lake(root, protect_main=False)
+    snaps = {}
+    for i in range(N_TENSOR_TABLES):
+        base = np.arange(TENSOR_ROWS, dtype=np.float32) * (0.01 * (i + 1))
+        snaps[f"w{i:02d}"] = lake.io.write_snapshot(
+            {"w": base, "b": np.repeat(np.float32(i), TENSOR_ROWS)})
+    lake.catalog.commit("main", snaps, "tensor seed", _wap_token=True)
+    lake.catalog.create_branch("bench.tensors", "main", author="bench")
+    return lake
+
+
+def counted_push(lake: Lake, remote_root: Path, *, compress_wire: bool):
+    store = ObjectStore(remote_root)
+    transport = ByteCountingTransport(
+        LoopbackTransport(RemoteServer(store)))
+    report = push(lake.store, RemoteStore(transport), "bench.tensors",
+                  jobs=JOBS_CONCURRENT, cache_entries=False, runs=False,
+                  compress_wire=compress_wire)
+    return report, store, transport
 
 
 def timed_push(lake: Lake, remote_root: Path, jobs: int):
@@ -112,6 +173,43 @@ def main():
               f"speedup={speedup:.1f}x", flush=True)
         assert speedup >= 3.0, \
             f"concurrent push only {speedup:.1f}x faster (need >= 3x)"
+
+        # ------------------------------------------ wire-frame compression
+        tlake = build_tensor_lake(tmp / "tensor_lake")
+        thead = tlake.catalog.head("bench.tensors")
+        tclosure = commit_closure(tlake.store, thead)
+
+        raw_rep, raw_store, raw_wire = counted_push(
+            tlake, tmp / "remote_raw", compress_wire=False)
+        comp_rep, comp_store, comp_wire = counted_push(
+            tlake, tmp / "remote_comp", compress_wire=True)
+
+        # no digest drift: both remotes hold the full closure, and every
+        # closure digest decodes to identical bytes on both
+        assert sorted(raw_store.iter_objects()) == \
+            sorted(comp_store.iter_objects()), "remotes diverged"
+        assert set(comp_store.iter_objects()) >= tclosure
+        for digest in sorted(tclosure):
+            assert comp_store.get(digest) == raw_store.get(digest)
+        assert sorted(raw_store.list_refs()[0]) == \
+            sorted(comp_store.list_refs()[0])
+        assert comp_rep.objects_sent == raw_rep.objects_sent
+        assert comp_rep.bytes_sent == raw_rep.bytes_sent  # logical bytes
+        assert comp_rep.bytes_wire < comp_rep.bytes_sent  # per-object win
+
+        ratio = comp_wire.total / raw_wire.total
+        emit("sync/wire_raw_bytes", raw_wire.total,
+             f"blobs={len(tclosure)};logical={raw_rep.bytes_sent}")
+        emit("sync/wire_compressed_bytes", comp_wire.total,
+             f"blobs={len(tclosure)};logical={comp_rep.bytes_sent};"
+             f"ratio={ratio:.2f}")
+        print(f"wire: closure={len(tclosure)} blobs "
+              f"logical={comp_rep.bytes_sent} "
+              f"raw_wire={raw_wire.total} comp_wire={comp_wire.total} "
+              f"ratio={ratio:.2f}", flush=True)
+        assert ratio <= MAX_WIRE_RATIO, \
+            (f"compressed frames moved {ratio:.2f}x of raw wire bytes "
+             f"(need <= {MAX_WIRE_RATIO})")
 
 
 if __name__ == "__main__":

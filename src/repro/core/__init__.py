@@ -9,7 +9,8 @@ plus the run ledger (immutable run_ids, replay) and write-audit-publish.
 
 from .catalog import (Catalog, Commit, remote_tracking_ref,
                       remote_tracking_tag_ref)
-from .errors import (CodeDrift, CycleError, ExpectationFailed, MergeConflict,
+from .errors import (AmbiguousRefUpdate, CodecUnavailable, CodeDrift,
+                     CycleError, ExpectationFailed, MergeConflict,
                      ObjectNotFound, PermissionDenied, RefConflict,
                      RefNotFound, RemoteError, ReproError, RunNotFound,
                      SchemaError, SyncError, TableNotFound)
@@ -22,7 +23,10 @@ from .pipeline import (ExecutionReport, Model, Node, NodeStat, Pipeline,
 from .remote import (HTTPTransport, LoopbackTransport, RemoteServer,
                      RemoteStore, TieredStore, connect, serve_http)
 from .runcache import RunCache, node_key
-from .store import ObjectStore, StoreBackend, sha256_hex
+from .s3 import S3Backend
+from .s3stub import serve_s3
+from .store import (ObjectStore, StoreBackend, decode_frame, encode_frame,
+                    frame_raw, sha256_hex)
 from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
                    pull_refs, push, push_refs)
 from .table import ManifestEntry, Snapshot, TableIO
@@ -85,9 +89,11 @@ class Lake:
 __all__ = [
     "Lake", "Catalog", "Commit", "ObjectStore", "StoreBackend", "TableIO",
     "RemoteStore", "RemoteServer", "TieredStore", "LoopbackTransport",
-    "HTTPTransport", "connect", "serve_http", "push", "pull", "clone",
+    "HTTPTransport", "S3Backend", "serve_s3", "connect", "serve_http",
+    "push", "pull", "clone",
     "push_refs", "pull_refs", "SyncReport", "MultiSyncReport",
     "commit_closure", "remote_tracking_ref", "remote_tracking_tag_ref",
+    "decode_frame", "encode_frame", "frame_raw",
     "Snapshot",
     "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
@@ -100,5 +106,5 @@ __all__ = [
     "ReproError", "ObjectNotFound", "RefNotFound", "RefConflict",
     "TableNotFound", "SchemaError", "MergeConflict", "PermissionDenied",
     "CycleError", "ExpectationFailed", "CodeDrift", "RunNotFound",
-    "RemoteError", "SyncError",
+    "RemoteError", "SyncError", "AmbiguousRefUpdate", "CodecUnavailable",
 ]

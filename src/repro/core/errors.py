@@ -53,8 +53,25 @@ class RunNotFound(ReproError):
     """Unknown run id in the ledger."""
 
 
+class CodecUnavailable(ObjectNotFound):
+    """A blob is compressed with a codec this host cannot decode (e.g. a
+    zstd payload on a host without the zstandard package).  Subclasses
+    :class:`ObjectNotFound` so plain reads keep their existing contract;
+    the transfer engine catches it specifically to fall back from encoded
+    wire frames to raw blob transfer."""
+
+
 class RemoteError(ReproError):
     """A remote store request failed (transport fault, protocol error)."""
+
+
+class AmbiguousRefUpdate(RemoteError):
+    """A transport fault interrupted a non-idempotent ref update
+    (``cas_ref``/``cas_refs``) after the request may already have been
+    delivered: the remote ref state is UNKNOWN — the update may or may not
+    have been applied.  Distinct from a clean :class:`RemoteError` failure
+    so callers (push/pull) can resolve the ambiguity by re-reading the
+    remote refs instead of reporting a failure that silently succeeded."""
 
 
 class SyncError(ReproError):

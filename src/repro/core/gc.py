@@ -9,6 +9,17 @@ commits); sweep = delete unmarked objects.  On a ``TieredStore`` the sweep
 only touches the local tier — the shared remote is never collected from a
 client.
 
+Remote-side GC (``repro gc --remote NAME``) runs the same mark-and-sweep
+*against the remote itself*: ``collect`` takes any ``StoreBackend``, so
+handed an opted-in :class:`~repro.core.remote.RemoteStore`
+(``allow_delete=True``) or an :class:`~repro.core.s3.S3Backend` it marks
+from the remote's OWN refs and sweeps via the remote's ``delete_object``
+— local state is never consulted, so a stale or divergent local mirror
+can neither protect nor doom a remote object.  Run it in a quiet window:
+objects an in-flight push has uploaded but not yet referenced (refs move
+last) look unreachable to a racing sweep — there is no upload-age grace
+period yet (see docs/remote_store.md).
+
 Because branches are the only mutable state, deleting a branch is what makes
 its unique history collectable — a paper-consistent retention story
 (nothing reachable from a ref is ever collected, so replayability of
@@ -26,7 +37,7 @@ from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, REMOTE_REF_PREFIX,
                       Catalog, Commit)
 from .ledger import _RUNS_HEAD
 from .runcache import CACHE_REF_PREFIX
-from .store import ObjectStore
+from .store import ObjectStore, StoreBackend
 
 
 def _unpack(blob: bytes):
@@ -60,7 +71,7 @@ def _is_commit_root(ref: str) -> bool:
     return False
 
 
-def _mark_commit(store: ObjectStore, digest: str, live: Set[str]):
+def _mark_commit(store: StoreBackend, digest: str, live: Set[str]):
     stack = [digest]
     while stack:
         d = stack.pop()
@@ -73,7 +84,7 @@ def _mark_commit(store: ObjectStore, digest: str, live: Set[str]):
             _mark_snapshot(store, snap_digest, live)
 
 
-def _mark_snapshot(store: ObjectStore, digest: str, live: Set[str]):
+def _mark_snapshot(store: StoreBackend, digest: str, live: Set[str]):
     while digest is not None and digest not in live:
         if not store.has(digest):
             return
@@ -84,7 +95,7 @@ def _mark_snapshot(store: ObjectStore, digest: str, live: Set[str]):
         digest = snap.get("parent")
 
 
-def collect(store: ObjectStore, *, dry_run: bool = False,
+def collect(store: StoreBackend, *, dry_run: bool = False,
             drop_cache: bool = False) -> GCReport:
     """Mark from all refs; sweep unreachable objects.
 

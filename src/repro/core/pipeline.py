@@ -18,11 +18,13 @@ other half, the data commit, comes from the catalog).
 
 from __future__ import annotations
 
+import dis
 import hashlib
 import inspect
 import os
 import textwrap
 import time
+import types
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from threading import Lock
@@ -64,6 +66,8 @@ def _stable_const(v: Any) -> Optional[str]:
         return repr(v)
     if isinstance(v, Model):
         return repr(v)
+    if isinstance(v, np.generic):  # numpy scalar: immutable, dtype matters
+        return f"npscalar:{v.dtype.str}:{v!r}"
     if isinstance(v, tuple):
         parts = [_stable_const(x) for x in v]
         if all(p is not None for p in parts):
@@ -90,13 +94,72 @@ def _captured_values(fn: Callable):
     return out
 
 
+def _referenced_globals(fn: Callable):
+    """``(name, value, stored)`` for every module-level name the function's
+    bytecode loads or stores (LOAD_GLOBAL / STORE_GLOBAL / DELETE_GLOBAL),
+    including inside nested functions and comprehensions.
+
+    Only names that resolve in ``fn.__globals__`` are reported — an
+    unresolved LOAD_GLOBAL is a builtin.  These references used to be
+    invisible to the cache key: a node reading a module constant that
+    changed between runs kept its old key and served a silently stale
+    snapshot (the bug docs/run_cache.md used to document as a
+    limitation)."""
+    code = getattr(fn, "__code__", None)
+    g = getattr(fn, "__globals__", None)
+    if code is None or g is None:
+        return []
+    loaded: List[str] = []
+    stored: List[str] = []
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        for ins in dis.get_instructions(c):
+            if ins.opname == "LOAD_GLOBAL":
+                loaded.append(ins.argval)
+            elif ins.opname in ("STORE_GLOBAL", "DELETE_GLOBAL"):
+                stored.append(ins.argval)
+        for const in c.co_consts:
+            if isinstance(const, types.CodeType):
+                stack.append(const)
+    stored_set = set(stored)
+    out = []
+    for name in dict.fromkeys(loaded + stored):
+        if name in stored_set:
+            out.append((name, g.get(name), True))
+        elif name in g:
+            out.append((name, g[name], False))
+    return out
+
+
+def _opaque_global(v: Any) -> bool:
+    """Globals the code hash deliberately does NOT cover: modules and
+    callables (functions, types).  Hashing their behavior would mean
+    hashing the transitive program; referencing them stays cache-safe and
+    is the documented blind spot (docs/run_cache.md)."""
+    return isinstance(v, types.ModuleType) or callable(v)
+
+
 def is_cache_safe(fn: Callable) -> bool:
-    """True iff every value ``fn`` captures (closures, defaults) is a stable
-    constant the code hash can cover.  A node capturing something unstable —
-    a mutable container, another function, an arbitrary object — cannot be
-    soundly keyed: two such nodes with identical source would collide.  Those
-    nodes are UNCACHEABLE (always re-executed) rather than silently wrong."""
-    return all(_stable_const(v) is not None for _, v in _captured_values(fn))
+    """True iff every value ``fn`` captures — closure cells, argument
+    defaults, AND module-level globals it references by name — is either a
+    stable constant the code hash covers or a module/callable (the
+    documented blind spot).  A node depending on something unstable — a
+    mutable container, an arbitrary object, a global it *writes* — cannot
+    be soundly keyed: its code hash cannot see that state, so two runs with
+    identical keys could produce different outputs.  Such nodes are
+    UNCACHEABLE (always re-executed) rather than silently wrong."""
+    if not all(_stable_const(v) is not None
+               for _, v in _captured_values(fn)):
+        return False
+    for _name, value, stored in _referenced_globals(fn):
+        if stored:
+            return False  # the node mutates module state
+        if _opaque_global(value):
+            continue
+        if _stable_const(value) is None:
+            return False  # mutable global (dict, list, array, object)
+    return True
 
 
 def code_hash_of(fn: Callable) -> str:
@@ -106,8 +169,12 @@ def code_hash_of(fn: Callable) -> str:
     but differ through closure cells / argument defaults, so hashable
     constants from both are folded in — two factory instances with different
     parameters must NOT collide on one code version (they'd cross-hit the
-    run cache and evade code-drift detection).  Unstable captured values are
-    excluded here; ``is_cache_safe`` gates such nodes out of the cache."""
+    run cache and evade code-drift detection).  Module-level constants the
+    function references by name are folded the same way: editing
+    ``CUTOFF = 50`` to ``CUTOFF = 60`` is a code change and must invalidate
+    the node's cone exactly like editing its source.  Unstable captured
+    values are excluded here; ``is_cache_safe`` gates such nodes out of the
+    cache."""
     try:
         src = textwrap.dedent(inspect.getsource(fn))
     except (OSError, TypeError):  # dynamically built fn — hash its repr chain
@@ -117,6 +184,12 @@ def code_hash_of(fn: Callable) -> str:
         const = _stable_const(value)
         if const is not None:
             extras.append(f"{label}={const}")
+    for name, value, stored in _referenced_globals(fn):
+        if stored or _opaque_global(value):
+            continue
+        const = _stable_const(value)
+        if const is not None:
+            extras.append(f"global:{name}={const}")
     return _hash_text(src + "\n" + "\n".join(extras))
 
 

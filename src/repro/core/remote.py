@@ -18,6 +18,12 @@ Three pieces:
         head_objects      batched HeadObject
         get_objects       batched GetObject (one frame per leaf chunk)
         put_objects       batched PutObject (one frame per leaf chunk)
+        get_objects_…     …_encoded: batched GetObject of framed at-rest
+                          payloads (compressed wire frames)
+        put_objects_…     …_encoded: batched PutObject of framed payloads
+                          (decoded + digest-verified server-side)
+        delete_object     DeleteObject (remote-side GC sweep; clients
+                          must opt in with allow_delete=True)
         list_objects      ListObjectsV2 w/ ContinuationToken
         get_ref/set_ref   tiny pointer objects
         cas_ref           conditional put (DynamoDB / If-Match)
@@ -52,9 +58,10 @@ from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
 
 import msgpack
 
-from .errors import (ObjectNotFound, RefConflict, RefNotFound, RemoteError,
-                     ReproError)
-from .store import ObjectStore, StoreBackend, sha256_hex
+from .errors import (AmbiguousRefUpdate, CodecUnavailable, ObjectNotFound,
+                     RefConflict, RefNotFound, RemoteError, ReproError)
+from .store import (ObjectStore, StoreBackend, decode_frame, frame_raw,
+                    sha256_hex)
 
 #: ref value meaning "must not exist" in wire CAS (msgpack has no Optional
 #: on the sentinel side of If-Match semantics)
@@ -87,6 +94,10 @@ class RemoteServer:
             if fn is None:
                 return {"error": "bad_request", "message": f"unknown op {op!r}"}
             return fn(request)
+        except CodecUnavailable as e:
+            # before ObjectNotFound (its superclass): the client falls back
+            # to raw transfer on this one instead of treating it as missing
+            return {"error": "codec_unavailable", "message": str(e)}
         except ObjectNotFound as e:
             return {"error": "object_not_found", "message": str(e)}
         except RefNotFound as e:
@@ -133,6 +144,38 @@ class RemoteServer:
                         "message": f"content does not hash to {digest}"}
             digests.append(self.store.put(data))
         return {"digests": digests}
+
+    def _op_get_objects_encoded(self, req):
+        # batched GetObject of FRAMED payloads: a blob compressed at rest
+        # on the serving store crosses the wire in that form — the client
+        # decodes once (verification + accounting) and never recompresses
+        get_encoded = getattr(self.store, "get_encoded", None)
+        if get_encoded is None:  # backend without at-rest framing
+            return {"objects": [[d, frame_raw(self.store.get(d))]
+                                for d in req["digests"]]}
+        return {"objects": [[d, get_encoded(d)] for d in req["digests"]]}
+
+    def _op_put_objects_encoded(self, req):
+        put_encoded = getattr(self.store, "put_encoded", None)
+        digests = []
+        for digest, payload in req["objects"]:
+            if put_encoded is not None:
+                got = put_encoded(payload)  # decodes + verifies server-side
+            else:
+                data = decode_frame(payload, what="encoded payload")
+                got = self.store.put(data)
+            if got != digest:
+                return {"error": "bad_request",
+                        "message": f"payload does not hash to {digest}"}
+            digests.append(got)
+        return {"digests": digests}
+
+    def _op_delete_object(self, req):
+        # remote-side GC sweep (repro gc --remote): the only mutation of
+        # the object keyspace the protocol exposes — clients must opt in
+        # (RemoteStore(allow_delete=True)), so a tier-mounted client can
+        # still never collect from the shared remote by accident
+        return {"deleted": bool(self.store.delete_object(req["digest"]))}
 
     def _op_list_objects(self, req):
         page, nxt = self.store.list_objects(
@@ -300,8 +343,15 @@ _RETRYABLE_OPS = frozenset({
     # a success that was lost in transit would double-apply the swap.
     "put_object", "get_object", "head_objects", "list_objects",
     "get_objects", "put_objects",
+    "get_objects_encoded", "put_objects_encoded", "delete_object",
     "size_object", "get_ref", "set_ref", "delete_ref", "list_refs",
 })
+
+#: non-idempotent ref updates: a transport fault after the request may have
+#: been delivered leaves the ref state UNKNOWN — surfaced as
+#: :class:`AmbiguousRefUpdate`, never as a plain failure (a "failed" push
+#: could otherwise have silently succeeded; see docs/remote_store.md)
+_AMBIGUOUS_OPS = frozenset({"cas_ref", "cas_refs"})
 
 
 class RemoteStore:
@@ -309,11 +359,20 @@ class RemoteStore:
 
     >>> remote = RemoteStore(LoopbackTransport(RemoteServer(ObjectStore(p))))
     >>> remote.put(b"blob")  # content-addressed PUT over the wire
+
+    ``allow_delete`` gates :meth:`delete_object`: remote objects are
+    immutable to ordinary clients (a tier-mounted lake must never collect
+    from the shared remote); only an explicit remote-side GC run
+    (``repro gc --remote``) opens the sweep path.
     """
 
-    def __init__(self, transport, *, retries: int = 2):
+    def __init__(self, transport, *, retries: int = 2,
+                 allow_delete: bool = False):
         self.transport = transport
         self.retries = retries
+        self.allow_delete = allow_delete
+        #: None = unknown, False = server predates the encoded wire ops
+        self._encoded_ops: Optional[bool] = None
 
     # ------------------------------------------------------------ plumbing
     def _call(self, op: str, **kwargs) -> Dict[str, Any]:
@@ -328,6 +387,11 @@ class RemoteStore:
             except RemoteError as e:
                 last = e
         else:
+            if op in _AMBIGUOUS_OPS:
+                raise AmbiguousRefUpdate(
+                    f"{op}: transport failed after the update may have "
+                    "been delivered; remote ref state is unknown — "
+                    "re-read to resolve") from last
             raise RemoteError(f"{op}: transport failed after "
                               f"{attempts} attempts") from last
         if not isinstance(reply, dict):
@@ -342,6 +406,8 @@ class RemoteStore:
                 raise RefNotFound(msg)
             if err == "ref_conflict":
                 raise RefConflict(msg)
+            if err == "codec_unavailable":
+                raise CodecUnavailable(msg)
             raise RemoteError(f"{op}: {err}: {msg}")
         return reply
 
@@ -401,7 +467,87 @@ class RemoteStore:
         return self._call("size_object", digest=digest)["size"]
 
     def delete_object(self, digest: str) -> bool:
-        raise RemoteError("remote objects are immutable; GC runs remote-side")
+        if not self.allow_delete:
+            raise RemoteError(
+                "remote objects are immutable to this client; open the "
+                "remote with allow_delete=True (repro gc --remote) to "
+                "run a remote-side sweep")
+        return bool(self._call("delete_object", digest=digest)["deleted"])
+
+    # -------------------------------------------------- encoded payloads
+    def _supports_encoded(self) -> bool:
+        return self._encoded_ops is not False
+
+    @staticmethod
+    def _is_unknown_op(e: RemoteError) -> bool:
+        return "bad_request" in str(e) and "unknown op" in str(e)
+
+    def get_encoded(self, digest: str) -> bytes:
+        return self.get_many_encoded([digest])[digest]
+
+    def put_encoded(self, payload: bytes) -> str:
+        return self.put_many_encoded([payload])[0]
+
+    def _encoded_unsupported(self, e: Optional[RemoteError] = None):
+        """A server predating the encoded wire ops answers "unknown op":
+        remember that and surface :class:`CodecUnavailable`, the same
+        signal a codec mismatch sends — callers (the transfer engine)
+        respond identically by re-sending raw, and the accounting then
+        reflects the raw bytes that actually crossed the wire."""
+        self._encoded_ops = False
+        raise CodecUnavailable(
+            "server predates the encoded wire ops") from e
+
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        """Batched fetch of framed payloads (compressed wire frames).
+        The caller decodes + digest-verifies (``decode_frame``)."""
+        digests = list(digests)
+        if not digests:
+            return {}
+        if not self._supports_encoded():
+            self._encoded_unsupported()
+        try:
+            reply = self._call("get_objects_encoded", digests=digests)
+        except RemoteError as e:
+            if self._is_unknown_op(e):
+                self._encoded_unsupported(e)
+            raise
+        out = {d: payload for d, payload in reply["objects"]}
+        missing = [d for d in digests if d not in out]
+        if missing:
+            raise ObjectNotFound(
+                f"remote returned {len(out)}/{len(digests)} encoded "
+                f"objects (first missing: {missing[0]})")
+        return out
+
+    def put_many_encoded(self, payloads: Sequence[bytes],
+                         digests: Optional[Sequence[str]] = None
+                         ) -> List[str]:
+        payloads = list(payloads)
+        if not payloads:
+            return []
+        if not self._supports_encoded():
+            self._encoded_unsupported()
+        if digests is not None and len(digests) == len(payloads):
+            # caller already decoded + verified (the transfer engine does);
+            # the server decodes and re-verifies every payload regardless,
+            # so skipping the redundant local decode loses no checking
+            items = [[d, p] for d, p in zip(digests, payloads)]
+        else:
+            items = [[sha256_hex(decode_frame(p, what="encoded payload")), p]
+                     for p in payloads]
+        try:
+            reply = self._call("put_objects_encoded", objects=items)
+        except RemoteError as e:
+            if self._is_unknown_op(e):
+                self._encoded_unsupported(e)
+            raise
+        digests = list(reply["digests"])
+        if digests != [d for d, _p in items]:
+            raise RemoteError(
+                "put_objects_encoded: server acknowledged different "
+                "digests than were sent")
+        return digests
 
     def list_objects(self, *, page_token: Optional[str] = None,
                      limit: int = 1000
@@ -528,6 +674,44 @@ class TieredStore:
     def delete_object(self, digest: str) -> bool:
         return self.local.delete_object(digest)
 
+    # -------------------------------------------------- encoded payloads
+    def _supports_encoded(self) -> bool:
+        """Forward the mounted remote's capability, so the transfer
+        engine's encoded-path kill switch sees through the tier."""
+        supports = getattr(self.remote, "_supports_encoded", None)
+        return True if supports is None else supports()
+
+    def get_encoded(self, digest: str) -> bytes:
+        try:
+            return self.local.get_encoded(digest)
+        except ObjectNotFound:
+            payload = self.remote.get_encoded(digest)
+            self.local.put_encoded(payload)  # write-back, compressed form
+            return payload
+
+    def put_encoded(self, payload: bytes) -> str:
+        return self.local.put_encoded(payload)
+
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        rest: List[str] = []
+        for d in digests:
+            try:
+                out[d] = self.local.get_encoded(d)
+            except ObjectNotFound:
+                rest.append(d)
+        if rest:
+            fetched = self.remote.get_many_encoded(rest)
+            for d, payload in fetched.items():
+                self.local.put_encoded(payload)
+                out[d] = payload
+        return out
+
+    def put_many_encoded(self, payloads: Sequence[bytes],
+                         digests: Optional[Sequence[str]] = None
+                         ) -> List[str]:
+        return self.local.put_many_encoded(payloads, digests=digests)
+
     def iter_objects(self) -> Iterator[str]:
         return self.local.iter_objects()
 
@@ -610,13 +794,28 @@ class TieredStore:
 
 
 # ----------------------------------------------------------------- connectors
-def connect(url_or_path: str, *, retries: int = 2) -> RemoteStore:
-    """Open a remote store from a URL (``http://host:port``) or a
-    filesystem path (served through an in-process loopback, so every access
-    still exercises the full wire contract)."""
+def connect(url_or_path: str, *, retries: int = 2,
+            allow_delete: bool = False) -> StoreBackend:
+    """Open a remote store from a URL or a filesystem path:
+
+    * ``http(s)://host:port`` — msgpack wire protocol (``repro serve``);
+    * ``s3://host:port/bucket`` — S3-compatible REST dialect
+      (:class:`~repro.core.s3.S3Backend`; ``repro serve --s3`` or any
+      server speaking the dialect);
+    * a path — served through an in-process loopback, so every access
+      still exercises the full wire contract.
+
+    ``allow_delete`` opens the remote-side GC sweep path
+    (``repro gc --remote``); S3 backends are direct object-store clients,
+    so the flag only gates the msgpack protocol's ``delete_object`` op."""
+    if url_or_path.startswith("s3://"):
+        from .s3 import S3Backend
+
+        return S3Backend.from_url(url_or_path, retries=retries)
     if url_or_path.startswith(("http://", "https://")):
-        return RemoteStore(HTTPTransport(url_or_path), retries=retries)
+        return RemoteStore(HTTPTransport(url_or_path), retries=retries,
+                           allow_delete=allow_delete)
     path = url_or_path[len("file://"):] if url_or_path.startswith("file://") \
         else url_or_path
     return RemoteStore(LoopbackTransport(RemoteServer(ObjectStore(path))),
-                       retries=retries)
+                       retries=retries, allow_delete=allow_delete)

@@ -1,0 +1,518 @@
+"""S3-compatible object-store backend: the paper's claim made literal.
+
+The filesystem :class:`~repro.core.store.ObjectStore` mirrors an S3 key
+scheme precisely so a real object-store backend is a drop-in replacement —
+this module is that replacement.  :class:`S3Backend` implements the full
+:class:`~repro.core.store.StoreBackend` contract over an S3-style REST
+dialect, so ``push``/``pull``/``clone``, the run-cache closure transfer,
+tiered reads and remote-side GC all run against commodity object storage
+with no catalog service in between:
+
+    keyspace        ``<bucket>/objects/<d0d1>/<d2...>``  framed blob payloads
+                    ``<bucket>/refs/<name>``             tiny digest pointers
+
+    GET / HEAD / PUT / DELETE <key>        object + ref bytes
+    GET ?list-type=2&prefix=&start-after=  ListObjectsV2-style paged listing
+    PUT + If-Match / If-None-Match         conditional writes → ref CAS
+
+Blobs are stored in the same framed (magic + codec byte) form the
+filesystem store uses at rest, so an S3 bucket and a store directory are
+byte-compatible mirrors of each other, and encoded wire transfers
+(``get_encoded``/``put_encoded``) pass payloads straight through without
+recompressing.
+
+Ref atomicity over plain conditional writes:
+
+* ``cas_ref`` is a read-compare-conditional-write loop: the version token
+  (ETag) captured at read time guards the write, so a racing writer makes
+  the conditional PUT fail with 412 instead of silently losing an update —
+  the loop re-reads and either retries (value still matches ``expected``)
+  or raises :class:`~repro.core.errors.RefConflict`.
+* ``cas_refs`` preflights EVERY expectation (capturing version tokens)
+  before writing anything — a stale expectation updates nothing — then
+  applies token-guarded conditional writes; a mid-batch 412 (concurrent
+  racer) rolls the already-applied refs back.  Unlike the server-side
+  ``cas_refs`` of :class:`~repro.core.remote.RemoteServer` the
+  conflict-then-rollback window is briefly visible to concurrent readers
+  (S3 has no multi-key transaction), which is the same contract as the
+  sync layer's per-ref fallback — and what the conformance matrix pins.
+
+A transport fault *during* a conditional write raises
+:class:`~repro.core.errors.AmbiguousRefUpdate` (the write may have landed;
+see docs/remote_store.md), never a plain failure.
+
+Against a real S3/GCS endpoint only auth signing is missing (out of scope
+here); ``tests/``'s :mod:`repro.core.s3stub` serves the same dialect from
+the stdlib so the whole stack is testable with zero new dependencies.
+"""
+
+from __future__ import annotations
+
+import threading
+import urllib.parse
+import xml.etree.ElementTree as ET
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .errors import (AmbiguousRefUpdate, ObjectNotFound, RefConflict,
+                     RefNotFound, RemoteError)
+from .store import decode_frame, encode_frame, sha256_hex
+
+_OBJ_PREFIX = "objects/"
+_REF_PREFIX = "refs/"
+_CAS_ATTEMPTS = 4  # re-read/retry rounds before a contended CAS gives up
+
+
+def _object_key(digest: str) -> str:
+    return f"{_OBJ_PREFIX}{digest[:2]}/{digest[2:]}"
+
+
+def _digest_of_key(key: str) -> str:
+    return key[len(_OBJ_PREFIX):].replace("/", "", 1)
+
+
+def _ref_key(name: str) -> str:
+    for part in name.split("/"):
+        if not part or part.startswith("."):
+            raise ValueError(f"bad ref name {name!r}")
+    return _REF_PREFIX + name
+
+
+def _local_name(tag: str) -> str:
+    """XML tag without its namespace (real S3 responses are namespaced,
+    the stub's are not — match both)."""
+    return tag.rsplit("}", 1)[-1]
+
+
+class S3Backend:
+    """``StoreBackend`` over an S3-compatible REST endpoint.
+
+    >>> remote = S3Backend("http://127.0.0.1:9000", "lake")
+    >>> remote.put(b"blob")            # PUT objects/…, framed + compressed
+    >>> remote.cas_ref("branch=main", None, digest)   # If-None-Match: *
+
+    ``pool`` bounds the HEAD/GET/PUT fan-out used to batch ``has_many`` /
+    ``get_many`` / ``put_many`` — the S3 dialect has no server-side batch
+    ops, so batching is client-side concurrency over per-thread
+    connections.
+    """
+
+    def __init__(self, endpoint: str, bucket: str, *, timeout: float = 30.0,
+                 retries: int = 2, pool: int = 8, codec: str = "auto",
+                 level: int = 3):
+        parsed = urllib.parse.urlsplit(endpoint)
+        if parsed.scheme not in ("http", "https"):
+            raise ValueError(f"unsupported endpoint scheme {parsed.scheme!r}")
+        if not bucket or "/" in bucket:
+            raise ValueError(f"bad bucket name {bucket!r}")
+        self.endpoint = endpoint.rstrip("/")
+        self.bucket = bucket
+        self.scheme = parsed.scheme
+        self.host = parsed.hostname or "127.0.0.1"
+        self.port = parsed.port or (443 if parsed.scheme == "https" else 80)
+        self.timeout = timeout
+        self.retries = retries
+        self.pool = max(1, pool)
+        self.codec = codec
+        self.level = level
+        self._local = threading.local()
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._executor_lock = threading.Lock()
+
+    @classmethod
+    def from_url(cls, url: str, **kw) -> "S3Backend":
+        """``s3://host:port/bucket`` → a backend over plain-HTTP (the stub
+        dialect; a signing layer for real S3 endpoints would slot in
+        here)."""
+        parsed = urllib.parse.urlsplit(url)
+        if parsed.scheme != "s3":
+            raise ValueError(f"not an s3 URL: {url!r}")
+        bucket = parsed.path.strip("/")
+        if not bucket:
+            raise ValueError(f"s3 URL missing a bucket: {url!r}")
+        host = parsed.hostname or "127.0.0.1"
+        port = f":{parsed.port}" if parsed.port else ""
+        return cls(f"http://{host}{port}", bucket, **kw)
+
+    # ----------------------------------------------------------- plumbing
+    def _conn(self):
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            import http.client
+
+            cls = (http.client.HTTPSConnection if self.scheme == "https"
+                   else http.client.HTTPConnection)
+            conn = cls(self.host, self.port, timeout=self.timeout)
+            self._local.conn = conn
+        return conn
+
+    def _drop_conn(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            try:
+                conn.close()
+            finally:
+                self._local.conn = None
+
+    def _request(self, method: str, key: str, *, body: Optional[bytes] = None,
+                 headers: Optional[Dict[str, str]] = None,
+                 query: Optional[Dict[str, str]] = None,
+                 idempotent: bool = True):
+        """One REST round-trip → ``(status, headers, body)``.
+
+        Idempotent requests (everything except conditional writes) retry
+        on transport faults; a conditional write that faults mid-flight
+        raises :class:`AmbiguousRefUpdate` because the server may have
+        applied it."""
+        # percent-encode the key (the server decodes): ref names may carry
+        # spaces/%/?/# — sent raw they would break http.client, truncate at
+        # the query separator, or alias with their decoded spelling
+        path = "/" + self.bucket + (
+            "/" + urllib.parse.quote(key, safe="/") if key else "")
+        if query:
+            path += "?" + urllib.parse.urlencode(query)
+        attempts = 1 + (self.retries if idempotent else 0)
+        last: Optional[Exception] = None
+        for _ in range(attempts):
+            conn = self._conn()
+            try:
+                conn.request(method, path, body=body, headers=headers or {})
+                resp = conn.getresponse()
+                data = resp.read()
+                # normalize header names: servers spell ETag/Etag/etag
+                # differently, and a missed version token would break CAS
+                return (resp.status,
+                        {k.lower(): v for k, v in resp.getheaders()}, data)
+            except Exception as e:  # noqa: BLE001 - socket/http.client zoo
+                self._drop_conn()
+                last = e
+        if not idempotent:
+            raise AmbiguousRefUpdate(
+                f"{method} {key}: transport failed after a conditional "
+                f"write may have been delivered ({last!r}); ref state is "
+                "unknown — re-read to resolve") from last
+        raise RemoteError(f"{method} {key}: transport failed after "
+                          f"{attempts} attempts ({last!r})") from last
+
+    def close(self) -> None:
+        self._drop_conn()
+        with self._executor_lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=True)
+
+    # ------------------------------------------------------------ objects
+    def _encode(self, data: bytes) -> bytes:
+        return encode_frame(data, codec=self.codec, level=self.level)
+
+    def put(self, data: bytes) -> str:
+        digest = sha256_hex(data)
+        status, _h, _b = self._request(
+            "PUT", _object_key(digest), body=self._encode(data))
+        if status not in (200, 201, 204):
+            raise RemoteError(f"put {digest}: HTTP {status}")
+        return digest
+
+    def get(self, digest: str) -> bytes:
+        data = decode_frame(self.get_encoded(digest),
+                            what=f"object {digest}")
+        if sha256_hex(data) != digest:  # never trust the wire
+            raise ObjectNotFound(f"digest mismatch for {digest} from s3")
+        return data
+
+    def has(self, digest: str) -> bool:
+        status, _h, _b = self._request("HEAD", _object_key(digest))
+        if status == 200:
+            return True
+        if status == 404:
+            return False
+        # anything else (503 throttle, 403) must NOT read as "absent":
+        # the GC mark phase trusts has(), and a swallowed server error
+        # would let the sweep delete live objects
+        raise RemoteError(f"head {digest}: HTTP {status}")
+
+    def _fan_out(self, fn, items):
+        """Run ``fn`` over ``items`` on a bounded pool (order-preserving).
+        The pool is persistent per backend so worker threads keep their
+        per-thread connections alive across calls (a sync moves many small
+        chunks — a fresh pool per chunk would pay a TCP connect per worker
+        per chunk and leak the old sockets to the GC)."""
+        if len(items) <= 1:
+            return [fn(x) for x in items]
+        with self._executor_lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(max_workers=self.pool)
+            pool = self._executor
+        return list(pool.map(fn, items))
+
+    def has_many(self, digests: Iterable[str]) -> Set[str]:
+        digests = list(digests)
+        present = self._fan_out(self.has, digests)
+        return {d for d, ok in zip(digests, present) if ok}
+
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        digests = list(digests)
+        return dict(zip(digests, self._fan_out(self.get, digests)))
+
+    def put_many(self, blobs: Sequence[bytes]) -> List[str]:
+        return self._fan_out(self.put, list(blobs))
+
+    def size(self, digest: str) -> int:
+        """Stored (framed/compressed) size, same semantics as the
+        filesystem store's on-disk size."""
+        status, headers, _b = self._request("HEAD", _object_key(digest))
+        if status != 200:
+            raise ObjectNotFound(digest)
+        return int(headers.get("content-length", 0))
+
+    def delete_object(self, digest: str) -> bool:
+        """Remote-side GC sweep primitive.  Idempotent: missing → False."""
+        status, _h, _b = self._request("DELETE", _object_key(digest))
+        if status in (200, 204):
+            return True
+        if status == 404:
+            return False
+        raise RemoteError(f"delete {digest}: HTTP {status}")
+
+    # -------------------------------------------------- encoded payloads
+    def get_encoded(self, digest: str) -> bytes:
+        status, _h, body = self._request("GET", _object_key(digest))
+        if status == 404:
+            raise ObjectNotFound(digest)
+        if status != 200:
+            raise RemoteError(f"get {digest}: HTTP {status}")
+        return body
+
+    def put_encoded(self, payload: bytes) -> str:
+        # decode to learn + verify the digest, upload the ORIGINAL payload:
+        # compression paid at the source is never re-paid here
+        digest = sha256_hex(decode_frame(payload, what="encoded payload"))
+        status, _h, _b = self._request(
+            "PUT", _object_key(digest), body=payload)
+        if status not in (200, 201, 204):
+            raise RemoteError(f"put {digest}: HTTP {status}")
+        return digest
+
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        digests = list(digests)
+        return dict(zip(digests, self._fan_out(self.get_encoded, digests)))
+
+    def put_many_encoded(self, payloads: Sequence[bytes],
+                         digests: Optional[Sequence[str]] = None
+                         ) -> List[str]:
+        # the digest hint is ignored: the S3 dialect has no server-side
+        # verification, so the client-side decode here is the only check
+        # standing between a corrupt payload and the bucket
+        return self._fan_out(self.put_encoded, list(payloads))
+
+    # ------------------------------------------------------------ listing
+    def _list_keys(self, prefix: str, *, start_after: Optional[str],
+                   limit: int) -> Tuple[List[str], bool]:
+        """One ListObjectsV2-style page: ``(sorted keys, truncated)``.
+
+        Truncation comes from the response's ``IsTruncated`` field, never
+        from comparing the page size to ``limit`` — servers cap max-keys
+        (S3: 1000), so a short page can still have more behind it."""
+        query = {"list-type": "2", "prefix": prefix,
+                 "max-keys": str(max(1, limit))}
+        if start_after:
+            query["start-after"] = start_after
+        status, _h, body = self._request("GET", "", query=query)
+        if status != 200:
+            raise RemoteError(f"list {prefix!r}: HTTP {status}")
+        try:
+            root = ET.fromstring(body)
+        except ET.ParseError as e:
+            raise RemoteError(f"list {prefix!r}: malformed XML ({e})") from e
+        keys: List[str] = []
+        truncated = False
+        for el in root.iter():
+            name = _local_name(el.tag)
+            if name == "Contents":
+                for child in el:
+                    if _local_name(child.tag) == "Key":
+                        keys.append(child.text or "")
+            elif name == "IsTruncated":
+                truncated = (el.text or "").strip().lower() == "true"
+        return keys, truncated
+
+    def list_objects(self, *, page_token: Optional[str] = None,
+                     limit: int = 1000) -> Tuple[List[str], Optional[str]]:
+        limit = max(1, limit)
+        start = _object_key(page_token) if page_token else None
+        keys, truncated = self._list_keys(_OBJ_PREFIX, start_after=start,
+                                          limit=limit)
+        page = [_digest_of_key(k) for k in keys]
+        return page, (page[-1] if page and truncated else None)
+
+    def iter_objects(self) -> Iterator[str]:
+        token: Optional[str] = None
+        while True:
+            page, token = self.list_objects(page_token=token)
+            yield from page
+            if token is None:
+                return
+
+    # --------------------------------------------------------------- refs
+    def _read_ref(self, name: str) -> Tuple[Optional[str], Optional[str]]:
+        """Current ``(value, version_token)`` of a ref; (None, None) when
+        it does not exist.  The token guards conditional writes."""
+        status, headers, body = self._request("GET", _ref_key(name))
+        if status == 404:
+            return None, None
+        if status != 200:
+            raise RemoteError(f"get_ref {name}: HTTP {status}")
+        return body.decode().strip(), headers.get("etag")
+
+    def get_ref(self, name: str) -> str:
+        value, _etag = self._read_ref(name)
+        if value is None:
+            raise RefNotFound(name)
+        return value
+
+    def set_ref(self, name: str, digest: str) -> None:
+        status, _h, _b = self._request(
+            "PUT", _ref_key(name), body=digest.encode())
+        if status not in (200, 201, 204):
+            raise RemoteError(f"set_ref {name}: HTTP {status}")
+
+    def delete_ref(self, name: str) -> None:
+        status, _h, _b = self._request("DELETE", _ref_key(name))
+        if status == 404:
+            raise RefNotFound(name)
+        if status not in (200, 204):
+            raise RemoteError(f"delete_ref {name}: HTTP {status}")
+
+    def _conditional_put(self, name: str, digest: str,
+                         etag: Optional[str]) -> Tuple[bool, Optional[str]]:
+        """Token-guarded ref write: ``If-Match`` against the captured
+        version, ``If-None-Match: *`` for create-only.  Returns
+        ``(applied, new_etag)``; False means 412 (a racer moved the ref
+        between our read and this write)."""
+        headers = ({"If-Match": etag} if etag is not None
+                   else {"If-None-Match": "*"})
+        status, resp_headers, _b = self._request(
+            "PUT", _ref_key(name), body=digest.encode(), headers=headers,
+            idempotent=False)
+        if status == 412:
+            return False, None
+        if status not in (200, 201, 204):
+            raise RemoteError(f"cas_ref {name}: HTTP {status}")
+        return True, resp_headers.get("etag")
+
+    def _conditional_delete(self, name: str, etag: str) -> None:
+        """Token-guarded ref delete (rollback of a create): 412 means a
+        racer moved the ref since our write — their update stays."""
+        status, _h, _b = self._request(
+            "DELETE", _ref_key(name), headers={"If-Match": etag},
+            idempotent=False)
+        if status not in (200, 204, 404, 412):
+            raise RemoteError(f"conditional delete {name}: HTTP {status}")
+
+    def cas_ref(self, name: str, expected: Optional[str], new: str) -> None:
+        """Compare-and-set via conditional write.
+
+        Value semantics match :meth:`ObjectStore.cas_ref` exactly: the
+        *current value* is compared against ``expected``; the version
+        token only makes the read-compare-write atomic (a 412 from a
+        concurrent writer re-reads instead of clobbering)."""
+        for _ in range(_CAS_ATTEMPTS):
+            current, etag = self._read_ref(name)
+            if current != expected:
+                raise RefConflict(
+                    f"ref {name}: expected {expected!r}, found {current!r}")
+            applied, _new_etag = self._conditional_put(name, new, etag)
+            if applied:
+                return
+        raise RefConflict(
+            f"ref {name}: conditional write kept losing races "
+            f"({_CAS_ATTEMPTS} attempts)")
+
+    def cas_refs(self, updates: Sequence[Tuple[str, Optional[str], str]]
+                 ) -> None:
+        """Multi-ref CAS over conditional writes.
+
+        Every expectation is validated (and its version token captured)
+        before ANY write — one stale expectation updates nothing.  The
+        token-guarded writes then apply in order; a mid-batch 412 from a
+        concurrent racer rolls the applied prefix back.  See the module
+        docstring for how this differs from a server-side transactional
+        ``cas_refs``."""
+        tokens: List[Optional[str]] = []
+        for name, expected, _new in updates:
+            current, etag = self._read_ref(name)
+            if current != expected:
+                raise RefConflict(
+                    f"ref {name}: expected {expected!r}, found {current!r} "
+                    "(no ref in this batch was updated)")
+            tokens.append(etag)
+        applied: List[Tuple[str, Optional[str], Optional[str]]] = []
+        for (name, expected, new), etag in zip(updates, tokens):
+            try:
+                ok, new_etag = self._conditional_put(name, new, etag)
+            except AmbiguousRefUpdate:
+                # the write may have landed before the fault: resolve by
+                # re-read so a mid-batch fault can never leave the prefix
+                # torn behind an "unknown" diagnosis
+                try:
+                    current, cur_etag = self._read_ref(name)
+                except RemoteError:
+                    self._rollback(applied)
+                    raise
+                if current == new:
+                    ok, new_etag = True, cur_etag  # it DID apply: continue
+                else:
+                    self._rollback(applied)
+                    raise RemoteError(
+                        f"ref {name}: transport fault during conditional "
+                        "write; the ref was re-read and verified unchanged "
+                        "— applied refs were rolled back") from None
+            except RemoteError:
+                self._rollback(applied)
+                raise
+            if not ok:
+                self._rollback(applied)
+                raise RefConflict(
+                    f"ref {name}: lost a race mid-batch; already-applied "
+                    "refs were rolled back")
+            applied.append((name, expected, new_etag))
+
+    def _rollback(self, applied) -> None:
+        """Best-effort restore of already-applied conditional writes."""
+        for name, expected, new_etag in reversed(applied):
+            try:
+                if expected is None:
+                    # we created it: undo is a delete — guarded by OUR
+                    # write's token, so a racer who CASed the ref onward
+                    # since keeps their committed update (412, not clobber)
+                    if new_etag is not None:
+                        self._conditional_delete(name, new_etag)
+                    else:
+                        self.delete_ref(name)
+                else:
+                    # guarded by OUR write's token: if a racer moved the
+                    # ref since, the 412 leaves their update in place
+                    self._conditional_put(name, expected, new_etag)
+            except (RemoteError, RefConflict, RefNotFound):
+                pass  # best effort: the racer's update wins
+
+    def iter_refs(self, prefix: str = "") -> Iterator[str]:
+        token: Optional[str] = None
+        while True:
+            page, token = self.list_refs(prefix, page_token=token)
+            for name, _digest in page:
+                yield name
+            if token is None:
+                return
+
+    def list_refs(self, prefix: str = "", *,
+                  page_token: Optional[str] = None, limit: int = 1000
+                  ) -> Tuple[List[Tuple[str, str]], Optional[str]]:
+        limit = max(1, limit)
+        start = _REF_PREFIX + page_token if page_token else None
+        keys, truncated = self._list_keys(_REF_PREFIX + prefix,
+                                          start_after=start, limit=limit)
+        names = [k[len(_REF_PREFIX):] for k in keys]
+        values = self._fan_out(lambda n: self._read_ref(n)[0], names)
+        page = [(n, v) for n, v in zip(names, values) if v is not None]
+        return page, (names[-1] if names and truncated else None)

@@ -1,0 +1,249 @@
+"""In-process stub S3 server: the dialect :class:`~repro.core.s3.S3Backend`
+speaks, served from the stdlib with zero new dependencies.
+
+One bucket, backed by a plain directory whose layout is EXACTLY the
+filesystem :class:`~repro.core.store.ObjectStore` tree (``objects/ab/…``,
+``refs/…``) — so the tree a stub serves is simultaneously readable as a
+local store, which is what lets the sync conformance harness use a direct
+``ObjectStore`` over the same directory as the ground-truth oracle for the
+``s3`` leg.
+
+Dialect (the subset of the S3 REST API the backend needs):
+
+    GET    /<bucket>/<key>                     200 body + ETag | 404
+    HEAD   /<bucket>/<key>                     200 headers     | 404
+    PUT    /<bucket>/<key>                     200 + ETag
+           If-Match: <etag>                    412 unless the current
+                                               version matches
+           If-None-Match: *                    412 unless the key is absent
+    DELETE /<bucket>/<key>                     204 | 404
+           If-Match: <etag>                    412 unless the current
+                                               version matches
+    GET    /<bucket>?list-type=2&prefix=P      ListObjectsV2-style XML:
+           [&start-after=K][&max-keys=N]       sorted keys, IsTruncated
+
+Version tokens (ETags) are the sha-256 of the stored bytes — fine for CAS
+because ref semantics compare *values* (ABA on equal content is, by
+definition, not a conflict).  Conditional evaluation and the write/delete
+it guards happen under one server-side lock, which is what makes the
+backend's read-compare-conditional-write loop linearizable per key.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import List, Optional, Tuple
+from xml.sax.saxutils import escape
+
+_MAX_KEYS_CAP = 1000
+
+
+def _etag(data: bytes) -> str:
+    return '"' + hashlib.sha256(data).hexdigest() + '"'
+
+
+class _BucketTree:
+    """Key → file mapping over one directory, with atomic writes and
+    lock-guarded conditional mutations."""
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.lock = threading.Lock()
+
+    def _path(self, key: str) -> Path:
+        parts = key.split("/")
+        for part in parts:
+            if not part or part.startswith(".") or part == "..":
+                raise ValueError(f"bad key {key!r}")
+        return self.root.joinpath(*parts)
+
+    def read(self, key: str) -> Optional[bytes]:
+        try:
+            return self._path(key).read_bytes()
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def write(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def delete(self, key: str) -> bool:
+        try:
+            self._path(key).unlink()
+            return True
+        except (FileNotFoundError, ValueError):
+            return False
+
+    def keys(self, prefix: str) -> List[str]:
+        """All keys under ``prefix``, sorted (dotfiles — tmp writes, the
+        oracle store's ``.cas-lock`` — are invisible)."""
+        out: List[str] = []
+        for dirpath, dirnames, filenames in os.walk(self.root):
+            dirnames[:] = sorted(d for d in dirnames if not d.startswith("."))
+            rel = Path(dirpath).relative_to(self.root)
+            for fn in filenames:
+                if fn.startswith("."):
+                    continue
+                key = fn if rel == Path(".") else (rel / fn).as_posix()
+                if key.startswith(prefix):
+                    out.append(key)
+        return sorted(out)
+
+
+def _list_xml(bucket: str, prefix: str, keys: List[str],
+              truncated: bool) -> bytes:
+    contents = "".join(
+        f"<Contents><Key>{escape(k)}</Key></Contents>" for k in keys)
+    return (
+        '<?xml version="1.0" encoding="UTF-8"?>'
+        f"<ListBucketResult><Name>{escape(bucket)}</Name>"
+        f"<Prefix>{escape(prefix)}</Prefix>"
+        f"<KeyCount>{len(keys)}</KeyCount>"
+        f"<IsTruncated>{'true' if truncated else 'false'}</IsTruncated>"
+        f"{contents}</ListBucketResult>").encode()
+
+
+def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
+             bucket: str = "lake") -> Tuple[object, str]:
+    """Serve ``root`` as one S3-dialect bucket on a daemon thread.
+
+    Returns ``(httpd, url)`` where ``url`` is the ``s3://host:port/bucket``
+    spelling :func:`repro.core.remote.connect` (and therefore
+    ``repro remote add``/``clone``) accepts directly.  ``port=0`` picks a
+    free port; call ``httpd.shutdown()`` to stop.
+    """
+    import http.server
+    import urllib.parse
+
+    tree = _BucketTree(root)
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        # ------------------------------------------------------ plumbing
+        def _reply(self, status: int, body: bytes = b"",
+                   headers: Optional[dict] = None) -> None:
+            self.send_response(status)
+            for name, value in (headers or {}).items():
+                self.send_header(name, value)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            if self.command != "HEAD":
+                self.wfile.write(body)
+
+        def _key(self) -> Optional[str]:
+            """The object key, or None (bad bucket / bucket-level path)."""
+            path = urllib.parse.urlsplit(self.path).path
+            parts = path.lstrip("/").split("/", 1)
+            if not parts or parts[0] != bucket:
+                return None
+            return urllib.parse.unquote(parts[1]) if len(parts) == 2 else ""
+
+        # ------------------------------------------------------- listing
+        def _list(self) -> None:
+            query = dict(urllib.parse.parse_qsl(
+                urllib.parse.urlsplit(self.path).query))
+            prefix = query.get("prefix", "")
+            start_after = query.get("start-after", "")
+            limit = min(int(query.get("max-keys", _MAX_KEYS_CAP) or 1),
+                        _MAX_KEYS_CAP)
+            keys = [k for k in tree.keys(prefix)
+                    if not start_after or k > start_after]
+            page, truncated = keys[:limit], len(keys) > limit
+            self._reply(200, _list_xml(bucket, prefix, page, truncated),
+                        {"Content-Type": "application/xml"})
+
+        # ------------------------------------------------------- methods
+        def do_GET(self):  # noqa: N802 - stdlib naming
+            key = self._key()
+            if key is None:
+                self._reply(404)
+                return
+            if key == "":
+                self._list()
+                return
+            data = tree.read(key)
+            if data is None:
+                self._reply(404)
+                return
+            self._reply(200, data, {"ETag": _etag(data),
+                                    "Content-Type":
+                                    "application/octet-stream"})
+
+        def do_HEAD(self):  # noqa: N802
+            key = self._key()
+            data = tree.read(key) if key else None
+            if data is None:
+                self._reply(404)
+                return
+            self._reply(200, data, {"ETag": _etag(data)})
+
+        def do_PUT(self):  # noqa: N802
+            key = self._key()
+            if not key:
+                self._reply(404)
+                return
+            length = int(self.headers.get("Content-Length", 0))
+            body = self.rfile.read(length)
+            if_match = self.headers.get("If-Match")
+            if_none = self.headers.get("If-None-Match")
+            # conditional evaluation + write are one critical section:
+            # this lock is what makes client-side ref CAS linearizable
+            with tree.lock:
+                if if_match is not None or if_none is not None:
+                    current = tree.read(key)
+                    if if_none == "*" and current is not None:
+                        self._reply(412)
+                        return
+                    if if_match is not None and (
+                            current is None or _etag(current) != if_match):
+                        self._reply(412)
+                        return
+                try:
+                    tree.write(key, body)
+                except ValueError:
+                    self._reply(400)
+                    return
+            self._reply(200, b"", {"ETag": _etag(body)})
+
+        def do_DELETE(self):  # noqa: N802
+            key = self._key()
+            if not key:
+                self._reply(404)
+                return
+            if_match = self.headers.get("If-Match")
+            with tree.lock:
+                if if_match is not None:
+                    current = tree.read(key)
+                    if current is None:
+                        self._reply(404)
+                        return
+                    if _etag(current) != if_match:
+                        self._reply(412)
+                        return
+                deleted = tree.delete(key)
+            self._reply(204 if deleted else 404)
+
+        def log_message(self, *args):  # quiet: tests hammer the endpoint
+            pass
+
+    httpd = http.server.ThreadingHTTPServer((host, port), Handler)
+    httpd.daemon_threads = True
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    url = (f"s3://{httpd.server_address[0]}:{httpd.server_address[1]}"
+           f"/{bucket}")
+    return httpd, url

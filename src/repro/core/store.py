@@ -43,7 +43,7 @@ try:  # POSIX file locking for cross-process CAS; absent on Windows
 except ImportError:  # pragma: no cover - non-POSIX fallback: thread lock only
     fcntl = None
 
-from .errors import ObjectNotFound, RefConflict, RefNotFound
+from .errors import CodecUnavailable, ObjectNotFound, RefConflict, RefNotFound
 
 _MAGIC = b"RPR1"  # blob framing: magic + 1 byte codec id
 _CODEC_RAW = b"\x00"
@@ -56,6 +56,53 @@ WRITE_CODECS = ("auto", "raw", "zlib") + (("zstd",) if zstd else ())
 
 def sha256_hex(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+def frame_raw(data: bytes) -> bytes:
+    """Frame ``data`` uncompressed (magic + raw codec byte).  The shape a
+    backend without a compressor hands out for encoded transfers."""
+    return _MAGIC + _CODEC_RAW + data
+
+
+def encode_frame(data: bytes, *, codec: str = "auto", level: int = 3) -> bytes:
+    """Frame (and compress) raw content bytes the way the store does at
+    rest — the encoder counterpart of :func:`decode_frame`, for backends
+    that keep blobs in framed form off-disk (the S3 keyspace)."""
+    if codec == "auto":
+        codec = "zstd" if zstd is not None else "zlib"
+    if len(data) <= 64 or codec == "raw":
+        return _MAGIC + _CODEC_RAW + data
+    if codec == "zstd":
+        if zstd is None:
+            raise ValueError("codec='zstd' but zstandard is not installed")
+        return _MAGIC + _CODEC_ZSTD + zstd.ZstdCompressor(
+            level=level).compress(data)
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(data, min(level, 9))
+
+
+def decode_frame(payload: bytes, *, what: str = "object") -> bytes:
+    """Decode one framed blob payload back to its raw content bytes.
+
+    The inverse of the store's at-rest framing, shared by every consumer of
+    *encoded* blobs (the on-disk payloads, compressed wire frames, the S3
+    keyspace): magic check, codec dispatch, decompress.  Raises
+    :class:`CodecUnavailable` when the payload needs a compressor this host
+    does not have (zstd payload, no zstandard package) so transfer paths
+    can fall back to raw blobs instead of failing the whole operation."""
+    if payload[:4] != _MAGIC:
+        raise ObjectNotFound(f"corrupt {what}: bad frame magic")
+    codec, body = payload[4:5], payload[5:]
+    if codec == _CODEC_RAW:
+        return body
+    if codec == _CODEC_ZLIB:
+        return zlib.decompress(body)
+    if codec == _CODEC_ZSTD:
+        if zstd is None:
+            raise CodecUnavailable(
+                f"{what} is zstd-compressed but the zstandard package "
+                "is not installed")
+        return zstd.ZstdDecompressor().decompress(body)
+    raise ObjectNotFound(f"unknown codec {codec!r} for {what}")
 
 
 @runtime_checkable
@@ -89,6 +136,20 @@ class StoreBackend(Protocol):
     def put_many(self, blobs: Sequence[bytes]) -> List[str]: ...
     def size(self, digest: str) -> int: ...
     def delete_object(self, digest: str) -> bool: ...
+    # encoded (framed, possibly compressed) payload transfer: a blob
+    # compressed once at rest crosses every hop in that form — see
+    # ``decode_frame`` for the framing and docs/remote_store.md for the
+    # wire-frame compression contract
+    def get_encoded(self, digest: str) -> bytes: ...
+    def put_encoded(self, payload: bytes) -> str: ...
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]: ...
+    # ``digests`` is an optional hint from a caller that already decoded
+    # and digest-verified the payloads (the transfer engine does, for
+    # accounting): backends whose far side re-verifies anyway may use it
+    # to skip a redundant local decode
+    def put_many_encoded(self, payloads: Sequence[bytes],
+                         digests: Optional[Sequence[str]] = None
+                         ) -> List[str]: ...
     def iter_objects(self) -> Iterator[str]: ...
     def list_objects(self, *, page_token: Optional[str] = None,
                      limit: int = 1000
@@ -154,20 +215,12 @@ class ObjectStore:
         return _MAGIC + _CODEC_ZLIB + zlib.compress(data, min(self.level, 9))
 
     def _decode(self, digest: str, payload: bytes) -> bytes:
-        if payload[:4] != _MAGIC:
-            raise ObjectNotFound(f"corrupt object {digest}")
-        codec, body = payload[4:5], payload[5:]
-        if codec == _CODEC_RAW:
-            return body
-        if codec == _CODEC_ZLIB:
-            return zlib.decompress(body)
-        if codec == _CODEC_ZSTD:
-            if self._dctx is None:
-                raise ObjectNotFound(
-                    f"object {digest} is zstd-compressed but the zstandard "
-                    "package is not installed")
-            return self._dctx.decompress(body)
-        raise ObjectNotFound(f"unknown codec {codec!r} for object {digest}")
+        if payload[4:5] == _CODEC_ZSTD and self._dctx is not None:
+            # hot path: reuse this store's decompressor across reads
+            if payload[:4] != _MAGIC:
+                raise ObjectNotFound(f"corrupt object {digest}")
+            return self._dctx.decompress(payload[5:])
+        return decode_frame(payload, what=f"object {digest}")
 
     def put(self, data: bytes) -> str:
         digest = sha256_hex(data)
@@ -223,6 +276,54 @@ class ObjectStore:
             return True
         except FileNotFoundError:
             return False
+
+    # ------------------------------------------------- encoded payloads
+    def get_encoded(self, digest: str) -> bytes:
+        """The object's framed at-rest payload, compression and all.
+
+        What compressed wire frames carry: a blob pays for compression
+        once (at ``put``) and crosses every subsequent hop in that form.
+        The receiver (:meth:`put_encoded`) decodes and digest-verifies, so
+        handing out the payload un-reverified is safe."""
+        try:
+            payload = self._path(digest).read_bytes()
+        except FileNotFoundError:
+            raise ObjectNotFound(digest) from None
+        if payload[:4] != _MAGIC:
+            raise ObjectNotFound(f"corrupt object {digest}")
+        return payload
+
+    def put_encoded(self, payload: bytes) -> str:
+        """Store a framed payload as-is (no recompression): decode to
+        verify the content digest, then land the original payload under
+        it.  Raises :class:`~repro.core.errors.CodecUnavailable` when the
+        payload's codec cannot be decoded here — callers fall back to raw
+        transfer (the sender re-sends uncompressed)."""
+        data = decode_frame(payload, what="encoded payload")
+        digest = sha256_hex(data)
+        path = self._path(digest)
+        if path.exists():
+            return digest
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return digest
+
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        return {d: self.get_encoded(d) for d in digests}
+
+    def put_many_encoded(self, payloads: Sequence[bytes],
+                         digests: Optional[Sequence[str]] = None
+                         ) -> List[str]:
+        # the digest hint is ignored here: this store is where the payload
+        # comes to rest, so it always decodes and verifies for itself
+        return [self.put_encoded(p) for p in payloads]
 
     def size(self, digest: str) -> int:
         """On-disk (compressed) size — used by benchmarks."""

@@ -54,11 +54,12 @@ import msgpack
 
 from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, remote_tracking_ref,
                       remote_tracking_tag_ref)
-from .errors import (ObjectNotFound, RefConflict, RefNotFound, RemoteError,
+from .errors import (AmbiguousRefUpdate, CodecUnavailable, ObjectNotFound,
+                     RefConflict, RefNotFound, RemoteError, ReproError,
                      SyncError)
 from .ledger import RunLedger
 from .runcache import RunCache
-from .store import ObjectStore, StoreBackend
+from .store import ObjectStore, StoreBackend, decode_frame, sha256_hex
 
 _HAS_CHUNK = 256  # digests per batched-exists request
 _BLOB_CHUNK = 8   # leaf blobs per batched get/put request
@@ -87,14 +88,22 @@ class SyncReport:
     objects_sent: int = 0
     objects_skipped: int = 0
     bytes_sent: int = 0
+    bytes_wire: int = 0  # framed/compressed bytes actually sent per object
     cache_entries: int = 0
     runs: int = 0
     ref_updated: bool = False
+    #: how the final ref update landed: "atomic" (one all-or-nothing
+    #: cas_refs), "resolved" (a transport fault left the CAS ambiguous and
+    #: a re-read confirmed it applied), "fallback" (per-ref CAS with
+    #: rollback against a server predating cas_refs)
+    ref_update_mode: str = "atomic"
 
     def summary(self) -> str:
+        wire = (f" (wire={self.bytes_wire})"
+                if self.bytes_wire != self.bytes_sent else "")
         return (f"{self.direction} {self.branch}: head={self.head[:12]} "
                 f"objects={self.objects_sent} (+{self.objects_skipped} "
-                f"deduped) bytes={self.bytes_sent} "
+                f"deduped) bytes={self.bytes_sent}{wire} "
                 f"cache_entries={self.cache_entries} runs={self.runs} "
                 f"ref_updated={self.ref_updated}")
 
@@ -116,15 +125,19 @@ class MultiSyncReport:
     objects_sent: int = 0
     objects_skipped: int = 0
     bytes_sent: int = 0
+    bytes_wire: int = 0  # framed/compressed bytes actually sent per object
     cache_entries: int = 0
     runs: int = 0
+    ref_update_mode: str = "atomic"  # see SyncReport.ref_update_mode
 
     def summary(self) -> str:
         names = sorted(self.branches)
         names += [f"tag:{t}" for t in sorted(self.tags)]
+        wire = (f" (wire={self.bytes_wire})"
+                if self.bytes_wire != self.bytes_sent else "")
         return (f"{self.direction} [{', '.join(names)}]: "
                 f"objects={self.objects_sent} (+{self.objects_skipped} "
-                f"deduped) bytes={self.bytes_sent} "
+                f"deduped) bytes={self.bytes_sent}{wire} "
                 f"cache_entries={self.cache_entries} runs={self.runs} "
                 f"refs_updated={len(self.updated_refs)}")
 
@@ -164,11 +177,17 @@ class _TransferEngine:
     _COMMIT, _SNAPSHOT, _BLOB = "c", "s", "b"
 
     def __init__(self, src: StoreBackend, dst: StoreBackend, report,
-                 *, jobs: Optional[int] = None):
+                 *, jobs: Optional[int] = None, compress_wire: bool = True):
         self.src = src
         self.dst = dst
         self.report = report  # any object with the Sync*Report counters
         self.jobs = max(1, jobs) if jobs is not None else _default_jobs()
+        # leaf blobs move as framed at-rest payloads when both sides speak
+        # the encoded contract: compressed ONCE (at the source's original
+        # put), verified at every hop, never recompressed
+        self._encoded = (compress_wire
+                         and hasattr(src, "get_many_encoded")
+                         and hasattr(dst, "put_many_encoded"))
         # jobs=1 preserves the PR-2 wire pattern — one blob per round-trip,
         # the finest resume granularity; with a pool, gets/puts pipeline in
         # chunks (one wire frame per chunk, one coordinator wakeup per
@@ -221,19 +240,58 @@ class _TransferEngine:
         return ("fetched", [(k, d, blobs[d]) for k, d in items])
 
     def _task_copy(self, digests: List[str]):
+        if self._encoded:
+            try:
+                return self._task_copy_encoded(digests)
+            except CodecUnavailable:
+                # a payload needs a compressor one side lacks (e.g. zstd
+                # blob, zlib-only host): re-send this chunk raw — the
+                # destination re-encodes with its own codec.  When a SIDE
+                # (not a payload) is the problem — a server predating the
+                # encoded ops — stop trying for the rest of the transfer,
+                # or every later chunk would fetch and decode its payloads
+                # twice.  (Benign race: workers flip a monotonic bool.)
+                for side in (self.src, self.dst):
+                    supports = getattr(side, "_supports_encoded", None)
+                    if supports is not None and not supports():
+                        self._encoded = False
         blobs = _get_many(self.src, digests)
         written = _put_many(self.dst, [blobs[d] for d in digests])
         for digest, got in zip(digests, written):
             if got != digest:  # defensive: src handed us corrupt bytes
                 raise SyncError(f"transfer of {digest} produced {got}")
-        return ("copied", [(d, len(blobs[d])) for d in digests])
+        return ("copied", [(d, len(blobs[d]), len(blobs[d]))
+                           for d in digests])
+
+    def _task_copy_encoded(self, digests: List[str]):
+        """Leaf copy in framed form: fetch the source's at-rest payloads,
+        verify them here (never trust the wire — and learn the uncompressed
+        size the report counts), forward the ORIGINAL payloads to the
+        destination, which decodes and verifies again before storing them
+        as-is."""
+        payloads = self.src.get_many_encoded(digests)
+        sizes: Dict[str, int] = {}
+        for d in digests:
+            data = decode_frame(payloads[d], what=f"object {d}")
+            if sha256_hex(data) != d:
+                raise SyncError(f"transfer of {d}: payload digest mismatch")
+            sizes[d] = len(data)
+        # digests ride along as a verified hint so a wire destination can
+        # skip re-decoding what this loop just checked
+        written = self.dst.put_many_encoded([payloads[d] for d in digests],
+                                            digests=digests)
+        for digest, got in zip(digests, written):
+            if got != digest:
+                raise SyncError(f"transfer of {digest} produced {got}")
+        return ("copied", [(d, sizes[d], len(payloads[d]))
+                           for d in digests])
 
     def _task_put(self, items: List[Tuple[str, bytes]]):
         written = _put_many(self.dst, [b for _d, b in items])
         for (digest, blob), got in zip(items, written):
             if got != digest:
                 raise SyncError(f"transfer of {digest} produced {got}")
-        return ("put", [(d, len(b)) for d, b in items])
+        return ("put", [(d, len(b), len(b)) for d, b in items])
 
     # -------------------------------------------------------- coordinator
     def _finish(self, digest: str) -> None:
@@ -282,9 +340,10 @@ class _TransferEngine:
                     self._npending[digest] = pending
                     self._payload[digest] = blob
         else:  # "copied" | "put" — objects landed on dst
-            for digest, nbytes in event[1]:
+            for digest, nbytes, wire_bytes in event[1]:
                 self.report.objects_sent += 1
                 self.report.bytes_sent += nbytes
+                self.report.bytes_wire += wire_bytes
                 self._finish(digest)
 
     @staticmethod
@@ -378,6 +437,7 @@ class _TransferEngine:
                     raise SyncError(f"transfer of {digest} produced {got}")
                 self.report.objects_sent += 1
                 self.report.bytes_sent += len(blob)
+                self.report.bytes_wire += len(blob)
                 self.done.add(digest)
 
 
@@ -528,35 +588,94 @@ def _match_refs(store: StoreBackend, prefix: str,
     return list(dict.fromkeys(out))
 
 
+def _refs_match(store: StoreBackend,
+                updates: Sequence[Tuple[str, Optional[str], str]]) -> bool:
+    """True iff every ref in ``updates`` currently holds its NEW value —
+    how an ambiguous CAS is resolved by re-reading the authoritative side."""
+    for name, _expected, new in updates:
+        try:
+            if store.get_ref(name) != new:
+                return False
+        except RefNotFound:
+            return False
+    return True
+
+
 def _cas_refs(store: StoreBackend,
-              updates: Sequence[Tuple[str, Optional[str], str]]) -> None:
-    """All-or-nothing ref update, with a CAS-with-rollback fallback for
-    stores that only speak the PR-2 contract — a backend object missing
-    ``cas_refs`` entirely, or a ``RemoteStore`` fronting an old server
-    that rejects the op as unknown (the server refuses *before* touching
-    any ref, so falling back is safe).  The fallback is best-effort: the
-    window between a conflict and its rollback is visible to concurrent
-    readers, which native ``cas_refs`` never exposes."""
+              updates: Sequence[Tuple[str, Optional[str], str]]) -> str:
+    """All-or-nothing ref update.  Returns how it landed (recorded in the
+    sync report): ``"atomic"`` — one native ``cas_refs`` batch;
+    ``"resolved"`` — the batch was interrupted by a transport fault
+    (:class:`AmbiguousRefUpdate`) and a re-read of the refs confirmed it
+    had in fact applied; ``"fallback"`` — per-ref CAS against a store that
+    only speaks the PR-2 contract (no ``cas_refs``; the server refuses the
+    unknown op *before* touching any ref, so falling back is safe).
+
+    The fallback rolls already-applied refs back on ANY mid-batch failure
+    — conflict, transport fault, crash-in-flight — never just on a clean
+    ``RefConflict``: a fault between two per-ref CAS calls must not leave
+    some refs updated and others stale (the torn state native ``cas_refs``
+    exists to prevent).  An ambiguous per-ref CAS is resolved by re-read
+    before deciding whether it belongs to the applied set.  The window
+    between a failure and its rollback is visible to concurrent readers,
+    which native ``cas_refs`` never exposes."""
     native = getattr(store, "cas_refs", None)
     if native is not None:
         try:
             native(updates)
-            return
+            return "atomic"
+        except AmbiguousRefUpdate as ambiguous:
+            # the batch may have landed before the fault: re-read the refs
+            # to resolve before reporting a failure that silently succeeded
+            try:
+                applied = _refs_match(store, updates)
+            except ReproError:
+                raise ambiguous  # cannot re-read either: stay ambiguous
+            if applied:
+                return "resolved"
+            raise RemoteError(
+                "ref update interrupted by a transport fault; the refs "
+                "were re-read and verified unchanged — retry the "
+                "operation") from ambiguous
         except RemoteError as e:
             if not ("bad_request" in str(e) and "unknown op" in str(e)):
                 raise
-    applied: List[Tuple[str, Optional[str], str]] = []
+    applied_refs: List[Tuple[str, Optional[str], str]] = []
     try:
         for name, expected, new in updates:
-            store.cas_ref(name, expected, new)
-            applied.append((name, expected, new))
-    except RefConflict:
-        for name, expected, new in reversed(applied):
-            if expected is None:
-                store.delete_ref(name)
-            else:
-                store.cas_ref(name, new, expected)
+            try:
+                store.cas_ref(name, expected, new)
+            except AmbiguousRefUpdate as ambiguous:
+                try:
+                    current: Optional[str] = store.get_ref(name)
+                except RefNotFound:
+                    current = None
+                except ReproError:
+                    raise ambiguous from None
+                if current != new:
+                    # verified not applied → clean failure; the outer
+                    # handler rolls back the refs applied before this one
+                    raise RemoteError(
+                        f"ref update for {name!r} interrupted by a "
+                        "transport fault; the ref was re-read and "
+                        "verified unchanged") from ambiguous
+            applied_refs.append((name, expected, new))
+    except BaseException as failure:
+        torn: List[str] = []
+        for name, expected, new in reversed(applied_refs):
+            try:
+                if expected is None:
+                    store.delete_ref(name)
+                else:
+                    store.cas_ref(name, new, expected)
+            except ReproError:
+                torn.append(name)  # racer moved it / wire died again
+        if torn:
+            raise SyncError(
+                f"ref update failed mid-batch AND rollback could not "
+                f"restore {torn}; inspect the remote refs") from failure
         raise
+    return "fallback"
 
 
 # ----------------------------------------------------------------- push/pull
@@ -564,7 +683,8 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
               branches: Sequence[str], *, tags: Sequence[str] = (),
               remote_name: str = "origin", force: bool = False,
               cache_entries: bool = True, runs: bool = True,
-              jobs: Optional[int] = None) -> MultiSyncReport:
+              jobs: Optional[int] = None,
+              compress_wire: bool = True) -> MultiSyncReport:
     """Atomic multi-ref push: several branches plus tags move in ONE
     deps-first transfer (shared subtrees dedup across refs), then every ref
     lands via one all-or-nothing ``cas_refs`` — a fast-forward conflict on
@@ -633,7 +753,8 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
                 "clobber) — no ref was updated")
         updates.append((ref, current, digest))
 
-    engine = _TransferEngine(local, remote, report, jobs=jobs)
+    engine = _TransferEngine(local, remote, report, jobs=jobs,
+                             compress_wire=compress_wire)
     engine.run([(engine._COMMIT, h) for h in heads.values()]
                + [(engine._COMMIT, d) for d in tag_digests.values()])
     if cache_entries:
@@ -643,7 +764,7 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
 
     if updates:
         try:
-            _cas_refs(remote, updates)
+            report.ref_update_mode = _cas_refs(remote, updates)
         except RefConflict as e:
             raise SyncError(
                 f"push: ref update conflicted ({e}); every ref was left "
@@ -660,7 +781,7 @@ def pull_refs(local: StoreBackend, remote: StoreBackend,
               branches: Sequence[str], *, tags: Sequence[str] = (),
               remote_name: str = "origin", force: bool = False,
               cache_entries: bool = True, runs: bool = True,
-              jobs: Optional[int] = None,
+              jobs: Optional[int] = None, compress_wire: bool = True,
               _shared_done: Optional[Set[str]] = None) -> MultiSyncReport:
     """Atomic multi-ref pull: fetch the closures of several remote branches
     and tags in one concurrent transfer, then fast-forward every local ref
@@ -692,7 +813,8 @@ def pull_refs(local: StoreBackend, remote: StoreBackend,
                 f"pull tag {tag!r}: remote has no such tag") from None
 
     report = MultiSyncReport("pull", dict(heads), dict(tag_digests))
-    engine = _TransferEngine(remote, local, report, jobs=jobs)
+    engine = _TransferEngine(remote, local, report, jobs=jobs,
+                             compress_wire=compress_wire)
     if _shared_done is not None:
         # clone threads one dedup set through its per-branch pulls, so a
         # closure shared by many branches is checked against the
@@ -744,7 +866,7 @@ def pull_refs(local: StoreBackend, remote: StoreBackend,
         updates.append((ref, current, digest))
     if updates:
         try:
-            _cas_refs(local, updates)
+            report.ref_update_mode = _cas_refs(local, updates)
         except RefConflict as e:
             raise SyncError(
                 f"pull: ref update conflicted ({e}); every local ref was "
@@ -765,30 +887,33 @@ def _single_report(multi: MultiSyncReport, direction: str,
         objects_sent=multi.objects_sent,
         objects_skipped=multi.objects_skipped,
         bytes_sent=multi.bytes_sent,
+        bytes_wire=multi.bytes_wire,
         cache_entries=multi.cache_entries,
         runs=multi.runs,
-        ref_updated=(_BRANCH_PREFIX + branch) in multi.updated_refs)
+        ref_updated=(_BRANCH_PREFIX + branch) in multi.updated_refs,
+        ref_update_mode=multi.ref_update_mode)
 
 
 def push(local: StoreBackend, remote: StoreBackend, branch: str, *,
          remote_name: str = "origin", force: bool = False,
          cache_entries: bool = True, runs: bool = True,
-         tags: Sequence[str] = (),
-         jobs: Optional[int] = None) -> SyncReport:
+         tags: Sequence[str] = (), jobs: Optional[int] = None,
+         compress_wire: bool = True) -> SyncReport:
     """Publish one branch (plus optional tags): closure transfer, then a
     CAS-guarded ref update.  Refuses non-fast-forward updates (the remote
     head must be an ancestor of the pushed head) unless ``force``."""
     multi = push_refs(local, remote, [branch], tags=tags,
                       remote_name=remote_name, force=force,
-                      cache_entries=cache_entries, runs=runs, jobs=jobs)
+                      cache_entries=cache_entries, runs=runs, jobs=jobs,
+                      compress_wire=compress_wire)
     return _single_report(multi, "push", branch)
 
 
 def pull(local: StoreBackend, remote: StoreBackend, branch: str, *,
          remote_name: str = "origin", force: bool = False,
          cache_entries: bool = True, runs: bool = True,
-         tags: Sequence[str] = (),
-         jobs: Optional[int] = None) -> SyncReport:
+         tags: Sequence[str] = (), jobs: Optional[int] = None,
+         compress_wire: bool = True) -> SyncReport:
     """Fetch one branch's closure (plus optional tags) and fast-forward the
     local branch to it.
 
@@ -798,7 +923,8 @@ def pull(local: StoreBackend, remote: StoreBackend, branch: str, *,
     """
     multi = pull_refs(local, remote, [branch], tags=tags,
                       remote_name=remote_name, force=force,
-                      cache_entries=cache_entries, runs=runs, jobs=jobs)
+                      cache_entries=cache_entries, runs=runs, jobs=jobs,
+                      compress_wire=compress_wire)
     return _single_report(multi, "pull", branch)
 
 

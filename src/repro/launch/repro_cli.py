@@ -10,15 +10,22 @@
 Multi-host (git-remote semantics over the object store — see
 docs/remote_store.md):
 
-  repro remote add origin URL                  name a remote (http:// or path)
+  repro remote add origin URL                  name a remote (http://, s3://
+                                               or a path)
   repro push --branch B [--remote origin]      publish closure + cache + runs
   repro push main 'exp/*' --tags 'v*'          atomic multi-ref push (globs;
                                                all refs land or none do)
   repro pull --branch B [--remote origin]      fetch + fast-forward
   repro clone URL DEST [--branch B]            new lake from a remote (+tags)
   repro serve --root DIR --port P              loopback object-store server
+  repro serve --root DIR --s3 [--bucket B]     stub S3 server (same tree,
+                                               S3 REST dialect)
+  repro gc [--dry-run] [--drop-cache]          mark-and-sweep the local lake
+  repro gc --remote origin                     remote-side GC: mark from the
+                                               REMOTE's refs, sweep there
 
-Transfers are concurrent (--jobs N workers; --jobs 1 = sequential).
+Transfers are concurrent (--jobs N workers; --jobs 1 = sequential) and
+move large blobs as compressed wire frames (paid for once, at write time).
 
 "CLI is all you need": no catalog service to provision, no client API to
 learn — the same ergonomics claim the paper demonstrates, over the tensor
@@ -82,23 +89,25 @@ def _remotes_dir(lake: Lake) -> Path:
     return Path(lake.store.root) / "remotes"
 
 
-def _resolve_remote(lake: Lake, spec: str):
+def _resolve_remote(lake: Lake, spec: str, *, allow_delete: bool = False):
     """A remote spec is a configured name (``repro remote add``) or a
     URL/path used directly.  A bare name that is neither configured nor an
     existing directory is an error — silently creating an empty store named
     after a typo'd remote would make a push look published when nothing
-    left the machine."""
+    left the machine.  ``allow_delete`` opens the remote-side GC sweep path
+    (only ``repro gc --remote`` passes it)."""
     if "://" in spec:
-        return connect(spec)
+        return connect(spec, allow_delete=allow_delete)
     if "/" not in spec and "\\" not in spec:
         cfg = _remotes_dir(lake) / spec
         if cfg.exists():
-            return connect(cfg.read_text().strip())
+            return connect(cfg.read_text().strip(),
+                           allow_delete=allow_delete)
         if not Path(spec).is_dir():
             raise SystemExit(
                 f"unknown remote {spec!r}: configure it with "
                 f"`repro remote add {spec} URL` or pass a URL/path")
-    return connect(spec)
+    return connect(spec, allow_delete=allow_delete)
 
 
 def _add_sync_args(p):
@@ -152,6 +161,17 @@ def main(argv=None):
     cc = sub.add_parser("cache", help="inspect / clear the run cache")
     cc.add_argument("action", choices=["stats", "clear"])
 
+    g = sub.add_parser("gc", help="mark-and-sweep unreachable objects")
+    g.add_argument("--dry-run", action="store_true",
+                   help="report what would be swept without deleting")
+    g.add_argument("--drop-cache", action="store_true",
+                   help="drop run-cache entries first and sweep what only "
+                        "the cache kept alive")
+    g.add_argument("--remote", default=None, metavar="NAME",
+                   help="collect the named remote instead of the local "
+                        "lake: mark from the REMOTE's own refs, sweep via "
+                        "its delete_object — local state is never trusted")
+
     q = sub.add_parser("query")
     q.add_argument("sql")
     q.add_argument("--ref", default="main")
@@ -189,6 +209,12 @@ def main(argv=None):
                     help="store directory (default: the --lake store)")
     sv.add_argument("--host", default="127.0.0.1")
     sv.add_argument("--port", type=int, default=8750)
+    sv.add_argument("--s3", action="store_true",
+                    help="serve the S3-compatible REST dialect instead of "
+                         "the msgpack protocol (clients connect with "
+                         "s3://host:port/BUCKET)")
+    sv.add_argument("--bucket", default="lake",
+                    help="bucket name for --s3 (default: lake)")
 
     args = ap.parse_args(argv)
 
@@ -207,8 +233,14 @@ def main(argv=None):
         import time as _time
 
         root = args.root or args.lake
-        httpd, url = serve_http(ObjectStore(root), host=args.host,
-                                port=args.port)
+        if args.s3:
+            from repro.core.s3stub import serve_s3
+
+            httpd, url = serve_s3(root, host=args.host, port=args.port,
+                                  bucket=args.bucket)
+        else:
+            httpd, url = serve_http(ObjectStore(root), host=args.host,
+                                    port=args.port)
         print(f"serving {root} at {url}", flush=True)
         try:  # the serve_http daemon thread accepts requests; just block
             while True:
@@ -249,6 +281,22 @@ def main(argv=None):
             print(json.dumps({"entries": len(lake.run_cache)}))
         else:
             print(json.dumps({"cleared": lake.run_cache.clear()}))
+    elif args.cmd == "gc":
+        from repro.core.gc import collect
+
+        if args.remote:
+            # remote-side GC: every read and delete goes through the
+            # remote itself — a stale local mirror can neither protect
+            # nor doom a remote object
+            store = _resolve_remote(lake, args.remote, allow_delete=True)
+        else:
+            store = lake.store
+        rep = collect(store, dry_run=args.dry_run,
+                      drop_cache=args.drop_cache)
+        print(json.dumps({"target": args.remote or "local",
+                          "live": rep.live, "swept": rep.swept,
+                          "bytes_freed": rep.bytes_freed,
+                          "dry_run": args.dry_run}))
     elif args.cmd == "query":
         _query(lake, args.sql, args.ref)
     elif args.cmd == "log":

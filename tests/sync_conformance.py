@@ -5,9 +5,12 @@ is reached or how many transfer workers move the closure.  This module
 states that contract ONCE as a list of checks and runs it against every
 
     backend   ×  transport  ×  concurrency
-    (fs, tiered) (direct, loopback, http)  (--jobs 1, --jobs N)
+    (fs, tiered) (direct, loopback, http, s3)  (--jobs 1, --jobs N)
 
-combination — "correct-by-design" sync treated as a testable interface
+combination — ``s3`` reaches the remote through the S3-compatible REST
+dialect (:class:`repro.core.s3.S3Backend` against the in-process stub
+server), with the SAME directory read directly as the oracle: the stub's
+bucket layout is byte-compatible with the filesystem store — "correct-by-design" sync treated as a testable interface
 rather than an emergent property of one happy path:
 
 * **round-trip**: push → pull reproduces heads, closures and table bytes
@@ -49,12 +52,13 @@ import numpy as np
 
 from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
                         RemoteStore, SyncError, commit_closure, connect,
-                        pull, pull_refs, push, push_refs, serve_http)
+                        pull, pull_refs, push, push_refs, serve_http,
+                        serve_s3)
 from repro.core.errors import RefConflict, RefNotFound
 from repro.core.gc import collect
 
 BACKENDS = ("fs", "tiered")
-TRANSPORTS = ("direct", "loopback", "http")
+TRANSPORTS = ("direct", "loopback", "http", "s3")
 
 
 @dataclass(frozen=True)
@@ -89,7 +93,12 @@ class SyncContext:
         if self.combo.transport == "loopback":
             return RemoteStore(LoopbackTransport(self._server))
         if self._httpd is None:
-            self._httpd, self._url = serve_http(self.remote_store)
+            if self.combo.transport == "s3":
+                # the stub serves the SAME tree remote_store reads — the
+                # oracle stays a direct filesystem view of the bucket
+                self._httpd, self._url = serve_s3(self.root / "remote")
+            else:
+                self._httpd, self._url = serve_http(self.remote_store)
         return connect(self._url)
 
     def lake(self, name: str) -> Lake:

@@ -155,3 +155,60 @@ def test_gc_keeps_remote_tracking_refs_alive(tmp_path):
     lake_b.store.delete_ref("remote/origin/branch=u.exp")
     rep2 = collect(lake_b.store)
     assert rep2.swept > 0
+
+
+# ----------------------------------------------------------- remote-side GC
+def test_remote_gc_marks_from_remote_refs_never_local_state(tmp_path):
+    """repro gc --remote semantics over the wire protocol: the mark phase
+    walks the REMOTE's refs and the sweep runs the REMOTE's delete_object.
+    Local ref state — branches that still exist here but were deleted
+    there, and vice versa — must not influence what survives."""
+    from repro.core import (LoopbackTransport, ObjectStore, RemoteServer,
+                            RemoteStore, commit_closure, push)
+
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    lake.catalog.create_branch("u.keep", "main", author="u")
+    lake.catalog.create_branch("u.drop", "main", author="u")
+    _write(lake, "u.keep", "kept", 1.0)
+    _write(lake, "u.drop", "dropped", 2.0, n=4096)
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = RemoteServer(remote_store)
+    push(lake.store, RemoteStore(LoopbackTransport(server)), "u.keep")
+    push(lake.store, RemoteStore(LoopbackTransport(server)), "u.drop")
+
+    # the remote drops u.drop; the LOCAL lake still has the branch — which
+    # must not protect the remote objects
+    remote_store.delete_ref("branch=u.drop")
+    drop_head = lake.catalog.head("u.drop")
+    keep_head = lake.catalog.head("u.keep")
+    unique_drop = (commit_closure(lake.store, drop_head)
+                   - commit_closure(lake.store, keep_head))
+    assert unique_drop
+
+    gc_client = RemoteStore(LoopbackTransport(server), allow_delete=True)
+    rep = collect(gc_client)
+    assert rep.swept == len(unique_drop) and rep.bytes_freed > 0
+    for digest in unique_drop:
+        assert not remote_store.has(digest)
+        assert lake.store.has(digest)  # the sweep never touches local state
+    for digest in commit_closure(lake.store, keep_head):
+        assert remote_store.has(digest)
+
+
+def test_remote_delete_requires_opt_in(tmp_path):
+    """A tier-mounted client must never be able to collect from the shared
+    remote: delete_object is refused without the explicit GC opt-in."""
+    from repro.core import (LoopbackTransport, ObjectStore, RemoteServer,
+                            RemoteStore)
+    from repro.core.errors import RemoteError
+
+    remote_store = ObjectStore(tmp_path / "remote")
+    digest = remote_store.put(b"precious" * 32)
+    client = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    with pytest.raises(RemoteError, match="immutable"):
+        client.delete_object(digest)
+    assert remote_store.has(digest)
+    opted = RemoteStore(LoopbackTransport(RemoteServer(remote_store)),
+                        allow_delete=True)
+    assert opted.delete_object(digest) is True
+    assert not remote_store.has(digest)

@@ -11,10 +11,16 @@ from repro.core import Lake, Model, Pipeline, RunCache, model, node_key
 from repro.core.gc import collect
 
 
-# Execution counters live at MODULE level: nodes reference CALLS as a global,
-# not a closure — a mutable closure would (correctly) make them uncacheable
-# (see is_cache_safe), which is itself covered further down.
+# Execution counters live at MODULE level, mutated through a helper
+# FUNCTION: a node referencing the CALLS dict directly — like a mutable
+# closure — would (correctly) make it uncacheable (globals a node loads are
+# part of the cache-safety check; functions/modules are the documented
+# blind spot, see is_cache_safe), which is itself covered further down.
 CALLS = {"a": 0, "b": 0, "c": 0, "d": 0}
+
+
+def _bump(name: str) -> None:
+    CALLS[name] += 1
 
 
 def diamond_v1():
@@ -22,22 +28,22 @@ def diamond_v1():
 
     @model()
     def a(data=Model("source_table")):
-        CALLS["a"] += 1
+        _bump("a")
         return {"v": data["c1"]}
 
     @model()
     def b(x=Model("a")):
-        CALLS["b"] += 1
+        _bump("b")
         return {"v": x["v"] * 2.0}
 
     @model()
     def c(y=Model("b")):
-        CALLS["c"] += 1
+        _bump("c")
         return {"v": y["v"] + 1.0}
 
     @model()
     def d(data=Model("source_table")):
-        CALLS["d"] += 1
+        _bump("d")
         return {"v": data["c2"].astype(np.float32)}
 
     return Pipeline([a, b, c, d])
@@ -48,22 +54,22 @@ def diamond_v2_edited_b():
 
     @model()
     def a(data=Model("source_table")):
-        CALLS["a"] += 1
+        _bump("a")
         return {"v": data["c1"]}
 
     @model()
     def b(x=Model("a")):
-        CALLS["b"] += 1
+        _bump("b")
         return {"v": x["v"] * 3.0}
 
     @model()
     def c(y=Model("b")):
-        CALLS["c"] += 1
+        _bump("c")
         return {"v": y["v"] + 1.0}
 
     @model()
     def d(data=Model("source_table")):
-        CALLS["d"] += 1
+        _bump("d")
         return {"v": data["c2"].astype(np.float32)}
 
     return Pipeline([a, b, c, d])
@@ -237,7 +243,7 @@ def test_uncacheable_parent_does_not_poison_descendants(seeded_lake):
 
     @model()
     def c(y=Model("parent")):
-        CALLS["c"] += 1
+        _bump("c")
         return {"v": y["v"] + 1.0}
 
     seeded_lake.catalog.create_branch("r.mix", "main", author="r")
@@ -286,7 +292,7 @@ def test_opaque_param_object_degrades_to_uncacheable(seeded_lake):
 
     @model()
     def scaled(data=Model("source_table"), cfg=None):
-        CALLS["a"] += 1
+        _bump("a")
         return {"v": data["c1"] * cfg.scale}
 
     pipe = Pipeline([scaled])
@@ -305,6 +311,98 @@ def test_opaque_param_object_degrades_to_uncacheable(seeded_lake):
     res = run(Config(5.0))
     assert calls["a"] == 3  # still uncacheable: correctness over speed
     assert res.node_stats["scaled"].cache_key is None  # keying was skipped
+
+
+# ------------------------------------------- module-level globals in the key
+SCALE = 2.0  # read by nodes below: folded into their code hash
+MUTABLE_CFG = {"scale": 2.0}  # referenced directly: demotes to uncacheable
+
+
+def test_module_constant_change_invalidates_cached_node(seeded_lake):
+    """Regression: a node reading a module-level constant kept ONE cache
+    key across edits to that constant (globals were invisible to the code
+    hash), so the run after the edit silently served the stale snapshot.
+    Resolvable immutable constants are now folded into the code hash
+    exactly like closure values — editing the constant re-runs the node."""
+    global SCALE
+
+    def make():
+        @model(name="scaled")
+        def scaled(data=Model("source_table")):
+            return {"v": data["c1"] * SCALE}
+        return scaled
+
+    seeded_lake.catalog.create_branch("r.gconst", "main", author="r")
+    n1 = make()
+    assert n1.cache_safe  # stable constants do NOT demote
+    seeded_lake.run(Pipeline([n1]), branch="r.gconst", author="r")
+    src = seeded_lake.read_table("main", "source_table")
+    np.testing.assert_allclose(
+        seeded_lake.read_table("r.gconst", "scaled")["v"],
+        src["c1"] * 2.0, rtol=1e-6)
+    old = SCALE
+    try:
+        SCALE = 5.0
+        n2 = make()
+        assert n2.code_hash != n1.code_hash  # the constant IS code
+        res = seeded_lake.run(Pipeline([n2]), branch="r.gconst", author="r")
+        assert res.cache_hits == 0  # the silently-wrong hit of the bug
+        np.testing.assert_allclose(
+            seeded_lake.read_table("r.gconst", "scaled")["v"],
+            src["c1"] * 5.0, rtol=1e-6)
+    finally:
+        SCALE = old
+
+
+def test_mutable_global_reference_demotes_to_uncacheable(seeded_lake):
+    """A node reading a module-level MUTABLE object (dict/list/array) has
+    state its code hash cannot cover — it must re-execute every run, not
+    serve whatever the object held when the entry was written."""
+    from repro.core import is_cache_safe
+
+    def make():
+        @model(name="cfgd")
+        def cfgd(data=Model("source_table")):
+            return {"v": data["c1"] * MUTABLE_CFG["scale"]}
+        return cfgd
+
+    n = make()
+    assert not n.cache_safe and not is_cache_safe(n.fn)
+    seeded_lake.catalog.create_branch("r.gmut", "main", author="r")
+    seeded_lake.run(Pipeline([n]), branch="r.gmut", author="r")
+    old = MUTABLE_CFG["scale"]
+    try:
+        MUTABLE_CFG["scale"] = 7.0
+        res = seeded_lake.run(Pipeline([make()]), branch="r.gmut",
+                              author="r")
+        assert res.cache_hits == 0  # uncacheable: mutation is visible
+        src = seeded_lake.read_table("main", "source_table")
+        np.testing.assert_allclose(
+            seeded_lake.read_table("r.gmut", "cfgd")["v"],
+            src["c1"] * 7.0, rtol=1e-6)
+    finally:
+        MUTABLE_CFG["scale"] = old
+
+
+def test_global_writer_is_uncacheable():
+    """STORE_GLOBAL in a node body = module state mutation: never cache."""
+    from repro.core import is_cache_safe
+
+    @model(name="writer")
+    def writer(data=Model("source_table")):
+        global SCALE
+        SCALE = 99.0  # never executed here — detected from bytecode
+        return {"v": data["c1"]}
+
+    assert not writer.cache_safe and not is_cache_safe(writer.fn)
+
+
+def test_function_and_module_globals_stay_cacheable():
+    """The documented blind spot must not over-reach: referencing modules
+    (np) and functions (_bump) keeps a node cacheable — otherwise the
+    demotion rule would silently disable the cache for everything."""
+    pipe = diamond_v1()
+    assert all(n.cache_safe for n in pipe.nodes.values())
 
 
 def test_node_key_is_order_insensitive_and_code_sensitive():

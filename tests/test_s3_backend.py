@@ -1,0 +1,467 @@
+"""S3 backend contract tests: the StoreBackend semantics every other
+backend honors, now over the S3 REST dialect (conditional writes, paged
+ListObjectsV2 listing, HEAD fan-out), against the in-process stub server.
+
+The full sync contract runs through this backend in the conformance matrix
+(``tests/sync_conformance.py``, transport ``s3``); this file pins the
+backend-level primitives plus the wire-frame compression round-trip
+property (compressed and raw transfers land bit-identical remote stores).
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
+                        RemoteStore, S3Backend, commit_closure, connect,
+                        decode_frame, push, serve_s3, sha256_hex)
+from repro.core.errors import ObjectNotFound, RefConflict, RefNotFound
+
+
+@pytest.fixture()
+def s3(tmp_path):
+    httpd, url = serve_s3(tmp_path / "bucket")
+    backend = connect(url)
+    assert isinstance(backend, S3Backend)
+    yield backend
+    backend.close()
+    httpd.shutdown()
+
+
+# ------------------------------------------------------------------ objects
+def test_object_round_trip_verified_and_deduped(s3, tmp_path):
+    data = b"tensorfile-ish payload " * 64
+    digest = s3.put(data)
+    assert digest == sha256_hex(data)
+    assert s3.get(digest) == data
+    assert s3.put(data) == digest  # idempotent re-put
+    assert s3.has(digest) and not s3.has("0" * 64)
+    assert 0 < s3.size(digest) < len(data)  # stored compressed
+    with pytest.raises(ObjectNotFound):
+        s3.get("f" * 64)
+    # the bucket tree IS the filesystem store layout: a direct ObjectStore
+    # over the same directory decodes the stub-written payload
+    oracle = ObjectStore(tmp_path / "bucket")
+    assert oracle.get(digest) == data
+    # ...and a blob written by the filesystem store is served by the stub
+    d2 = oracle.put(b"written locally, read over S3")
+    assert s3.get(d2) == b"written locally, read over S3"
+
+
+def test_batched_ops_fan_out(s3):
+    blobs = [bytes([i]) * (100 + i) for i in range(20)]
+    digests = s3.put_many(blobs)
+    assert digests == [sha256_hex(b) for b in blobs]
+    assert s3.has_many(digests + ["0" * 64]) == set(digests)
+    fetched = s3.get_many(digests)
+    assert [fetched[d] for d in digests] == blobs
+
+
+def test_paged_listing_enumerates_exactly_once(s3):
+    digests = {s3.put(bytes([i]) * 80) for i in range(25)}
+    seen = []
+    token = None
+    while True:
+        page, token = s3.list_objects(page_token=token, limit=7)
+        seen.extend(page)
+        if token is None:
+            break
+    assert sorted(seen) == sorted(digests)  # everything, exactly once
+    assert seen == sorted(seen)  # sorted order (resumable)
+    assert sorted(s3.iter_objects()) == sorted(digests)
+
+
+def test_delete_object_is_idempotent(s3):
+    digest = s3.put(b"sweep me" * 30)
+    assert s3.delete_object(digest) is True
+    assert s3.delete_object(digest) is False  # already gone
+    assert not s3.has(digest)
+
+
+def test_encoded_payload_passthrough(s3, tmp_path):
+    """get_encoded hands out the exact stored payload; put_encoded stores
+    a foreign store's payload byte-for-byte (compression never re-paid)."""
+    data = np.arange(4096, dtype=np.float32).tobytes()
+    digest = s3.put(data)
+    payload = s3.get_encoded(digest)
+    assert decode_frame(payload) == data
+    # the payload on the bucket's disk is byte-identical to what the
+    # backend hands out
+    oracle = ObjectStore(tmp_path / "bucket")
+    assert oracle.get_encoded(digest) == payload
+    # round-trip into a second bucket without recompression
+    httpd2, url2 = serve_s3(tmp_path / "bucket2")
+    try:
+        other = connect(url2)
+        assert other.put_encoded(payload) == digest
+        assert other.get_encoded(digest) == payload
+    finally:
+        httpd2.shutdown()
+
+
+# --------------------------------------------------------------------- refs
+def test_ref_cas_conditional_write_semantics(s3):
+    with pytest.raises(RefNotFound):
+        s3.get_ref("branch=missing")
+    s3.cas_ref("branch=b", None, "a" * 64)  # If-None-Match: * create
+    assert s3.get_ref("branch=b") == "a" * 64
+    with pytest.raises(RefConflict):
+        s3.cas_ref("branch=b", None, "b" * 64)  # create-only: exists
+    with pytest.raises(RefConflict):
+        s3.cas_ref("branch=b", "c" * 64, "b" * 64)  # wrong expected
+    s3.cas_ref("branch=b", "a" * 64, "b" * 64)
+    assert s3.get_ref("branch=b") == "b" * 64
+    s3.delete_ref("branch=b")
+    with pytest.raises(RefNotFound):
+        s3.delete_ref("branch=b")
+
+
+def test_cas_refs_stale_expectation_updates_nothing(s3):
+    s3.set_ref("branch=one", "a" * 64)
+    s3.set_ref("branch=two", "b" * 64)
+    with pytest.raises(RefConflict):
+        s3.cas_refs([("branch=one", "a" * 64, "c" * 64),
+                     ("branch=two", "X" * 64, "c" * 64)])  # stale
+    assert s3.get_ref("branch=one") == "a" * 64  # preflight: nothing moved
+    assert s3.get_ref("branch=two") == "b" * 64
+    s3.cas_refs([("branch=one", "a" * 64, "c" * 64),
+                 ("branch=two", "b" * 64, "c" * 64),
+                 ("tag=v1", None, "d" * 64)])
+    assert s3.get_ref("tag=v1") == "d" * 64
+
+
+def test_cas_ref_loses_no_updates_under_concurrent_writers(s3):
+    """N threads CAS-increment one ref; conditional writes mean every
+    successful swap observed the true current value — no lost updates."""
+    s3.set_ref("branch=ctr", "0" * 64)
+    applied = []
+    lock = threading.Lock()
+
+    def writer(tid):
+        my = f"{tid + 1:02d}" * 32  # distinct from the all-zeros seed
+        while True:
+            current = s3.get_ref("branch=ctr")
+            try:
+                s3.cas_ref("branch=ctr", current, my)
+            except RefConflict:
+                continue  # raced: re-read and retry
+            with lock:
+                applied.append((current, my))
+            return
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(applied) == 6
+    # the swaps form one linear chain from the seed to the final value
+    chain = {old: new for old, new in applied}
+    assert len(chain) == 6  # no two swaps claimed the same predecessor
+    cur = "0" * 64
+    for _ in range(6):
+        cur = chain[cur]
+    assert s3.get_ref("branch=ctr") == cur
+
+
+def test_cas_refs_ambiguous_midbatch_fault_never_tears(s3, monkeypatch):
+    """A transport fault during a mid-batch conditional write must not
+    leave the applied prefix behind: resolved by re-read when the write
+    landed, rolled back (with a clean diagnosis) when it did not."""
+    from repro.core.errors import AmbiguousRefUpdate, RemoteError
+
+    s3.set_ref("branch=one", "a" * 64)
+    s3.set_ref("branch=two", "b" * 64)
+    real = type(s3)._conditional_put
+    calls = {"n": 0, "deliver": False}
+
+    def flaky(self, name, digest, etag):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second write of the batch faults
+            if calls["deliver"]:
+                real(self, name, digest, etag)  # the server DID apply it
+            raise AmbiguousRefUpdate("injected fault mid conditional write")
+        return real(self, name, digest, etag)
+
+    monkeypatch.setattr(type(s3), "_conditional_put", flaky)
+    # not delivered: verified unchanged -> rollback, both refs restored
+    with pytest.raises(RemoteError, match="verified unchanged"):
+        s3.cas_refs([("branch=one", "a" * 64, "c" * 64),
+                     ("branch=two", "b" * 64, "c" * 64)])
+    assert s3.get_ref("branch=one") == "a" * 64
+    assert s3.get_ref("branch=two") == "b" * 64
+    # delivered: re-read confirms the write -> the batch completes
+    calls.update(n=0, deliver=True)
+    s3.cas_refs([("branch=one", "a" * 64, "c" * 64),
+                 ("branch=two", "b" * 64, "c" * 64)])
+    assert s3.get_ref("branch=one") == "c" * 64
+    assert s3.get_ref("branch=two") == "c" * 64
+
+
+def test_ref_listing_pages_and_prefixes(s3):
+    for i in range(12):
+        s3.set_ref(f"cache/{i:02d}/entry", f"{i:064d}"[:64])
+    s3.set_ref("branch=main", "a" * 64)
+    names = list(s3.iter_refs("cache/"))
+    assert len(names) == 12 and all(n.startswith("cache/") for n in names)
+    page, token = s3.list_refs("cache/", limit=5)
+    assert len(page) == 5 and token is not None
+    assert all(v for _n, v in page)
+
+
+def test_has_raises_on_server_errors_instead_of_reading_absent(s3,
+                                                               monkeypatch):
+    """A 503/403 on HEAD must surface as an error, never as 'absent' —
+    remote GC's mark phase trusts has(), and a swallowed throttle would
+    let the sweep delete live objects."""
+    from repro.core.errors import RemoteError
+
+    digest = s3.put(b"live data" * 20)
+    real = type(s3)._request
+
+    def throttled(self, method, key, **kw):
+        if method == "HEAD":
+            return 503, {}, b"SlowDown"
+        return real(self, method, key, **kw)
+
+    monkeypatch.setattr(type(s3), "_request", throttled)
+    with pytest.raises(RemoteError, match="503"):
+        s3.has(digest)
+
+
+def test_response_headers_are_case_normalized(s3):
+    """Version tokens must survive servers that spell ETag differently —
+    _request lower-cases header names, consumers read the canonical
+    lowercase form."""
+    digest = s3.put(b"etag me" * 20)
+    status, headers, _body = s3._request("HEAD", f"objects/{digest[:2]}/"
+                                         f"{digest[2:]}")
+    assert status == 200
+    assert "etag" in headers  # the stub sent "ETag"
+    assert all(k == k.lower() for k in headers)
+
+
+def test_rollback_of_created_ref_never_clobbers_racer_update(s3,
+                                                             monkeypatch):
+    """cas_refs rollback deletes a ref it created with an If-Match guard:
+    if a racer CASed that ref onward in the conflict window, the racer's
+    committed update survives the rollback."""
+    s3.set_ref("branch=exist", "a" * 64)
+    real = type(s3)._conditional_put
+    state = {"n": 0}
+
+    def racing(self, name, digest, etag):
+        state["n"] += 1
+        if state["n"] == 1:  # our create of branch=new succeeds...
+            ok, tok = real(self, name, digest, etag)
+            # ...then a racer immediately CASes it onward (a committed,
+            # acknowledged update — bypassing the patch to avoid recursion)
+            cur, cur_etag = self._read_ref("branch=new")
+            assert cur == digest
+            ok2, _tok2 = real(self, "branch=new", "d" * 64, cur_etag)
+            assert ok2
+            return ok, tok
+        return False, None  # second write of the batch loses its race
+
+    monkeypatch.setattr(type(s3), "_conditional_put", racing)
+    with pytest.raises(RefConflict):
+        s3.cas_refs([("branch=new", None, "c" * 64),
+                     ("branch=exist", "a" * 64, "c" * 64)])
+    monkeypatch.undo()
+    # the guarded rollback 412'd: the racer's update is intact
+    assert s3.get_ref("branch=new") == "d" * 64
+    assert s3.get_ref("branch=exist") == "a" * 64
+
+
+def test_tiered_store_forwards_encoded_capability(tmp_path):
+    """TieredStore exposes the mounted remote's encoded-op support, so
+    the engine's kill switch sees through the tier."""
+    from repro.core import TieredStore
+
+    class NoEncodedRemote(RemoteStore):
+        pass
+
+    remote = NoEncodedRemote(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "r"))))
+    tiered = TieredStore(ObjectStore(tmp_path / "l"), remote)
+    assert tiered._supports_encoded() is True
+    remote._encoded_ops = False  # server said "unknown op"
+    assert tiered._supports_encoded() is False
+
+
+def test_ref_names_with_reserved_characters_round_trip(s3):
+    """Keys are percent-encoded on the wire: names with spaces, %, ? or #
+    must round-trip verbatim instead of breaking the request line,
+    truncating at the query separator, or aliasing with their decoded
+    spelling."""
+    names = ["branch=exp 1", "tag=rel%41", "branch=q?x", "tag=h#v"]
+    for i, name in enumerate(names):
+        s3.set_ref(name, f"{i:064d}"[:64])
+    for i, name in enumerate(names):
+        assert s3.get_ref(name) == f"{i:064d}"[:64]
+    assert "tag=relA" not in list(s3.iter_refs())  # no decoded alias
+    assert sorted(n for n, _v in s3.list_refs()[0]) == sorted(names)
+    for name in names:
+        s3.delete_ref(name)
+    assert not list(s3.iter_refs())
+
+
+def test_listing_survives_server_side_max_keys_cap(s3, monkeypatch):
+    """Truncation comes from IsTruncated, not from page-size arithmetic:
+    a server capping max-keys below the requested limit must not make the
+    tail of the listing silently invisible."""
+    from repro.core import s3stub
+
+    digests = {s3.put(bytes([i]) * 80) for i in range(12)}
+    monkeypatch.setattr(s3stub, "_MAX_KEYS_CAP", 5)  # server caps pages
+    page, token = s3.list_objects(limit=1000)
+    assert len(page) == 5 and token is not None  # short page, more behind
+    assert sorted(s3.iter_objects()) == sorted(digests)  # nothing hidden
+    for i in range(7):
+        s3.set_ref(f"cache/{i:02d}/e", "a" * 64)
+    assert len(list(s3.iter_refs("cache/"))) == 7
+
+
+def test_engine_stops_retrying_encoded_path_on_old_server(tmp_path):
+    """Against a server that permanently lacks the encoded ops, the
+    transfer engine must fall back ONCE, not re-attempt (and re-fetch +
+    re-decode) for every chunk."""
+    import msgpack as _mp
+
+    from repro.core import Lake, LoopbackTransport, RemoteServer, RemoteStore
+    from repro.core import push as _push
+
+    class OldServer(RemoteServer):
+        _op_get_objects_encoded = None
+        _op_put_objects_encoded = None
+
+    class OpCounter:
+        def __init__(self, inner):
+            self.inner = inner
+            self.ops = {}
+
+        def request(self, payload):
+            op = _mp.unpackb(payload, raw=False).get("op", "")
+            self.ops[op] = self.ops.get(op, 0) + 1
+            return self.inner.request(payload)
+
+        def close(self):
+            self.inner.close()
+
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    for i in range(12):  # enough leaf blobs for several transfer chunks
+        lake.write_table("main", f"t{i}",
+                         {"v": np.arange(512, dtype=np.float32) * i})
+    lake.catalog.create_branch("u.exp", "main", author="u")
+    counter = OpCounter(LoopbackTransport(OldServer(
+        ObjectStore(tmp_path / "remote"))))
+    rep = _push(lake.store, RemoteStore(counter), "u.exp", jobs=1)
+    assert rep.ref_updated and rep.bytes_wire == rep.bytes_sent
+    # one probe, then the engine stays on the raw path
+    assert counter.ops.get("put_objects_encoded", 0) <= 1
+    assert counter.ops.get("put_objects", 0) + counter.ops.get(
+        "put_object", 0) > 1
+
+
+# --------------------------------------------- wire-frame round-trip property
+def _random_lake(root, seed: int) -> Lake:
+    rng = np.random.default_rng(seed)
+    lake = Lake(root, protect_main=False)
+    for i in range(int(rng.integers(2, 5))):
+        n = int(rng.integers(16, 400))
+        cols = {"v": rng.normal(size=n).astype(np.float32),
+                "k": np.arange(n, dtype=np.int64) * int(rng.integers(1, 9))}
+        lake.write_table("main", f"t{i}", cols)
+    lake.catalog.create_branch("u.exp", "main", author="u")
+    lake.write_table("u.exp", "extra",
+                     {"v": np.repeat(rng.normal(size=8), 64)
+                      .astype(np.float64)}, author="u")
+    return lake
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_compressed_and_raw_transfers_are_bit_identical(tmp_path, seed):
+    """Property: pushing the same closure with compressed wire frames and
+    with raw frames yields byte-identical remote stores — same digest
+    sets, same refs, same decoded contents — through both the msgpack
+    wire and the S3 dialect."""
+    lake = _random_lake(tmp_path / "lake", seed)
+    head = lake.catalog.head("u.exp")
+    closure = commit_closure(lake.store, head)
+
+    stores = {}
+    # msgpack wire, compressed vs raw frames
+    for mode, compress in (("wire_c", True), ("wire_r", False)):
+        store = ObjectStore(tmp_path / mode)
+        remote = RemoteStore(LoopbackTransport(RemoteServer(store)))
+        push(lake.store, remote, "u.exp", jobs=4, compress_wire=compress)
+        stores[mode] = store
+    # S3 dialect, compressed vs raw frames
+    for mode, compress in (("s3_c", True), ("s3_r", False)):
+        httpd, url = serve_s3(tmp_path / mode)
+        try:
+            push(lake.store, connect(url), "u.exp", jobs=4,
+                 compress_wire=compress)
+        finally:
+            httpd.shutdown()
+        stores[mode] = ObjectStore(tmp_path / mode)
+
+    reference = sorted(stores["wire_c"].iter_objects())
+    assert set(reference) >= closure
+    ref_refs = sorted(stores["wire_c"].list_refs()[0])
+    for mode, store in stores.items():
+        assert sorted(store.iter_objects()) == reference, mode
+        assert sorted(store.list_refs()[0]) == ref_refs, mode
+        for digest in closure:
+            assert store.get(digest) == stores["wire_c"].get(digest), mode
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_s3_remote_push_clone_gc(tmp_path, capsys):
+    from repro.launch.repro_cli import main
+
+    httpd, url = serve_s3(tmp_path / "bucket")
+    try:
+        lake = Lake(tmp_path / "lake", protect_main=False)
+        lake.write_table("main", "t0",
+                         {"v": np.arange(256, dtype=np.float32)})
+        lake.catalog.create_branch("u.exp", "main", author="u")
+        lake.write_table("u.exp", "t1",
+                         {"v": np.ones(256, np.float32)}, author="u")
+
+        base = ["--lake", str(tmp_path / "lake")]
+        main(base + ["remote", "add", "s3", url])
+        main(base + ["push", "--branch", "u.exp", "--remote", "s3"])
+        out = capsys.readouterr().out
+        assert "ref_updated=True" in out
+
+        main(["clone", url, str(tmp_path / "clone")])
+        capsys.readouterr()
+        cloned = Lake(tmp_path / "clone", protect_main=False)
+        assert cloned.catalog.head("u.exp") == lake.catalog.head("u.exp")
+        np.testing.assert_array_equal(
+            cloned.read_table("u.exp", "t1")["v"],
+            lake.read_table("u.exp", "t1")["v"])
+
+        # remote-side GC over the S3 dialect: while branch=u.exp roots the
+        # pushed closure, nothing is sweepable
+        remote = connect(url)
+        head = lake.catalog.head("u.exp")
+        n_before = len(list(remote.iter_objects()))
+        main(base + ["gc", "--remote", "s3"])
+        report = json.loads(capsys.readouterr().out.strip())
+        assert report["target"] == "s3" and report["swept"] == 0
+        # drop the only remote root and sweep for real — the REMOTE's ref
+        # state decides, not the local lake (which still has its branches)
+        remote.delete_ref("branch=u.exp")
+        main(base + ["gc", "--remote", "s3"])
+        report = json.loads(capsys.readouterr().out.strip())
+        assert report["swept"] == n_before and report["bytes_freed"] > 0
+        assert not list(remote.iter_objects())
+        # the sweep never touched local state
+        for digest in commit_closure(lake.store, head):
+            assert lake.store.has(digest)
+    finally:
+        httpd.shutdown()

@@ -1,0 +1,181 @@
+"""Regressions for two ref-update failure modes the sync layer used to
+mishandle:
+
+* **fallback tearing** — against a server that predates ``cas_refs`` the
+  client degrades to per-ref CAS; a transport fault midway used to leave
+  some refs updated and others stale with no rollback (exactly the torn
+  state native ``cas_refs`` exists to prevent).  Now ANY mid-batch failure
+  rolls the applied prefix back.
+* **ambiguous non-idempotent failures** — a transport fault after a
+  ``cas_ref``/``cas_refs`` request may have been delivered leaves the ref
+  state unknown, but the client used to surface the same ``RemoteError``
+  as a clean failure: a "failed" push could have silently succeeded.  Now
+  the client raises :class:`AmbiguousRefUpdate` and push resolves it by
+  re-reading the remote refs before reporting anything.
+"""
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.core import (AmbiguousRefUpdate, Lake, LoopbackTransport,
+                        ObjectStore, RemoteServer, RemoteStore, push,
+                        push_refs)
+from repro.core.errors import RemoteError
+
+
+class Pr2Server(RemoteServer):
+    """A server speaking only the PR-2 contract: no cas_refs op."""
+    _op_cas_refs = None  # getattr finds None -> "unknown op" reply
+
+
+def _op_of(payload: bytes) -> str:
+    return msgpack.unpackb(payload, raw=False).get("op", "")
+
+
+class FaultOnOp:
+    """Raises a transport fault on selected calls of one wire op —
+    either BEFORE the request reaches the server (``deliver=False``, a
+    clean drop) or AFTER (``deliver=True``, the ambiguous case)."""
+
+    def __init__(self, inner, op: str, *, fail_calls, deliver: bool):
+        self.inner = inner
+        self.op = op
+        self.fail_calls = set(fail_calls)  # 1-based call indices to fail
+        self.deliver = deliver
+        self.count = 0
+
+    def request(self, payload: bytes) -> bytes:
+        if _op_of(payload) != self.op:
+            return self.inner.request(payload)
+        self.count += 1
+        if self.count not in self.fail_calls:
+            return self.inner.request(payload)
+        if self.deliver:
+            self.inner.request(payload)  # the server DOES apply it
+        raise RemoteError(f"injected fault on {self.op} #{self.count}")
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def _two_branch_lake(root) -> Lake:
+    lake = Lake(root, protect_main=False)
+    lake.write_table("main", "base",
+                     {"v": np.arange(64, dtype=np.float32)})
+    for i, branch in enumerate(("u.one", "u.two")):
+        lake.catalog.create_branch(branch, "main", author="u")
+        lake.write_table(branch, f"t{i}",
+                         {"v": np.full(32, float(i), np.float32)},
+                         author="u")
+    return lake
+
+
+# ------------------------------------------------ fallback-mode atomicity
+def test_fallback_midway_fault_rolls_back_applied_refs(tmp_path):
+    """Regression: with a pre-cas_refs server, a transport fault on the
+    SECOND per-ref CAS must roll the first ref back — before the fix the
+    rollback only ran on RefConflict, so a fault left branch=u.one
+    updated and branch=u.two stale (torn)."""
+    lake = _two_branch_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = Pr2Server(remote_store)
+    push_refs(lake.store, RemoteStore(LoopbackTransport(server)),
+              ["u.one", "u.two"])  # seed both refs on the remote
+
+    lake.write_table("u.one", "n1", {"v": np.ones(8, np.float32)},
+                     author="u")
+    lake.write_table("u.two", "n2", {"v": np.ones(8, np.float32)},
+                     author="u")
+    before = dict(remote_store.list_refs("branch=")[0])
+    flaky = RemoteStore(FaultOnOp(LoopbackTransport(server), "cas_ref",
+                                  fail_calls=[2], deliver=False),
+                        retries=0)
+    with pytest.raises(RemoteError):
+        push_refs(lake.store, flaky, ["u.one", "u.two"])
+    after = dict(remote_store.list_refs("branch=")[0])
+    assert after == before, "mid-batch fault left the ref set torn"
+    # tracking refs were never written either — the push reports failure
+    # and leaves BOTH sides exactly where they were
+    assert not [r for r in lake.store.iter_refs("remote/")
+                if lake.store.get_ref(r) == lake.catalog.head("u.one")]
+
+
+def test_fallback_clean_push_reports_fallback_mode(tmp_path):
+    lake = _two_branch_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    rep = push_refs(lake.store,
+                    RemoteStore(LoopbackTransport(Pr2Server(remote_store))),
+                    ["u.one", "u.two"])
+    assert rep.ref_update_mode == "fallback"
+    assert set(rep.updated_refs) == {"branch=u.one", "branch=u.two"}
+
+
+def test_fallback_ambiguous_applied_ref_is_not_double_rolled(tmp_path):
+    """An ambiguous per-ref CAS that actually landed resolves by re-read
+    and the batch completes — no spurious failure, no rollback."""
+    lake = _two_branch_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = Pr2Server(remote_store)
+    flaky = RemoteStore(FaultOnOp(LoopbackTransport(server), "cas_ref",
+                                  fail_calls=[1], deliver=True),
+                        retries=0)
+    rep = push_refs(lake.store, flaky, ["u.one", "u.two"])
+    assert rep.ref_update_mode == "fallback"
+    for branch in ("u.one", "u.two"):
+        assert remote_store.get_ref(f"branch={branch}") == \
+            lake.catalog.head(branch)
+
+
+# --------------------------------------------------- ambiguous cas_refs
+def test_remote_store_raises_ambiguous_on_cas_transport_fault(tmp_path):
+    remote_store = ObjectStore(tmp_path / "remote")
+    flaky = RemoteStore(
+        FaultOnOp(LoopbackTransport(RemoteServer(remote_store)),
+                  "cas_refs", fail_calls=[1], deliver=False),
+        retries=0)
+    with pytest.raises(AmbiguousRefUpdate):
+        flaky.cas_refs([("branch=x", None, "a" * 64)])
+    flaky2 = RemoteStore(
+        FaultOnOp(LoopbackTransport(RemoteServer(remote_store)),
+                  "cas_ref", fail_calls=[1], deliver=False),
+        retries=0)
+    with pytest.raises(AmbiguousRefUpdate):
+        flaky2.cas_ref("branch=x", None, "a" * 64)
+
+
+def test_push_resolves_ambiguous_update_that_actually_applied(tmp_path):
+    """Regression: the transport dies AFTER the server applied cas_refs.
+    Before the fix push surfaced a RemoteError even though the remote ref
+    had moved — a 'failed' push that silently succeeded.  Now push
+    re-reads the refs, confirms the update, and reports success."""
+    lake = _two_branch_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    flaky = RemoteStore(
+        FaultOnOp(LoopbackTransport(RemoteServer(remote_store)),
+                  "cas_refs", fail_calls=[1], deliver=True),
+        retries=0)
+    rep = push(lake.store, flaky, "u.one")
+    assert rep.ref_updated and rep.ref_update_mode == "resolved"
+    assert remote_store.get_ref("branch=u.one") == \
+        lake.catalog.head("u.one")
+    # the local tracking ref reflects the (confirmed) success too
+    assert lake.store.get_ref("remote/origin/branch=u.one") == \
+        lake.catalog.head("u.one")
+
+
+def test_push_reports_clean_failure_when_update_verifiably_not_applied(
+        tmp_path):
+    """The other ambiguity resolution: the fault hit before delivery, so
+    the re-read shows the refs unchanged — push fails WITH that
+    diagnosis, and no side (remote refs, local tracking refs) moved."""
+    lake = _two_branch_lake(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    flaky = RemoteStore(
+        FaultOnOp(LoopbackTransport(RemoteServer(remote_store)),
+                  "cas_refs", fail_calls=[1], deliver=False),
+        retries=0)
+    with pytest.raises(RemoteError, match="verified unchanged"):
+        push(lake.store, flaky, "u.one")
+    assert "branch=u.one" not in dict(remote_store.list_refs("branch=")[0])
+    assert not list(lake.store.iter_refs("remote/"))

@@ -54,6 +54,16 @@ def test_conformance_matrix_http(tmp_path, jobs, check):
     run_check(check, Combo("fs", "http", jobs), tmp_path)
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ("fs", "tiered"))
+@pytest.mark.parametrize("jobs", (1, 8))
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_matrix_s3(tmp_path, backend, jobs, check):
+    """The s3 leg: the remote is reached through the S3 REST dialect
+    (stub server), the oracle reads the bucket tree directly."""
+    run_check(check, Combo(backend, "s3", jobs), tmp_path)
+
+
 # ----------------------------------------------------- seeded thread-fuzz
 class JitterTransport:
     """Seeded per-request sleep before forwarding: randomizes how two
