@@ -25,8 +25,10 @@ from .remote import (HTTPTransport, LoopbackTransport, RemoteServer,
 from .runcache import RunCache, node_key
 from .s3 import S3Backend
 from .s3stub import serve_s3
-from .store import (ObjectStore, StoreBackend, decode_frame, encode_frame,
-                    frame_raw, sha256_hex)
+from .store import (GC_GENERATION_REF, ObjectStore, StoreBackend,
+                    bump_generation, decode_frame, encode_frame,
+                    ensure_generation, frame_raw, read_generation,
+                    sha256_hex)
 from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
                    pull_refs, push, push_refs)
 from .table import ManifestEntry, Snapshot, TableIO

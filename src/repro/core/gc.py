@@ -9,16 +9,33 @@ commits); sweep = delete unmarked objects.  On a ``TieredStore`` the sweep
 only touches the local tier — the shared remote is never collected from a
 client.
 
-Remote-side GC (``repro gc --remote NAME``) runs the same mark-and-sweep
-*against the remote itself*: ``collect`` takes any ``StoreBackend``, so
-handed an opted-in :class:`~repro.core.remote.RemoteStore`
-(``allow_delete=True``) or an :class:`~repro.core.s3.S3Backend` it marks
-from the remote's OWN refs and sweeps via the remote's ``delete_object``
-— local state is never consulted, so a stale or divergent local mirror
-can neither protect nor doom a remote object.  Run it in a quiet window:
-objects an in-flight push has uploaded but not yet referenced (refs move
-last) look unreachable to a racing sweep — there is no upload-age grace
-period yet (see docs/remote_store.md).
+Safe against concurrent writers — three mechanisms, layered
+(docs/remote_store.md, "Concurrent-safe remote GC"):
+
+* **generation token** (:data:`~repro.core.store.GC_GENERATION_REF`): a
+  sweep bumps it *before* marking; every push/pull validates the token it
+  captured at transfer start inside its final ``cas_refs`` batch, so a
+  sync that raced a sweep fails its ref update cleanly and re-uploads
+  instead of publishing refs to deleted blobs;
+* **upload-age grace window** (``prune_age``): the sweep never deletes an
+  object younger than ``prune_age`` seconds (fs: stat mtime, S3:
+  ``Last-Modified``, wire: the ``stat_object`` op) — uploads made *during*
+  the mark/sweep itself, which no token can fence, are protected by age;
+* **server-side mark** (``gc_mark``/``gc_sweep`` wire ops): against a
+  msgpack remote the whole mark phase runs on the server over its own
+  store — no per-object wire reads — and the sweep's age checks are local
+  stats.  A server predating the ops degrades to a client-side mark with a
+  loud warning (never a crash); a direct S3 remote always marks
+  client-side (the bucket runs no code) but keeps the grace window via
+  ``Last-Modified``.
+
+Remote-side GC (``repro gc --remote NAME``) runs mark-and-sweep *against
+the remote itself*: ``collect`` takes any ``StoreBackend``, so handed an
+opted-in :class:`~repro.core.remote.RemoteStore` (``allow_delete=True``)
+or an :class:`~repro.core.s3.S3Backend` it marks from the remote's OWN
+refs and sweeps via the remote's ``delete_object`` — local state is never
+consulted, so a stale or divergent local mirror can neither protect nor
+doom a remote object.
 
 Because branches are the only mutable state, deleting a branch is what makes
 its unique history collectable — a paper-consistent retention story
@@ -28,16 +45,24 @@ its unique history collectable — a paper-consistent retention story
 
 from __future__ import annotations
 
+import time
+import warnings
 from dataclasses import dataclass
-from typing import Set
+from typing import Optional, Set, Tuple
 
 import msgpack
 
 from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, REMOTE_REF_PREFIX,
-                      Catalog, Commit)
+                      Commit)
+from .errors import ObjectNotFound, RemoteError
 from .ledger import _RUNS_HEAD
 from .runcache import CACHE_REF_PREFIX
-from .store import ObjectStore, StoreBackend
+from .store import ObjectStore, StoreBackend, bump_generation
+
+#: default upload-age grace window (seconds) for the CLI sweep — the
+#: ``git gc --prune=<age>`` analogue.  Library callers of :func:`collect`
+#: default to 0.0 (sweep everything unreachable) for compatibility.
+DEFAULT_PRUNE_AGE = 3600.0
 
 
 def _unpack(blob: bytes):
@@ -49,6 +74,17 @@ class GCReport:
     live: int
     swept: int
     bytes_freed: int
+    #: unreachable objects left alone because they were younger than
+    #: ``prune_age`` (an in-flight push's not-yet-referenced uploads)
+    skipped_young: int = 0
+    #: generation token the sweep ran under (None: dry run / no bump)
+    generation: Optional[str] = None
+    #: how the mark phase ran: ``local`` (same-process filesystem store),
+    #: ``server`` (gc_mark/gc_sweep wire ops), ``client`` (direct remote
+    #: backend with no server to run code on, e.g. S3 — per-object
+    #: reads by design), ``client-fallback`` (msgpack server that
+    #: predates the ops — per-object wire reads, loudly warned)
+    mode: str = "local"
 
 
 def _is_commit_root(ref: str) -> bool:
@@ -95,20 +131,16 @@ def _mark_snapshot(store: StoreBackend, digest: str, live: Set[str]):
         digest = snap.get("parent")
 
 
-def collect(store: StoreBackend, *, dry_run: bool = False,
-            drop_cache: bool = False) -> GCReport:
-    """Mark from all refs; sweep unreachable objects.
+def mark_live(store: StoreBackend, *, drop_cache: bool = False,
+              dry_run: bool = False) -> Set[str]:
+    """The mark phase: every digest reachable from ``store``'s own refs.
 
-    Run-cache entries are GC roots (their entry blobs + output snapshots stay
-    live) unless ``drop_cache`` — then the cache refs are deleted first and
-    any snapshot only the cache referenced is swept (a later warm run simply
-    degrades to a miss)."""
-    # On a TieredStore, collect strictly the local tier: marking through the
-    # tiered view would fault every remote blob over the network into the
-    # local store (read-through write-back), turning gc into a full mirror.
-    # Local refs (incl. remote-tracking refs, which live locally) are the
-    # roots; mark walks simply stop at objects that only exist remotely.
-    store = getattr(store, "local", store)
+    Run-cache entries are GC roots (their entry blobs + output snapshots
+    stay live) unless ``drop_cache`` — then the cache refs are deleted
+    first and any snapshot only the cache referenced becomes sweepable (a
+    later warm run simply degrades to a miss).  Exposed standalone so the
+    ``gc_mark`` wire op can run this server-side over the server's local
+    store — no per-object wire reads."""
     if drop_cache and not dry_run:
         for ref in list(store.iter_refs(CACHE_REF_PREFIX)):
             store.delete_ref(ref)
@@ -149,14 +181,145 @@ def collect(store: StoreBackend, *, dry_run: bool = False,
                     for snap in manifest.get("outputs", {}).values():
                         _mark_snapshot(store, snap, live)
                 cur = link.get("prev")
+    return live
 
+
+def sweep(store: StoreBackend, live: Set[str], *, prune_age: float = 0.0,
+          dry_run: bool = False,
+          now: Optional[float] = None) -> Tuple[int, int, int]:
+    """The sweep phase: delete unmarked objects OLDER than ``prune_age``
+    seconds.  Returns ``(swept, bytes_freed, skipped_young)``.
+
+    The age check is the grace window: objects an in-flight push uploaded
+    but has not referenced yet (refs move last) look unreachable to the
+    mark, but they are by construction *young* — skipping anything newer
+    than ``prune_age`` makes the sweep safe to run concurrently with
+    pushes whose uploads no generation token can fence (they started after
+    the bump).  When ages cannot be read at all (a backend without
+    ``stat``, or a server predating the ``stat_object`` op), everything
+    unreachable is treated as OLD — the pre-grace-window behavior — with
+    a loud warning about the downgrade.  Age and size come from one
+    ``stat`` per candidate (one wire round-trip, not two)."""
     swept = 0
     freed = 0
+    skipped_young = 0
+    now = time.time() if now is None else now
+    use_ages = prune_age > 0
+    # capability probe up front — deliberately NOT a per-object
+    # AttributeError catch, which would let a bug inside a present stat()
+    # silently disable the window and sweep in-flight uploads
+    stat = getattr(store, "stat", None)
+    if use_ages and stat is None:
+        use_ages = False
+        warnings.warn(
+            "gc: backend has no stat()/object ages; the --prune-age "
+            "grace window is DISABLED for this sweep — do not run it "
+            "concurrently with pushes", RuntimeWarning, stacklevel=2)
     for digest in list(store.iter_objects()):
         if digest in live:
             continue
-        freed += store.size(digest)
+        size = None
+        if use_ages:
+            try:
+                size, mtime = stat(digest)
+            except ObjectNotFound:
+                continue  # concurrently deleted — nothing left to sweep
+            except RemoteError as e:
+                if "unknown op" not in str(e):
+                    raise  # transient wire fault — abort, never mis-age
+                # server predates stat_object: no age data exists, so the
+                # window cannot be honored — degrade (once, loudly) to
+                # the legacy sweep-everything-unreachable behavior
+                use_ages = False
+                size = None
+                warnings.warn(
+                    f"gc: backend cannot report object ages ({e!r}); "
+                    "the --prune-age grace window is DISABLED for this "
+                    "sweep — do not run it concurrently with pushes",
+                    RuntimeWarning, stacklevel=2)
+            else:
+                if now - mtime < prune_age:
+                    skipped_young += 1
+                    continue
+        if size is None:
+            try:
+                size = store.size(digest)
+            except ObjectNotFound:
+                continue  # concurrently deleted
+        freed += size
         if not dry_run:
             store.delete_object(digest)
         swept += 1
-    return GCReport(live=len(live), swept=swept, bytes_freed=freed)
+    return swept, freed, skipped_young
+
+
+def _is_unknown_op(e: RemoteError) -> bool:
+    return "bad_request" in str(e) and "unknown op" in str(e)
+
+
+def _collect_via_server(store, *, dry_run: bool, drop_cache: bool,
+                        prune_age: float) -> GCReport:
+    """Mark + sweep through the ``gc_mark``/``gc_sweep`` wire ops: the
+    server walks its own refs and stats its own files — the only wire
+    traffic is two requests.  Raises :class:`RemoteError` with the
+    server's "unknown op" reply when it predates the ops (the caller
+    falls back client-side)."""
+    generation, live_count = store.gc_mark(drop_cache=drop_cache,
+                                           dry_run=dry_run)
+    swept, freed, young = store.gc_sweep(generation, prune_age=prune_age,
+                                         dry_run=dry_run)
+    return GCReport(live=live_count, swept=swept, bytes_freed=freed,
+                    skipped_young=young,
+                    generation=None if dry_run else generation,
+                    mode="server")
+
+
+def collect(store: StoreBackend, *, dry_run: bool = False,
+            drop_cache: bool = False,
+            prune_age: float = 0.0) -> GCReport:
+    """Mark from all refs; sweep unreachable objects older than
+    ``prune_age`` seconds (0 = sweep everything unreachable; the CLI
+    defaults to :data:`DEFAULT_PRUNE_AGE`).
+
+    A real (non-dry) sweep first bumps the GC generation token
+    (:func:`~repro.core.store.bump_generation`) so concurrent pushes fail
+    their ref update cleanly instead of referencing deleted blobs.  Against
+    a :class:`~repro.core.remote.RemoteStore` whose server speaks
+    ``gc_mark``/``gc_sweep``, the whole mark runs server-side; a server
+    that predates the ops falls back to the client-side mark with a loud
+    :class:`RuntimeWarning` (per-object wire reads — slow, and the grace
+    window then depends on the ``stat_object`` op)."""
+    # On a TieredStore, collect strictly the local tier: marking through the
+    # tiered view would fault every remote blob over the network into the
+    # local store (read-through write-back), turning gc into a full mirror.
+    # Local refs (incl. remote-tracking refs, which live locally) are the
+    # roots; mark walks simply stop at objects that only exist remotely.
+    store = getattr(store, "local", store)
+    if getattr(store, "gc_mark", None) is not None:
+        try:
+            return _collect_via_server(store, dry_run=dry_run,
+                                       drop_cache=drop_cache,
+                                       prune_age=prune_age)
+        except RemoteError as e:
+            if not _is_unknown_op(e):
+                raise
+            warnings.warn(
+                "gc --remote: this server predates the gc_mark/gc_sweep "
+                "wire ops — falling back to a CLIENT-SIDE mark (one wire "
+                "read per commit/snapshot; slow on large remotes, and the "
+                "grace window depends on the stat_object op). Upgrade the "
+                "server.", RuntimeWarning, stacklevel=2)
+            mode = "client-fallback"
+    else:
+        mode = "local" if isinstance(store, ObjectStore) else "client"
+    generation: Optional[str] = None
+    if not dry_run:
+        # bump BEFORE marking: a sync that captured the pre-bump token —
+        # the only sync whose uploads could predate this mark — can no
+        # longer publish refs without a clean conflict + retry
+        generation = bump_generation(store)
+    live = mark_live(store, drop_cache=drop_cache, dry_run=dry_run)
+    swept, freed, young = sweep(store, live, prune_age=prune_age,
+                                dry_run=dry_run)
+    return GCReport(live=len(live), swept=swept, bytes_freed=freed,
+                    skipped_young=young, generation=generation, mode=mode)

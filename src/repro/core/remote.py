@@ -24,6 +24,13 @@ Three pieces:
                           (decoded + digest-verified server-side)
         delete_object     DeleteObject (remote-side GC sweep; clients
                           must opt in with allow_delete=True)
+        stat_object       HeadObject (size + Last-Modified — what the
+                          GC grace window compares upload ages against)
+        gc_mark           server-side GC mark: the server walks its OWN
+                          refs/objects (no per-object wire reads), bumps
+                          the generation token, stashes the live set
+        gc_sweep          server-side sweep under a gc_mark token, with
+                          the upload-age grace window applied locally
         list_objects      ListObjectsV2 w/ ContinuationToken
         get_ref/set_ref   tiny pointer objects
         cas_ref           conditional put (DynamoDB / If-Match)
@@ -84,6 +91,15 @@ class RemoteServer:
 
     def __init__(self, store: StoreBackend):
         self.store = store
+        # pending server-side GC marks: sweep token -> live digest set,
+        # stashed by gc_mark for the gc_sweep that follows.  Real marks
+        # key on the (freshly bumped, so unique) generation; dry-run
+        # marks key on a nonce so a read-only dry run can never clobber
+        # or consume a pending real mark.  Bounded to the 4 most recent
+        # so a crashed GC client cannot leak unbounded live sets.
+        self._gc_marks: Dict[str, set] = {}
+        self._gc_nonce = 0
+        self._gc_lock = threading.Lock()
 
     # Each op returns a plain dict; errors are returned (not raised) so the
     # transport layer stays exception-free and HTTP responses stay 200.
@@ -185,6 +201,59 @@ class RemoteServer:
 
     def _op_size_object(self, req):
         return {"size": self.store.size(req["digest"])}
+
+    def _op_stat_object(self, req):
+        # size + upload mtime in one round-trip: what a client-side GC
+        # sweep needs per candidate to honor the --prune-age grace window
+        # against a server without gc_mark/gc_sweep
+        digest = req["digest"]
+        return {"size": self.store.size(digest),
+                "mtime": float(self.store.mtime(digest))}
+
+    # ----------------------------------------------------- server-side GC
+    def _op_gc_mark(self, req):
+        # the whole mark phase runs HERE, over the server's own store: no
+        # per-object wire reads.  Bumps the GC generation token first (not
+        # on dry runs — nothing will be deleted) so concurrent pushes that
+        # captured the old token fail their cas_refs cleanly.
+        from .gc import mark_live
+        from .store import bump_generation
+
+        dry_run = bool(req.get("dry_run"))
+        if dry_run:
+            # a nonce token, NOT the shared generation: a dry run must
+            # neither bump the generation nor collide with (and later
+            # consume) a real mark pending its sweep
+            with self._gc_lock:
+                self._gc_nonce += 1
+                token = f"dry-{self._gc_nonce}"
+        else:
+            token = bump_generation(self.store)
+        live = mark_live(self.store, drop_cache=bool(req.get("drop_cache")),
+                         dry_run=dry_run)
+        with self._gc_lock:
+            self._gc_marks[token] = live
+            while len(self._gc_marks) > 4:  # drop the oldest abandoned mark
+                self._gc_marks.pop(next(iter(self._gc_marks)))
+        return {"generation": token, "live": len(live)}
+
+    def _op_gc_sweep(self, req):
+        from .gc import sweep
+
+        generation = req["generation"]
+        with self._gc_lock:
+            live = self._gc_marks.pop(generation, None)
+        if live is None:
+            return {"error": "bad_request",
+                    "message": f"unknown gc generation {generation!r} "
+                               "(run gc_mark first; marks do not survive "
+                               "a server restart)"}
+        swept, freed, young = sweep(
+            self.store, live,
+            prune_age=float(req.get("prune_age") or 0.0),
+            dry_run=bool(req.get("dry_run")))
+        return {"swept": swept, "bytes_freed": freed,
+                "skipped_young": young}
 
     # refs --------------------------------------------------------------
     def _op_get_ref(self, req):
@@ -344,7 +413,13 @@ _RETRYABLE_OPS = frozenset({
     "put_object", "get_object", "head_objects", "list_objects",
     "get_objects", "put_objects",
     "get_objects_encoded", "put_objects_encoded", "delete_object",
-    "size_object", "get_ref", "set_ref", "delete_ref", "list_refs",
+    "size_object", "stat_object", "get_ref", "set_ref", "delete_ref",
+    "list_refs",
+    # gc_mark re-marks from scratch on retry (the superseded mark is
+    # discarded server-side); gc_sweep is NOT retryable — a sweep whose
+    # reply was lost consumed its mark, and a blind re-send would race
+    # whatever uploads happened since
+    "gc_mark",
 })
 
 #: non-idempotent ref updates: a transport fault after the request may have
@@ -466,6 +541,19 @@ class RemoteStore:
     def size(self, digest: str) -> int:
         return self._call("size_object", digest=digest)["size"]
 
+    def mtime(self, digest: str) -> float:
+        """Upload mtime over the wire (``stat_object``).  Raises
+        :class:`RemoteError` ("unknown op") against a server predating the
+        op — the GC sweep treats that as "no age data" and degrades, with
+        a warning, to the legacy sweep-everything behavior."""
+        return self.stat(digest)[1]
+
+    def stat(self, digest: str) -> Tuple[int, float]:
+        """``(size, mtime)`` in one ``stat_object`` round-trip — the
+        per-candidate cost of a client-side grace-window sweep."""
+        reply = self._call("stat_object", digest=digest)
+        return int(reply["size"]), float(reply["mtime"])
+
     def delete_object(self, digest: str) -> bool:
         if not self.allow_delete:
             raise RemoteError(
@@ -473,6 +561,37 @@ class RemoteStore:
                 "remote with allow_delete=True (repro gc --remote) to "
                 "run a remote-side sweep")
         return bool(self._call("delete_object", digest=digest)["deleted"])
+
+    # ------------------------------------------------------ server-side GC
+    def gc_mark(self, *, drop_cache: bool = False,
+                dry_run: bool = False) -> Tuple[str, int]:
+        """Run the GC mark phase ON the server (its own refs, its own
+        store — zero per-object wire reads).  Returns ``(generation,
+        live_count)``; hand the token to :meth:`gc_sweep`.  Gated on
+        ``allow_delete`` like the sweep itself: marking bumps the shared
+        generation token, which fails concurrent pushes' ref updates —
+        not something a read-only tier client should be able to do.
+        Dry runs neither bump nor delete, so they need no opt-in."""
+        if not self.allow_delete and not dry_run:
+            raise RemoteError(
+                "remote GC requires a client opened with allow_delete="
+                "True (repro gc --remote)")
+        reply = self._call("gc_mark", drop_cache=drop_cache,
+                           dry_run=dry_run)
+        return str(reply["generation"]), int(reply["live"])
+
+    def gc_sweep(self, generation: str, *, prune_age: float = 0.0,
+                 dry_run: bool = False) -> Tuple[int, int, int]:
+        """Sweep server-side under a mark token from :meth:`gc_mark`.
+        Returns ``(swept, bytes_freed, skipped_young)``."""
+        if not self.allow_delete and not dry_run:
+            raise RemoteError(
+                "remote GC requires a client opened with allow_delete="
+                "True (repro gc --remote)")
+        reply = self._call("gc_sweep", generation=generation,
+                           prune_age=prune_age, dry_run=dry_run)
+        return (int(reply["swept"]), int(reply["bytes_freed"]),
+                int(reply["skipped_young"]))
 
     # -------------------------------------------------- encoded payloads
     def _supports_encoded(self) -> bool:
@@ -670,6 +789,18 @@ class TieredStore:
             return self.local.size(digest)
         except ObjectNotFound:
             return self.remote.size(digest)
+
+    def mtime(self, digest: str) -> float:
+        try:
+            return self.local.mtime(digest)
+        except ObjectNotFound:
+            return self.remote.mtime(digest)
+
+    def stat(self, digest: str) -> Tuple[int, float]:
+        try:
+            return self.local.stat(digest)
+        except ObjectNotFound:
+            return self.remote.stat(digest)
 
     def delete_object(self, digest: str) -> bool:
         return self.local.delete_object(digest)

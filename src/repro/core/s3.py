@@ -265,6 +265,35 @@ class S3Backend:
             raise ObjectNotFound(digest)
         return int(headers.get("content-length", 0))
 
+    def mtime(self, digest: str) -> float:
+        """Upload time from the ``Last-Modified`` response header — the
+        age source for the GC grace window over S3.  A server that omits
+        the header reads as *just uploaded* (never sweepable inside the
+        window): the failure mode of missing age data must be "kept a
+        garbage blob another hour", never "deleted an in-flight upload"."""
+        return self.stat(digest)[1]
+
+    def stat(self, digest: str) -> Tuple[int, float]:
+        """``(stored size, Last-Modified)`` from ONE HEAD request — the
+        per-candidate cost of a grace-window sweep over the dialect."""
+        import email.utils
+        import time as _time
+
+        status, headers, _b = self._request("HEAD", _object_key(digest))
+        if status == 404:
+            raise ObjectNotFound(digest)
+        if status != 200:
+            raise RemoteError(f"head {digest}: HTTP {status}")
+        size = int(headers.get("content-length", 0))
+        stamp = headers.get("last-modified")
+        if not stamp:
+            return size, _time.time()
+        try:
+            return size, email.utils.parsedate_to_datetime(
+                stamp).timestamp()
+        except (TypeError, ValueError):
+            return size, _time.time()
+
     def delete_object(self, digest: str) -> bool:
         """Remote-side GC sweep primitive.  Idempotent: missing → False."""
         status, _h, _b = self._request("DELETE", _object_key(digest))

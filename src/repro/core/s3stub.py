@@ -10,7 +10,8 @@ local store, which is what lets the sync conformance harness use a direct
 
 Dialect (the subset of the S3 REST API the backend needs):
 
-    GET    /<bucket>/<key>                     200 body + ETag | 404
+    GET    /<bucket>/<key>                     200 body + ETag +
+                                               Last-Modified   | 404
     HEAD   /<bucket>/<key>                     200 headers     | 404
     PUT    /<bucket>/<key>                     200 + ETag
            If-Match: <etag>                    412 unless the current
@@ -65,6 +66,14 @@ class _BucketTree:
     def read(self, key: str) -> Optional[bytes]:
         try:
             return self._path(key).read_bytes()
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def mtime(self, key: str) -> Optional[float]:
+        """Backing-file mtime — served as ``Last-Modified`` so clients
+        can apply the GC upload-age grace window, exactly like real S3."""
+        try:
+            return self._path(key).stat().st_mtime
         except (FileNotFoundError, ValueError):
             return None
 
@@ -125,10 +134,19 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
     ``repro remote add``/``clone``) accepts directly.  ``port=0`` picks a
     free port; call ``httpd.shutdown()`` to stop.
     """
+    import email.utils
     import http.server
     import urllib.parse
 
     tree = _BucketTree(root)
+
+    def _object_headers(key: str, data: bytes) -> dict:
+        headers = {"ETag": _etag(data)}
+        mtime = tree.mtime(key)
+        if mtime is not None:
+            headers["Last-Modified"] = email.utils.formatdate(
+                mtime, usegmt=True)
+        return headers
 
     class Handler(http.server.BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
@@ -179,9 +197,9 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
             if data is None:
                 self._reply(404)
                 return
-            self._reply(200, data, {"ETag": _etag(data),
-                                    "Content-Type":
-                                    "application/octet-stream"})
+            headers = _object_headers(key, data)
+            headers["Content-Type"] = "application/octet-stream"
+            self._reply(200, data, headers)
 
         def do_HEAD(self):  # noqa: N802
             key = self._key()
@@ -189,7 +207,7 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
             if data is None:
                 self._reply(404)
                 return
-            self._reply(200, data, {"ETag": _etag(data)})
+            self._reply(200, data, _object_headers(key, data))
 
         def do_PUT(self):  # noqa: N802
             key = self._key()

@@ -43,12 +43,21 @@ try:  # POSIX file locking for cross-process CAS; absent on Windows
 except ImportError:  # pragma: no cover - non-POSIX fallback: thread lock only
     fcntl = None
 
-from .errors import CodecUnavailable, ObjectNotFound, RefConflict, RefNotFound
+from .errors import (AmbiguousRefUpdate, CodecUnavailable, ObjectNotFound,
+                     RefConflict, RefNotFound)
 
 _MAGIC = b"RPR1"  # blob framing: magic + 1 byte codec id
 _CODEC_RAW = b"\x00"
 _CODEC_ZSTD = b"\x01"
 _CODEC_ZLIB = b"\x02"
+
+#: GC generation token, stored in the refs keyspace so every backend can
+#: CAS it.  A sweep bumps it (monotone integer, as text) BEFORE marking;
+#: an in-flight push/pull captures it at transfer start and validates it
+#: inside its final ``cas_refs`` batch — a push that raced a sweep fails
+#: the ref update cleanly and re-uploads instead of publishing refs to
+#: deleted blobs (docs/remote_store.md, "Concurrent-safe remote GC").
+GC_GENERATION_REF = "gc/generation"
 
 #: codecs this build can *write* ("auto" = best available compressor)
 WRITE_CODECS = ("auto", "raw", "zlib") + (("zstd",) if zstd else ())
@@ -135,6 +144,13 @@ class StoreBackend(Protocol):
     def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]: ...
     def put_many(self, blobs: Sequence[bytes]) -> List[str]: ...
     def size(self, digest: str) -> int: ...
+    # upload age (seconds-since-epoch mtime of the stored payload): what
+    # the GC grace window compares against — fs via stat, S3 via the
+    # Last-Modified header, the wire via the stat_object op
+    def mtime(self, digest: str) -> float: ...
+    # combined (size, mtime) in ONE backend round-trip — what the sweep
+    # uses per candidate so a remote collection never pays two
+    def stat(self, digest: str) -> Tuple[int, float]: ...
     def delete_object(self, digest: str) -> bool: ...
     # encoded (framed, possibly compressed) payload transfer: a blob
     # compressed once at rest crosses every hop in that form — see
@@ -167,6 +183,63 @@ class StoreBackend(Protocol):
     def list_refs(self, prefix: str = "", *,
                   page_token: Optional[str] = None, limit: int = 1000
                   ) -> Tuple[List[Tuple[str, str]], Optional[str]]: ...
+
+
+def read_generation(store: "StoreBackend") -> Optional[str]:
+    """Current GC generation token of ``store`` (None = no sweep ever ran
+    and nobody materialized the ref yet)."""
+    try:
+        return store.get_ref(GC_GENERATION_REF)
+    except RefNotFound:
+        return None
+
+
+def ensure_generation(store: "StoreBackend") -> str:
+    """Read the generation token, materializing ``"0"`` if absent — so a
+    sync can always include an exact-value guard in its ``cas_refs`` batch
+    (guarding on "absent" would make two concurrent first pushes conflict
+    with each other instead of only with sweeps).  An ambiguous wire CAS
+    (the materializing write may or may not have landed) resolves itself
+    through the re-read at the top of the next attempt."""
+    last: Optional[Exception] = None
+    for _ in range(4):
+        current = read_generation(store)
+        if current is not None:
+            return current
+        try:
+            store.cas_ref(GC_GENERATION_REF, None, "0")
+            return "0"
+        except (RefConflict, AmbiguousRefUpdate) as e:
+            last = e  # racer / unknown delivery — the re-read decides
+    raise RefConflict(
+        f"could not materialize {GC_GENERATION_REF!r}") from last
+
+
+def bump_generation(store: "StoreBackend") -> str:
+    """Advance the GC generation token (CAS loop, any backend).  Called at
+    sweep START, before the mark phase reads refs: any sync that captured
+    the previous token — i.e. any sync whose uploads could predate the
+    mark — fails its ref update cleanly and retries, instead of publishing
+    refs to objects the sweep is about to delete."""
+    last: Optional[Exception] = None
+    for _ in range(16):
+        current = read_generation(store)
+        nxt = str(int(current) + 1) if current is not None else "1"
+        try:
+            store.cas_ref(GC_GENERATION_REF, current, nxt)
+            return nxt
+        except RefConflict as e:
+            last = e  # concurrent bump/materialize — re-read and retry
+        except AmbiguousRefUpdate as e:
+            # the bump may have landed before the fault: a re-read showing
+            # our exact value claims it (any OTHER change restarts — some
+            # concurrent bump won, and a sweep must own a fresh token)
+            if read_generation(store) == nxt:
+                return nxt
+            last = e
+    raise RefConflict(
+        f"could not advance {GC_GENERATION_REF!r} "
+        "(persistent contention or transport faults)") from last
 
 
 class ObjectStore:
@@ -331,6 +404,21 @@ class ObjectStore:
             return self._path(digest).stat().st_size
         except FileNotFoundError:
             raise ObjectNotFound(digest) from None
+
+    def mtime(self, digest: str) -> float:
+        """When the object landed here (write-then-rename publish time).
+        The GC grace window keys off this: a sweep never deletes an object
+        younger than ``prune_age``, so an in-flight push's uploads are
+        safe even before its refs move."""
+        return self.stat(digest)[1]
+
+    def stat(self, digest: str) -> Tuple[int, float]:
+        """``(on-disk size, mtime)`` from one os.stat."""
+        try:
+            st = self._path(digest).stat()
+        except FileNotFoundError:
+            raise ObjectNotFound(digest) from None
+        return st.st_size, st.st_mtime
 
     def iter_objects(self) -> Iterator[str]:
         for sub in sorted(self.obj_dir.iterdir()):

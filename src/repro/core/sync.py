@@ -25,6 +25,12 @@ Transfer rules that make this safe over a flaky wire:
   (``cas_refs``): a multi-ref push either lands every branch and tag or none
   of them — one stale branch rolls back the entire ref update — and readers
   never observe a head without its objects;
+* the ``cas_refs`` batch carries the destination's **GC generation token**
+  (:data:`~repro.core.store.GC_GENERATION_REF`, captured before the first
+  byte moved) as an extra guard: a concurrent sweep bumps the token before
+  marking, so a sync whose uploads could predate that mark fails its ref
+  update cleanly and **retries with a fresh transfer** (re-uploading
+  whatever the sweep removed) instead of publishing refs to deleted blobs;
 * non-fast-forward branch updates (and tag clobbers) are refused unless
   ``force`` (the freshly initialized empty root commit every new catalog
   starts with is exempt, so cloning/pulling ``main`` into a new lake just
@@ -59,10 +65,12 @@ from .errors import (AmbiguousRefUpdate, CodecUnavailable, ObjectNotFound,
                      SyncError)
 from .ledger import RunLedger
 from .runcache import RunCache
-from .store import ObjectStore, StoreBackend, decode_frame, sha256_hex
+from .store import (GC_GENERATION_REF, ObjectStore, StoreBackend,
+                    decode_frame, ensure_generation, sha256_hex)
 
 _HAS_CHUNK = 256  # digests per batched-exists request
 _BLOB_CHUNK = 8   # leaf blobs per batched get/put request
+_GC_RETRIES = 3   # fresh-transfer retries after a raced GC sweep
 
 
 def _default_jobs() -> int:
@@ -97,6 +105,9 @@ class SyncReport:
     #: a re-read confirmed it applied), "fallback" (per-ref CAS with
     #: rollback against a server predating cas_refs)
     ref_update_mode: str = "atomic"
+    #: times a concurrent GC sweep bumped the generation token mid-sync,
+    #: forcing a fresh transfer + ref-update retry
+    gc_retries: int = 0
 
     def summary(self) -> str:
         wire = (f" (wire={self.bytes_wire})"
@@ -129,6 +140,7 @@ class MultiSyncReport:
     cache_entries: int = 0
     runs: int = 0
     ref_update_mode: str = "atomic"  # see SyncReport.ref_update_mode
+    gc_retries: int = 0  # see SyncReport.gc_retries
 
     def summary(self) -> str:
         names = sorted(self.branches)
@@ -534,9 +546,11 @@ def _sync_runs(src: StoreBackend, dst: StoreBackend,
     src_ledger, dst_ledger = RunLedger(src), RunLedger(dst)
     have = set(dst_ledger.runs())
     picked = []
+    grafted: List[str] = []  # manifests of runs dst already grafted
     for link in src_ledger.links():
         run_id, manifest_digest = link["run_id"], link["manifest"]
         if run_id in have:
+            grafted.append(manifest_digest)
             continue
         try:
             blob = src.get(manifest_digest)
@@ -553,7 +567,28 @@ def _sync_runs(src: StoreBackend, dst: StoreBackend,
         if manifest.get("result_commit") not in closure:
             continue
         picked.append((run_id, manifest_digest, blob))
-    engine.put_blobs([(digest, blob) for _r, digest, blob in picked])
+    # Presence-ensure already-grafted manifests WITHOUT fetching them
+    # (batched exists, normally zero missing): a GC-retry re-transfer
+    # must heal a manifest a raced sweep removed after its graft, but an
+    # ordinary sync must not re-read the whole run history off src.
+    grafted = list(dict.fromkeys(grafted))
+    missing: Set[str] = set(grafted)
+    for i in range(0, len(grafted), _HAS_CHUNK):
+        missing -= engine.dst.has_many(grafted[i:i + _HAS_CHUNK])
+    ensure: List[Tuple[str, bytes]] = []
+    for manifest_digest in missing:
+        try:
+            blob = src.get(manifest_digest)
+        except ObjectNotFound:
+            continue
+        manifest = _unpack(blob)
+        if manifest.get("branch") not in branches:
+            continue
+        if (manifest.get("data_commit") not in closure
+                or manifest.get("result_commit") not in closure):
+            continue
+        ensure.append((manifest_digest, blob))
+    engine.put_blobs(ensure + [(digest, blob) for _r, digest, blob in picked])
     for run_id, manifest_digest, _blob in reversed(picked):  # oldest first
         dst_ledger.graft(run_id, manifest_digest)
         report.runs += 1
@@ -753,23 +788,45 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
                 "clobber) — no ref was updated")
         updates.append((ref, current, digest))
 
-    engine = _TransferEngine(local, remote, report, jobs=jobs,
-                             compress_wire=compress_wire)
-    engine.run([(engine._COMMIT, h) for h in heads.values()]
-               + [(engine._COMMIT, d) for d in tag_digests.values()])
-    if cache_entries:
-        _sync_cache(local, remote, engine, closure, report)
-    if runs:
-        _sync_runs(local, remote, engine, closure, set(heads), report)
-
-    if updates:
+    # capture the remote's GC generation token BEFORE the first byte moves:
+    # validated inside the final cas_refs batch, it proves no sweep started
+    # (and so no mark could have missed these uploads) while we transferred
+    guard = ensure_generation(remote) if updates else None
+    attempt = 0
+    while True:
+        engine = _TransferEngine(local, remote, report, jobs=jobs,
+                                 compress_wire=compress_wire)
+        engine.run([(engine._COMMIT, h) for h in heads.values()]
+                   + [(engine._COMMIT, d) for d in tag_digests.values()])
+        if cache_entries:
+            _sync_cache(local, remote, engine, closure, report)
+        if runs:
+            _sync_runs(local, remote, engine, closure, set(heads), report)
+        if not updates:
+            break
         try:
-            report.ref_update_mode = _cas_refs(remote, updates)
+            report.ref_update_mode = _cas_refs(
+                remote,
+                list(updates) + [(GC_GENERATION_REF, guard, guard)])
+            report.updated_refs = [name for name, _e, _n in updates]
+            break
         except RefConflict as e:
-            raise SyncError(
-                f"push: ref update conflicted ({e}); every ref was left "
-                "unchanged — pull and retry") from e
-        report.updated_refs = [name for name, _e, _n in updates]
+            if GC_GENERATION_REF not in str(e):
+                raise SyncError(
+                    f"push: ref update conflicted ({e}); every ref was "
+                    "left unchanged — pull and retry") from e
+            # a remote GC sweep raced this push: some uploads may be gone.
+            # Nothing was published (the guard failed the whole batch) —
+            # re-capture the token and re-transfer with a FRESH engine (the
+            # old done-set can no longer be trusted), then try again.
+            attempt += 1
+            if attempt > _GC_RETRIES:
+                raise SyncError(
+                    "push: a concurrent remote GC sweep kept interrupting "
+                    f"the ref update ({_GC_RETRIES} retries); every ref "
+                    "was left unchanged — re-run the push") from e
+            report.gc_retries += 1
+            guard = ensure_generation(remote)
     for branch, head in heads.items():
         local.set_ref(remote_tracking_ref(remote_name, branch), head)
     for tag, digest in tag_digests.items():
@@ -813,65 +870,90 @@ def pull_refs(local: StoreBackend, remote: StoreBackend,
                 f"pull tag {tag!r}: remote has no such tag") from None
 
     report = MultiSyncReport("pull", dict(heads), dict(tag_digests))
-    engine = _TransferEngine(remote, local, report, jobs=jobs,
-                             compress_wire=compress_wire)
-    if _shared_done is not None:
-        # clone threads one dedup set through its per-branch pulls, so a
-        # closure shared by many branches is checked against the
-        # destination once, not once per branch
-        engine.done = _shared_done
-    engine.run([(engine._COMMIT, h) for h in heads.values()]
-               + [(engine._COMMIT, d) for d in tag_digests.values()])
+    # same GC-generation guard as push, but against the LOCAL store: a
+    # local `repro gc` racing this pull would otherwise sweep fetched
+    # blobs between transfer and the local ref update
+    guard = ensure_generation(local)
+    attempt = 0
+    while True:
+        engine = _TransferEngine(remote, local, report, jobs=jobs,
+                                 compress_wire=compress_wire)
+        if _shared_done is not None and attempt == 0:
+            # clone threads one dedup set through its per-branch pulls, so
+            # a closure shared by many branches is checked against the
+            # destination once, not once per branch.  After a raced sweep
+            # the shared set lies — retries start from an empty one.
+            engine.done = _shared_done
+        engine.run([(engine._COMMIT, h) for h in heads.values()]
+                   + [(engine._COMMIT, d) for d in tag_digests.values()])
 
-    # everything is local now — closures walk the local store
-    closures = {b: commit_closure(local, h) for b, h in heads.items()}
-    closure: Set[str] = set().union(
-        *closures.values(),
-        *(commit_closure(local, d) for d in tag_digests.values())) \
-        if (closures or tag_digests) else set()
-    for branch, head in heads.items():
-        local.set_ref(remote_tracking_ref(remote_name, branch), head)
-    for tag, digest in tag_digests.items():
-        local.set_ref(remote_tracking_tag_ref(remote_name, tag), digest)
+        # everything is local now — closures walk the local store
+        closures = {b: commit_closure(local, h) for b, h in heads.items()}
+        closure: Set[str] = set().union(
+            *closures.values(),
+            *(commit_closure(local, d) for d in tag_digests.values())) \
+            if (closures or tag_digests) else set()
+        for branch, head in heads.items():
+            local.set_ref(remote_tracking_ref(remote_name, branch), head)
+        for tag, digest in tag_digests.items():
+            local.set_ref(remote_tracking_tag_ref(remote_name, tag), digest)
 
-    updates: List[Tuple[str, Optional[str], str]] = []
-    for branch, head in heads.items():
-        ref = _BRANCH_PREFIX + branch
+        updates: List[Tuple[str, Optional[str], str]] = []
+        for branch, head in heads.items():
+            ref = _BRANCH_PREFIX + branch
+            try:
+                current: Optional[str] = local.get_ref(ref)
+            except RefNotFound:
+                current = None
+            if current == head:
+                continue
+            if (current is not None and current not in closures[branch]
+                    and not force and not _is_empty_root(local, current)):
+                raise SyncError(
+                    f"pull {branch!r}: local head {current[:12]} has "
+                    "diverged from the remote (non-fast-forward); push "
+                    "first or pull with force=True — no local ref was "
+                    "updated")
+            updates.append((ref, current, head))
+        for tag, digest in tag_digests.items():
+            ref = _TAG_PREFIX + tag
+            try:
+                current = local.get_ref(ref)
+            except RefNotFound:
+                current = None
+            if current == digest:
+                continue
+            if current is not None and not force:
+                raise SyncError(
+                    f"pull tag {tag!r}: exists locally at {current[:12]} "
+                    "with a different target (tags are immutable; use "
+                    "force=True to clobber) — no local ref was updated")
+            updates.append((ref, current, digest))
+        if not updates:
+            break
         try:
-            current: Optional[str] = local.get_ref(ref)
-        except RefNotFound:
-            current = None
-        if current == head:
-            continue
-        if (current is not None and current not in closures[branch]
-                and not force and not _is_empty_root(local, current)):
-            raise SyncError(
-                f"pull {branch!r}: local head {current[:12]} has diverged "
-                "from the remote (non-fast-forward); push first or pull "
-                "with force=True — no local ref was updated")
-        updates.append((ref, current, head))
-    for tag, digest in tag_digests.items():
-        ref = _TAG_PREFIX + tag
-        try:
-            current = local.get_ref(ref)
-        except RefNotFound:
-            current = None
-        if current == digest:
-            continue
-        if current is not None and not force:
-            raise SyncError(
-                f"pull tag {tag!r}: exists locally at {current[:12]} with "
-                "a different target (tags are immutable; use force=True to "
-                "clobber) — no local ref was updated")
-        updates.append((ref, current, digest))
-    if updates:
-        try:
-            report.ref_update_mode = _cas_refs(local, updates)
+            report.ref_update_mode = _cas_refs(
+                local, list(updates) + [(GC_GENERATION_REF, guard, guard)])
+            report.updated_refs = [name for name, _e, _n in updates]
+            break
         except RefConflict as e:
-            raise SyncError(
-                f"pull: ref update conflicted ({e}); every local ref was "
-                "left unchanged") from e
-        report.updated_refs = [name for name, _e, _n in updates]
+            if GC_GENERATION_REF not in str(e):
+                raise SyncError(
+                    f"pull: ref update conflicted ({e}); every local ref "
+                    "was left unchanged") from e
+            attempt += 1
+            if attempt > _GC_RETRIES:
+                raise SyncError(
+                    "pull: a concurrent local GC sweep kept interrupting "
+                    f"the ref update ({_GC_RETRIES} retries); every local "
+                    "ref was left unchanged — re-run the pull") from e
+            report.gc_retries += 1
+            guard = ensure_generation(local)
+    if _shared_done is not None and attempt > 0:
+        # rebuild the clone's shared dedup set from the last (verified)
+        # transfer — everything in it was re-checked after the sweep
+        _shared_done.clear()
+        _shared_done.update(engine.done)
 
     if cache_entries:
         _sync_cache(remote, local, engine, closure, report)
@@ -891,7 +973,8 @@ def _single_report(multi: MultiSyncReport, direction: str,
         cache_entries=multi.cache_entries,
         runs=multi.runs,
         ref_updated=(_BRANCH_PREFIX + branch) in multi.updated_refs,
-        ref_update_mode=multi.ref_update_mode)
+        ref_update_mode=multi.ref_update_mode,
+        gc_retries=multi.gc_retries)
 
 
 def push(local: StoreBackend, remote: StoreBackend, branch: str, *,

@@ -21,8 +21,13 @@ docs/remote_store.md):
   repro serve --root DIR --s3 [--bucket B]     stub S3 server (same tree,
                                                S3 REST dialect)
   repro gc [--dry-run] [--drop-cache]          mark-and-sweep the local lake
-  repro gc --remote origin                     remote-side GC: mark from the
-                                               REMOTE's refs, sweep there
+  repro gc --remote origin                     remote-side GC: server-side
+                                               mark from the REMOTE's refs,
+                                               sweep there
+  repro gc --prune-age 3600                    upload-age grace window —
+                                               with the GC generation token
+                                               this makes gc safe to run
+                                               concurrently with pushes
 
 Transfers are concurrent (--jobs N workers; --jobs 1 = sequential) and
 move large blobs as compressed wire frames (paid for once, at write time).
@@ -171,6 +176,12 @@ def main(argv=None):
                    help="collect the named remote instead of the local "
                         "lake: mark from the REMOTE's own refs, sweep via "
                         "its delete_object — local state is never trusted")
+    g.add_argument("--prune-age", type=float, default=None,
+                   metavar="SECONDS",
+                   help="upload-age grace window: never sweep an object "
+                        "younger than this (default: 3600 — the safety "
+                        "margin that lets gc run concurrently with "
+                        "pushes; 0 sweeps everything unreachable)")
 
     q = sub.add_parser("query")
     q.add_argument("sql")
@@ -282,7 +293,7 @@ def main(argv=None):
         else:
             print(json.dumps({"cleared": lake.run_cache.clear()}))
     elif args.cmd == "gc":
-        from repro.core.gc import collect
+        from repro.core.gc import DEFAULT_PRUNE_AGE, collect
 
         if args.remote:
             # remote-side GC: every read and delete goes through the
@@ -291,11 +302,17 @@ def main(argv=None):
             store = _resolve_remote(lake, args.remote, allow_delete=True)
         else:
             store = lake.store
+        prune_age = (DEFAULT_PRUNE_AGE if args.prune_age is None
+                     else max(0.0, args.prune_age))
         rep = collect(store, dry_run=args.dry_run,
-                      drop_cache=args.drop_cache)
+                      drop_cache=args.drop_cache, prune_age=prune_age)
         print(json.dumps({"target": args.remote or "local",
                           "live": rep.live, "swept": rep.swept,
                           "bytes_freed": rep.bytes_freed,
+                          "skipped_young": rep.skipped_young,
+                          "prune_age": prune_age,
+                          "generation": rep.generation,
+                          "mode": rep.mode,
                           "dry_run": args.dry_run}))
     elif args.cmd == "query":
         _query(lake, args.sql, args.ref)

@@ -39,22 +39,26 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # fault_schedule under -m
 
 import argparse
 import shutil
 import tempfile
 import threading
+import time
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Callable, List, Optional
 
 import numpy as np
 
+from fault_schedule import FaultyStore, FaultyTransport, SeededSchedule
 from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
                         RemoteStore, SyncError, commit_closure, connect,
                         pull, pull_refs, push, push_refs, serve_http,
                         serve_s3)
-from repro.core.errors import RefConflict, RefNotFound
+from repro.core.errors import (ObjectNotFound, RefConflict, RefNotFound,
+                               ReproError)
 from repro.core.gc import collect
 
 BACKENDS = ("fs", "tiered")
@@ -308,6 +312,222 @@ CHECKS: List[Callable[[SyncContext], None]] = [
 ]
 
 
+# ----------------------------------------------------------- seeded fuzzing
+FUZZ_BACKENDS = ("fs", "s3")
+
+
+def _fuzz_invariants(remote_store: ObjectStore, context: str) -> List[str]:
+    """The quiesced-state contract: every branch/tag ref on the remote
+    resolves to a FULLY present, bit-identical closure.  ``commit_closure``
+    reads every blob through digest verification, so completing without
+    ``ObjectNotFound`` is exactly "nothing torn, nothing corrupt"."""
+    violations: List[str] = []
+    refs = (remote_store.list_refs("branch=")[0]
+            + remote_store.list_refs("tag=")[0])
+    for name, digest in refs:
+        try:
+            commit_closure(remote_store, digest)
+        except ObjectNotFound as e:
+            violations.append(
+                f"{context}: ref {name} -> {digest[:12]} has a torn or "
+                f"corrupt closure ({e})")
+    return violations
+
+
+#: the fuzz sweeps with this grace window — comfortably longer than any
+#: in-test sync, which is the documented operating envelope (the window
+#: must cover an in-flight sync that started AFTER the sweep's token
+#: bump; the token covers the ones that started before)
+FUZZ_PRUNE_AGE = 30.0
+_FUZZ_AGE = 7200.0  # how far pre-seeded objects are aged into the past
+
+
+def _age_remote_objects(remote_root: Path, seconds: float) -> None:
+    """Rewind every object file's mtime (the bucket tree doubles as the
+    store tree, so this ages the fs and s3 views identically) — making
+    pre-seeded data OLD relative to the grace window while everything
+    the storm uploads stays young."""
+    obj_dir = remote_root / "objects"
+    for sub in obj_dir.iterdir() if obj_dir.is_dir() else ():
+        if not sub.is_dir():
+            continue
+        for path in sub.iterdir():
+            stat = path.stat()
+            os.utime(path, (stat.st_atime, stat.st_mtime - seconds))
+
+
+def fuzz_once(backend: str, seed: int, root: Path, *,
+              jobs: int = 4) -> List[str]:
+    """One randomized fault schedule over concurrent push/pull/gc.
+
+    Three sync threads (two overlapping pushes, one pull) run through
+    fault-injected handles (``SeededSchedule``: positionally deterministic
+    kills/delays named by ``seed``) while a GC thread repeatedly sweeps
+    the remote under the documented safety contract — generation token +
+    a grace window longer than any in-flight sync.  The remote is
+    pre-seeded with OLD data (aged past the window): old garbage, which
+    the sweeps must actually delete mid-storm, and an old live closure,
+    which reachability must protect no matter its age.  Individual ops
+    may fail cleanly (clean failures are part of the contract); after
+    quiesce, every surviving ref must resolve to a complete bit-identical
+    closure — including after one final sweep — and the old garbage must
+    be gone."""
+    schedule = SeededSchedule(seed)
+    remote_store = ObjectStore(root / "remote")
+    server = RemoteServer(remote_store)
+    httpd = None
+    url = None
+    if backend == "s3":
+        httpd, url = serve_s3(root / "remote")
+
+    def sync_remote():
+        """A fault-injected client handle, one per thread."""
+        if backend == "s3":
+            return FaultyStore(connect(url), schedule)
+        return RemoteStore(FaultyTransport(LoopbackTransport(server),
+                                           schedule))
+
+    def gc_handle():
+        """GC runs through clean handles: the contract under test is the
+        race with syncs, not gc's own fault tolerance (tests/test_gc_race
+        covers the wire downgrades)."""
+        if backend == "s3":
+            return connect(url)
+        return RemoteStore(LoopbackTransport(server), allow_delete=True)
+
+    lake_a = Lake(root / "a", protect_main=False)
+    _seed(lake_a, "main")
+    for i, branch in enumerate(("u.one", "u.two")):
+        lake_a.catalog.create_branch(branch, "main", author="u")
+        _seed(lake_a, branch, tables=2, scale=3.0 + i)
+    # seed the remote faultlessly (old live data) + unreachable garbage
+    # the storm's sweeps must collect, then age it all past the window
+    push(lake_a.store, RemoteStore(LoopbackTransport(server)), "main",
+         jobs=jobs)
+    garbage = [remote_store.put(f"fuzz garbage {seed}:{i}".encode() * 64)
+               for i in range(5)]
+    _age_remote_objects(root / "remote", _FUZZ_AGE)
+    lake_b = Lake(root / "b", protect_main=False)
+
+    errors: List[str] = []
+    push_ok = {}
+
+    def tolerated(e: BaseException, what: str) -> None:
+        if isinstance(e, ReproError):
+            return  # clean failure — allowed under injected faults
+        errors.append(f"{what}: non-clean failure {e!r}")
+
+    def pusher(branch: str) -> None:
+        try:
+            push(lake_a.store, sync_remote(), branch, jobs=jobs)
+            push_ok[branch] = True
+        except BaseException as e:  # noqa: BLE001 - classified above
+            tolerated(e, f"push {branch}")
+
+    def puller() -> None:
+        for _ in range(3):
+            try:
+                pull(lake_b.store, sync_remote(), "u.one", jobs=jobs)
+                return
+            except ReproError:
+                time.sleep(0.003)  # branch not pushed yet / raced a sweep
+            except BaseException as e:  # noqa: BLE001
+                tolerated(e, "pull u.one")
+                return
+
+    def collector() -> None:
+        for _ in range(3):
+            try:
+                collect(gc_handle(), prune_age=FUZZ_PRUNE_AGE)
+            except ReproError:
+                pass  # e.g. raced ref deletions — clean by contract
+            except BaseException as e:  # noqa: BLE001
+                tolerated(e, "gc")
+            time.sleep(0.002)
+
+    try:
+        threads = {name: threading.Thread(target=fn, daemon=True)
+                   for name, fn in (("push u.one", lambda: pusher("u.one")),
+                                    ("push u.two", lambda: pusher("u.two")),
+                                    ("pull", puller), ("gc", collector))}
+        for t in threads.values():
+            t.start()
+        for name, t in threads.items():
+            t.join(120)
+            if t.is_alive():
+                # quiesce failed: the invariant checks below would race a
+                # still-mutating remote — report the hang itself instead
+                errors.append(f"{name}: thread still running after 120s "
+                              "(hang — invariants not checkable)")
+        violations = list(errors)
+        if not any("hang" in v for v in violations):
+            violations += _fuzz_invariants(remote_store, "post-quiesce")
+            # one final clean sweep: gc must never delete live data
+            try:
+                collect(gc_handle(), prune_age=FUZZ_PRUNE_AGE)
+            except ReproError as e:
+                violations.append(f"quiesced gc failed: {e!r}")
+            violations += _fuzz_invariants(remote_store, "post-quiesce-gc")
+            # the sweeps had teeth: the old unreachable garbage is gone
+            for digest in garbage:
+                if remote_store.has(digest):
+                    violations.append(
+                        f"old garbage {digest[:12]} survived every sweep")
+            # a push that REPORTED success must have fully published; any
+            # other remote head must be a value some completed operation
+            # legitimately left (covered by the closure walk above)
+            for branch in ("u.one", "u.two", "main"):
+                try:
+                    head = remote_store.get_ref(f"branch={branch}")
+                except RefNotFound:
+                    head = None
+                if push_ok.get(branch) or branch == "main":
+                    if head != lake_a.catalog.head(branch):
+                        violations.append(
+                            f"branch={branch}: push reported success but "
+                            "the remote head is "
+                            f"{head[:12] if head else 'absent'}")
+    finally:
+        if httpd is not None:
+            httpd.shutdown()
+    if violations:
+        violations.append(f"fault schedule: {schedule.to_json()}")
+    return violations
+
+
+def run_fuzz(seeds, *, backends=FUZZ_BACKENDS, jobs: int = 4,
+             verbose: bool = True,
+             artifact_dir: Optional[str] = None) -> List[str]:
+    """The fuzz leg: every seed × backend, fresh world each.  On a
+    violation the decision log is written to ``artifact_dir`` (the CI
+    gc-race job uploads it for replay: re-run with the same ``--seed``)."""
+    failures: List[str] = []
+    for backend in backends:
+        for seed in seeds:
+            tmp = tempfile.mkdtemp(prefix="sync-fuzz-")
+            try:
+                violations = fuzz_once(backend, seed, Path(tmp), jobs=jobs)
+            except BaseException as e:  # noqa: BLE001 - harness report
+                violations = [f"harness crash: {e!r}"]
+            finally:
+                shutil.rmtree(tmp, ignore_errors=True)
+            if violations:
+                failures.append(f"{backend}/seed={seed}: "
+                                + "; ".join(violations[:3]))
+                if artifact_dir:
+                    artifact = (Path(artifact_dir)
+                                / f"fault-schedule-{backend}-{seed}.json")
+                    artifact.parent.mkdir(parents=True, exist_ok=True)
+                    artifact.write_text("\n".join(violations))
+                if verbose:
+                    print(f"FAIL fuzz {backend:3s} seed={seed}")
+                    for v in violations:
+                        print(f"     {v}")
+            elif verbose:
+                print(f"PASS fuzz {backend:3s} seed={seed}")
+    return failures
+
+
 # ------------------------------------------------------------------- runner
 def run_check(check: Callable[[SyncContext], None], combo: Combo,
               root: Path) -> None:
@@ -343,12 +563,38 @@ def run_matrix(jobs: int, *, backends=BACKENDS, transports=TRANSPORTS,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="sync conformance matrix (backend × transport × jobs)")
+        description="sync conformance matrix (backend × transport × jobs) "
+                    "+ the seeded gc-race fuzz leg (--fuzz N --seed S)")
     ap.add_argument("--jobs", type=int, default=8,
                     help="transfer concurrency (1 = sequential path)")
     ap.add_argument("--backends", default=",".join(BACKENDS))
     ap.add_argument("--transports", default=",".join(TRANSPORTS))
+    ap.add_argument("--fuzz", type=int, default=0, metavar="N",
+                    help="run N seeded fault schedules of concurrent "
+                         "push/pull/gc per fuzz backend INSTEAD of the "
+                         "matrix (schedules use seeds SEED..SEED+N-1)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for --fuzz (a failing seed replays "
+                         "the same fault pattern)")
+    ap.add_argument("--fuzz-backends", default=",".join(FUZZ_BACKENDS),
+                    help="comma list of fs,s3 for the fuzz leg")
+    ap.add_argument("--artifact-dir", default=None, metavar="DIR",
+                    help="write fault-schedule replay artifacts for "
+                         "failed fuzz runs into DIR (the CI gc-race job "
+                         "uploads them)")
     args = ap.parse_args(argv)
+    if args.fuzz > 0:
+        seeds = range(args.seed, args.seed + args.fuzz)
+        failures = run_fuzz(seeds,
+                            backends=tuple(args.fuzz_backends.split(",")),
+                            jobs=args.jobs,
+                            artifact_dir=args.artifact_dir)
+        total = args.fuzz * len(args.fuzz_backends.split(","))
+        print(f"\ngc-race fuzz: {total - len(failures)}/{total} schedules "
+              f"clean (base seed {args.seed}, jobs={args.jobs})")
+        for f in failures:
+            print(f"  FAILED: {f}")
+        return 1 if failures else 0
     failures = run_matrix(args.jobs,
                           backends=tuple(args.backends.split(",")),
                           transports=tuple(args.transports.split(",")))

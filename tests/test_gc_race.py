@@ -1,0 +1,406 @@
+"""The gc-vs-push race, pinned under deterministic interleavings.
+
+A push uploads its closure first and moves refs last, so a remote GC
+sweep racing the window between ``put_objects`` and ``cas_refs`` used to
+delete the uploads and let the push publish refs to missing blobs (the
+documented "quiet-window limitation").  This suite drives that exact
+interleaving with the fault-injection layer (tests/fault_schedule.py):
+
+* a **control** test reproduces the legacy sweep's data loss, proving the
+  interleaving is the dangerous one (and keeping the harness honest);
+* the **regression** test runs the same interleaving against the real
+  ``collect`` — pre-PR it fails (refs over deleted blobs), post-PR the
+  generation token fails the push's ref update cleanly and the retry
+  re-uploads: zero missing blobs;
+* **grace window** tests: boundary properties (never sweep a
+  reachable-or-young object, always sweep old garbage) on the fs store
+  and through the S3 ``Last-Modified`` path;
+* **server-side mark**: ``gc_mark``/``gc_sweep`` do the whole collection
+  in two wire requests — no per-object reads;
+* **downgrade contract**: a server predating the new ops falls back to a
+  client-side mark with a loud warning, never a crash.
+"""
+
+import os
+import threading
+import warnings
+from collections import Counter
+
+import msgpack
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from fault_schedule import FaultyStore, FaultyTransport, Schedule
+from repro.core import (GC_GENERATION_REF, Lake, LoopbackTransport,
+                        ObjectStore, RemoteServer, RemoteStore,
+                        commit_closure, connect, ensure_generation, push,
+                        read_generation, serve_s3)
+from repro.core.gc import collect, mark_live, sweep
+
+
+def _lake_with_branch(root, n: int = 2048) -> Lake:
+    lake = Lake(root, protect_main=False)
+    lake.write_table("main", "base",
+                     {"v": np.arange(n, dtype=np.float32)})
+    lake.catalog.create_branch("u.exp", "main", author="u")
+    lake.write_table("u.exp", "t",
+                     {"v": np.full(n, 7.0, np.float32)}, author="u")
+    return lake
+
+
+def _missing_on(remote_store: ObjectStore, lake: Lake, branch: str):
+    head = lake.catalog.head(branch)
+    return [d for d in commit_closure(lake.store, head)
+            if not remote_store.has(d)]
+
+
+def _push_in_thread(lake: Lake, remote, branch: str = "u.exp"):
+    result = {}
+
+    def pusher():
+        try:
+            result["report"] = push(lake.store, remote, branch)
+        except BaseException as e:  # noqa: BLE001 - surfaced by the test
+            result["error"] = e
+
+    t = threading.Thread(target=pusher)
+    t.start()
+    return t, result
+
+
+# ------------------------------------------------------ the race, pinned
+def test_control_legacy_sweep_loses_inflight_push_blobs(tmp_path):
+    """CONTROL: the pre-PR sweep algorithm (mark + delete-unmarked, no
+    generation bump, no grace window) interleaved between a push's uploads
+    and its ref update really does destroy the push's blobs while the ref
+    lands — the data loss the tentpole closes.  If this stops
+    reproducing, the harness (not the fix) broke."""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    ensure_generation(remote_store)
+
+    schedule = Schedule()
+    gate = schedule.gate("cas_refs:before")
+    thread, result = _push_in_thread(lake, FaultyStore(remote_store,
+                                                       schedule))
+    gate.wait_reached()  # uploads done, ref update frozen
+
+    # the PR-4 sweep, verbatim: no token bump, no upload-age check
+    live = mark_live(remote_store)
+    legacy_swept = 0
+    for digest in list(remote_store.iter_objects()):
+        if digest not in live:
+            remote_store.delete_object(digest)
+            legacy_swept += 1
+    assert legacy_swept > 0, "the sweep found nothing — race not staged"
+
+    gate.open()
+    thread.join(30)
+    # the push saw no error (the legacy sweep never touched the token) …
+    assert "error" not in result, f"push failed: {result.get('error')!r}"
+    # … yet published a branch whose closure is GONE: the data loss
+    assert _missing_on(remote_store, lake, "u.exp"), \
+        "legacy sweep no longer loses data — is the control stale?"
+
+
+def test_gc_race_push_retries_and_no_blob_is_lost(tmp_path):
+    """REGRESSION (fails on the pre-PR sweep logic): the real ``collect``
+    interleaved in the same window — even with NO grace window — must not
+    let the push publish refs to deleted blobs.  The generation token
+    fails the frozen push's cas_refs; the push re-uploads and succeeds
+    with its full closure present."""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    ensure_generation(remote_store)
+
+    schedule = Schedule()
+    gate = schedule.gate("cas_refs:before")
+    thread, result = _push_in_thread(lake, FaultyStore(remote_store,
+                                                       schedule))
+    gate.wait_reached()
+
+    rep = collect(remote_store, prune_age=0.0)  # harshest setting
+    assert rep.swept > 0, "the sweep found nothing — race not staged"
+    assert rep.generation is not None
+
+    gate.open()
+    thread.join(30)
+    assert "error" not in result, f"push failed: {result.get('error')!r}"
+    assert result["report"].gc_retries == 1
+    assert result["report"].ref_updated
+    assert _missing_on(remote_store, lake, "u.exp") == []
+    # bit-identical closure on the remote, digest-verified reads
+    head = lake.catalog.head("u.exp")
+    assert remote_store.get_ref("branch=u.exp") == head
+    for digest in commit_closure(lake.store, head):
+        assert remote_store.get(digest) == lake.store.get(digest)
+
+
+def test_gc_race_grace_window_protects_uploads_without_deleting(tmp_path):
+    """With a real grace window the racing sweep deletes nothing at all —
+    the frozen push's uploads are young — and the push still completes
+    with its closure intact (the token bump forces one clean retry)."""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    ensure_generation(remote_store)
+
+    schedule = Schedule()
+    gate = schedule.gate("cas_refs:before")
+    thread, result = _push_in_thread(lake, FaultyStore(remote_store,
+                                                       schedule))
+    gate.wait_reached()
+
+    rep = collect(remote_store, prune_age=3600.0)
+    assert rep.swept == 0
+    assert rep.skipped_young > 0  # the uploads were seen — and spared
+
+    gate.open()
+    thread.join(30)
+    assert "error" not in result, f"push failed: {result.get('error')!r}"
+    assert _missing_on(remote_store, lake, "u.exp") == []
+
+
+def test_gc_race_through_wire_with_server_side_mark(tmp_path):
+    """The same race through the msgpack wire: the push hangs at its
+    ``cas_refs`` request, the GC runs via the server-side
+    ``gc_mark``/``gc_sweep`` ops, and the wire-level generation conflict
+    still forces the clean retry + re-upload."""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    ensure_generation(remote_store)
+    server = RemoteServer(remote_store)
+
+    schedule = Schedule()
+    gate = schedule.gate("wire:cas_refs:before")
+    pusher_remote = RemoteStore(FaultyTransport(LoopbackTransport(server),
+                                                schedule))
+    thread, result = _push_in_thread(lake, pusher_remote)
+    gate.wait_reached()
+
+    gc_client = RemoteStore(LoopbackTransport(server), allow_delete=True)
+    rep = collect(gc_client, prune_age=0.0)
+    assert rep.mode == "server"
+    assert rep.swept > 0
+
+    gate.open()
+    thread.join(30)
+    assert "error" not in result, f"push failed: {result.get('error')!r}"
+    assert result["report"].gc_retries >= 1
+    assert _missing_on(remote_store, lake, "u.exp") == []
+
+
+# --------------------------------------------------- server-side mark
+class CountingTransport:
+    def __init__(self, inner):
+        self.inner = inner
+        self.ops = Counter()
+
+    def request(self, payload: bytes) -> bytes:
+        self.ops[msgpack.unpackb(payload, raw=False).get("op", "?")] += 1
+        return self.inner.request(payload)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def test_server_side_mark_does_no_per_object_wire_reads(tmp_path):
+    """`repro gc --remote` against a current server is exactly two wire
+    requests — gc_mark + gc_sweep — regardless of how many objects the
+    remote holds.  (The PR-4 client-side mark paid one get/has per
+    commit/snapshot.)"""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = RemoteServer(remote_store)
+    push(lake.store, RemoteStore(LoopbackTransport(server)), "u.exp")
+    remote_store.delete_ref("branch=u.exp")  # make the closure garbage
+
+    counting = CountingTransport(LoopbackTransport(server))
+    rep = collect(RemoteStore(counting, allow_delete=True), prune_age=0.0)
+    assert rep.mode == "server"
+    assert rep.swept > 0
+    assert set(counting.ops) == {"gc_mark", "gc_sweep"}
+    assert counting.ops["gc_mark"] == 1 and counting.ops["gc_sweep"] == 1
+    # and the sweep really happened server-side
+    assert _missing_on(remote_store, lake, "u.exp")
+
+
+def test_remote_gc_generation_visible_to_clients(tmp_path):
+    """A server-side sweep bumps the shared token in the refs keyspace —
+    the same ref a push validates — and dry runs bump nothing."""
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = RemoteServer(remote_store)
+    client = RemoteStore(LoopbackTransport(server), allow_delete=True)
+    before = read_generation(remote_store)
+    rep_dry = collect(client, dry_run=True)
+    assert rep_dry.generation is None
+    assert read_generation(remote_store) == before
+    rep = collect(client)
+    assert rep.generation is not None
+    assert remote_store.get_ref(GC_GENERATION_REF) == rep.generation
+
+
+# ------------------------------------------------- downgrade contract
+class LegacyGcServer(RemoteServer):
+    """A PR-4-era server: no gc_mark/gc_sweep/stat_object ops."""
+    _op_gc_mark = None    # getattr finds None -> "unknown op" reply
+    _op_gc_sweep = None
+    _op_stat_object = None
+
+
+def test_gc_remote_falls_back_on_legacy_server_with_loud_warning(tmp_path):
+    """`repro gc --remote` against a server that predates gc_mark must
+    degrade to the client-side mark — correct results, loud warning,
+    never a crash (the same downgrade posture as the cas_refs fallback
+    in tests/test_sync_conformance.py)."""
+    lake = _lake_with_branch(tmp_path / "lake")
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = LegacyGcServer(remote_store)
+    push(lake.store, RemoteStore(LoopbackTransport(server)), "u.exp")
+    head = lake.catalog.head("u.exp")
+
+    client = RemoteStore(LoopbackTransport(server), allow_delete=True)
+    with pytest.warns(RuntimeWarning, match="predates the gc_mark"):
+        rep = collect(client, prune_age=0.0)
+    assert rep.mode == "client-fallback"
+    assert rep.swept == 0  # branch=u.exp still roots everything
+    for digest in commit_closure(lake.store, head):
+        assert remote_store.has(digest)
+
+    # drop the root: the fallback sweep must actually collect, and the
+    # generation token still advances (cas_ref exists on old servers)
+    gen_before = read_generation(remote_store)
+    remote_store.delete_ref("branch=u.exp")
+    with pytest.warns(RuntimeWarning, match="predates the gc_mark"):
+        rep2 = collect(client, prune_age=0.0)
+    assert rep2.swept > 0
+    assert not list(remote_store.iter_objects())
+    assert read_generation(remote_store) != gen_before
+
+
+def test_legacy_server_grace_window_degrades_loudly_not_silently(tmp_path):
+    """Against a server with no stat_object there is no age data: the
+    sweep proceeds (legacy quiet-window behavior) but says so — silence
+    here would read as 'the window held' when it could not."""
+    remote_store = ObjectStore(tmp_path / "remote")
+    server = LegacyGcServer(remote_store)
+    remote_store.put(b"garbage " * 64)  # unreachable, just uploaded
+    client = RemoteStore(LoopbackTransport(server), allow_delete=True)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = collect(client, prune_age=3600.0)
+    messages = [str(w.message) for w in caught]
+    assert any("predates the gc_mark" in m for m in messages)
+    assert any("grace window is DISABLED" in m for m in messages)
+    assert rep.swept == 1  # swept despite being young — loudly
+
+
+# ----------------------------------------------- grace window properties
+def test_sweep_boundary_is_exact_under_pinned_clock(tmp_path):
+    """Deterministic boundary: with ``now`` pinned, age >= prune_age
+    sweeps and age < prune_age is spared — no wall-clock jitter."""
+    store = ObjectStore(tmp_path / "store")
+    digest = store.put(b"boundary garbage " * 8)
+    t0 = store.mtime(digest)
+
+    swept, _freed, young = sweep(store, set(), prune_age=100.0,
+                                 dry_run=True, now=t0 + 99.9)
+    assert (swept, young) == (0, 1)
+    swept, _freed, young = sweep(store, set(), prune_age=100.0,
+                                 now=t0 + 100.0)
+    assert (swept, young) == (1, 0)
+    assert not store.has(digest)
+
+    # a LIVE object is never swept, no matter how old
+    live_digest = store.put(b"precious " * 8)
+    swept, _freed, _young = sweep(store, {live_digest}, prune_age=0.0,
+                                  now=t0 + 10_000.0)
+    assert swept == 0 and store.has(live_digest)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(min_value=-1500, max_value=1500),
+                min_size=1, max_size=5),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_grace_window_property_fs(tmp_path_factory, offsets, seed):
+    """Property (fs backend): for garbage ages scattered around the
+    prune-age boundary, ``collect`` never sweeps a reachable-or-young
+    object and always sweeps old garbage.  Reachable objects are aged
+    too — age must never override reachability."""
+    prune_age = 600.0
+    root = tmp_path_factory.mktemp("grace")
+    lake = Lake(root / "lake", protect_main=False)
+    lake.write_table("main", "t",
+                     {"v": np.arange(64, dtype=np.float32)})
+    store = lake.store
+
+    # age every reachable object far beyond the window: still protected
+    for digest in list(store.iter_objects()):
+        path = store._path(digest)
+        os.utime(path, (path.stat().st_atime,
+                        path.stat().st_mtime - 10 * prune_age))
+
+    garbage = {}
+    rng = np.random.default_rng(seed)
+    for i, offset in enumerate(offsets):
+        # keep a safety margin around the boundary: the sweep's clock
+        # runs a beat after utime, so exact-boundary ages are untestable
+        # with a live clock (pinned-clock exactness is tested above)
+        if abs(offset) < 30:
+            offset = 30 if offset >= 0 else -30
+        blob = b"garbage" + bytes(rng.integers(0, 256, 32).tolist()) \
+            + bytes([i])
+        digest = store.put(blob)
+        path = store._path(digest)
+        age = prune_age + offset
+        os.utime(path, (path.stat().st_atime,
+                        path.stat().st_mtime - age))
+        garbage[digest] = age
+
+    report = collect(store, prune_age=prune_age)
+    for digest, age in garbage.items():
+        if age >= prune_age:
+            assert not store.has(digest), \
+                f"old garbage (age {age}s) survived the sweep"
+        else:
+            assert store.has(digest), \
+                f"young object (age {age}s) was swept inside the window"
+    assert report.skipped_young == sum(1 for a in garbage.values()
+                                       if a < prune_age)
+    # reachability always wins: the table is intact
+    assert lake.read_table("main", "t")["v"][0] == 0.0
+
+
+def test_grace_window_over_s3_last_modified(tmp_path):
+    """The same window through the S3 dialect: ages come from the
+    ``Last-Modified`` header (stub: backing-file mtime, like real S3)."""
+    httpd, url = serve_s3(tmp_path / "bucket")
+    try:
+        backend = connect(url)
+        old = backend.put(b"old garbage " * 16)
+        young = backend.put(b"young garbage " * 16)
+        # age `old` beyond the window by rewinding its backing file
+        bucket = tmp_path / "bucket"
+        path = bucket / "objects" / old[:2] / old[2:]
+        os.utime(path, (path.stat().st_atime,
+                        path.stat().st_mtime - 7200))
+        assert backend.mtime(old) < backend.mtime(young)
+
+        report = collect(backend, prune_age=3600.0)
+        assert not backend.has(old)
+        assert backend.has(young)
+        assert report.skipped_young == 1
+        # second pass after the window expires (simulated): sweeps it
+        path2 = bucket / "objects" / young[:2] / young[2:]
+        os.utime(path2, (path2.stat().st_atime,
+                         path2.stat().st_mtime - 7200))
+        report2 = collect(backend, prune_age=3600.0)
+        assert report2.swept == 1 and not backend.has(young)
+    finally:
+        httpd.shutdown()

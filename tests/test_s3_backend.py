@@ -453,10 +453,17 @@ def test_cli_s3_remote_push_clone_gc(tmp_path, capsys):
         main(base + ["gc", "--remote", "s3"])
         report = json.loads(capsys.readouterr().out.strip())
         assert report["target"] == "s3" and report["swept"] == 0
-        # drop the only remote root and sweep for real — the REMOTE's ref
-        # state decides, not the local lake (which still has its branches)
+        # with the default grace window the just-pushed (young) objects
+        # would be skipped, not swept — drop the only remote root and
+        # sweep with --prune-age 0 for real.  The REMOTE's ref state
+        # decides, not the local lake (which still has its branches).
         remote.delete_ref("branch=u.exp")
-        main(base + ["gc", "--remote", "s3"])
+        main(base + ["gc", "--remote", "s3"])  # default window: all young
+        report = json.loads(capsys.readouterr().out.strip())
+        assert report["swept"] == 0 and report["skipped_young"] == n_before
+        for digest in commit_closure(lake.store, head):
+            assert remote.has(digest)
+        main(base + ["gc", "--remote", "s3", "--prune-age", "0"])
         report = json.loads(capsys.readouterr().out.strip())
         assert report["swept"] == n_before and report["bytes_freed"] > 0
         assert not list(remote.iter_objects())

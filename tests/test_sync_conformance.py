@@ -34,7 +34,7 @@ from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteServer,
                         RemoteStore, SyncError, clone, commit_closure, pull,
                         push, push_refs)
 from repro.core.gc import collect
-from sync_conformance import CHECKS, Combo, run_check
+from sync_conformance import CHECKS, Combo, fuzz_once, run_check
 
 _FAST_TRANSPORTS = ("direct", "loopback")  # http exercised on the slow leg
 
@@ -62,6 +62,19 @@ def test_conformance_matrix_s3(tmp_path, backend, jobs, check):
     """The s3 leg: the remote is reached through the S3 REST dialect
     (stub server), the oracle reads the bucket tree directly."""
     run_check(check, Combo(backend, "s3", jobs), tmp_path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ("fs", "s3"))
+@pytest.mark.parametrize("seed", (101, 202))
+def test_gc_race_fuzz_fixed_seeds(tmp_path, backend, seed):
+    """The seeded gc-race fuzz leg on two pinned schedules per backend:
+    concurrent push/pull/gc under injected kills/delays, closure
+    integrity checked after quiesce.  The CI gc-race job runs the wider
+    sweep (``python -m tests.sync_conformance --fuzz 30``); a failure
+    here replays exactly with the same seed."""
+    violations = fuzz_once(backend, seed, tmp_path, jobs=4)
+    assert not violations, "\n".join(violations)
 
 
 # ----------------------------------------------------- seeded thread-fuzz
