@@ -2,17 +2,58 @@
 
 Measures throughput at each reversible layer of Fig. 2:
 in-memory columns ⇄ tensorfile bytes ⇄ table snapshot ⇄ catalog commit,
-and the full DAG execution rate (rows/s through transformation functions)."""
+the full DAG execution rate (rows/s through transformation functions), and
+thread- vs process-executor scaling on a GIL-bound DAG."""
 
 from __future__ import annotations
 
+import os
 import tempfile
 
 import numpy as np
 
-from repro.core import Lake, Model, Pipeline, model
+from repro.core import Lake, Model, Pipeline, execute, model
 from repro.core import tensorfile as tf
 from .common import emit, timeit
+
+#: pure-Python iterations per GIL-bound node (holds the GIL the whole time,
+#: so N such nodes cannot overlap on the thread executor)
+GIL_ITERS = 600_000
+
+
+def _gil_node_fn(data=Model("source_table")):
+    acc = 0.0
+    for i in range(GIL_ITERS):  # pure-Python loop: never releases the GIL
+        acc += (i * 1.000001) % 97.0
+    return {"acc": np.array([acc, float(len(data["a"]))])}
+
+
+def executor_scaling(cols, *, width: int = 4, repeats: int = 3):
+    """Fan-out of ``width`` independent GIL-bound nodes: the thread
+    executor serializes them on the interpreter lock, the process pool
+    actually overlaps them.  Cache off so every run re-executes."""
+    nodes = [model(name=f"gil{i}")(_gil_node_fn) for i in range(width)]
+    pipe = Pipeline(nodes)
+    with tempfile.TemporaryDirectory() as tmp:
+        lake = Lake(tmp, protect_main=False)
+        lake.catalog.commit(
+            "main", {"source_table": lake.io.write_snapshot(cols)}, "seed")
+        lake.catalog.create_branch("u.bench", "main", author="u")
+
+        def run(executor):
+            def body():
+                execute(pipe, lake.catalog, lake.io, branch="u.bench",
+                        author="u", use_cache=False, jobs=width,
+                        executor=executor)
+            return body
+
+        cpus = os.cpu_count() or 1
+        t_us = timeit(run("thread"), repeats=repeats, warmup=1)
+        emit(f"executor/thread_jobs{width}_gil{width}", t_us,
+             f"cpus={cpus}")
+        p_us = timeit(run("process"), repeats=repeats, warmup=1)
+        emit(f"executor/process_jobs{width}_gil{width}", p_us,
+             f"cpus={cpus},speedup_vs_thread={t_us / p_us:.2f}x")
 
 
 def main(n_rows: int = 200_000):
@@ -79,6 +120,8 @@ def main(n_rows: int = 200_000):
         us = timeit(run, repeats=3)
         emit("fig1/dag_run_2nodes", us,
              f"rows_per_s={n_rows / (us / 1e6):.0f}")
+
+    executor_scaling(cols)
 
 
 if __name__ == "__main__":

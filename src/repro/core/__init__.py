@@ -11,9 +11,10 @@ from .catalog import (Catalog, Commit, remote_tracking_ref,
                       remote_tracking_tag_ref)
 from .errors import (AmbiguousRefUpdate, CodecUnavailable, CodeDrift,
                      CycleError, ExpectationFailed, MergeConflict,
-                     ObjectNotFound, PermissionDenied, RefConflict,
-                     RefNotFound, RemoteError, ReproError, RunNotFound,
-                     SchemaError, SyncError, TableNotFound)
+                     NodeExecutionError, ObjectNotFound, PermissionDenied,
+                     RefConflict, RefNotFound, RemoteError, ReproError,
+                     RunNotFound, SchemaError, SyncError, TableNotFound)
+from .exec import (Lease, LeaseBoard, WorkerService, run_status)
 from .frame import Expr, col, lit, nrows, select, where
 from .ledger import (ReplayReport, RunLedger, mesh_fingerprint, run_pipeline,
                      runtime_fingerprint)
@@ -22,7 +23,7 @@ from .pipeline import (ExecutionReport, Model, Node, NodeStat, Pipeline,
                        sql_model)
 from .remote import (HTTPTransport, LoopbackTransport, RemoteServer,
                      RemoteStore, TieredStore, connect, serve_http)
-from .runcache import RunCache, node_key
+from .runcache import CacheDemotionWarning, RunCache, node_key
 from .s3 import S3Backend
 from .s3stub import serve_s3
 from .store import (GC_GENERATION_REF, ObjectStore, StoreBackend,
@@ -75,11 +76,21 @@ class Lake:
 
     def run(self, pipeline: Pipeline, *, branch: str, author="system",
             config=None, seed=None, mesh=None, use_cache=True,
-            jobs=None) -> RunResult:
+            jobs=None, executor="thread", **exec_opts) -> RunResult:
         return run_pipeline(pipeline, self.catalog, self.io, self.ledger,
                             branch=branch, author=author, config=config,
                             seed=seed, mesh=mesh, cache=self.run_cache,
-                            use_cache=use_cache, jobs=jobs)
+                            use_cache=use_cache, jobs=jobs,
+                            executor=executor, **exec_opts)
+
+    def worker(self, pipelines, **kw) -> "WorkerService":
+        """A :class:`WorkerService` over this lake's store — the in-process
+        form of ``repro worker`` (tests, notebooks)."""
+        return WorkerService(self.store, pipelines, **kw)
+
+    def run_status(self, run_id: str):
+        """Live/final per-node view of one execution (``repro status``)."""
+        return run_status(self.store, run_id)
 
     def replay(self, run_id: str, pipeline: Pipeline, *, branch: str,
                author="system", **kw) -> ReplayReport:
@@ -100,6 +111,8 @@ __all__ = [
     "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
     "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",
+    "CacheDemotionWarning", "Lease", "LeaseBoard", "WorkerService",
+    "run_status", "NodeExecutionError",
     "ReplayReport", "Expectation", "expectation", "audit", "publish",
     "AuditReport", "not_empty", "no_nans", "column_range", "col", "lit",
     "Expr", "select", "where", "nrows", "sha256_hex", "code_hash_of",

@@ -41,6 +41,30 @@ class CycleError(ReproError):
     """The pipeline DAG has a cycle."""
 
 
+class NodeExecutionError(ReproError):
+    """A DAG node failed during execution.
+
+    Carries the failing node's identity plus the :class:`NodeStat` of every
+    node that completed before the failure was observed — the executor used
+    to throw both away, leaving only the bare exception of the worker
+    thread.  ``attempts`` counts lease claims on the node: 1 for a plain
+    in-process failure, >1 when the distributed coordinator re-leased the
+    node after worker crashes and finally gave up (the poison pill)."""
+
+    def __init__(self, node, message, *, node_stats=None, attempts=1):
+        self.node = node
+        self.node_stats = dict(node_stats or {})
+        self.attempts = attempts
+        super().__init__(
+            f"node {node!r} failed after {attempts} attempt(s): {message}")
+
+
+class RunAborted(ReproError):
+    """Internal: a sibling node's failure aborted this in-flight node
+    before it wrote any snapshot or cache entry.  Never escapes
+    ``execute`` — the coordinator swallows it while draining."""
+
+
 class ExpectationFailed(ReproError):
     """A write-audit-publish expectation failed."""
 

@@ -1,0 +1,25 @@
+"""Distributed DAG execution: coordinator, leases, worker backends.
+
+The public surface:
+
+* :func:`run_dag` — the scheduler behind ``pipeline.execute``
+* :class:`WorkerService` — the pull-based remote worker (``repro worker``)
+* :class:`LeaseBoard` / :class:`Lease` — the refs-keyspace lease table
+* :func:`run_status` — live per-node view of a run (``repro status``)
+"""
+
+from .coordinator import (bind_ledger_run, new_exec_id, run_dag,
+                          run_status)
+from .lease import (DONE, EXEC_REF_PREFIX, FAILED, LEASED, PENDING, Lease,
+                    LeaseBoard, lease_ref_digests)
+from .worker import (ExecContext, NodeResult, NodeSpec, ProcessWorkerPool,
+                     SpecInput, ThreadWorkerPool, WorkerService,
+                     read_error, read_result, run_spec)
+
+__all__ = [
+    "DONE", "EXEC_REF_PREFIX", "FAILED", "LEASED", "PENDING",
+    "ExecContext", "Lease", "LeaseBoard", "NodeResult", "NodeSpec",
+    "ProcessWorkerPool", "SpecInput", "ThreadWorkerPool", "WorkerService",
+    "bind_ledger_run", "lease_ref_digests", "new_exec_id", "read_error",
+    "read_result", "run_dag", "run_spec", "run_status",
+]

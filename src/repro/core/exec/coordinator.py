@@ -1,0 +1,495 @@
+"""The DAG coordinator: leases ready nodes to workers, collects results,
+commits once.
+
+This is the scheduler that used to live inside ``pipeline.execute`` as a
+monolithic thread-pool loop.  Split out, it owns exactly three concerns:
+
+1. **Readiness** — dependency counting over the pipeline's internal edges;
+   a node is dispatched the moment its last parent completes.
+2. **Leasing** — every dispatched node gets a lease ref under
+   ``exec/<run-id>/node/<name>`` (:mod:`.lease`), so ``repro status`` can
+   watch any run live and remote workers coordinate through CAS alone.
+3. **Outcome handling** — completed nodes unlock children; a failed node
+   aborts the run: in-flight siblings are drained (they finish but publish
+   no snapshots or cache entries), then :class:`NodeExecutionError`
+   propagates carrying the failing node's identity and every completed
+   sibling's :class:`NodeStat` — the two things the old scheduler threw
+   away.
+
+The execution itself — cache probe, input load, function call, snapshot
+write — is :func:`~.worker.run_spec`, shared verbatim by all three worker
+backends, which (with content addressing) is why thread, process and
+remote runs commit bit-identical digests.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import os
+import time
+import warnings
+from concurrent.futures import FIRST_COMPLETED, wait as futures_wait
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import msgpack
+
+from ..catalog import Catalog
+from ..errors import (NodeExecutionError, ReproError, RunAborted,
+                      TableNotFound)
+from ..pipeline import ExecutionReport, Pipeline, default_jobs
+from ..runcache import CacheDemotionWarning, RunCache, node_key
+from ..table import TableIO
+from .lease import DONE, FAILED, LEASED, Lease, LeaseBoard
+from .worker import (ExecContext, NodeSpec, ProcessWorkerPool, SpecInput,
+                     ThreadWorkerPool, read_error, read_result,
+                     store_root_of)
+
+EXECUTORS = ("thread", "process", "remote")
+
+#: (node name, code hash) pairs already warned about in this process —
+#: the TypeError demotion fires at most one CacheDemotionWarning per node.
+_DEMOTION_WARNED: Set[Tuple[str, str]] = set()
+
+
+def _reset_demotion_warnings() -> None:
+    """Test hook: forget which nodes already warned."""
+    _DEMOTION_WARNED.clear()
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def new_exec_id(branch: str, pipeline_hash: str) -> str:
+    """Short unique id for one execution's lease namespace.  Uniqueness is
+    what matters (two concurrent runs of the same pipeline must not share
+    lease refs); it is deliberately NOT content-derived."""
+    material = ":".join([branch, pipeline_hash, str(time.time_ns()),
+                         str(os.getpid()), os.urandom(8).hex()])
+    return hashlib.sha256(material.encode()).hexdigest()[:16]
+
+
+class _Coordinator:
+    """One run's scheduling state (shared by the local and remote loops)."""
+
+    def __init__(self, pipeline: Pipeline, catalog: Catalog, io: TableIO, *,
+                 branch: str, author: str, params: Dict[str, Any],
+                 read_ref: str, run_cache: Optional[RunCache],
+                 use_cache: bool, jobs: int, executor: str, exec_id: str,
+                 lease_ttl: float, max_attempts: int, poll: float,
+                 wait_timeout: Optional[float]):
+        self.pipeline = pipeline
+        self.catalog = catalog
+        self.io = io
+        self.branch = branch
+        self.author = author
+        self.params = params
+        self.read_ref = read_ref
+        self.run_cache = run_cache
+        self.use_cache = use_cache
+        self.jobs = jobs
+        self.executor = executor
+        self.exec_id = exec_id
+        self.lease_ttl = lease_ttl
+        self.max_attempts = max_attempts
+        self.poll = poll
+        self.wait_timeout = wait_timeout
+
+        self.store = catalog.store
+        self.board = LeaseBoard(self.store, exec_id)
+        self.head_tables = catalog.input_digests(read_ref,
+                                                 pipeline.source_tables())
+        self.internal = set(pipeline.nodes)
+        #: completed nodes' results (the readiness + cache-keying substrate)
+        self.results: Dict[str, NodeResult] = {}
+        self.waiting = dict(pipeline.indegree)
+        self.children = pipeline.children
+
+    # -------------------------------------------------------------- specs
+    def input_digest(self, dep: str) -> str:
+        """Identity of one input: parent snapshot digest (internal node) or
+        source-table snapshot digest on ``read_ref`` (the data-commit half
+        of the paper's reproducibility contract)."""
+        if dep in self.internal:
+            snap = self.results[dep].snapshot
+            if snap is None:  # parent ran uncached & unmaterialized
+                raise ReproError(
+                    f"node {dep!r} has no snapshot for cache keying")
+            return snap
+        if dep not in self.head_tables:
+            raise TableNotFound(
+                f"source table {dep!r} not on {self.read_ref!r}")
+        return self.head_tables[dep]
+
+    def build_spec(self, name: str) -> NodeSpec:
+        """Resolve one ready node into a self-contained :class:`NodeSpec`.
+
+        Called only once every parent has completed, so every input can be
+        pinned to a snapshot digest here, on the coordinator — workers
+        never re-derive identities, which keeps the cache key computation
+        in exactly one place (and byte-identical to the pre-split
+        executor's)."""
+        node = self.pipeline.nodes[name]
+        skip_reason: Optional[str] = None
+        node_caching = self.run_cache is not None
+        if node_caching and not node.cache_safe:
+            # captured state (mutable closure/global) the code hash can't
+            # cover — never cache, but still snapshot for descendants' keys
+            node_caching, skip_reason = False, "unstable-capture"
+
+        inputs: List[Tuple[str, str]] = []
+        if node_caching:
+            inputs = [(m.name, self.input_digest(m.name))
+                      for m in node.dep_params.values()]
+        sig = inspect.signature(node.fn)
+        injected = {p: self.params[p] for p in sig.parameters
+                    if p in self.params and p not in node.dep_params}
+        key: Optional[str] = None
+        if node_caching:
+            try:
+                key = node_key(node.code_hash, inputs, injected, name=name)
+            except TypeError as e:  # param with no stable canonical form
+                key, inputs = None, []
+                skip_reason = "unhashable-param"
+                mark = (name, node.code_hash)
+                if mark not in _DEMOTION_WARNED:
+                    _DEMOTION_WARNED.add(mark)
+                    warnings.warn(
+                        f"node {name!r} demoted to uncacheable: {e}",
+                        CacheDemotionWarning, stacklevel=4)
+        if key is None:
+            # cache keying didn't walk the inputs — validate sources exist
+            for mref in node.dep_params.values():
+                if mref.name not in self.internal \
+                        and mref.name not in self.head_tables:
+                    raise TableNotFound(
+                        f"source table {mref.name!r} not on "
+                        f"{self.read_ref!r}")
+
+        spec_inputs: List[SpecInput] = []
+        for pname, mref in node.dep_params.items():
+            if mref.name in self.internal:
+                snapshot = self.results[mref.name].snapshot
+            else:
+                snapshot = self.head_tables[mref.name]
+            spec_inputs.append(SpecInput(param=pname, dep=mref.name,
+                                         snapshot=snapshot,
+                                         columns=mref.columns))
+        return NodeSpec(
+            name=name, code_hash=node.code_hash,
+            materialize=node.materialize,
+            # persist whenever caching is on (a cache entry must point at a
+            # snapshot; an uncacheable node's snapshot is its descendants'
+            # cache input) or when columns cannot flow in memory
+            persist=self.run_cache is not None or self.executor != "thread",
+            cache_key=key, cache_skip_reason=skip_reason,
+            input_digests=inputs, inputs=spec_inputs, injected=injected)
+
+    # ------------------------------------------------------------ lifecycle
+    def open_run(self) -> None:
+        self.board.create_run({
+            "state": "running",
+            "branch": self.branch,
+            "read_ref": self.read_ref,
+            "executor": self.executor,
+            "jobs": self.jobs,
+            "use_cache": self.use_cache,
+            "pipeline_hash": self.pipeline.code_hash(),
+            "code": self.pipeline.code_manifest(),
+            "total_nodes": len(self.pipeline.order),
+            "started": time.time(),
+        })
+
+    def ready_roots(self) -> List[str]:
+        return [n for n in self.pipeline.order if self.waiting[n] == 0]
+
+    def unlock_children(self, name: str) -> List[str]:
+        """Parents-done bookkeeping; returns newly ready nodes."""
+        ready = []
+        for child in self.children[name]:
+            self.waiting[child] -= 1
+            if self.waiting[child] == 0:
+                ready.append(child)
+        return ready
+
+    def stats_so_far(self) -> Dict[str, Any]:
+        return {name: r.stat() for name, r in self.results.items()}
+
+    def fail_run(self, node: str, message: str, attempts: int) -> None:
+        self.board.update_run(
+            state="failed", failed_node=node, error=message,
+            finished=time.time(),
+            nodes={n: r.stat().to_obj() for n, r in self.results.items()})
+
+    def finish_run(self, commit: Optional[str]) -> None:
+        self.board.update_run(
+            state="done", commit=commit, finished=time.time(),
+            nodes={n: r.stat().to_obj() for n, r in self.results.items()})
+        # the per-node lease refs were scaffolding; the run record keeps
+        # the final summary for ``repro status``
+        self.board.delete_nodes()
+
+    def commit_outputs(self) -> ExecutionReport:
+        """The single multi-table transaction (paper §3) — identical logic
+        and metadata to the pre-split executor, so commit digests are
+        unchanged across the refactor."""
+        outputs = {name: r.snapshot for name, r in self.results.items()
+                   if self.pipeline.nodes[name].materialize and r.snapshot}
+        node_stats = self.stats_so_far()
+        commit_digest: Optional[str] = None
+        if outputs:
+            # Warm replay on an unchanged branch is a no-op: skip the
+            # commit when every output table already sits at the same
+            # snapshot on the head.
+            current = self.catalog.tables(self.branch)
+            if any(current.get(n) != s for n, s in outputs.items()):
+                n_hits = sum(1 for s in node_stats.values() if s.cache_hit)
+                commit_digest = self.catalog.commit(
+                    self.branch, outputs,
+                    f"pipeline run: {', '.join(self.pipeline.order)}",
+                    author=self.author,
+                    meta={"pipeline_code": self.pipeline.code_hash(),
+                          "cache_hits": n_hits,
+                          "cache_misses": len(node_stats) - n_hits},
+                )
+        self.finish_run(commit_digest)
+        return ExecutionReport(outputs=outputs, commit=commit_digest,
+                               node_stats=node_stats, jobs=self.jobs,
+                               cache_enabled=self.use_cache,
+                               executor=self.executor,
+                               exec_id=self.exec_id)
+
+    # ----------------------------------------------------------- local loop
+    def run_local(self) -> ExecutionReport:
+        """thread/process executors: the coordinator IS the worker host.
+
+        Leases are taken with single-write ``lease_direct`` (nobody races
+        for the node), but they are real leases — ``repro status`` on a
+        local run shows the same board a remote run would."""
+        ctx = ExecContext(self.store, cache=self.run_cache)
+        if self.executor == "process":
+            pool = ProcessWorkerPool(store_root_of(self.store), self.jobs,
+                                     ctx=ctx)
+        else:
+            pool = ThreadWorkerPool(ctx, self.jobs)
+        owner = f"local:{os.getpid()}"
+        futures: Dict[Any, Tuple[str, Lease]] = {}
+
+        def dispatch(name: str) -> None:
+            spec = self.build_spec(name)
+            lease = self.board.lease_direct(name, owner, self.lease_ttl)
+            fut = pool.submit(spec, self.pipeline.nodes[name].fn)
+            futures[fut] = (name, lease)
+
+        def drain() -> None:
+            """A failure was observed: no in-flight sibling may publish
+            state after it.  Threads cannot be cancelled, so the abort
+            flag makes ``run_spec`` discard their outputs; here we wait
+            them out so nothing outlives the raised error."""
+            ctx.abort.set()
+            for fut in list(futures):
+                try:
+                    fut.result()
+                except Exception:  # noqa: BLE001 - first failure wins
+                    pass
+            futures.clear()
+
+        try:
+            for name in self.ready_roots():
+                dispatch(name)
+            while futures:
+                done, _ = futures_wait(futures, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    name, lease = futures.pop(fut)
+                    try:
+                        result = fut.result()
+                    except RunAborted:
+                        continue  # drained sibling (abort already set)
+                    except Exception as e:  # noqa: BLE001 - node failure
+                        self.board.fail(lease, self.store.put(_pack(
+                            {"node": name, "error": repr(e),
+                             "owner": owner})))
+                        drain()
+                        self.fail_run(name, repr(e), lease.attempt)
+                        if isinstance(e, ReproError):
+                            # contract errors (SchemaError, missing
+                            # snapshots) already name the node — keep
+                            # their precise type for callers
+                            raise
+                        raise NodeExecutionError(
+                            name, e, node_stats=self.stats_so_far(),
+                            attempts=lease.attempt) from e
+                    result.attempt = lease.attempt
+                    result.owner = owner
+                    self.board.complete(
+                        lease, self.store.put(_pack(result.to_obj())))
+                    self.results[name] = result
+                    for child in self.unlock_children(name):
+                        dispatch(child)
+        except BaseException as e:
+            if futures:  # interrupted mid-run (not via the failure path)
+                drain()
+            if not isinstance(e, NodeExecutionError):
+                self.board.update_run(state="failed", error=repr(e),
+                                      finished=time.time())
+            raise
+        finally:
+            pool.shutdown()
+        return self.commit_outputs()
+
+    # ---------------------------------------------------------- remote loop
+    def run_remote(self) -> ExecutionReport:
+        """remote executor: publish node leases, let ``repro worker``
+        processes claim them, poll the board for outcomes.
+
+        Crash detection is purely temporal: a worker that dies stops
+        heartbeating, its lease deadline passes, and the coordinator
+        requeues the node (``attempt`` preserved; the next claim increments
+        it).  After ``max_attempts`` claims of one node the coordinator
+        poisons it — repeated worker death on the same node means the node
+        is killing its workers."""
+        inflight: Set[str] = set()
+
+        def publish(name: str) -> None:
+            spec = self.build_spec(name)
+            task = self.store.put(_pack(spec.to_obj()))
+            self.board.publish(name, task)
+            inflight.add(name)
+
+        def fail_remote(name: str, message: str, attempts: int):
+            self.fail_run(name, message, attempts)
+            return NodeExecutionError(name, message,
+                                      node_stats=self.stats_so_far(),
+                                      attempts=attempts)
+
+        for name in self.ready_roots():
+            publish(name)
+        last_progress = time.monotonic()
+        while inflight:
+            progressed = False
+            board = self.board.board()
+            for name in sorted(inflight):
+                lease = board.get(name)
+                if lease is None:
+                    continue
+                if lease.state == DONE:
+                    result = read_result(self.store, lease)
+                    if result is None:
+                        raise fail_remote(
+                            name, "worker completed the node but its "
+                            "result blob is unreadable", lease.attempt)
+                    inflight.discard(name)
+                    self.results[name] = result
+                    for child in self.unlock_children(name):
+                        publish(child)
+                    progressed = True
+                elif lease.state == FAILED:
+                    raise fail_remote(name, read_error(self.store, lease),
+                                      lease.attempt)
+                elif lease.state == LEASED and lease.expired(time.time()):
+                    if lease.attempt >= self.max_attempts:
+                        message = (
+                            f"lease expired {lease.attempt} time(s) — "
+                            f"worker {lease.owner!r} presumed dead; "
+                            "poison pill after "
+                            f"{self.max_attempts} attempts")
+                        self.board.poison(lease, self.store.put(_pack(
+                            {"node": name, "error": message,
+                             "owner": lease.owner})))
+                        raise fail_remote(name, message, lease.attempt)
+                    if self.board.requeue(lease):
+                        progressed = True  # the run is still moving
+            if progressed:
+                last_progress = time.monotonic()
+            elif self.wait_timeout is not None \
+                    and time.monotonic() - last_progress > self.wait_timeout:
+                stuck = ", ".join(sorted(inflight))
+                self.board.update_run(state="failed", finished=time.time(),
+                                      error=f"stalled on: {stuck}")
+                raise ReproError(
+                    f"remote execution stalled for {self.wait_timeout}s "
+                    f"waiting on nodes: {stuck} (no workers polling? "
+                    "start one with `repro worker`)")
+            if inflight:
+                time.sleep(self.poll)
+        return self.commit_outputs()
+
+
+def run_dag(pipeline: Pipeline, catalog: Catalog, io: TableIO, *,
+            branch: str, author: str = "system",
+            params: Optional[Dict[str, Any]] = None,
+            read_ref: Optional[str] = None,
+            cache: Optional[RunCache] = None, use_cache: bool = True,
+            jobs: Optional[int] = None, executor: str = "thread",
+            exec_id: Optional[str] = None, lease_ttl: float = 30.0,
+            max_attempts: int = 3, poll: float = 0.05,
+            wait_timeout: Optional[float] = None) -> ExecutionReport:
+    """Entry point behind :func:`repro.core.pipeline.execute` — see its
+    docstring for the executor contract."""
+    if executor not in EXECUTORS:
+        raise ReproError(
+            f"unknown executor {executor!r} (expected one of {EXECUTORS})")
+    params = params or {}
+    read_ref = read_ref or branch
+    run_cache = (cache or RunCache(catalog.store)) if use_cache else None
+    n_jobs = max(1, jobs) if jobs else default_jobs()
+    exec_id = exec_id or new_exec_id(branch, pipeline.code_hash())
+
+    coord = _Coordinator(
+        pipeline, catalog, io, branch=branch, author=author, params=params,
+        read_ref=read_ref, run_cache=run_cache, use_cache=use_cache,
+        jobs=n_jobs, executor=executor, exec_id=exec_id,
+        lease_ttl=lease_ttl, max_attempts=max_attempts, poll=poll,
+        wait_timeout=wait_timeout)
+    coord.open_run()
+    if executor == "remote":
+        return coord.run_remote()
+    return coord.run_local()
+
+
+# ------------------------------------------------------------------ status
+def bind_ledger_run(store, exec_id: str, ledger_run_id: str) -> None:
+    """Cross-link an execution's refs-keyspace record to its ledger run id
+    so ``repro status`` resolves either name."""
+    LeaseBoard(store, exec_id).update_run(ledger_run_id=ledger_run_id)
+
+
+def run_status(store, run_id: str) -> Dict[str, Any]:
+    """Live (or final) view of one execution: the run record merged with
+    the current lease board.
+
+    ``run_id`` may be a unique prefix of the exec id, or a ledger run id
+    bound via :func:`bind_ledger_run`.  While the run is in flight each
+    node shows its lease state/owner/attempt and heartbeat headroom; after
+    completion the node view comes from the record's final summary."""
+    matches = [r for r in LeaseBoard.list_runs(store)
+               if r.startswith(run_id)]
+    if not matches:  # fall back to ledger run ids bound into records
+        for rid in LeaseBoard.list_runs(store):
+            record = LeaseBoard(store, rid).run_record() or {}
+            if record.get("ledger_run_id") == run_id:
+                matches.append(rid)
+    if not matches:
+        raise ReproError(f"no execution state for run {run_id!r}")
+    if len(matches) > 1:
+        raise ReproError(
+            f"ambiguous run id {run_id!r}: matches {sorted(matches)}")
+    board = LeaseBoard(store, matches[0])
+    record = board.run_record() or {}
+    now = time.time()
+    nodes: Dict[str, Dict[str, Any]] = {}
+    for name, stat in (record.get("nodes") or {}).items():
+        nodes[name] = dict(stat, state="done")
+    for name, lease in board.board().items():
+        entry: Dict[str, Any] = {"state": lease.state}
+        if lease.state == LEASED:
+            entry.update(owner=lease.owner, attempt=lease.attempt,
+                         heartbeat_in=round(lease.deadline - now, 3),
+                         expired=lease.expired(now))
+        elif lease.attempt:
+            entry.update(owner=lease.owner, attempt=lease.attempt)
+        nodes[name] = {**nodes.get(name, {}), **entry}
+    record["exec_id"] = matches[0]
+    record["nodes"] = nodes
+    return record

@@ -1,0 +1,284 @@
+r"""Node leases and heartbeats in the refs keyspace.
+
+The distributed executor keeps ALL of its coordination state — which node
+is pending, who is executing it, until when, how many times it has been
+(re-)leased — as tiny mutable refs, CAS'd with the same primitives that
+protect branch heads and the PR-5 GC generation token.  That buys the
+executor every property the storage substrate already has: leases replicate
+through push/pull backends, survive process death, work over the loopback,
+HTTP and S3 transports, and are linearizable per ref.
+
+Keyspace (one run = one namespace under ``exec/``):
+
+    exec/<run_id>/run           -> digest of the run-record blob (msgpack:
+                                   state, branch, pipeline hash, summary)
+    exec/<run_id>/node/<name>   -> lease text ``state|owner|attempt|deadline|payload``
+
+Lease states and CAS transitions::
+
+    pending --claim--> leased --complete--> done
+       ^                 |    \--fail-----> failed
+       \----requeue------/  (deadline expired: the worker is presumed dead)
+
+``attempt`` counts *claims*: it is preserved by ``requeue`` and incremented
+by ``claim``, so the coordinator's poison-pill check ("fail the run after N
+lease attempts on one node") reads it straight off the expired lease.  The
+``payload`` slot carries a content digest: the task blob while
+pending/leased (resolved input snapshots + injected params for remote
+workers), the result blob once done, an error blob once failed.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, Iterator, List, Optional
+
+import msgpack
+
+from ..errors import ObjectNotFound, RefNotFound, ReproError
+from ..store import StoreBackend, read_ref_or_none, try_cas_ref
+
+#: ref namespace for executor state (leases, heartbeats, run records)
+EXEC_REF_PREFIX = "exec/"
+
+PENDING = "pending"
+LEASED = "leased"
+DONE = "done"
+FAILED = "failed"
+
+_NONE = "-"  # empty owner / payload slot in the encoded lease
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+def _is_digest(s: str) -> bool:
+    return len(s) == 64 and all(c in "0123456789abcdef" for c in s)
+
+
+@dataclass(frozen=True)
+class Lease:
+    """One node's decoded lease state (the parsed ref value)."""
+
+    node: str
+    state: str
+    owner: str  # "" while pending
+    attempt: int  # number of claims so far (0 while never claimed)
+    deadline: float  # heartbeat deadline (0.0 while pending)
+    payload: str  # task/result/error blob digest, "" when absent
+
+    def encode(self) -> str:
+        return "|".join([self.state, self.owner or _NONE, str(self.attempt),
+                         repr(self.deadline), self.payload or _NONE])
+
+    @classmethod
+    def decode(cls, node: str, text: str) -> "Lease":
+        parts = text.split("|")
+        if len(parts) != 5:
+            raise ReproError(f"corrupt lease for node {node!r}: {text!r}")
+        state, owner, attempt, deadline, payload = parts
+        return cls(node=node, state=state,
+                   owner="" if owner == _NONE else owner,
+                   attempt=int(attempt), deadline=float(deadline),
+                   payload="" if payload == _NONE else payload)
+
+    def expired(self, now: float) -> bool:
+        """A leased node whose worker stopped heartbeating: presumed dead,
+        eligible for re-lease."""
+        return self.state == LEASED and now > self.deadline
+
+
+def lease_ref_digests(ref: str, value: str) -> List[str]:
+    """Content digests a single ``exec/`` ref pins (GC mark support):
+    the run-record blob for ``.../run`` refs, the payload blob for node
+    lease refs.  Tolerant of malformed values — GC must never crash on a
+    ref it does not understand."""
+    if not ref.startswith(EXEC_REF_PREFIX):
+        return []
+    if ref.endswith("/run"):
+        return [value] if _is_digest(value) else []
+    try:
+        lease = Lease.decode(ref.rsplit("/", 1)[-1], value)
+    except (ReproError, ValueError):
+        return []
+    return [lease.payload] if _is_digest(lease.payload) else []
+
+
+class LeaseBoard:
+    """The lease table of one run: typed CAS transitions over the refs.
+
+    Every mutating method is a single-ref compare-and-set built on
+    :func:`~repro.core.store.try_cas_ref` — a lost race returns False/None
+    instead of raising, because with several workers racing for the same
+    pending node exactly one claim *should* win."""
+
+    def __init__(self, store: StoreBackend, run_id: str, *,
+                 clock=time.time):
+        self.store = store
+        self.run_id = run_id
+        self.clock = clock
+
+    # ------------------------------------------------------------ ref names
+    @property
+    def run_ref(self) -> str:
+        return f"{EXEC_REF_PREFIX}{self.run_id}/run"
+
+    def node_ref(self, node: str) -> str:
+        return f"{EXEC_REF_PREFIX}{self.run_id}/node/{node}"
+
+    # ----------------------------------------------------------- run record
+    def create_run(self, record: Dict) -> None:
+        record = dict(record, run_id=self.run_id)
+        self.store.set_ref(self.run_ref, self.store.put(_pack(record)))
+
+    def run_record(self) -> Optional[Dict]:
+        digest = read_ref_or_none(self.store, self.run_ref)
+        if digest is None:
+            return None
+        try:
+            return _unpack(self.store.get(digest))
+        except ObjectNotFound:  # record blob GC'd from under the ref
+            return None
+
+    def update_run(self, **fields) -> None:
+        record = self.run_record() or {"run_id": self.run_id}
+        record.update(fields)
+        self.store.set_ref(self.run_ref, self.store.put(_pack(record)))
+
+    # ------------------------------------------------------------- the board
+    def read(self, node: str) -> Optional[Lease]:
+        text = read_ref_or_none(self.store, self.node_ref(node))
+        return None if text is None else Lease.decode(node, text)
+
+    def board(self) -> Dict[str, Lease]:
+        """Every node's current lease, one paged listing."""
+        prefix = f"{EXEC_REF_PREFIX}{self.run_id}/node/"
+        out: Dict[str, Lease] = {}
+        token: Optional[str] = None
+        while True:
+            page, token = self.store.list_refs(prefix, page_token=token,
+                                               limit=500)
+            for name, value in page:
+                node = name[len(prefix):]
+                out[node] = Lease.decode(node, value)
+            if token is None:
+                return out
+
+    # ---------------------------------------------------------- transitions
+    def publish(self, node: str, task_digest: str = "") -> Lease:
+        """Make a ready node claimable (state pending).  The task blob
+        carries everything a remote worker needs beyond the pipeline code:
+        resolved input snapshot digests and injected params."""
+        lease = Lease(node=node, state=PENDING, owner="", attempt=0,
+                      deadline=0.0, payload=task_digest)
+        self.store.set_ref(self.node_ref(node), lease.encode())
+        return lease
+
+    def claim(self, node: str, owner: str, ttl: float) -> Optional[Lease]:
+        """pending -> leased, or None if the node is not claimable / a
+        concurrent claimer won the CAS."""
+        cur = self.read(node)
+        if cur is None or cur.state != PENDING:
+            return None
+        new = replace(cur, state=LEASED, owner=owner,
+                      attempt=cur.attempt + 1,
+                      deadline=self.clock() + ttl)
+        if try_cas_ref(self.store, self.node_ref(node), cur.encode(),
+                       new.encode()):
+            return new
+        return None
+
+    def lease_direct(self, node: str, owner: str, ttl: float) -> Lease:
+        """Publish + claim in one write — the in-process executors, where
+        the coordinator IS the worker and nobody races for the node."""
+        lease = Lease(node=node, state=LEASED, owner=owner, attempt=1,
+                      deadline=self.clock() + ttl, payload="")
+        self.store.set_ref(self.node_ref(node), lease.encode())
+        return lease
+
+    def heartbeat(self, lease: Lease, ttl: float) -> Optional[Lease]:
+        """Extend a held lease's deadline.  None means the lease was lost
+        (expired and re-leased to someone else) — the worker must abandon
+        the node; its writes are harmless (content-addressed, idempotent)
+        but it no longer owns completion."""
+        cur = self.read(lease.node)
+        if cur is None or cur.state != LEASED or cur.owner != lease.owner \
+                or cur.attempt != lease.attempt:
+            return None
+        new = replace(cur, deadline=self.clock() + ttl)
+        if try_cas_ref(self.store, self.node_ref(lease.node), cur.encode(),
+                       new.encode()):
+            return new
+        return None
+
+    def complete(self, lease: Lease, result_digest: str) -> bool:
+        """leased -> done, guarded on still owning the lease."""
+        return self._finish(lease, DONE, result_digest)
+
+    def fail(self, lease: Lease, error_digest: str) -> bool:
+        """leased -> failed (the worker observed a real node error and is
+        reporting it — distinct from crashing, which reports nothing and
+        surfaces as lease expiry)."""
+        return self._finish(lease, FAILED, error_digest)
+
+    def _finish(self, lease: Lease, state: str, payload: str) -> bool:
+        cur = self.read(lease.node)
+        if cur is None or cur.state != LEASED or cur.owner != lease.owner \
+                or cur.attempt != lease.attempt:
+            return False
+        new = replace(cur, state=state, payload=payload)
+        return try_cas_ref(self.store, self.node_ref(lease.node),
+                           cur.encode(), new.encode())
+
+    def requeue(self, lease: Lease) -> bool:
+        """Expired leased -> pending, preserving the attempt counter (the
+        next claim increments it — that is what the poison pill counts).
+        The original task payload is restored so the re-lease needs no new
+        blob."""
+        cur = self.read(lease.node)
+        if cur is None or cur.state != LEASED \
+                or cur.attempt != lease.attempt:
+            return False  # someone else already handled it
+        new = replace(cur, state=PENDING, owner="", deadline=0.0)
+        return try_cas_ref(self.store, self.node_ref(lease.node),
+                           cur.encode(), new.encode())
+
+    def poison(self, lease: Lease, error_digest: str) -> bool:
+        """Force a node to failed regardless of owner — the coordinator's
+        poison pill after ``max_attempts`` lease claims."""
+        cur = self.read(lease.node)
+        if cur is None or cur.state in (DONE, FAILED):
+            return False
+        new = replace(cur, state=FAILED, payload=error_digest)
+        return try_cas_ref(self.store, self.node_ref(lease.node),
+                           cur.encode(), new.encode())
+
+    # -------------------------------------------------------------- cleanup
+    def delete_nodes(self) -> None:
+        """Drop the per-node lease refs (run complete; the run record keeps
+        the final per-node summary for ``repro status``)."""
+        prefix = f"{EXEC_REF_PREFIX}{self.run_id}/node/"
+        for ref in list(self.store.iter_refs(prefix)):
+            try:
+                self.store.delete_ref(ref)
+            except RefNotFound:
+                pass
+
+    # ------------------------------------------------------------ discovery
+    @staticmethod
+    def list_runs(store: StoreBackend) -> Iterator[str]:
+        """All run ids with executor state in this store, newest unordered
+        (run ids are content hashes; callers sort by record timestamp)."""
+        seen = set()
+        for ref in store.iter_refs(EXEC_REF_PREFIX):
+            rest = ref[len(EXEC_REF_PREFIX):]
+            run_id = rest.split("/", 1)[0]
+            if run_id not in seen:
+                seen.add(run_id)
+                yield run_id

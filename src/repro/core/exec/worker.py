@@ -1,0 +1,495 @@
+"""Worker backends for the DAG executor.
+
+One execution core, three transports:
+
+* :class:`ThreadWorkerPool` — the original in-process thread pool.  Node
+  outputs stay in memory and flow to children without re-reading snapshots.
+* :class:`ProcessWorkerPool` — a local process pool for GIL-bound nodes
+  (the long-standing run-cache follow-up).  Each subprocess opens its own
+  handle on the same filesystem store, so the run cache doubles as the
+  cross-process memo table: a node computed in any worker is a warm hit in
+  every other.  Nodes whose function cannot be pickled (closures defined
+  inside another function) transparently fall back to a thread.
+* :class:`WorkerService` — the remote worker: a poll loop any host can run
+  (``repro worker``) against a shared store backend.  It discovers
+  in-progress runs in the refs keyspace, claims pending node leases via
+  CAS, heartbeats while executing, and publishes result snapshots back
+  through the store — the existing push/pull-grade machinery — so the
+  shared run cache becomes a cluster-wide memo table.
+
+The execution core itself is :func:`run_spec` over a :class:`NodeSpec`:
+a picklable, msgpack-able description of ONE node invocation with every
+input already resolved to a snapshot digest.  Code never travels — a
+remote worker supplies its own :class:`~repro.core.pipeline.Pipeline` and
+is matched to a run by pipeline code hash (the paper's code-version pin),
+refusing silently-drifted code the same way replay does.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from .. import frame as F
+from ..errors import ObjectNotFound, ReproError, RunAborted, SchemaError
+from ..pipeline import NodeStat, Pipeline
+from ..runcache import RunCache
+from ..store import ObjectStore, StoreBackend
+from ..table import TableIO
+from .lease import DONE, LEASED, PENDING, Lease, LeaseBoard
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+# --------------------------------------------------------------- value codec
+# Injected params cross the wire inside task blobs; msgpack has no native
+# ndarray/tuple, so both get explicit markers and round-trip exactly.
+
+def _enc_value(v: Any):
+    if isinstance(v, np.ndarray):
+        a = np.ascontiguousarray(v)
+        return {"__nd__": [a.dtype.str, list(a.shape), a.tobytes()]}
+    if isinstance(v, np.generic):
+        a = np.asarray(v)
+        return {"__npg__": [a.dtype.str, a.tobytes()]}
+    if isinstance(v, tuple):
+        return {"__tup__": [_enc_value(x) for x in v]}
+    if isinstance(v, list):
+        return [_enc_value(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _enc_value(x) for k, x in v.items()}
+    return v
+
+
+def _dec_value(v: Any):
+    if isinstance(v, dict):
+        if "__nd__" in v:
+            dtype, shape, raw = v["__nd__"]
+            return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
+        if "__npg__" in v:
+            dtype, raw = v["__npg__"]
+            return np.frombuffer(raw, dtype=np.dtype(dtype))[0]
+        if "__tup__" in v:
+            return tuple(_dec_value(x) for x in v["__tup__"])
+        return {k: _dec_value(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_dec_value(x) for x in v]
+    return v
+
+
+# ------------------------------------------------------------------- specs
+@dataclass
+class SpecInput:
+    """One resolved node input: parameter name, parent/table name, the
+    snapshot digest to read (None only in thread mode, where an
+    unmaterialized uncached parent's columns flow in memory), and the
+    optional column projection from the ``Model`` ref."""
+
+    param: str
+    dep: str
+    snapshot: Optional[str]
+    columns: Optional[List[str]] = None
+
+
+@dataclass
+class NodeSpec:
+    """Everything one node invocation needs except the function itself."""
+
+    name: str
+    code_hash: str
+    materialize: bool
+    #: write the output snapshot even when not materializing (forced for
+    #: caching — descendants key off it — and for process/remote workers,
+    #: where columns cannot flow in memory)
+    persist: bool
+    cache_key: Optional[str] = None
+    #: why this run will not cache the node (None = it will)
+    cache_skip_reason: Optional[str] = None
+    #: (dep name, snapshot digest) pairs recorded in the cache entry
+    input_digests: List[Tuple[str, str]] = field(default_factory=list)
+    inputs: List[SpecInput] = field(default_factory=list)
+    injected: Dict[str, Any] = field(default_factory=dict)
+
+    def to_obj(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "code_hash": self.code_hash,
+            "materialize": self.materialize, "persist": self.persist,
+            "cache_key": self.cache_key,
+            "cache_skip_reason": self.cache_skip_reason,
+            "input_digests": [list(p) for p in self.input_digests],
+            "inputs": [[i.param, i.dep, i.snapshot, i.columns]
+                       for i in self.inputs],
+            "injected": {k: _enc_value(v)
+                         for k, v in self.injected.items()},
+        }
+
+    @classmethod
+    def from_obj(cls, o: Mapping[str, Any]) -> "NodeSpec":
+        return cls(
+            name=o["name"], code_hash=o["code_hash"],
+            materialize=o["materialize"], persist=o["persist"],
+            cache_key=o.get("cache_key"),
+            cache_skip_reason=o.get("cache_skip_reason"),
+            input_digests=[tuple(p) for p in o.get("input_digests", [])],
+            inputs=[SpecInput(param=i[0], dep=i[1], snapshot=i[2],
+                              columns=list(i[3]) if i[3] else None)
+                    for i in o.get("inputs", [])],
+            injected={k: _dec_value(v)
+                      for k, v in o.get("injected", {}).items()},
+        )
+
+
+@dataclass
+class NodeResult:
+    """What a worker reports back for one executed node."""
+
+    name: str
+    snapshot: Optional[str]
+    cache_hit: bool
+    wall_s: float
+    cache_key: Optional[str] = None
+    cache_skip_reason: Optional[str] = None
+    attempt: int = 1
+    owner: str = ""
+
+    def stat(self) -> NodeStat:
+        return NodeStat(self.name, self.cache_hit, self.wall_s,
+                        self.snapshot, self.cache_key,
+                        cache_skip_reason=self.cache_skip_reason,
+                        attempts=self.attempt)
+
+    def to_obj(self) -> Dict[str, Any]:
+        return {"name": self.name, "snapshot": self.snapshot,
+                "cache_hit": self.cache_hit, "wall_s": self.wall_s,
+                "cache_key": self.cache_key,
+                "cache_skip_reason": self.cache_skip_reason,
+                "attempt": self.attempt, "owner": self.owner}
+
+    @classmethod
+    def from_obj(cls, o: Mapping[str, Any]) -> "NodeResult":
+        return cls(**{k: o.get(k) for k in (
+            "name", "snapshot", "cache_hit", "wall_s", "cache_key",
+            "cache_skip_reason", "attempt", "owner")})
+
+
+# ----------------------------------------------------------------- context
+class ExecContext:
+    """Per-worker execution state: store handles, the in-memory column
+    memo, and the abort flag a sibling failure sets.
+
+    ``abort`` is the drain contract: once set, an in-flight node finishes
+    its function (threads cannot be killed) but writes NO snapshot and NO
+    cache entry — a failed run must not keep publishing state after the
+    failure was observed."""
+
+    def __init__(self, store: StoreBackend, *,
+                 cache: Optional[RunCache] = None):
+        self.store = store
+        self.io = TableIO(store)
+        self.cache = cache
+        self.results: Dict[str, Dict[str, np.ndarray]] = {}
+        self._columns: Dict[str, Dict[str, np.ndarray]] = {}
+        self._lock = threading.Lock()
+        self.abort = threading.Event()
+
+    def columns_of(self, dep: str, snapshot: Optional[str]
+                   ) -> Dict[str, np.ndarray]:
+        """A dependency's columns: in-memory result if this context ran
+        the parent, else a memoized snapshot read."""
+        with self._lock:
+            cols = self.results.get(dep)
+            if cols is None:
+                cols = self._columns.get(dep)
+        if cols is not None:
+            return cols
+        if snapshot is None:
+            raise ReproError(
+                f"node {dep!r} has no snapshot and no in-memory result")
+        cols = self.io.read(snapshot)
+        with self._lock:
+            return self._columns.setdefault(dep, cols)
+
+
+def run_spec(ctx: ExecContext, spec: NodeSpec,
+             fn: Callable[..., Mapping[str, np.ndarray]]) -> NodeResult:
+    """Execute one node invocation: cache probe, input load, function call,
+    snapshot + cache-entry write.  The single code path every worker kind
+    shares — bit-identical outputs across thread/process/remote executors
+    follow from content addressing plus this function being the only way a
+    node runs."""
+    t0 = time.perf_counter()
+    if spec.cache_key is not None and ctx.cache is not None:
+        entry = ctx.cache.get(spec.cache_key)
+        if entry is not None:
+            return NodeResult(
+                name=spec.name, snapshot=entry["snapshot"], cache_hit=True,
+                wall_s=time.perf_counter() - t0, cache_key=spec.cache_key,
+                cache_skip_reason=spec.cache_skip_reason)
+    kwargs: Dict[str, Any] = {}
+    for inp in spec.inputs:
+        data = ctx.columns_of(inp.dep, inp.snapshot)
+        if inp.columns:
+            data = F.select(data, inp.columns)
+        kwargs[inp.param] = data
+    kwargs.update(spec.injected)
+    if ctx.abort.is_set():
+        raise RunAborted(spec.name)
+    result = fn(**kwargs)
+    if not isinstance(result, Mapping) or not result:
+        raise SchemaError(
+            f"node {spec.name!r} must return a non-empty column mapping")
+    result = {k: np.asarray(v) for k, v in result.items()}
+    if ctx.abort.is_set():
+        # a sibling failed while we were executing: publish nothing
+        raise RunAborted(spec.name)
+    snapshot: Optional[str] = None
+    if spec.materialize or spec.persist:
+        snapshot = ctx.io.write_snapshot(result)
+    if spec.cache_key is not None and ctx.cache is not None:
+        ctx.cache.put(spec.cache_key, node=spec.name, snapshot=snapshot,
+                      code_hash=spec.code_hash, inputs=spec.input_digests)
+    with ctx._lock:
+        ctx.results[spec.name] = result
+    return NodeResult(name=spec.name, snapshot=snapshot, cache_hit=False,
+                      wall_s=time.perf_counter() - t0,
+                      cache_key=spec.cache_key,
+                      cache_skip_reason=spec.cache_skip_reason)
+
+
+# ------------------------------------------------------------- thread pool
+class ThreadWorkerPool:
+    """The in-process executor: N threads over one shared context."""
+
+    kind = "thread"
+
+    def __init__(self, ctx: ExecContext, jobs: int):
+        self.ctx = ctx
+        self._pool = ThreadPoolExecutor(max_workers=jobs)
+
+    def submit(self, spec: NodeSpec, fn: Callable) -> Future:
+        return self._pool.submit(run_spec, self.ctx, spec, fn)
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+# ------------------------------------------------------------ process pool
+_PROC_CTX: Optional[ExecContext] = None
+
+
+def _proc_init(store_root: str) -> None:
+    """Subprocess initializer: open an independent handle on the shared
+    filesystem store.  The RunCache on top of it is the cross-process memo
+    table — entries written by any worker are visible to all."""
+    global _PROC_CTX
+    store = ObjectStore(store_root)
+    _PROC_CTX = ExecContext(store, cache=RunCache(store))
+
+
+def _proc_run(spec: NodeSpec, fn: Callable) -> NodeResult:
+    return run_spec(_PROC_CTX, spec, fn)
+
+
+def _picklable(*objs) -> bool:
+    import pickle
+
+    try:
+        for o in objs:
+            pickle.dumps(o)
+        return True
+    except Exception:  # noqa: BLE001 - any pickle failure means fallback
+        return False
+
+
+class ProcessWorkerPool:
+    """Local process pool for GIL-bound nodes.
+
+    Outputs always persist as snapshots (columns cannot cross the process
+    boundary), so children in other workers read content-addressed bytes —
+    which is exactly why the commit digests stay bit-identical to the
+    thread executor.  Unpicklable node functions (closures built inside
+    tests or notebooks) degrade to an in-process thread instead of
+    failing the run."""
+
+    kind = "process"
+
+    def __init__(self, store_root, jobs: int, *, ctx: ExecContext):
+        self.ctx = ctx  # fallback context for unpicklable nodes
+        self._pool = ProcessPoolExecutor(
+            max_workers=jobs, initializer=_proc_init,
+            initargs=(str(store_root),))
+        self._fallback: Optional[ThreadPoolExecutor] = None
+        self._jobs = jobs
+
+    def submit(self, spec: NodeSpec, fn: Callable) -> Future:
+        if not _picklable(fn, spec.injected):
+            if self._fallback is None:
+                self._fallback = ThreadPoolExecutor(max_workers=self._jobs)
+            return self._fallback.submit(run_spec, self.ctx, spec, fn)
+        return self._pool.submit(_proc_run, spec, fn)
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+        if self._fallback is not None:
+            self._fallback.shutdown(wait=True)
+
+
+def store_root_of(store: StoreBackend):
+    """Filesystem root shared with subprocess workers.  A TieredStore
+    contributes its local tier (subprocesses see everything the run
+    writes; remote-only blobs would need a pull first — documented in
+    docs/executor.md)."""
+    root = getattr(store, "root", None)
+    if root is None:
+        root = getattr(getattr(store, "local", None), "root", None)
+    if root is None:
+        raise ReproError(
+            "the process executor needs a filesystem-backed store "
+            f"(got {type(store).__name__}); use executor='remote' with "
+            "worker processes against a shared store instead")
+    return root
+
+
+# ----------------------------------------------------------- remote worker
+class WorkerService:
+    """A pull-based worker any host can run against a shared store.
+
+    The loop: discover in-progress runs under ``exec/``, match one to a
+    locally registered pipeline by code hash (code is pinned, never
+    shipped), claim a pending node lease via CAS, heartbeat while the node
+    executes, publish the result blob + snapshot, CAS the lease to done.
+    A worker that dies mid-node simply stops heartbeating: the coordinator
+    re-leases the node after the deadline and another worker picks it up —
+    usually hitting the run cache for whatever the dead worker already
+    finished.
+
+    ``trace`` is an optional callable fired at named sync points
+    (``worker:claim``, ``worker:execute``, ``worker:complete:before``) —
+    the hook tests/fault_schedule.py plugs into to script worker crashes
+    deterministically."""
+
+    def __init__(self, store: StoreBackend, pipelines, *,
+                 name: str = "worker", ttl: float = 10.0,
+                 poll: float = 0.05, clock=time.time,
+                 use_cache: bool = True, trace=None):
+        self.store = store
+        self.pipelines: Dict[str, Pipeline] = {
+            p.code_hash(): p for p in pipelines}
+        self.name = name
+        self.ttl = ttl
+        self.poll = poll
+        self.clock = clock
+        cache = RunCache(store) if use_cache else None
+        self.ctx = ExecContext(store, cache=cache)
+        self.trace = trace or (lambda point: None)
+        self.nodes_done = 0
+
+    # ------------------------------------------------------------- the loop
+    def run_once(self) -> bool:
+        """Claim and execute at most one node.  True iff work was done."""
+        for run_id in LeaseBoard.list_runs(self.store):
+            board = LeaseBoard(self.store, run_id, clock=self.clock)
+            record = board.run_record()
+            if not record or record.get("state") != "running":
+                continue
+            pipeline = self.pipelines.get(record.get("pipeline_hash"))
+            if pipeline is None:
+                continue  # code drift or unknown pipeline: never guess
+            for node, lease in sorted(board.board().items()):
+                if lease.state != PENDING:
+                    continue
+                claimed = board.claim(node, self.name, self.ttl)
+                if claimed is None:
+                    continue  # lost the race
+                self._execute(board, claimed, pipeline)
+                return True
+        return False
+
+    def serve_forever(self, stop: Optional[threading.Event] = None,
+                      max_idle: Optional[float] = None) -> int:
+        """Poll until ``stop`` is set (or ``max_idle`` seconds pass with
+        no claimable work).  Returns the number of nodes executed."""
+        idle_since = self.clock()
+        while stop is None or not stop.is_set():
+            if self.run_once():
+                idle_since = self.clock()
+                continue
+            if max_idle is not None and self.clock() - idle_since > max_idle:
+                break
+            time.sleep(self.poll)
+        return self.nodes_done
+
+    # ------------------------------------------------------------ execution
+    def _execute(self, board: LeaseBoard, lease: Lease,
+                 pipeline: Pipeline) -> None:
+        self.trace("worker:claim")
+        spec = NodeSpec.from_obj(_unpack(self.store.get(lease.payload)))
+        fn = pipeline.nodes[spec.name].fn
+        hb_stop = threading.Event()
+        hb_lease = [lease]
+
+        def heartbeat():
+            while not hb_stop.wait(self.ttl / 3.0):
+                renewed = board.heartbeat(hb_lease[0], self.ttl)
+                if renewed is None:
+                    self.ctx.abort.set()  # lease lost: stop publishing
+                    return
+                hb_lease[0] = renewed
+
+        hb = threading.Thread(target=heartbeat, daemon=True)
+        hb.start()
+        try:
+            try:
+                result = run_spec(self.ctx, spec, fn)
+            except RunAborted:
+                return  # lease lost mid-execution; the new owner reports
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                err = _pack({"node": spec.name, "error": repr(e),
+                             "traceback": traceback.format_exc(),
+                             "owner": self.name})
+                board.fail(hb_lease[0], self.store.put(err))
+                return
+            result.attempt = lease.attempt
+            result.owner = self.name
+            self.trace("worker:execute")
+            self.trace("worker:complete:before")
+            if board.complete(hb_lease[0], self.store.put(
+                    _pack(result.to_obj()))):
+                self.nodes_done += 1
+        finally:
+            hb_stop.set()
+            self.ctx.abort.clear()
+
+
+def read_result(store: StoreBackend, lease: Lease) -> Optional[NodeResult]:
+    """The NodeResult a done lease points at (None if the blob is gone)."""
+    if lease.state != DONE or not lease.payload:
+        return None
+    try:
+        return NodeResult.from_obj(_unpack(store.get(lease.payload)))
+    except ObjectNotFound:
+        return None
+
+
+def read_error(store: StoreBackend, lease: Lease) -> str:
+    """Human-readable failure reason from a failed lease's error blob."""
+    if lease.payload:
+        try:
+            err = _unpack(store.get(lease.payload))
+            return err.get("error", "unknown error")
+        except ObjectNotFound:
+            pass
+    return "worker reported failure (error blob unavailable)"

@@ -55,6 +55,7 @@ import msgpack
 from .catalog import (_BRANCH_PREFIX, _TAG_PREFIX, REMOTE_REF_PREFIX,
                       Commit)
 from .errors import ObjectNotFound, RemoteError
+from .exec.lease import EXEC_REF_PREFIX, lease_ref_digests
 from .ledger import _RUNS_HEAD
 from .runcache import CACHE_REF_PREFIX
 from .store import ObjectStore, StoreBackend, bump_generation
@@ -163,6 +164,25 @@ def mark_live(store: StoreBackend, *, drop_cache: bool = False,
                 snap = entry.get("snapshot")
                 if snap:
                     _mark_snapshot(store, snap, live)
+        elif ref.startswith(EXEC_REF_PREFIX):
+            # executor state: run-record / task / result / error blobs are
+            # live while the lease refs exist (an in-flight run must not
+            # have its coordination blobs swept from under it); a done
+            # node's result additionally pins its output snapshot until
+            # the coordinator commits and drops the lease refs
+            for digest in lease_ref_digests(ref, head):
+                if not store.has(digest):
+                    continue
+                live.add(digest)
+                payload = _unpack(store.get(digest))
+                if isinstance(payload, dict):
+                    snaps = [payload.get("snapshot")]
+                    for stat in (payload.get("nodes") or {}).values():
+                        if isinstance(stat, dict):
+                            snaps.append(stat.get("snapshot"))
+                    for snap in snaps:
+                        if isinstance(snap, str):
+                            _mark_snapshot(store, snap, live)
         elif ref == _RUNS_HEAD:  # run-ledger chain: links + manifests
             cur = head
             while cur is not None and store.has(cur):

@@ -104,6 +104,8 @@ class RunLedger:
         nodes = {}
         if report is not None:
             executor = {
+                "kind": report.executor,
+                "exec_id": report.exec_id,
                 "jobs": report.jobs,
                 "cache": report.cache_enabled,
                 "cache_hits": report.cache_hits,
@@ -200,6 +202,8 @@ class RunLedger:
         cache: Optional[RunCache] = None,
         use_cache: bool = True,
         jobs: Optional[int] = None,
+        executor: str = "thread",
+        **exec_opts,
     ) -> ReplayReport:
         """Re-execute a past run into a (new) debug branch — use case #2.
 
@@ -221,7 +225,8 @@ class RunLedger:
         report = execute(pipeline, catalog, io, branch=branch, author=author,
                          params=manifest["config"].get("params"),
                          read_ref=manifest["data_commit"],
-                         cache=cache, use_cache=use_cache, jobs=jobs)
+                         cache=cache, use_cache=use_cache, jobs=jobs,
+                         executor=executor, **exec_opts)
         outputs = report.outputs
         replay_id = self.record(
             pipeline=pipeline,
@@ -235,6 +240,10 @@ class RunLedger:
             kind="replay",
             report=report,
         )
+        if report.exec_id:
+            from .exec import bind_ledger_run
+
+            bind_ledger_run(self.store, report.exec_id, replay_id)
         diffs = {}
         if verify:
             for name, digest in manifest["outputs"].items():
@@ -259,17 +268,30 @@ def run_pipeline(
     cache: Optional[RunCache] = None,
     use_cache: bool = True,
     jobs: Optional[int] = None,
+    executor: str = "thread",
+    **exec_opts,
 ) -> RunResult:
-    """``bauplan run``: execute + record, returning the run id."""
+    """``bauplan run``: execute + record, returning the run id.
+
+    ``executor`` / ``exec_opts`` (lease_ttl, max_attempts, poll,
+    wait_timeout) pass straight through to :func:`~.pipeline.execute`; the
+    run manifest records which backend ran the DAG, and the ledger run id
+    is bound back into the execution's refs-keyspace record so
+    ``repro status <run-id>`` resolves either identifier."""
     data_commit = catalog.head(branch)
     report = execute(pipeline, catalog, io, branch=branch, author=author,
                      params=(config or {}).get("params"),
-                     cache=cache, use_cache=use_cache, jobs=jobs)
+                     cache=cache, use_cache=use_cache, jobs=jobs,
+                     executor=executor, **exec_opts)
     result_commit = catalog.head(branch)
     run_id = ledger.record(
         pipeline=pipeline, data_commit=data_commit,
         result_commit=result_commit, branch=branch, outputs=report.outputs,
         config=config, seed=seed, mesh=mesh, report=report,
     )
+    if report.exec_id:
+        from .exec import bind_ledger_run
+
+        bind_ledger_run(catalog.store, report.exec_id, run_id)
     return RunResult(run_id=run_id, commit=result_commit, branch=branch,
                      outputs=report.outputs, node_stats=report.node_stats)

@@ -23,20 +23,17 @@ import hashlib
 import inspect
 import os
 import textwrap
-import time
 import types
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from threading import Lock
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 from . import frame as F
 from .catalog import Catalog
-from .errors import CycleError, ReproError, SchemaError, TableNotFound
+from .errors import CycleError, ReproError
 from .frame import Expr
-from .runcache import RunCache, node_key
+from .runcache import RunCache
 from .table import TableIO
 
 
@@ -342,10 +339,20 @@ class NodeStat:
     wall_s: float
     snapshot: Optional[str]  # None only for materialize=False with no cache
     cache_key: Optional[str]  # None when the cache is disabled
+    #: why the node was NOT cached this run (None = it was cacheable):
+    #: "unstable-capture" (mutable closure/global the code hash can't
+    #: cover) or "unhashable-param" (injected param with no stable cache
+    #: encoding — the once-silent TypeError demotion, now surfaced)
+    cache_skip_reason: Optional[str] = None
+    #: lease claims on the node (1 = first try; >1 = re-leased after a
+    #: worker crash)
+    attempts: int = 1
 
     def to_obj(self) -> Dict[str, Any]:
         return {"cache_hit": self.cache_hit, "wall_s": self.wall_s,
-                "snapshot": self.snapshot, "cache_key": self.cache_key}
+                "snapshot": self.snapshot, "cache_key": self.cache_key,
+                "cache_skip_reason": self.cache_skip_reason,
+                "attempts": self.attempts}
 
 
 @dataclass
@@ -356,6 +363,8 @@ class ExecutionReport:
     node_stats: Dict[str, NodeStat] = field(default_factory=dict)
     jobs: int = 1
     cache_enabled: bool = True
+    executor: str = "thread"  # thread | process | remote
+    exec_id: Optional[str] = None  # refs-keyspace run id (`repro status`)
 
     @property
     def cache_hits(self) -> int:
@@ -370,13 +379,6 @@ def default_jobs() -> int:
     return max(1, min(8, os.cpu_count() or 1))
 
 
-@dataclass
-class _NodeOutcome:
-    snapshot: Optional[str]
-    cols: Optional[Dict[str, np.ndarray]]  # None when served from the cache
-    stat: NodeStat
-
-
 def execute(
     pipeline: Pipeline,
     catalog: Catalog,
@@ -389,172 +391,50 @@ def execute(
     cache: Optional[RunCache] = None,
     use_cache: bool = True,
     jobs: Optional[int] = None,
+    executor: str = "thread",
+    exec_id: Optional[str] = None,
+    lease_ttl: float = 30.0,
+    max_attempts: int = 3,
+    poll: float = 0.05,
+    wait_timeout: Optional[float] = None,
 ) -> ExecutionReport:
     """Run the DAG against a branch: read parents from ``read_ref`` (defaults
-    to the branch head), evaluate nodes wave-by-wave (independent nodes run
-    concurrently on a thread pool), materialize outputs and commit them as
-    ONE multi-table transaction (paper §3: multi-table transactions are
-    crucial for pipelines).
+    to the branch head), evaluate nodes as their parents finish, materialize
+    outputs and commit them as ONE multi-table transaction (paper §3:
+    multi-table transactions are crucial for pipelines).
 
-    Incremental execution: with ``use_cache`` (default), each node's output is
-    memoized in a :class:`RunCache` under ``(code_hash, sorted input snapshot
-    digests, injected params)`` — see docs/run_cache.md for the exact
-    invalidation contract.  A hit skips the node's function entirely; its
-    downstream consumers read the memoized snapshot lazily, only if they
-    themselves miss.  ``use_cache=False`` (CLI ``--no-cache``) forces a full
-    re-execution and does not read or write cache entries.
+    Scheduling lives in :mod:`repro.core.exec`: a coordinator leases ready
+    nodes to workers, with leases + heartbeats kept in the refs keyspace
+    (``exec/<run-id>/...``, same CAS primitives as the GC generation token)
+    so ``repro status`` can watch a live run and crashed workers are
+    detected by lease expiry.  ``executor`` picks the worker backend:
 
-    Outputs are content-addressed, so the result commit is bit-identical for
-    any ``jobs`` value and for hit vs. miss paths.  Ledger bookkeeping (run
-    ids, replay) lives in ``ledger.py`` on top of this primitive.
+    * ``"thread"`` (default) — in-process thread pool, outputs flow in
+      memory;
+    * ``"process"`` — local process pool for GIL-bound nodes; the shared
+      run cache is the cross-process memo table;
+    * ``"remote"`` — publish node leases for external ``repro worker``
+      processes (any host sharing the store) and poll for results; a dead
+      worker's node is re-leased after ``lease_ttl`` and the run fails
+      with a poison pill after ``max_attempts`` claims of one node.
+
+    Incremental execution: with ``use_cache`` (default), each node's output
+    is memoized in a :class:`RunCache` under ``(code_hash, sorted input
+    snapshot digests, injected params)`` — see docs/run_cache.md.  A node
+    failure raises :class:`~repro.core.errors.NodeExecutionError` carrying
+    the failing node's name and the stats of every node that completed
+    first; in-flight siblings are drained (they finish but publish no
+    snapshots or cache entries) before the error propagates.
+
+    Outputs are content-addressed, so the result commit is bit-identical
+    for any ``jobs`` value, any executor, and hit vs. miss paths.  Ledger
+    bookkeeping (run ids, replay) lives in ``ledger.py``.
     """
-    params = params or {}
-    read_ref = read_ref or branch
-    head_tables = catalog.input_digests(read_ref, pipeline.source_tables())
-    run_cache = (cache or RunCache(catalog.store)) if use_cache else None
-    n_jobs = max(1, jobs) if jobs else default_jobs()
+    from .exec.coordinator import run_dag
 
-    lock = Lock()
-    columns: Dict[str, Dict[str, np.ndarray]] = {}  # table/node -> loaded cols
-    outcomes: Dict[str, _NodeOutcome] = {}
-
-    def load_columns(name: str, snapshot: str) -> Dict[str, np.ndarray]:
-        """Memoized read of a snapshot (source table or cached parent)."""
-        with lock:
-            cached = columns.get(name)
-        if cached is not None:
-            return cached
-        cols = io.read(snapshot)
-        with lock:
-            return columns.setdefault(name, cols)
-
-    internal = set(pipeline.nodes)
-
-    def input_digest(dep: str) -> str:
-        """Identity of one input: parent snapshot digest (internal node) or
-        source-table snapshot digest on ``read_ref`` (the data commit half of
-        the paper's reproducibility contract)."""
-        if dep in internal:
-            snap = outcomes[dep].snapshot
-            if snap is None:  # parent ran uncached & unmaterialized
-                raise ReproError(
-                    f"node {dep!r} has no snapshot for cache keying")
-            return snap
-        if dep not in head_tables:
-            raise TableNotFound(f"source table {dep!r} not on {read_ref!r}")
-        return head_tables[dep]
-
-    def dep_columns(dep: str) -> Dict[str, np.ndarray]:
-        if dep in internal:
-            out = outcomes[dep]
-            if out.cols is not None:
-                return out.cols
-            return load_columns(dep, out.snapshot)
-        return load_columns(dep, head_tables[dep])
-
-    def run_node(name: str) -> _NodeOutcome:
-        node = pipeline.nodes[name]
-        # A node capturing unstable state (mutable containers, functions) has
-        # a code hash that can't cover its behavior — never cache it.  Its
-        # output snapshot is still written so descendants can key off it.
-        node_caching = run_cache is not None and node.cache_safe
-        t0 = time.perf_counter()
-        inputs: List[Tuple[str, str]] = []
-        if node_caching:
-            inputs = [(m.name, input_digest(m.name))
-                      for m in node.dep_params.values()]
-        sig = inspect.signature(node.fn)
-        injected = {p: params[p] for p in sig.parameters
-                    if p in params and p not in node.dep_params}
-        key: Optional[str] = None
-        if node_caching:
-            try:
-                key = node_key(node.code_hash, inputs, injected, name=name)
-            except TypeError:  # param with no stable canonical form
-                node_caching = False
-        if key is not None:
-            entry = run_cache.get(key)
-            if entry is not None:
-                return _NodeOutcome(
-                    snapshot=entry["snapshot"], cols=None,
-                    stat=NodeStat(name, True, time.perf_counter() - t0,
-                                  entry["snapshot"], key))
-        if not node_caching:
-            # cache keying didn't walk the inputs — validate sources exist
-            for mref in node.dep_params.values():
-                if mref.name not in internal and mref.name not in head_tables:
-                    raise TableNotFound(
-                        f"source table {mref.name!r} not on {read_ref!r}")
-        kwargs: Dict[str, Any] = {}
-        for pname, mref in node.dep_params.items():
-            data = dep_columns(mref.name)
-            if mref.columns:
-                data = F.select(data, mref.columns)
-            kwargs[pname] = data
-        kwargs.update(injected)
-        result = node.fn(**kwargs)
-        if not isinstance(result, Mapping) or not result:
-            raise SchemaError(
-                f"node {name!r} must return a non-empty column mapping")
-        result = {k: np.asarray(v) for k, v in result.items()}
-        # Persist whenever materializing OR caching (a cache entry must point
-        # at a snapshot so warm descendants can read it without re-running;
-        # an uncacheable node's snapshot is its descendants' cache input).
-        snapshot: Optional[str] = None
-        if node.materialize or run_cache is not None:
-            snapshot = io.write_snapshot(result)
-        if node_caching:
-            run_cache.put(key, node=name, snapshot=snapshot,
-                          code_hash=node.code_hash, inputs=inputs)
-        return _NodeOutcome(
-            snapshot=snapshot, cols=result,
-            stat=NodeStat(name, False, time.perf_counter() - t0,
-                          snapshot, key))
-
-    # -------------------------------------------------- wave scheduling
-    # Dependency-counting scheduler: a node is submitted the moment its last
-    # internal parent finishes, so independent subgraphs overlap freely.
-    # Adjacency + indegrees come from the Pipeline's topo-sort pass.
-    waiting = dict(pipeline.indegree)
-    children = pipeline.children
-
-    ready = [n for n in pipeline.order if waiting[n] == 0]
-    with ThreadPoolExecutor(max_workers=n_jobs) as pool:
-        futures = {pool.submit(run_node, n): n for n in ready}
-        try:
-            while futures:
-                done, _ = wait(futures, return_when=FIRST_COMPLETED)
-                for fut in done:
-                    name = futures.pop(fut)
-                    outcomes[name] = fut.result()  # raises on node failure
-                    for child in children[name]:
-                        waiting[child] -= 1
-                        if waiting[child] == 0:
-                            futures[pool.submit(run_node, child)] = child
-        except BaseException:
-            for fut in futures:
-                fut.cancel()
-            raise
-
-    outputs = {name: out.snapshot for name, out in outcomes.items()
-               if pipeline.nodes[name].materialize and out.snapshot}
-    node_stats = {name: out.stat for name, out in outcomes.items()}
-
-    commit_digest: Optional[str] = None
-    if outputs:
-        # Warm replay on an unchanged branch is a no-op: skip the commit when
-        # every output table already sits at the same snapshot on the head.
-        current = catalog.tables(branch)
-        if any(current.get(n) != s for n, s in outputs.items()):
-            n_hits = sum(1 for s in node_stats.values() if s.cache_hit)
-            commit_digest = catalog.commit(
-                branch, outputs,
-                f"pipeline run: {', '.join(pipeline.order)}",
-                author=author,
-                meta={"pipeline_code": pipeline.code_hash(),
-                      "cache_hits": n_hits,
-                      "cache_misses": len(node_stats) - n_hits},
-            )
-    return ExecutionReport(outputs=outputs, commit=commit_digest,
-                           node_stats=node_stats, jobs=n_jobs,
-                           cache_enabled=use_cache)
+    return run_dag(pipeline, catalog, io, branch=branch, author=author,
+                   params=params, read_ref=read_ref, cache=cache,
+                   use_cache=use_cache, jobs=jobs, executor=executor,
+                   exec_id=exec_id, lease_ttl=lease_ttl,
+                   max_attempts=max_attempts, poll=poll,
+                   wait_timeout=wait_timeout)

@@ -38,6 +38,15 @@ from .store import ObjectStore
 CACHE_REF_PREFIX = "cache/"
 
 
+class CacheDemotionWarning(UserWarning):
+    """A node was silently demoted to uncacheable at run time: one of its
+    injected params has no stable cache encoding (``_canon_value`` raised
+    TypeError).  The node still runs — every time — but warm replays will
+    never hit for it.  Surfaced once per node per process so a pipeline that
+    quietly lost its incrementality shows up in the first run's warnings
+    instead of in a profiler."""
+
+
 def _canon_value(v: Any) -> str:
     """Canonical string for one param value.  Arrays are hashed over their
     raw bytes — ``repr`` truncates large arrays ("[0., 1., ..., 9999.]"), so

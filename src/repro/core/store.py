@@ -215,6 +215,37 @@ def ensure_generation(store: "StoreBackend") -> str:
         f"could not materialize {GC_GENERATION_REF!r}") from last
 
 
+def read_ref_or_none(store: "StoreBackend", name: str) -> Optional[str]:
+    """``get_ref`` with the miss folded into the value (None = absent) —
+    the read half of every CAS loop over coordination refs (GC generation,
+    executor leases)."""
+    try:
+        return store.get_ref(name)
+    except RefNotFound:
+        return None
+
+
+def try_cas_ref(store: "StoreBackend", name: str, expected: Optional[str],
+                new: str) -> bool:
+    """One CAS attempt as a boolean: True iff ``name`` moved from
+    ``expected`` to ``new``.
+
+    The primitive the executor's lease machinery is built on (claim,
+    heartbeat, complete are all single-ref CAS transitions, exactly like
+    the GC generation token): a clean :class:`RefConflict` is a lost race
+    (False, the caller re-reads), and an :class:`AmbiguousRefUpdate` —
+    a transport fault after the request may have been delivered — is
+    resolved by re-reading: lease values embed owner + deadline, so
+    observing our exact value means our write landed."""
+    try:
+        store.cas_ref(name, expected, new)
+        return True
+    except RefConflict:
+        return False
+    except AmbiguousRefUpdate:
+        return read_ref_or_none(store, name) == new
+
+
 def bump_generation(store: "StoreBackend") -> str:
     """Advance the GC generation token (CAS loop, any backend).  Called at
     sweep START, before the mark phase reads refs: any sync that captured

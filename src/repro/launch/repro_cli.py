@@ -4,6 +4,13 @@
   repro checkout <ref>                         resolve + print a ref
   repro run --pipeline data --branch B         run a pipeline, get a run_id
   repro run --id RUN_ID --branch B             REPLAY a past run (Listing 3)
+  repro run ... --executor process             local process pool (GIL-bound
+                                               nodes; bit-identical commits)
+  repro run ... --executor remote              lease nodes to `repro worker`
+                                               processes sharing the store
+  repro worker [--once|--max-idle SEC]         pull-based worker loop
+  repro status <run-id>                        live per-node lease/heartbeat/
+                                               cache state (docs/executor.md)
   repro query "SELECT COUNT(*) FROM t" --ref R tiny read-path query
   repro log <ref> / branches / runs            inspect the catalog
 
@@ -162,6 +169,49 @@ def main(argv=None):
                    help="ignore the run cache: re-execute every node")
     r.add_argument("--jobs", type=int, default=None, metavar="N",
                    help="max concurrent DAG nodes (default: auto)")
+    r.add_argument("--executor", choices=["thread", "process", "remote"],
+                   default="thread",
+                   help="worker backend: thread (default), process (local "
+                        "process pool for GIL-bound nodes), remote (lease "
+                        "nodes to `repro worker` processes sharing the "
+                        "store)")
+    r.add_argument("--lease-ttl", type=float, default=30.0, metavar="SEC",
+                   help="worker heartbeat deadline; an expired lease means "
+                        "the worker is presumed dead and the node is "
+                        "re-leased (default: 30)")
+    r.add_argument("--max-attempts", type=int, default=3, metavar="N",
+                   help="poison pill: fail the run after N lease claims of "
+                        "one node (default: 3)")
+    r.add_argument("--wait-timeout", type=float, default=None,
+                   metavar="SEC",
+                   help="--executor remote: fail if no node makes progress "
+                        "for this long (default: wait forever)")
+
+    st = sub.add_parser("status",
+                        help="live per-node lease/heartbeat/cache state of "
+                             "a run (exec id or ledger run id, prefixes ok)")
+    st.add_argument("run_id")
+
+    w = sub.add_parser("worker",
+                       help="execute leased nodes for runs started with "
+                            "--executor remote (shares the lake store; "
+                            "code is matched by pipeline hash, never "
+                            "shipped)")
+    w.add_argument("--pipeline", default="data",
+                   help="pipeline(s) this worker can execute (comma-"
+                        "separated; built-in: data)")
+    w.add_argument("--seq-len", type=int, default=256)
+    w.add_argument("--name", default=None,
+                   help="lease owner name (default: worker-<pid>)")
+    w.add_argument("--ttl", type=float, default=10.0,
+                   help="heartbeat lease ttl in seconds (default: 10)")
+    w.add_argument("--poll", type=float, default=0.05,
+                   help="idle poll interval in seconds (default: 0.05)")
+    w.add_argument("--once", action="store_true",
+                   help="claim and execute at most one node, then exit")
+    w.add_argument("--max-idle", type=float, default=None, metavar="SEC",
+                   help="exit after this long with no claimable work "
+                        "(default: poll forever)")
 
     cc = sub.add_parser("cache", help="inspect / clear the run cache")
     cc.add_argument("action", choices=["stats", "clear"])
@@ -271,22 +321,52 @@ def main(argv=None):
         print(lake.catalog.resolve(args.ref))
     elif args.cmd == "run":
         pipe = _pipeline(args.pipeline, args.seq_len)
+        exec_kw = dict(executor=args.executor, lease_ttl=args.lease_ttl,
+                       max_attempts=args.max_attempts,
+                       wait_timeout=args.wait_timeout)
         if args.run_id:
             rep = lake.replay(args.run_id, pipe, branch=args.branch,
                               author=args.author,
-                              use_cache=not args.no_cache, jobs=args.jobs)
+                              use_cache=not args.no_cache, jobs=args.jobs,
+                              **exec_kw)
             print(json.dumps({"replayed": args.run_id,
                               "replay_run_id": rep.replay_run_id,
                               "branch": rep.branch,
                               "bit_exact": rep.bit_exact}))
         else:
             res = lake.run(pipe, branch=args.branch, author=args.author,
-                           use_cache=not args.no_cache, jobs=args.jobs)
+                           use_cache=not args.no_cache, jobs=args.jobs,
+                           **exec_kw)
             print(json.dumps({"run_id": res.run_id,
                               "commit": res.commit[:12],
                               "outputs": list(res.outputs),
                               "cache_hits": res.cache_hits,
                               "cache_misses": res.cache_misses}))
+    elif args.cmd == "status":
+        from repro.core.errors import ReproError
+
+        try:
+            print(json.dumps(lake.run_status(args.run_id), indent=2,
+                             sort_keys=True, default=str))
+        except ReproError as e:
+            raise SystemExit(str(e)) from None
+    elif args.cmd == "worker":
+        import os as _os
+
+        pipelines = [_pipeline(name.strip(), args.seq_len)
+                     for name in args.pipeline.split(",") if name.strip()]
+        svc = lake.worker(pipelines,
+                          name=args.name or f"worker-{_os.getpid()}",
+                          ttl=args.ttl, poll=args.poll)
+        if args.once:
+            did = svc.run_once()
+            print(json.dumps({"worker": svc.name, "nodes_done": int(did)}))
+        else:
+            try:
+                done = svc.serve_forever(max_idle=args.max_idle)
+            except KeyboardInterrupt:
+                done = svc.nodes_done
+            print(json.dumps({"worker": svc.name, "nodes_done": done}))
     elif args.cmd == "cache":
         if args.action == "stats":
             print(json.dumps({"entries": len(lake.run_cache)}))

@@ -1,0 +1,507 @@
+"""Distributed DAG execution: leases in the refs keyspace, worker backends,
+crash recovery, and the cross-executor bit-identity contract.
+
+The deterministic worker-crash tests reuse tests/fault_schedule.py: the
+:class:`~repro.core.exec.WorkerService` ``trace`` hook fires the schedule's
+sync points (``worker:claim``, ``worker:execute``,
+``worker:complete:before``), so "a worker dies right before reporting
+completion" is a scheduled event, not a hoped-for race.
+"""
+
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from fault_schedule import InjectedFault, Schedule
+from repro.core import (CacheDemotionWarning, Lake, Model,
+                        NodeExecutionError, Pipeline, ReproError,
+                        WorkerService, execute, model, run_status)
+from repro.core.exec import DONE, FAILED, LEASED, PENDING, Lease, LeaseBoard
+from repro.core.exec.coordinator import _reset_demotion_warnings
+from repro.core.gc import collect
+
+# ---------------------------------------------------------------------------
+# Module-level node functions.  The process executor pickles functions by
+# reference, so everything a process-pool test runs must be a module-level
+# *function* — ``model()`` returns a Node, which would shadow the function's
+# name, so the raw fns keep their own names and are wrapped explicitly.
+
+_MUTABLE_STATE = {"tag": "unstable"}  # mutable global -> cache_safe False
+
+
+def _doubled_fn(data=Model("source_table")):
+    return {"v": data["c1"] * 2.0}
+
+
+def _unstable_fn(data=Model("doubled")):
+    _ = _MUTABLE_STATE  # unstable capture: uncacheable, and unmaterialized
+    return {"v": data["v"] + 1.0}
+
+
+def _final_fn(data=Model("unstable_mid")):
+    return {"v": data["v"] * 3.0}
+
+
+def pipe3() -> Pipeline:
+    """doubled -> unstable_mid (uncacheable, materialize=False) -> final."""
+    return Pipeline([
+        model(name="doubled")(_doubled_fn),
+        model(name="unstable_mid", materialize=False)(_unstable_fn),
+        model(name="final")(_final_fn),
+    ])
+
+
+def mk_lake(tmp_path, name, source_cols):
+    """A fresh lake with the SAME deterministic clock as every sibling —
+    identical operation sequences produce identical commit timestamps,
+    which is what makes commit digests comparable across executors."""
+    t = [1_700_000_000.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    lake = Lake(tmp_path / name, clock=clock)
+    snap = lake.io.write_snapshot(source_cols)
+    lake.catalog.commit("main", {"source_table": snap}, "seed",
+                        _wap_token=True)
+    lake.catalog.create_branch("u.run", "main", author="u")
+    return lake
+
+
+def the_exec_id(lake) -> str:
+    (run_id,) = list(LeaseBoard.list_runs(lake.store))
+    return run_id
+
+
+# =============================================================== lease board
+def test_lease_encode_decode_roundtrip():
+    lease = Lease(node="n", state=LEASED, owner="w1", attempt=3,
+                  deadline=1234.5, payload="ab" * 32)
+    assert Lease.decode("n", lease.encode()) == lease
+    empty = Lease(node="m", state=PENDING, owner="", attempt=0,
+                  deadline=0.0, payload="")
+    assert Lease.decode("m", empty.encode()) == empty
+    assert lease.expired(now=1235.0)
+    assert not lease.expired(now=1234.0)
+    assert not empty.expired(now=1e12)  # pending never "expires"
+    with pytest.raises(ReproError, match="corrupt lease"):
+        Lease.decode("n", "not-a-lease")
+
+
+def test_lease_transitions_and_attempt_counter(lake):
+    t = [0.0]
+    board = LeaseBoard(lake.store, "run1", clock=lambda: t[0])
+    board.publish("n", "")
+    assert board.read("n").state == PENDING
+
+    l1 = board.claim("n", "w1", ttl=100.0)
+    assert l1.state == LEASED and l1.owner == "w1" and l1.attempt == 1
+    # a second claimer loses: the node is no longer pending
+    assert board.claim("n", "w2", ttl=100.0) is None
+
+    t[0] = 50.0
+    hb = board.heartbeat(l1, ttl=100.0)
+    assert hb is not None and hb.deadline == 150.0
+
+    # requeue preserves the attempt counter; the next claim increments it
+    assert board.requeue(hb)
+    assert board.read("n").state == PENDING
+    assert board.read("n").attempt == 1
+    l2 = board.claim("n", "w2", ttl=100.0)
+    assert l2.attempt == 2
+    # the old owner's heartbeat and completion are now dead letters
+    assert board.heartbeat(hb, ttl=100.0) is None
+    assert board.complete(hb, "feed" * 16) is False
+    # the new owner completes
+    assert board.complete(l2, "feed" * 16)
+    assert board.read("n").state == DONE
+    # done is terminal
+    assert board.claim("n", "w3", ttl=100.0) is None
+    assert board.poison(board.read("n"), "dead" * 16) is False
+
+
+def test_lease_claim_race_exactly_one_winner(lake):
+    board = LeaseBoard(lake.store, "race")
+    board.publish("n", "")
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def claimer(i):
+        barrier.wait()
+        got = board.claim("n", f"w{i}", ttl=100.0)
+        if got is not None:
+            wins.append(got.owner)
+
+    threads = [threading.Thread(target=claimer, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(wins) == 1  # CAS: exactly one claim lands
+
+
+# ============================================== cross-executor bit identity
+def test_executors_commit_bit_identical(tmp_path, source_cols):
+    """jobs=1, jobs=8 and the process pool must produce bit-identical
+    commit digests on a DAG whose middle node is uncacheable AND
+    unmaterialized — the shape that forces the executor to persist an
+    internal snapshot purely so descendants can key off it."""
+    runs = {
+        "jobs1": dict(jobs=1),
+        "jobs8": dict(jobs=8),
+        "procpool": dict(jobs=4, executor="process"),
+    }
+    digests = {}
+    for label, kw in runs.items():
+        lk = mk_lake(tmp_path, label, source_cols)
+        rep = execute(pipe3(), lk.catalog, lk.io, branch="u.run",
+                      author="u", **kw)
+        assert rep.commit is not None
+        assert rep.node_stats["unstable_mid"].cache_skip_reason \
+            == "unstable-capture"
+        assert rep.node_stats["unstable_mid"].cache_key is None
+        digests[label] = rep.commit
+    assert len(set(digests.values())) == 1, digests
+
+
+def test_process_pool_shares_run_cache_across_processes(tmp_path,
+                                                        source_cols):
+    """The shared fs run cache is the cross-process memo table: a second
+    process-pool run hits it for every cacheable node."""
+    lk = mk_lake(tmp_path, "memo", source_cols)
+    cold = execute(pipe3(), lk.catalog, lk.io, branch="u.run",
+                   author="u", jobs=2, executor="process")
+    warm = execute(pipe3(), lk.catalog, lk.io, branch="u.run",
+                   author="u", jobs=2, executor="process")
+    assert cold.cache_hits == 0
+    assert warm.cache_hits == 2  # doubled + final (unstable_mid never caches)
+    assert warm.commit is None  # nothing changed on the branch
+    np.testing.assert_allclose(
+        lk.read_table("u.run", "final")["v"],
+        (lk.read_table("main", "source_table")["c1"] * 2.0 + 1.0) * 3.0,
+        rtol=1e-6)
+
+
+def test_process_pool_falls_back_to_thread_for_closures(seeded_lake):
+    """Nodes defined inside a function can't be pickled — they must run
+    (correctly) on the in-process fallback instead of failing the run."""
+    captured = 7.0
+
+    @model()
+    def closure_node(data=Model("source_table")):
+        return {"v": data["c1"] + captured}
+
+    seeded_lake.catalog.create_branch("u.fb", "main", author="u")
+    rep = execute(Pipeline([closure_node]), seeded_lake.catalog,
+                  seeded_lake.io, branch="u.fb", author="u",
+                  jobs=2, executor="process")
+    assert "closure_node" in rep.outputs
+    np.testing.assert_allclose(
+        seeded_lake.read_table("u.fb", "closure_node")["v"],
+        seeded_lake.read_table("main", "source_table")["c1"] + 7.0)
+
+
+def test_unknown_executor_rejected(seeded_lake):
+    with pytest.raises(ReproError, match="unknown executor"):
+        execute(pipe3(), seeded_lake.catalog, seeded_lake.io,
+                branch="main", author="u", executor="carrier-pigeon")
+
+
+# ===================================================== remote worker service
+def test_remote_worker_end_to_end(tmp_path, source_cols):
+    """Coordinator publishes leases; a WorkerService (same store, separate
+    poll loop) claims, heartbeats, executes and completes them.  The commit
+    is bit-identical to a thread-executor run on a sibling lake."""
+    lk = mk_lake(tmp_path, "remote", source_cols)
+    pipe = pipe3()
+    svc = WorkerService(lk.store, [pipe], name="w1", ttl=5.0, poll=0.01)
+    stop = threading.Event()
+    th = threading.Thread(target=svc.serve_forever, args=(stop,),
+                          daemon=True)
+    th.start()
+    try:
+        rep = execute(pipe, lk.catalog, lk.io, branch="u.run",
+                      author="u", executor="remote", lease_ttl=5.0,
+                      poll=0.01, wait_timeout=30.0)
+    finally:
+        stop.set()
+        th.join(timeout=10.0)
+    assert svc.nodes_done == 3
+    assert rep.executor == "remote"
+    assert all(s.attempts == 1 for s in rep.node_stats.values())
+
+    ref = mk_lake(tmp_path, "ref", source_cols)
+    ref_rep = execute(pipe3(), ref.catalog, ref.io, branch="u.run",
+                      author="u", jobs=1)
+    assert rep.commit == ref_rep.commit
+
+
+def test_remote_worker_ignores_unknown_pipeline(tmp_path, source_cols):
+    """Code is never shipped: a worker that doesn't hold a pipeline with
+    the run's exact code hash must not touch its leases (the same pinning
+    that makes replay refuse drifted code)."""
+    lk = mk_lake(tmp_path, "drift", source_cols)
+
+    @model()
+    def other(data=Model("source_table")):
+        return {"v": data["c1"]}
+
+    svc = WorkerService(lk.store, [Pipeline([other])], name="wx",
+                        ttl=1.0, poll=0.01)
+    with pytest.raises(ReproError, match="stalled"):
+        execute(pipe3(), lk.catalog, lk.io, branch="u.run",
+                author="u", executor="remote", poll=0.01,
+                wait_timeout=0.5)
+    assert svc.run_once() is False  # nothing it can (or may) claim
+    assert svc.nodes_done == 0
+
+
+def test_killed_worker_node_is_released_and_run_completes(tmp_path,
+                                                          source_cols):
+    """Fault schedule: worker 1 dies AFTER executing a node (snapshot +
+    cache entry written) but BEFORE completing the lease.  The coordinator
+    detects the expired lease, requeues the node, and worker 2 finishes
+    the run — hitting the run cache for the dead worker's work."""
+    lk = mk_lake(tmp_path, "crash", source_cols)
+    pipe = pipe3()
+    sched = Schedule()
+    sched.kill("worker:complete:before", occurrence=1)
+
+    w1 = WorkerService(lk.store, [pipe], name="doomed", ttl=0.4,
+                       poll=0.01, trace=sched.fire)
+    w2 = WorkerService(lk.store, [pipe], name="survivor", ttl=0.4,
+                       poll=0.01)
+    stop = threading.Event()
+
+    def worker_host():
+        # worker 1 claims one node and crashes mid-completion; worker 2
+        # then serves the rest of the run (and the re-leased node)
+        with pytest.raises(InjectedFault):
+            while not w1.run_once():
+                time.sleep(0.005)
+        w2.serve_forever(stop)
+
+    th = threading.Thread(target=worker_host, daemon=True)
+    th.start()
+    try:
+        rep = execute(pipe, lk.catalog, lk.io, branch="u.run",
+                      author="u", executor="remote", lease_ttl=0.4,
+                      poll=0.02, max_attempts=5, wait_timeout=30.0)
+    finally:
+        stop.set()
+        th.join(timeout=10.0)
+
+    assert rep.commit is not None
+    # exactly one node needed a second lease, and the survivor served it
+    # from the cache entry the dead worker had already written
+    releases = [s for s in rep.node_stats.values() if s.attempts == 2]
+    assert len(releases) == 1
+    assert releases[0].cache_hit
+    assert w1.nodes_done == 0 and w2.nodes_done == 3
+
+
+def test_poison_pill_after_max_attempts(tmp_path, source_cols):
+    """A node that kills every worker that claims it must not retry
+    forever: after ``max_attempts`` lease claims the coordinator poisons
+    it and the run fails with the attempt count attached."""
+    lk = mk_lake(tmp_path, "poison", source_cols)
+    pipe = pipe3()
+    sched = Schedule()
+    sched.kill("worker:complete:before", occurrence=None)  # every claim dies
+    svc = WorkerService(lk.store, [pipe], name="mayfly", ttl=0.3,
+                        poll=0.01, trace=sched.fire)
+    stop = threading.Event()
+
+    def respawning_host():
+        while not stop.is_set():
+            try:
+                if not svc.run_once():
+                    time.sleep(0.005)
+            except InjectedFault:
+                continue  # the "crashed" worker process, respawned
+
+    th = threading.Thread(target=respawning_host, daemon=True)
+    th.start()
+    try:
+        with pytest.raises(NodeExecutionError, match="poison pill") as ei:
+            execute(pipe, lk.catalog, lk.io, branch="u.run",
+                    author="u", executor="remote", lease_ttl=0.3,
+                    poll=0.02, max_attempts=2, wait_timeout=30.0)
+    finally:
+        stop.set()
+        th.join(timeout=10.0)
+    assert ei.value.node == "doubled"  # the only root: first node claimed
+    assert ei.value.attempts == 2
+    status = run_status(lk.store, the_exec_id(lk))
+    assert status["state"] == "failed"
+    assert status["nodes"]["doubled"]["state"] == FAILED
+
+
+# =================================================== cache demotion warning
+def test_unhashable_param_demotion_warns_once_and_is_recorded(seeded_lake):
+    """The silent ``except TypeError`` demotion is now loud and auditable:
+    one CacheDemotionWarning per node, with the skip reason on the
+    NodeStat."""
+    _reset_demotion_warnings()
+
+    class Opaque:  # no stable cache encoding
+        pass
+
+    @model()
+    def tuned(data=Model("source_table"), knob=None):
+        return {"v": data["c1"]}
+
+    pipe = Pipeline([tuned])
+    seeded_lake.catalog.create_branch("u.warn", "main", author="u")
+    with pytest.warns(CacheDemotionWarning, match="tuned"):
+        rep = execute(pipe, seeded_lake.catalog, seeded_lake.io,
+                      branch="u.warn", author="u",
+                      params={"knob": Opaque()})
+    stat = rep.node_stats["tuned"]
+    assert stat.cache_skip_reason == "unhashable-param"
+    assert stat.cache_key is None
+
+    # once per node: the second run is silent (but still demoted)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        rep2 = execute(pipe, seeded_lake.catalog, seeded_lake.io,
+                       branch="u.warn", author="u",
+                       params={"knob": Opaque()})
+    assert not [w for w in rec
+                if issubclass(w.category, CacheDemotionWarning)]
+    assert rep2.node_stats["tuned"].cache_skip_reason == "unhashable-param"
+
+
+def test_cache_skip_reason_lands_in_ledger_manifest(seeded_lake):
+    seeded_lake.catalog.create_branch("u.led2", "main", author="u")
+    res = seeded_lake.run(pipe3(), branch="u.led2", author="u")
+    manifest = seeded_lake.ledger.get(res.run_id)
+    assert manifest["nodes"]["unstable_mid"]["cache_skip_reason"] \
+        == "unstable-capture"
+    assert manifest["nodes"]["doubled"]["cache_skip_reason"] is None
+    assert manifest["nodes"]["doubled"]["attempts"] == 1
+
+
+def test_unstable_capture_reason_recorded(seeded_lake):
+    seeded_lake.catalog.create_branch("u.cap", "main", author="u")
+    rep = execute(pipe3(), seeded_lake.catalog, seeded_lake.io,
+                  branch="u.cap", author="u")
+    assert rep.node_stats["unstable_mid"].cache_skip_reason \
+        == "unstable-capture"
+    assert rep.node_stats["doubled"].cache_skip_reason is None
+    # with the cache off entirely there is nothing to skip
+    seeded_lake.catalog.create_branch("u.nocache", "main", author="u")
+    rep2 = execute(pipe3(), seeded_lake.catalog, seeded_lake.io,
+                   branch="u.nocache", author="u", use_cache=False)
+    assert rep2.node_stats["unstable_mid"].cache_skip_reason is None
+
+
+# ============================================================== repro status
+def test_run_status_live_and_final(seeded_lake):
+    """While a node executes, ``repro status`` shows its lease (owner,
+    attempt, heartbeat headroom); after the run, the record's final
+    summary — and the lease refs are gone, so the keyspace stays bounded."""
+    started = threading.Event()
+    release = threading.Event()
+
+    @model()
+    def gated(data=Model("source_table")):
+        started.set()
+        assert release.wait(10.0)
+        return {"v": data["c1"]}
+
+    seeded_lake.catalog.create_branch("u.live", "main", author="u")
+    out = {}
+
+    def runner():
+        out["rep"] = execute(Pipeline([gated]), seeded_lake.catalog,
+                             seeded_lake.io, branch="u.live", author="u",
+                             exec_id="statusrun01", lease_ttl=60.0)
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+    try:
+        assert started.wait(10.0)
+        live = run_status(seeded_lake.store, "statusr")  # prefix resolves
+        assert live["state"] == "running"
+        assert live["nodes"]["gated"]["state"] == LEASED
+        assert live["nodes"]["gated"]["attempt"] == 1
+        assert live["nodes"]["gated"]["heartbeat_in"] > 0
+        assert not live["nodes"]["gated"]["expired"]
+    finally:
+        release.set()
+        th.join(timeout=10.0)
+    assert out["rep"].exec_id == "statusrun01"
+
+    done = run_status(seeded_lake.store, "statusrun01")
+    assert done["state"] == "done"
+    assert done["commit"] == out["rep"].commit
+    assert done["nodes"]["gated"]["state"] == "done"
+    assert done["nodes"]["gated"]["snapshot"] is not None
+    # lease refs deleted after completion
+    assert LeaseBoard(seeded_lake.store, "statusrun01").board() == {}
+
+
+def test_run_status_resolves_ledger_run_id(seeded_lake):
+    seeded_lake.catalog.create_branch("u.led", "main", author="u")
+    res = seeded_lake.run(pipe3(), branch="u.led", author="u")
+    status = seeded_lake.run_status(res.run_id)
+    assert status["ledger_run_id"] == res.run_id
+    assert status["state"] == "done"
+    assert set(status["nodes"]) == {"doubled", "unstable_mid", "final"}
+    manifest = seeded_lake.ledger.get(res.run_id)
+    assert manifest["executor"]["kind"] == "thread"
+    assert manifest["executor"]["exec_id"] == status["exec_id"]
+
+
+def test_run_status_unknown_run_raises(seeded_lake):
+    with pytest.raises(ReproError, match="no execution state"):
+        run_status(seeded_lake.store, "nope")
+
+
+# ======================================================================= gc
+def test_gc_keeps_inflight_exec_state(tmp_path, source_cols):
+    """A published-but-unclaimed task blob (remote run waiting for a
+    worker) must survive gc — sweeping it would strand the run."""
+    lk = mk_lake(tmp_path, "gcrun", source_cols)
+    pipe = pipe3()
+    err = {}
+
+    def runner():
+        try:
+            execute(pipe, lk.catalog, lk.io, branch="u.run",
+                    author="u", executor="remote", poll=0.02,
+                    lease_ttl=5.0, wait_timeout=30.0)
+        except Exception as e:  # noqa: BLE001 - surfaced via err below
+            err["e"] = e
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+
+    def pending_published() -> bool:
+        try:
+            board = LeaseBoard(lk.store, the_exec_id(lk)).board()
+        except ValueError:  # run record not created yet
+            return False
+        return any(l.state == PENDING for l in board.values())
+
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline and not pending_published():
+        time.sleep(0.01)
+    assert pending_published()
+    collect(lk.store)  # mid-run sweep: must not eat exec blobs
+
+    svc = WorkerService(lk.store, [pipe], name="late", ttl=5.0, poll=0.01)
+    stop = threading.Event()
+    wt = threading.Thread(target=svc.serve_forever, args=(stop,),
+                          daemon=True)
+    wt.start()
+    th.join(timeout=30.0)
+    stop.set()
+    wt.join(timeout=10.0)
+    assert "e" not in err, f"run failed after gc: {err.get('e')}"
+    assert svc.nodes_done == 3

@@ -8,7 +8,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import Model, Pipeline, ReproError, execute, model
+from repro.core import (Model, NodeExecutionError, Pipeline, ReproError,
+                        execute, model)
 
 
 class Tracker:
@@ -122,11 +123,83 @@ def test_node_failure_propagates_from_worker_thread(seeded_lake):
         return {"v": data["c1"]}
 
     seeded_lake.catalog.create_branch("r.err", "main", author="r")
-    with pytest.raises(RuntimeError, match="node exploded"):
+    with pytest.raises(NodeExecutionError, match="node exploded") as ei:
         execute(Pipeline([boom, ok]), seeded_lake.catalog, seeded_lake.io,
                 branch="r.err", author="r", jobs=4)
+    assert isinstance(ei.value.__cause__, RuntimeError)
     # the failed run must not have committed anything
     assert "ok" not in seeded_lake.catalog.tables("r.err")
+
+
+def test_failure_carries_node_identity_and_sibling_stats(seeded_lake):
+    """Regression: the executor used to re-raise the bare worker exception,
+    losing WHICH node failed and throwing away the NodeStats of every node
+    that had already finished."""
+    done = threading.Event()
+
+    @model()
+    def first(data=Model("source_table")):
+        return {"v": data["c1"]}
+
+    @model()
+    def boom(data=Model("first")):
+        done.set()
+        raise ValueError("bad partition")
+
+    seeded_lake.catalog.create_branch("r.id", "main", author="r")
+    with pytest.raises(NodeExecutionError) as ei:
+        execute(Pipeline([first, boom]), seeded_lake.catalog,
+                seeded_lake.io, branch="r.id", author="r", jobs=4)
+    err = ei.value
+    assert err.node == "boom"
+    assert err.attempts == 1
+    assert "boom" in str(err) and "bad partition" in str(err)
+    # the sibling that completed before the failure kept its stats
+    assert set(err.node_stats) == {"first"}
+    assert err.node_stats["first"].snapshot is not None
+    assert done.is_set()
+
+
+def test_sibling_failure_drains_in_flight_without_publishing(seeded_lake):
+    """Regression: the old ``except BaseException: fut.cancel()`` path could
+    not stop in-flight nodes — they kept running after the raise and WROTE
+    their snapshot + cache entry into a failed run.  Now the coordinator
+    drains them: the slow sibling finishes (threads can't be killed) but
+    publishes nothing once the failure was observed."""
+    slow_ran = threading.Event()
+
+    @model()
+    def fail_fast(data=Model("source_table")):
+        raise RuntimeError("fast failure")
+
+    @model()
+    def slow(data=Model("source_table")):
+        slow_ran.set()
+        time.sleep(0.4)  # still in flight when fail_fast is observed
+        return {"v": data["c1"] * 3.0}
+
+    lake = seeded_lake
+    lake.catalog.create_branch("r.drain", "main", author="r")
+    with pytest.raises(NodeExecutionError, match="fail_fast"):
+        execute(Pipeline([fail_fast, slow]), lake.catalog, lake.io,
+                branch="r.drain", author="r", jobs=4)
+    assert slow_ran.is_set()  # it really was in flight
+    # drained: no cache entry (and thus no published snapshot) for `slow`
+    cached_nodes = {e["node"] for e in
+                    (lake.run_cache.get(k) for k in lake.run_cache.keys())
+                    if e}
+    assert "slow" not in cached_nodes
+    assert "slow" not in lake.catalog.tables("r.drain")
+    # and a rerun on a healthy DAG re-executes slow (no stale hit)
+    @model(name="slow")
+    def slow_ok(data=Model("source_table")):
+        slow_ran.set()
+        time.sleep(0.4)
+        return {"v": data["c1"] * 3.0}
+
+    rep = execute(Pipeline([slow_ok]), lake.catalog, lake.io,
+                  branch="r.drain", author="r")
+    assert not rep.node_stats["slow"].cache_hit
 
 
 def test_wide_fanout_all_waves_complete(seeded_lake):
