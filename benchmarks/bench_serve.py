@@ -1,0 +1,171 @@
+"""Serving tier — continuous batching vs the fixed baseline, sustained
+latency, and the cost of a tag-flip rollout under load.
+
+Three legs (CSV via ``common.emit``, PASS/FAIL lines for the CI smoke):
+
+* ``throughput``: one long-tail mixed-length workload served by the fixed
+  bucket scheduler and by the continuous batcher over the SAME engine —
+  requests/s both ways, with the continuous outputs checked token-for-token
+  against sequential generation (the speed is free of correctness caveats;
+  target: ≥2x on mixed lengths, the head-of-line dividend);
+* ``latency``: a 2-replica fleet under steady arrivals — sustained RPS,
+  p50/p99 request latency;
+* ``rollout``: the same fleet with ``serving/prod`` flipped mid-stream —
+  zero failed requests required, and the completion "blip" (longest streak
+  of decode intervals with work pending but nothing finishing, across the
+  rollout) must stay within ONE fixed-batch interval (the time a fixed
+  bucket holds its batch: max ``n_tokens`` in flight).
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench_serve
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs import smoke_config
+from repro.core import Lake
+from repro.models import init_params
+from repro.serving import (ContinuousBatcher, FixedBatchedServer,
+                           ServeEngine, ServingFleet, flip_tag)
+from .common import emit
+
+MAX_LEN = 80
+SLOTS = 4
+LONG_N, SHORT_LO, SHORT_HI = 64, 1, 3
+
+
+def _world(tmp):
+    """A lake with two checkpoints and ``serving/prod`` on the first."""
+    lake = Lake(tmp, protect_main=False)
+    cfg = smoke_config("paper-demo")
+    lake.catalog.create_branch("t.run", "main", author="t")
+    a = save(lake, "t.run", step=1,
+             params=init_params(cfg, jax.random.PRNGKey(0)), author="t")
+    b = save(lake, "t.run", step=2,
+             params=init_params(cfg, jax.random.PRNGKey(1)), author="t")
+    flip_tag(lake, a)
+    return lake, cfg, a, b
+
+
+def _workload(cfg, n, *, seed=0):
+    """Long-tail mix: mostly short generations, every 4th one long — the
+    shape that makes fixed buckets pay ``bs × max(n_tokens)`` for rows
+    that needed a fraction of it."""
+    rng = np.random.default_rng(seed)
+    return [(rid,
+             rng.integers(3, cfg.vocab_size,
+                          size=int(rng.integers(4, 12))).astype(np.int32),
+             LONG_N if rid % 4 == 0
+             else int(rng.integers(SHORT_LO, SHORT_HI + 1)))
+            for rid in range(n)]
+
+
+def throughput(lake, cfg, commit, *, n=16):
+    reqs = _workload(cfg, n)
+    engine = ServeEngine.from_catalog(lake, commit, cfg, max_len=MAX_LEN,
+                                      batch_size=SLOTS)
+    solo = ServeEngine.from_catalog(lake, commit, cfg, max_len=MAX_LEN,
+                                    batch_size=1)
+    oracle = {rid: solo.generate(p[None], n_tokens=k).tokens[0]
+              for rid, p, k in reqs}  # also warms every jit
+
+    def run(server):
+        for rid, p, k in reqs:
+            server.submit(rid, p, k)
+        t0 = time.perf_counter()
+        while server.pending:
+            server.step()
+        return time.perf_counter() - t0
+
+    run(FixedBatchedServer(engine))        # warm every jit both schedulers
+    run(ContinuousBatcher(engine, slots=SLOTS))
+    t_fixed = min(run(FixedBatchedServer(engine)) for _ in range(2))
+    cont = ContinuousBatcher(engine, slots=SLOTS)
+    t_cont = run(cont)
+    t_cont = min(t_cont, run(ContinuousBatcher(engine, slots=SLOTS)))
+    for rid, _p, _k in reqs:  # the speedup must not cost correctness
+        np.testing.assert_array_equal(cont.completed[rid].tokens[0],
+                                      oracle[rid])
+    emit("serve_fixed_rps", t_fixed / n * 1e6, f"{n / t_fixed:.1f} req/s")
+    emit("serve_continuous_rps", t_cont / n * 1e6,
+         f"{n / t_cont:.1f} req/s")
+    speedup = t_fixed / t_cont
+    emit("serve_continuous_speedup", t_cont * 1e6,
+         f"{speedup:.2f}x vs fixed (bit-identical to sequential)")
+    status = "PASS" if speedup >= 2.0 else "FAIL"
+    print(f"{status}: continuous batching {speedup:.2f}x over fixed "
+          f"buckets on the long-tail mix (target >=2x)")
+    return speedup
+
+
+def latency(lake, cfg, *, n=24):
+    fleet = ServingFleet(lake, cfg, replicas=2, slots=SLOTS,
+                         max_len=MAX_LEN)
+    reqs = _workload(cfg, n, seed=1)
+    t0 = time.perf_counter()
+    for rid, p, k in reqs:   # steady arrivals: one request per interval
+        fleet.submit(rid, p, k)
+        fleet.step()
+    fleet.drain()
+    wall = time.perf_counter() - t0
+    lats = np.asarray(sorted(fleet.latency.values())) * 1e6
+    emit("serve_sustained_rps", wall / n * 1e6, f"{n / wall:.1f} req/s")
+    emit("serve_latency_p50", float(np.percentile(lats, 50)))
+    emit("serve_latency_p99", float(np.percentile(lats, 99)))
+
+
+def rollout_blip(lake, cfg, commit_b, *, n=24):
+    """Sustained load with a tag flip mid-stream: count completions per
+    fleet step; the blip is the longest pending-but-idle streak."""
+    fleet = ServingFleet(lake, cfg, replicas=2, slots=SLOTS,
+                         max_len=MAX_LEN, poll_every=2)
+    reqs = _workload(cfg, n, seed=2)
+    gaps, gap = [], 0
+    for i, (rid, p, k) in enumerate(reqs):
+        fleet.submit(rid, p, k)
+        if i == n // 3:
+            flip_tag(lake, commit_b)
+        done = fleet.step()
+        gap = 0 if done else (gap + 1 if fleet.pending else gap)
+        gaps.append(gap)
+    while fleet.pending:
+        done = fleet.step()
+        gap = 0 if done else (gap + 1 if fleet.pending else gap)
+        gaps.append(gap)
+    for _ in range(3 * fleet.poll_every):  # finish the rolling update
+        fleet.step()
+
+    failed = [rid for rid, _p, k in reqs
+              if rid not in fleet.completed
+              or fleet.completed[rid].tokens.shape[1] != k]
+    blip = max(gaps)
+    batch_interval = LONG_N  # what one fixed bucket holds its batch for
+    emit("serve_rollout_blip_intervals", float(blip),
+         f"budget={batch_interval} (one fixed-batch interval)")
+    emit("serve_rollout_failed_requests", float(len(failed)))
+    ok = not failed and blip <= batch_interval and fleet.rollouts == 1 \
+        and all(r.commit == commit_b for r in fleet.replicas if r.alive)
+    print(f"{'PASS' if ok else 'FAIL'}: tag-flip rollout under load — "
+          f"{len(failed)} failed requests, blip {blip} intervals "
+          f"(budget {batch_interval}), fleet converged on the new commit")
+    return ok
+
+
+def main():
+    with tempfile.TemporaryDirectory(prefix="bench-serve-") as tmp:
+        lake, cfg, a, b = _world(tmp)
+        speedup = throughput(lake, cfg, a)
+        latency(lake, cfg)
+        ok = rollout_blip(lake, cfg, b)
+        if speedup < 2.0 or not ok:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

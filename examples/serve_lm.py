@@ -47,7 +47,7 @@ def main():
         server.submit(rid, rng.integers(
             3, cfg.vocab_size, plen).astype(np.int32), n_tokens=12)
     total = 0
-    while server.queue:
+    while server.pending:   # queued AND in-flight — batching is continuous
         total += server.step()
     print(f"served {total} requests; every response cites model_commit="
           f"{engine.model_commit[:12]}")

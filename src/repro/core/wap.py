@@ -71,6 +71,30 @@ def audit(catalog: Catalog, io: TableIO, branch: str,
                        results=results, errors=errors)
 
 
+def audit_frames(expectations: Sequence[Expectation],
+                 frames: Mapping[str, Frame], *,
+                 context: str = "frames") -> AuditReport:
+    """Run expectations over in-memory frames (no catalog read).
+
+    The live-metrics variant of :func:`audit`: the serving canary gates a
+    tag flip on metric buffers it just collected, without requiring them to
+    be committed first.  The committed-table :func:`audit` remains the
+    authoritative, replayable gate — this one trades that for immediacy."""
+    results: Dict[str, bool] = {}
+    errors: Dict[str, str] = {}
+    for exp in expectations:
+        try:
+            if exp.table not in frames:
+                raise TableNotFound(exp.table)
+            results[exp.name] = bool(exp.fn(frames[exp.table]))
+        except Exception as e:  # an erroring expectation fails the audit
+            results[exp.name] = False
+            errors[exp.name] = f"{type(e).__name__}: {e}"
+    return AuditReport(branch=context, commit="",
+                       passed=all(results.values()) if results else True,
+                       results=results, errors=errors)
+
+
 def publish(catalog: Catalog, io: TableIO, src_branch: str,
             expectations: Sequence[Expectation], *,
             dst_branch: str = "main", author: str = "system",

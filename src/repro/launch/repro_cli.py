@@ -27,6 +27,19 @@ docs/remote_store.md):
   repro serve --root DIR --port P              loopback object-store server
   repro serve --root DIR --s3 [--bucket B]     stub S3 server (same tree,
                                                S3 REST dialect)
+
+Model serving on immutable refs (docs/serving.md — deployment is a
+catalog tag flip, rollback is time-travel):
+
+  repro serve --replicas 2 --watch-tag serving/prod --smoke
+                                               replica fleet; each replica
+                                               pins an engine to the tag's
+                                               checkpoint commit
+  repro rollout --to <ckpt-ref>                CAS-flip serving/prod
+  repro rollout --to <ckpt-ref> --canary 8     ...gated: flip only if WAP
+                                               expectations over live canary
+                                               metrics pass
+  repro rollback                               flip back to serving/prev
   repro gc [--dry-run] [--drop-cache]          mark-and-sweep the local lake
   repro gc --remote origin                     remote-side GC: server-side
                                                mark from the REMOTE's refs,
@@ -276,6 +289,46 @@ def main(argv=None):
                          "s3://host:port/BUCKET)")
     sv.add_argument("--bucket", default="lake",
                     help="bucket name for --s3 (default: lake)")
+    sv.add_argument("--replicas", type=int, default=None, metavar="N",
+                    help="model-fleet mode: serve N tag-watching replica "
+                         "engines instead of the object store")
+    sv.add_argument("--watch-tag", default="serving/prod",
+                    help="catalog tag the fleet deploys from "
+                         "(default: serving/prod)")
+    sv.add_argument("--arch", default="paper-demo")
+    sv.add_argument("--smoke", action="store_true",
+                    help="smoke-sized model config")
+    sv.add_argument("--slots", type=int, default=4,
+                    help="decode slots per replica (continuous batching)")
+    sv.add_argument("--max-len", type=int, default=128)
+    sv.add_argument("--mode", choices=["continuous", "fixed"],
+                    default="continuous")
+    sv.add_argument("--requests", type=int, default=16,
+                    help="synthetic requests to serve before exiting")
+    sv.add_argument("--gen-tokens", type=int, default=8)
+    sv.add_argument("--poll-every", type=int, default=4,
+                    help="fleet steps between tag polls")
+
+    ro = sub.add_parser(
+        "rollout", help="deploy a checkpoint: CAS-flip the serving tag "
+                        "(optionally canary-gated by WAP expectations)")
+    ro.add_argument("--to", dest="to_ref", required=True,
+                    help="checkpoint ref to deploy (branch/tag/commit; a "
+                         "branch resolves to its latest checkpoint)")
+    ro.add_argument("--tag", default="serving/prod")
+    ro.add_argument("--canary", type=int, default=None, metavar="N",
+                    help="serve N live requests from a canary replica "
+                         "pinned to the candidate and flip only if the "
+                         "WAP audit over its metric table passes")
+    ro.add_argument("--arch", default="paper-demo")
+    ro.add_argument("--smoke", action="store_true")
+    ro.add_argument("--max-len", type=int, default=128)
+    ro.add_argument("--slots", type=int, default=4)
+    ro.add_argument("--gen-tokens", type=int, default=8)
+
+    rb = sub.add_parser(
+        "rollback", help="flip the serving tag back to serving/prev")
+    rb.add_argument("--tag", default="serving/prod")
 
     args = ap.parse_args(argv)
 
@@ -289,6 +342,23 @@ def main(argv=None):
         (dest_remotes / "origin").write_text(args.url)
         for rep in reports:
             print(rep.summary())
+        return
+    if args.cmd == "serve" and args.replicas:
+        from repro.configs import full_config, smoke_config
+        from repro.launch.serve import run_fleet
+
+        cfg = (smoke_config(args.arch) if args.smoke
+               else full_config(args.arch))
+        fleet = run_fleet(Lake(args.lake), cfg, replicas=args.replicas,
+                          slots=args.slots, max_len=args.max_len,
+                          watch_tag=args.watch_tag,
+                          poll_every=args.poll_every, mode=args.mode,
+                          requests=args.requests,
+                          gen_tokens=args.gen_tokens)
+        print(json.dumps({
+            "replicas": args.replicas, "watch_tag": args.watch_tag,
+            "target": fleet.target[:12], "served": len(fleet.completed),
+            "steps": fleet.steps, "rollouts": fleet.rollouts}))
         return
     if args.cmd == "serve":
         import time as _time
@@ -419,6 +489,39 @@ def main(argv=None):
             if d.is_dir():
                 for cfg in sorted(d.iterdir()):
                     print(f"{cfg.name}\t{cfg.read_text().strip()}")
+    elif args.cmd == "rollout":
+        from repro.checkpoint import latest_checkpoint
+        from repro.serving import canary_rollout, flip_tag
+
+        target = latest_checkpoint(lake, args.to_ref) or args.to_ref
+        if args.canary:
+            from repro.configs import full_config, smoke_config
+
+            cfg = (smoke_config(args.arch) if args.smoke
+                   else full_config(args.arch))
+            rng = np.random.default_rng(0)
+            reqs = [(rid,
+                     rng.integers(3, cfg.vocab_size,
+                                  size=int(rng.integers(
+                                      4, args.max_len - args.gen_tokens))
+                                  ).astype(np.int32),
+                     args.gen_tokens)
+                    for rid in range(args.canary)]
+            rep = canary_rollout(lake, cfg, target, reqs, tag=args.tag,
+                                 slots=args.slots, max_len=args.max_len)
+        else:
+            rep = flip_tag(lake, target, tag=args.tag)
+        print(json.dumps(rep.to_obj()))
+        if not rep.flipped and rep.reason != "already current":
+            raise SystemExit(1)
+    elif args.cmd == "rollback":
+        from repro.core.errors import RefNotFound
+        from repro.serving import rollback as _rollback
+
+        try:
+            print(json.dumps(_rollback(lake, tag=args.tag).to_obj()))
+        except RefNotFound as e:
+            raise SystemExit(str(e)) from None
     elif args.cmd in ("push", "pull"):
         remote = _resolve_remote(lake, args.remote)
         branches = ([args.branch] if args.branch else []) + args.refspecs

@@ -1,5 +1,19 @@
-"""repro.serving — commit-pinned batched serving (prefill + KV-cache decode)."""
+"""repro.serving — commit-pinned serving: continuous batching over replica
+fleets that watch immutable catalog tags (rollout = tag flip)."""
 
-from .engine import BatchedServer, GenerationResult, Request, ServeEngine
+from .batcher import BatchedServer, ContinuousBatcher
+from .engine import (FixedBatchedServer, GenerationResult, Request,
+                     ServeEngine)
+from .fleet import (CANARY_BRANCH, CANARY_TABLE, PREV_TAG, PROD_TAG, Replica,
+                    RolloutReport, ServingFleet, canary_rollout,
+                    default_canary_expectations, flip_tag, prefetch_weights,
+                    read_tag, rollback)
 
-__all__ = ["ServeEngine", "BatchedServer", "Request", "GenerationResult"]
+__all__ = [
+    "ServeEngine", "GenerationResult", "Request",
+    "ContinuousBatcher", "BatchedServer", "FixedBatchedServer",
+    "ServingFleet", "Replica", "RolloutReport",
+    "flip_tag", "rollback", "canary_rollout", "read_tag",
+    "prefetch_weights", "default_canary_expectations",
+    "PROD_TAG", "PREV_TAG", "CANARY_BRANCH", "CANARY_TABLE",
+]

@@ -5,10 +5,16 @@ in-memory — here ref → checkpoint commit → params → device).
 The engine records which commit its weights came from; every response can
 therefore cite an immutable model identity — serving inherits the paper's
 reproducibility story.
+
+Compiled steps are shared process-wide per ``(cfg, max_len)`` (weights are
+*arguments*, never baked in), so a fleet of replicas — or a replica swapping
+weights on a rollout — pays for each jit exactly once, and two engines
+pinned to the same commit are bit-identical by construction.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -21,6 +27,68 @@ from ..core import Lake
 from ..models import init_cache
 from ..models.config import ModelConfig
 from ..runtime.steps import build_decode_step, build_prefill_step
+
+
+def _cache_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """vmap axes of the per-slot cache: ``pos`` is per-row (axis 0), every
+    other leaf is (L, B, ...) — batch on axis 1."""
+    axes = {"pos": 0}
+    if cfg.has_attention:
+        axes.update(k=1, v=1)
+    if cfg.has_ssm:
+        axes.update(h=1, conv=1)
+    return axes
+
+
+@functools.lru_cache(maxsize=16)
+def _shared_steps(cfg: ModelConfig, max_len: int):
+    """(prefill, decode, row_decode) jitted once per (cfg, max_len).
+
+    ``row_decode`` is the continuous-batching primitive: a vmap of the
+    single-request decode step over the slot axis with a PER-ROW position,
+    so every slot advances through its own sequence independently.  Because
+    each row runs exactly the B=1 decode computation, a slot's token stream
+    is bit-identical to generating that request alone — the equivalence the
+    serving conformance suite pins.
+    """
+    prefill_raw = build_prefill_step(cfg, max_len=max_len)
+    prefill = jax.jit(prefill_raw)
+    decode = jax.jit(build_decode_step(cfg))
+    step = build_decode_step(cfg)
+    axes = _cache_axes(cfg)
+
+    # prefill fused with greedy sampling: returns the first TOKEN (not the
+    # logits), so the admit path never syncs on a host-side argmax — the
+    # batcher keeps the scalar on device until the request completes
+    @jax.jit
+    def prefill_tok(params, tokens, cache):
+        logits, cache = prefill_raw(params, tokens, cache, None)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], cache
+
+    def row(params, token1, cache_row):
+        cache = {k: (v if k == "pos" else v[:, None])
+                 for k, v in cache_row.items()}
+        tok, _, cache = step(params, token1, cache)
+        return tok, {k: (v if k == "pos" else v[:, 0])
+                     for k, v in cache.items()}
+
+    row_decode = jax.jit(jax.vmap(row, in_axes=(None, 0, axes),
+                                  out_axes=(0, axes)))
+
+    # one fused (donated) executable for the whole slot admit: write the
+    # prefilled B=1 cache into the pool AND splice the first token into the
+    # next-input vector — leaf-by-leaf .at[].set outside jit costs ~2 decode
+    # intervals per admit in separate dispatches + full copies.  Only the
+    # cache is donated: the tokens vector is tiny AND aliased by the
+    # batcher's interval log, which must stay readable after the admit
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def write_slot(cache, tokens, cache1, first_tok, slot):
+        cache = {k: (v.at[slot].set(cache1[k]) if k == "pos"
+                     else v.at[:, slot].set(cache1[k][:, 0]))
+                 for k, v in cache.items()}
+        return cache, tokens.at[slot, 0].set(first_tok)
+
+    return prefill, prefill_tok, decode, row_decode, write_slot
 
 
 @dataclass
@@ -39,10 +107,43 @@ class ServeEngine:
         self.max_len = max_len
         self.batch_size = batch_size
         self.model_commit = model_commit
-        ac = ac if ac is not None else (lambda x, name=None: x)
-        self._prefill = jax.jit(build_prefill_step(cfg, max_len=max_len,
-                                                   ac=ac))
-        self._decode = jax.jit(build_decode_step(cfg, ac=ac))
+        self._zero_cache = None  # lazy B=1 prefill template (see prefill_one)
+        if ac is None:  # the common path: share compiles across engines
+            (self._prefill, self._prefill_tok, self._decode,
+             self._row_decode, self._write_slot) = _shared_steps(cfg, max_len)
+        else:
+            prefill_raw = build_prefill_step(cfg, max_len=max_len, ac=ac)
+            self._prefill = jax.jit(prefill_raw)
+
+            @jax.jit
+            def prefill_tok(params, tokens, cache):
+                logits, cache = prefill_raw(params, tokens, cache, None)
+                return (jnp.argmax(logits, axis=-1).astype(jnp.int32)[0],
+                        cache)
+
+            self._prefill_tok = prefill_tok
+            self._decode = jax.jit(build_decode_step(cfg, ac=ac))
+            step = build_decode_step(cfg, ac=ac)
+            axes = _cache_axes(cfg)
+
+            def row(params, token1, cache_row):
+                cache = {k: (v if k == "pos" else v[:, None])
+                         for k, v in cache_row.items()}
+                tok, _, cache = step(params, token1, cache)
+                return tok, {k: (v if k == "pos" else v[:, 0])
+                             for k, v in cache.items()}
+
+            self._row_decode = jax.jit(jax.vmap(row, in_axes=(None, 0, axes),
+                                                out_axes=(0, axes)))
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def write_slot(cache, tokens, cache1, first_tok, slot):
+                cache = {k: (v.at[slot].set(cache1[k]) if k == "pos"
+                             else v.at[:, slot].set(cache1[k][:, 0]))
+                         for k, v in cache.items()}
+                return cache, tokens.at[slot, 0].set(first_tok)
+
+            self._write_slot = write_slot
 
     @classmethod
     def from_catalog(cls, lake: Lake, ref: str, cfg: ModelConfig, *,
@@ -55,6 +156,36 @@ class ServeEngine:
                                     param_specs=param_specs)
         return cls(cfg, params, max_len=max_len, batch_size=batch_size,
                    model_commit=commit, ac=ac)
+
+    # ---------------------------------------------------------- primitives
+    def prefill_one(self, prompt: np.ndarray):
+        """Prefill ONE request at its exact length (no padding, so the
+        computation — and therefore the token stream — matches generating
+        the request alone).  Returns ``(first_token, cache with B=1)``
+        where the token is a DEVICE scalar — argmax is fused into the
+        prefill jit and nothing here blocks on the device, so admits queue
+        asynchronously behind in-flight decode intervals.
+
+        The zeroed input cache is a shared template: the step fns are
+        functional (they return a NEW cache, never mutating the input), so
+        one allocation serves every admit instead of re-paying
+        ``init_cache``'s per-leaf dispatches on the request hot path."""
+        if self._zero_cache is None:
+            self._zero_cache = init_cache(self.cfg, 1, self.max_len,
+                                          dtype=self.cfg.compute_dtype)
+        return self._prefill_tok(self.params, jnp.asarray(prompt[None]),
+                                 self._zero_cache)
+
+    def row_decode(self):
+        """The jitted vmapped per-row decode (see ``_shared_steps``)."""
+        return self._row_decode
+
+    def write_slot(self, cache, tokens, cache1, first_tok, slot: int):
+        """Admit a prefilled request into ``slot`` of a pooled cache: write
+        its B=1 cache rows and splice ``first_tok`` into the next-input
+        token vector — one fused, donated dispatch (the admit hot path).
+        Returns ``(cache, tokens)``."""
+        return self._write_slot(cache, tokens, cache1, first_tok, slot)
 
     # ------------------------------------------------------------- generate
     def generate(self, prompts: np.ndarray, *, n_tokens: int,
@@ -84,11 +215,21 @@ class Request:
     n_tokens: int
 
 
-class BatchedServer:
+class FixedBatchedServer:
     """Static-batching request server: queue requests, run bucketed batches.
 
-    (Continuous batching is a decode-slot scheduler on top of the same
-    decode step; static bucketing keeps the example deterministic.)"""
+    This is the PRE-continuous-batching baseline, kept as the reference
+    point for ``benchmarks/bench_serve.py`` and the ``fixed`` leg of the
+    serving conformance matrix.  It has two documented costs the
+    continuous :class:`~repro.serving.batcher.ContinuousBatcher` removes:
+
+    * **head-of-line blocking** — every request in a batch decodes for
+      ``max(n_tokens)`` steps, and nothing submitted later starts until the
+      whole batch drains;
+    * **left-pad contamination** — prompts are left-padded to the batch
+      max, so a request's tokens depend on its batch-mates (not equal to
+      generating it alone).
+    """
 
     def __init__(self, engine: ServeEngine):
         self.engine = engine
@@ -97,6 +238,15 @@ class BatchedServer:
 
     def submit(self, request_id: int, prompt: np.ndarray, n_tokens: int):
         self.queue.append(Request(request_id, prompt, n_tokens))
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def cancel_all(self) -> List[Request]:
+        """Drop queued work and hand it back (fleet re-dispatch on crash)."""
+        out, self.queue = self.queue, []
+        return out
 
     def step(self) -> int:
         """Serve one batch; returns number of requests completed."""

@@ -1,0 +1,440 @@
+"""Multi-replica serving on immutable catalog refs.
+
+Deployment is a catalog **tag flip**: replicas watch ``serving/prod`` and,
+when the tag moves, roll one at a time onto the new checkpoint commit while
+the rest keep serving — so a rollout is one CAS'd ref write and a rollback
+is the reverse (time-travel as a deployment primitive, the paper's "few CLI
+commands" promise applied to serving).  Rollouts can be gated by a
+**canary**: a replica pinned to the candidate commit serves live traffic,
+its metrics land in a table on a canary branch, and the tag flips only if
+WAP expectations over that table pass (``core/wap.py`` — the
+"Proof-Carrying AI Agents" gating idea).
+
+The fleet is deliberately step-driven and single-threaded: ``submit`` routes
+to the least-loaded live replica, each :meth:`ServingFleet.step` advances
+every replica one decode interval and the rollout state machine one
+transition.  That makes every schedule — including replica crashes injected
+mid-rollout — deterministic and replayable, the same philosophy as
+``core/exec``'s lease board.
+
+Sync points (``on_event``): ``fleet:poll``, ``fleet:rollout:begin``,
+``replica:<name>:swap:before`` / ``:after``, ``replica:<name>:crash`` —
+``tests/fault_schedule.py`` schedules kills/delays at these names exactly
+as it does for store operations.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import Lake
+from ..core.errors import RefNotFound, ReproError
+from ..core.sync import commit_closure
+from ..core.wap import (AuditReport, Expectation, audit, audit_frames,
+                        column_range, no_nans, not_empty)
+from ..models.config import ModelConfig
+from .batcher import ContinuousBatcher
+from .engine import FixedBatchedServer, Request, ServeEngine
+
+#: the production serving tag replicas watch — flipping it IS the rollout
+PROD_TAG = "serving/prod"
+#: where a flip records the previous production commit (rollback target)
+PREV_TAG = "serving/prev"
+#: default branch canary metrics are committed to (owner: ``canary``)
+CANARY_BRANCH = "canary.rollout"
+#: default metric table the canary audit runs over
+CANARY_TABLE = "serve_metrics"
+
+
+def _tag_ref(tag: str) -> str:
+    return f"tag={tag}"
+
+
+def read_tag(lake: Lake, tag: str = PROD_TAG) -> Optional[str]:
+    """Commit digest the serving tag points at (None if unset)."""
+    try:
+        return lake.store.get_ref(_tag_ref(tag))
+    except RefNotFound:
+        return None
+
+
+def prefetch_weights(lake: Lake, ref: str, *, chunk: int = 64) -> int:
+    """Warm-pool prefetch: pull the checkpoint commit's whole closure
+    through the tiered store's read-through BEFORE a replica takes traffic,
+    so the swap itself never waits on the remote.  Returns blobs fetched
+    (0 on a purely local store — nothing to warm)."""
+    commit = lake.catalog.resolve(ref)
+    local = getattr(lake.store, "local", None)
+    if local is None:
+        return 0
+    closure = sorted(commit_closure(lake.store, commit))
+    missing = [d for d in closure if not local.has(d)]
+    for i in range(0, len(missing), chunk):
+        lake.store.get_many(missing[i:i + chunk])  # read-through write-back
+    return len(missing)
+
+
+# ---------------------------------------------------------------- rollouts
+@dataclass
+class RolloutReport:
+    tag: str
+    old: Optional[str]          # previous production commit (None = first)
+    new: str                    # candidate commit
+    flipped: bool
+    reason: str = ""
+    audit: Optional[AuditReport] = None
+
+    def to_obj(self) -> dict:
+        return {"tag": self.tag, "old": self.old, "new": self.new,
+                "flipped": self.flipped, "reason": self.reason,
+                "audit": None if self.audit is None else
+                {"passed": self.audit.passed,
+                 "results": self.audit.results,
+                 "errors": self.audit.errors}}
+
+
+def flip_tag(lake: Lake, target_ref: str, *, tag: str = PROD_TAG,
+             prev_tag: str = PREV_TAG) -> RolloutReport:
+    """The rollout primitive: CAS the serving tag onto ``target_ref``.
+
+    Compare-and-set against the currently observed tag value, so two
+    concurrent rollouts cannot both win (the loser gets ``RefConflict``
+    and must re-read — no partial flip is representable).  The displaced
+    commit is recorded under ``prev_tag`` for :func:`rollback`."""
+    new = lake.catalog.resolve(target_ref)
+    old = read_tag(lake, tag)
+    if old == new:
+        return RolloutReport(tag, old, new, flipped=False,
+                             reason="already current")
+    lake.store.cas_ref(_tag_ref(tag), old, new)
+    if old is not None:
+        lake.store.set_ref(_tag_ref(prev_tag), old)
+    return RolloutReport(tag, old, new, flipped=True)
+
+
+def rollback(lake: Lake, *, tag: str = PROD_TAG,
+             prev_tag: str = PREV_TAG) -> RolloutReport:
+    """Time-travel the serving tag back to the pre-rollout commit.
+
+    The flip re-records the displaced commit under ``prev_tag``, so two
+    rollbacks in a row return to where you started."""
+    prev = read_tag(lake, prev_tag)
+    if prev is None:
+        raise RefNotFound(
+            f"no {prev_tag!r} tag — nothing to roll back to")
+    return flip_tag(lake, prev, tag=tag, prev_tag=prev_tag)
+
+
+def default_canary_expectations(
+        table: str = CANARY_TABLE, *,
+        max_latency_us: Optional[float] = None) -> List[Expectation]:
+    """The baseline canary gate: metrics exist, are finite, every request
+    completed fully (``ok``) and cited the candidate commit
+    (``commit_ok``); optionally a hard latency ceiling."""
+    exps = [not_empty(table), no_nans(table),
+            column_range(table, "ok", 1.0, 1.0),
+            column_range(table, "commit_ok", 1.0, 1.0)]
+    if max_latency_us is not None:
+        exps.append(column_range(table, "latency_us", 0.0, max_latency_us))
+    return exps
+
+
+def canary_rollout(lake: Lake, cfg: ModelConfig, candidate_ref: str,
+                   requests: Sequence[Tuple[int, np.ndarray, int]],
+                   expectations: Optional[Sequence[Expectation]] = None, *,
+                   max_len: int = 128, slots: int = 4,
+                   tag: str = PROD_TAG, prev_tag: str = PREV_TAG,
+                   branch: Optional[str] = CANARY_BRANCH,
+                   author: str = "canary", on_event=None,
+                   clock: Callable[[], float] = time.perf_counter,
+                   max_steps: int = 100_000) -> RolloutReport:
+    """Gated rollout: serve ``requests`` from a canary replica pinned to
+    ``candidate_ref``, audit WAP ``expectations`` over the live metric
+    table, and flip ``tag`` ONLY if the audit passes.
+
+    The tag is untouched until after the audit verdict — a failing canary
+    cannot leave a partial flip.  With ``branch`` set (default), metrics
+    are committed to that branch first and the authoritative audit runs
+    over the committed table (so the verdict is itself replayable);
+    ``branch=None`` audits the in-memory frames only
+    (:func:`repro.core.wap.audit_frames`)."""
+    candidate = lake.catalog.resolve(candidate_ref)
+    old = read_tag(lake, tag)
+    replica = Replica("canary", lake, cfg, max_len=max_len, slots=slots,
+                      on_event=on_event)
+    replica.load(candidate)
+
+    t0: Dict[int, float] = {}
+    lat: Dict[int, float] = {}
+    results: Dict[int, "object"] = {}
+    for rid, prompt, n_tokens in requests:
+        t0[rid] = clock()
+        replica.server.submit(rid, prompt, n_tokens)
+    steps = 0
+    while replica.server.pending:
+        steps += 1
+        if steps > max_steps:
+            raise ReproError("canary did not drain (stuck server?)")
+        replica.server.step()
+        now = clock()
+        for rid in list(replica.server.completed):
+            results[rid] = replica.server.completed.pop(rid)
+            lat[rid] = now - t0[rid]
+
+    rids = sorted(t0)
+    metrics = {
+        "latency_us": np.asarray([lat.get(r, np.nan) * 1e6 for r in rids],
+                                 np.float32),
+        "n_tokens": np.asarray(
+            [results[r].tokens.shape[1] if r in results else 0
+             for r in rids], np.int32),
+        "ok": np.asarray(
+            [1.0 if r in results
+             and results[r].tokens.shape[1] == dict(
+                 (q, n) for q, _, n in requests)[r] else 0.0
+             for r in rids], np.float32),
+        "commit_ok": np.asarray(
+            [1.0 if r in results and results[r].model_commit == candidate
+             else 0.0 for r in rids], np.float32),
+    }
+    exps = list(expectations) if expectations is not None \
+        else default_canary_expectations()
+    if branch is None:
+        report = audit_frames(exps, {CANARY_TABLE: metrics},
+                              context="canary:live")
+    else:
+        if branch not in lake.catalog.branches():
+            lake.catalog.create_branch(branch, "main", author=author)
+        lake.write_table(branch, CANARY_TABLE, metrics, author=author,
+                         message=f"canary metrics for {candidate[:12]}")
+        report = audit(lake.catalog, lake.io, branch, exps)
+    if not report.passed:
+        return RolloutReport(tag, old, candidate, flipped=False,
+                             reason="canary audit failed", audit=report)
+    out = flip_tag(lake, candidate, tag=tag, prev_tag=prev_tag)
+    out.audit = report
+    return out
+
+
+# ----------------------------------------------------------------- replicas
+class Replica:
+    """One serving replica: an engine pinned to a commit + its batcher."""
+
+    def __init__(self, name: str, lake: Lake, cfg: ModelConfig, *,
+                 max_len: int = 128, slots: int = 4,
+                 mode: str = "continuous", on_event=None):
+        assert mode in ("continuous", "fixed"), mode
+        self.name = name
+        self.lake = lake
+        self.cfg = cfg
+        self.max_len = max_len
+        self.slots = slots
+        self.mode = mode
+        self.on_event = on_event
+        self.server = None
+        self.commit: Optional[str] = None
+        self.alive = True
+        self.draining = False
+        self.swaps = 0
+        self.prefetched = 0
+
+    def _fire(self, point: str) -> None:
+        if self.on_event is not None:
+            self.on_event(point)
+
+    def load(self, ref: str) -> None:
+        """Prefetch weights, build the engine, take traffic — in that
+        order: the replica serves nothing from the new commit until its
+        closure is local (warm-pool contract)."""
+        self._fire(f"replica:{self.name}:swap:before")
+        self.prefetched += prefetch_weights(self.lake, ref)
+        engine = ServeEngine.from_catalog(self.lake, ref, self.cfg,
+                                          max_len=self.max_len,
+                                          batch_size=self.slots)
+        self.server = (ContinuousBatcher(engine, slots=self.slots)
+                       if self.mode == "continuous"
+                       else FixedBatchedServer(engine))
+        self.commit = engine.model_commit
+        self.swaps += 1
+        self._fire(f"replica:{self.name}:swap:after")
+
+    @property
+    def pending(self) -> int:
+        return self.server.pending if self.server is not None else 0
+
+    @property
+    def routable(self) -> bool:
+        return self.alive and not self.draining and self.server is not None
+
+
+class ServingFleet:
+    """N replicas behind one front-end, watching a serving tag.
+
+    ``submit`` routes to the least-loaded routable replica (requests wait
+    at the fleet when none is routable — e.g. a 1-replica fleet mid-swap —
+    and are dispatched as soon as one is, so a rollout delays requests but
+    never fails them).  Each ``step``:
+
+    1. every ``poll_every`` steps, re-read the watch tag (``poll``);
+    2. advance the rolling update: at most ONE replica drains and swaps at
+       a time, the rest keep serving the old commit — zero-downtime;
+    3. dispatch waiting requests, run one decode interval per replica,
+       collect completions (with submit→complete latency).
+
+    A replica that crashes (any ``ReproError`` out of its server or swap —
+    including injected faults) is marked dead and its queued AND in-flight
+    requests are re-dispatched to the survivors; generation is
+    deterministic, so the re-run produces identical tokens.
+    """
+
+    def __init__(self, lake: Lake, cfg: ModelConfig, *, replicas: int = 2,
+                 slots: int = 4, max_len: int = 128,
+                 watch_tag: str = PROD_TAG, poll_every: int = 4,
+                 mode: str = "continuous", on_event=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.lake = lake
+        self.cfg = cfg
+        self.watch_tag = watch_tag
+        self.poll_every = max(1, poll_every)
+        self.mode = mode
+        self.on_event = on_event
+        self.clock = clock
+        target = read_tag(lake, watch_tag)
+        if target is None:
+            raise RefNotFound(
+                f"serving tag {watch_tag!r} is unset — create it with "
+                f"`repro rollout --to <checkpoint-ref>`")
+        self.target = target
+        self.replicas = [
+            Replica(f"r{i}", lake, cfg, max_len=max_len, slots=slots,
+                    mode=mode, on_event=on_event)
+            for i in range(replicas)]
+        for r in self.replicas:
+            r.load(self.target)
+        self.queue: List[Request] = []
+        self.completed: Dict[int, "object"] = {}
+        self.latency: Dict[int, float] = {}      # rid -> seconds
+        self._t_submit: Dict[int, float] = {}
+        self.steps = 0
+        self.rollouts = 0
+        self.events: List[Tuple[int, str]] = []
+
+    # ------------------------------------------------------------- surface
+    def _log(self, event: str) -> None:
+        self.events.append((self.steps, event))
+        if self.on_event is not None:
+            self.on_event(event)
+
+    def submit(self, request_id: int, prompt: np.ndarray, n_tokens: int):
+        self.queue.append(Request(request_id, np.asarray(prompt, np.int32),
+                                  int(n_tokens)))
+        self._t_submit[request_id] = self.clock()
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(r.pending for r in self.replicas
+                                     if r.alive)
+
+    @property
+    def alive_count(self) -> int:
+        return sum(1 for r in self.replicas if r.alive)
+
+    def kill(self, name_or_index) -> None:
+        """Simulate a replica crash (tests / operational drills)."""
+        r = (self.replicas[name_or_index]
+             if isinstance(name_or_index, int) else
+             next(x for x in self.replicas if x.name == name_or_index))
+        self._crash(r, "killed")
+
+    # ------------------------------------------------------------ internals
+    def _crash(self, replica: Replica, reason: str) -> None:
+        replica.alive = False
+        replica.draining = False
+        self._log(f"replica:{replica.name}:crash:{reason}")
+        if replica.server is not None:
+            self.queue[:0] = replica.server.cancel_all()
+            replica.server = None
+
+    def poll(self) -> None:
+        """Re-read the watch tag; a moved tag begins a rolling update."""
+        self._log("fleet:poll")
+        target = read_tag(self.lake, self.watch_tag)
+        if target is not None and target != self.target:
+            self.target = target
+            self.rollouts += 1
+            self._log(f"fleet:rollout:begin:{target[:12]}")
+
+    def _advance_rollout(self) -> None:
+        swapping = [r for r in self.replicas if r.alive and r.draining]
+        if not swapping:
+            stale = [r for r in self.replicas
+                     if r.alive and not r.draining
+                     and r.commit != self.target]
+            if stale:
+                r = stale[0]
+                r.draining = True
+                # queued-but-unadmitted work must not wait out the drain
+                if r.server is not None:
+                    moved, r.server.queue = r.server.queue, []
+                    self.queue[:0] = moved
+                swapping = [r]
+        for r in swapping:
+            if r.server is not None and r.server.pending:
+                continue  # in-flight work finishes on the old commit
+            try:
+                r.load(self.target)
+                r.draining = False
+                self._log(f"replica:{r.name}:swapped:{self.target[:12]}")
+            except ReproError as e:
+                self._crash(r, f"swap failed: {e}")
+
+    def _dispatch(self) -> None:
+        targets = [r for r in self.replicas if r.routable]
+        if not targets:
+            return
+        while self.queue:
+            r = min(targets, key=lambda x: x.pending)
+            req = self.queue.pop(0)
+            r.server.submit(req.request_id, req.prompt, req.n_tokens)
+
+    def step(self) -> int:
+        """One fleet interval; returns requests completed this step."""
+        self.steps += 1
+        if self.steps % self.poll_every == 0:
+            self.poll()
+        self._advance_rollout()
+        self._dispatch()
+        done = 0
+        for r in self.replicas:
+            if not r.alive or r.server is None:
+                continue
+            try:
+                r.server.step()
+            except ReproError as e:
+                self._crash(r, f"step failed: {e}")
+                continue
+            now = self.clock()
+            for rid in list(r.server.completed):
+                self.completed[rid] = r.server.completed.pop(rid)
+                t0 = self._t_submit.pop(rid, None)
+                if t0 is not None:
+                    self.latency[rid] = now - t0
+                done += 1
+        return done
+
+    def drain(self, *, max_steps: int = 100_000) -> int:
+        """Step until nothing is pending; returns completions collected."""
+        done = 0
+        while self.pending:
+            if self.alive_count == 0:
+                raise ReproError(
+                    f"fleet has no live replicas with {self.pending} "
+                    "requests pending")
+            if self.steps >= max_steps:
+                raise ReproError(f"fleet did not drain in {max_steps} steps")
+            done += self.step()
+        return done

@@ -1,0 +1,483 @@
+"""Serving conformance harness: one contract suite, every configuration.
+
+The serving tier promises the same semantics no matter how requests are
+batched or how many replicas sit behind the front-end.  This module states
+that contract ONCE as a list of checks and runs it against every
+
+    batching mode   ×   replicas
+    (continuous, fixed)  (1, 2)
+
+combination — the same treatment ``sync_conformance.py`` gave the remote
+tier, now for the serving fleet (docs/serving.md):
+
+* **equivalence**: a continuously-batched request's token stream is
+  bit-identical to generating it alone, for any arrival order /
+  ``n_tokens`` mix (the fixed baseline documents completion + commit
+  pinning only — left-pad contamination is exactly why it is the
+  baseline);
+* **rollout**: flipping ``serving/prod`` mid-load rolls replicas one at a
+  time onto the new commit with ZERO failed requests, and every response
+  cites one of the two deployed commits — never a torn state;
+* **rollback**: the reverse flip converges the fleet back, twice in a row
+  returns to the start;
+* **canary**: a candidate failing its WAP gate leaves ``serving/prod``
+  (and ``serving/prev``) untouched — no partial flip;
+* **crash**: a replica killed mid-rollout (``tests/fault_schedule.py``
+  kills at the ``replica:*:swap:before`` sync point) takes no requests
+  with it — survivors re-serve its work from the old tag;
+* **head-of-line**: short requests submitted after a long one overtake it
+  under continuous batching (and demonstrably do NOT under the fixed
+  baseline);
+* **warm pool**: on a tiered lake a replica prefetches its checkpoint
+  closure through the read-through BEFORE taking traffic.
+
+Run standalone (the CI leg) or through the pytest wrapper
+(``tests/test_serving_conformance.py``):
+
+    PYTHONPATH=src python -m tests.serving_conformance
+    PYTHONPATH=src python -m tests.serving_conformance --soak 40 --seed 7
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # fault_schedule under -m
+
+import argparse
+import shutil
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from fault_schedule import Schedule
+from repro.checkpoint import save
+from repro.configs import smoke_config
+from repro.core import Lake, ObjectStore
+from repro.core.errors import ReproError
+from repro.core.sync import commit_closure
+from repro.core.wap import column_range
+from repro.models import init_params
+from repro.serving import (PREV_TAG, PROD_TAG, ContinuousBatcher,
+                           FixedBatchedServer, Replica, ServeEngine,
+                           ServingFleet, canary_rollout,
+                           default_canary_expectations, flip_tag,
+                           prefetch_weights, read_tag, rollback)
+
+MODES = ("continuous", "fixed")
+REPLICAS = (1, 2)
+MAX_LEN = 64
+SLOTS = 2
+
+
+@dataclass(frozen=True)
+class Combo:
+    mode: str       # request scheduler: continuous batching or fixed buckets
+    replicas: int   # fleet width behind the front-end
+
+    @property
+    def ident(self) -> str:
+        return f"{self.mode}/replicas={self.replicas}"
+
+
+class ServeContext:
+    """One check's world: a fresh lake holding two checkpoint commits
+    (A = seed 0, B = seed 1) with ``serving/prod`` tagged onto A."""
+
+    def __init__(self, combo: Combo, root: Path, *, tiered: bool = False):
+        self.combo = combo
+        self.root = Path(root)
+        t = [1_700_000_000.0]
+
+        def clock():
+            t[0] += 1.0
+            return t[0]
+
+        if tiered:
+            # checkpoints live on the REMOTE; the serving lake reads them
+            # through the tier (the warm-pool prefetch scenario)
+            origin = Lake(self.root / "origin", protect_main=False,
+                          clock=clock)
+            self._make_checkpoints(origin)
+            self.remote_store = origin.store
+            self.lake = Lake(self.root / "lake", protect_main=False,
+                             clock=clock, remote=origin.store)
+            # the serving lake resolves commits/tags through the tier
+            self.commit_a, self.commit_b = self._commits
+        else:
+            self.lake = Lake(self.root / "lake", protect_main=False,
+                             clock=clock)
+            self._make_checkpoints(self.lake)
+            self.commit_a, self.commit_b = self._commits
+        self.cfg = smoke_config("paper-demo")
+
+    def _make_checkpoints(self, lake: Lake) -> None:
+        cfg = smoke_config("paper-demo")
+        lake.catalog.create_branch("t.run", "main", author="t")
+        a = save(lake, "t.run", step=1,
+                 params=init_params(cfg, jax.random.PRNGKey(0)), author="t")
+        b = save(lake, "t.run", step=2,
+                 params=init_params(cfg, jax.random.PRNGKey(1)), author="t")
+        flip_tag(lake, a)
+        self._commits = (a, b)
+
+    # ------------------------------------------------------------ fixtures
+    def fleet(self, *, replicas: Optional[int] = None,
+              on_event=None, poll_every: int = 2) -> ServingFleet:
+        return ServingFleet(self.lake, self.cfg,
+                            replicas=replicas or self.combo.replicas,
+                            slots=SLOTS, max_len=MAX_LEN,
+                            mode=self.combo.mode, poll_every=poll_every,
+                            on_event=on_event)
+
+    def requests(self, n: int, *, seed: int = 0, max_gen: int = 6
+                 ) -> List[Tuple[int, np.ndarray, int]]:
+        rng = np.random.default_rng(seed)
+        return [(rid,
+                 rng.integers(3, self.cfg.vocab_size,
+                              size=int(rng.integers(4, 11))
+                              ).astype(np.int32),
+                 int(rng.integers(1, max_gen + 1)))
+                for rid in range(n)]
+
+    def oracle(self, commit: str,
+               reqs: List[Tuple[int, np.ndarray, int]]
+               ) -> Dict[int, np.ndarray]:
+        """Sequential per-request generation at B=1 — the ground truth the
+        continuous batcher must match token for token."""
+        eng = ServeEngine.from_catalog(self.lake, commit, self.cfg,
+                                       max_len=MAX_LEN, batch_size=1)
+        return {rid: eng.generate(p[None], n_tokens=n).tokens[0]
+                for rid, p, n in reqs}
+
+
+def _assert_served(fleet: ServingFleet, reqs, *, commits) -> None:
+    """Every request completed, at full length, citing a deployed commit."""
+    assert set(fleet.completed) == {rid for rid, _, _ in reqs}, \
+        f"lost requests: {set(r for r, _, _ in reqs) - set(fleet.completed)}"
+    for rid, _p, n in reqs:
+        res = fleet.completed[rid]
+        assert res.tokens.shape[1] == n, (rid, res.tokens.shape, n)
+        assert res.model_commit in commits, (rid, res.model_commit)
+
+
+# ------------------------------------------------------------------- checks
+def check_equivalence(ctx: ServeContext) -> None:
+    """Batched serving completes everything, pinned to the tag's commit;
+    under continuous batching the streams equal the sequential oracle."""
+    reqs = ctx.requests(8)
+    fleet = ctx.fleet()
+    # staggered arrival: half up front, the rest injected mid-generation
+    for rid, p, n in reqs[:4]:
+        fleet.submit(rid, p, n)
+    fleet.step()
+    for rid, p, n in reqs[4:]:
+        fleet.submit(rid, p, n)
+    fleet.drain()
+    _assert_served(fleet, reqs, commits={ctx.commit_a})
+    if ctx.combo.mode == "continuous":
+        oracle = ctx.oracle(ctx.commit_a, reqs)
+        for rid, _p, _n in reqs:
+            np.testing.assert_array_equal(
+                fleet.completed[rid].tokens[0], oracle[rid],
+                err_msg=f"req {rid} diverged from the sequential oracle")
+
+
+def check_rollout_under_load(ctx: ServeContext) -> None:
+    """Tag flip mid-load: zero failed requests, replicas converge to the
+    new commit one at a time, every response cites A or B (no torn state),
+    and the flip records A under ``serving/prev``."""
+    reqs = ctx.requests(12, seed=1)
+    fleet = ctx.fleet()
+    for rid, p, n in reqs[:6]:
+        fleet.submit(rid, p, n)
+    fleet.step()
+    rep = flip_tag(ctx.lake, ctx.commit_b)
+    assert rep.flipped and rep.old == ctx.commit_a
+    for rid, p, n in reqs[6:]:
+        fleet.submit(rid, p, n)
+        fleet.step()
+    fleet.drain()
+    for _ in range(3 * fleet.poll_every):  # let the rolling update finish
+        fleet.step()
+    _assert_served(fleet, reqs, commits={ctx.commit_a, ctx.commit_b})
+    assert fleet.rollouts == 1
+    assert all(r.commit == ctx.commit_b for r in fleet.replicas)
+    assert all(r.swaps == 2 for r in fleet.replicas)
+    assert read_tag(ctx.lake, PREV_TAG) == ctx.commit_a
+    # late traffic is served from B
+    fleet.submit(999, reqs[0][1], 2)
+    fleet.drain()
+    assert fleet.completed[999].model_commit == ctx.commit_b
+
+
+def check_rollback(ctx: ServeContext) -> None:
+    """Rollback is the reverse flip; two in a row return to the start."""
+    fleet = ctx.fleet()
+    flip_tag(ctx.lake, ctx.commit_b)
+    for _ in range(4 * fleet.poll_every):
+        fleet.step()
+    assert all(r.commit == ctx.commit_b for r in fleet.replicas)
+
+    rb = rollback(ctx.lake)
+    assert rb.flipped and rb.new == ctx.commit_a
+    assert read_tag(ctx.lake, PROD_TAG) == ctx.commit_a
+    assert read_tag(ctx.lake, PREV_TAG) == ctx.commit_b
+    for _ in range(4 * fleet.poll_every):
+        fleet.step()
+    assert all(r.commit == ctx.commit_a for r in fleet.replicas)
+    reqs = ctx.requests(3, seed=2)
+    for rid, p, n in reqs:
+        fleet.submit(rid, p, n)
+    fleet.drain()
+    _assert_served(fleet, reqs, commits={ctx.commit_a})
+    assert rollback(ctx.lake).new == ctx.commit_b  # flip-flop works
+
+
+def check_canary_gate(ctx: ServeContext) -> None:
+    """A canary failing its WAP gate leaves the serving tags untouched —
+    no partial flip; a passing canary flips and records the audit."""
+    reqs = ctx.requests(4, seed=3, max_gen=4)
+    prev_before = read_tag(ctx.lake, PREV_TAG)
+    impossible = default_canary_expectations() + [
+        column_range("serve_metrics", "n_tokens", 1000, 2000)]
+    rep = canary_rollout(ctx.lake, ctx.cfg, ctx.commit_b, reqs, impossible,
+                         slots=SLOTS, max_len=MAX_LEN)
+    assert not rep.flipped and rep.reason == "canary audit failed"
+    assert rep.audit is not None and not rep.audit.passed
+    assert read_tag(ctx.lake, PROD_TAG) == ctx.commit_a, "tag moved on fail"
+    assert read_tag(ctx.lake, PREV_TAG) == prev_before
+
+    rep = canary_rollout(ctx.lake, ctx.cfg, ctx.commit_b, reqs,
+                         slots=SLOTS, max_len=MAX_LEN)
+    assert rep.flipped and rep.audit.passed
+    assert read_tag(ctx.lake, PROD_TAG) == ctx.commit_b
+    assert read_tag(ctx.lake, PREV_TAG) == ctx.commit_a
+    # the gate's evidence is committed — the verdict is replayable
+    metrics = ctx.lake.read_table("canary.rollout", "serve_metrics")
+    assert metrics["ok"].shape[0] == len(reqs) and (metrics["ok"] == 1).all()
+
+
+def check_replica_crash_mid_rollout(ctx: ServeContext) -> None:
+    """Kill r0 exactly at its rollout swap sync point: the fleet serves
+    every request throughout (survivors re-serve r0's work), finishes the
+    rollout on the survivors, and loses nothing."""
+    schedule = Schedule()
+    # occurrence 2: the first arrival is r0's initial load, the second is
+    # its rollout swap — the mid-rollout kill
+    schedule.kill("replica:r0:swap:before", occurrence=2)
+    fleet = ctx.fleet(replicas=max(2, ctx.combo.replicas),
+                      on_event=schedule.fire)
+    reqs = ctx.requests(10, seed=4)
+    for rid, p, n in reqs[:5]:
+        fleet.submit(rid, p, n)
+    fleet.step()
+    flip_tag(ctx.lake, ctx.commit_b)
+    for rid, p, n in reqs[5:]:
+        fleet.submit(rid, p, n)
+        fleet.step()
+    fleet.drain()
+    for _ in range(4 * fleet.poll_every):
+        fleet.step()
+    _assert_served(fleet, reqs, commits={ctx.commit_a, ctx.commit_b})
+    dead = [r for r in fleet.replicas if not r.alive]
+    assert [r.name for r in dead] == ["r0"], "r0 should have died mid-swap"
+    assert any("crash" in e for _, e in fleet.events)
+    survivors = [r for r in fleet.replicas if r.alive]
+    assert survivors and all(r.commit == ctx.commit_b for r in survivors)
+    # traffic keeps flowing after the crash
+    fleet.submit(999, reqs[0][1], 2)
+    fleet.drain()
+    assert fleet.completed[999].model_commit == ctx.commit_b
+
+
+def check_head_of_line(ctx: ServeContext) -> None:
+    """Continuous batching: a short request submitted AFTER a long one
+    completes first.  The fixed baseline demonstrably blocks it — the
+    regression the continuous batcher exists to fix."""
+    engine = ServeEngine.from_catalog(ctx.lake, ctx.commit_a, ctx.cfg,
+                                      max_len=MAX_LEN, batch_size=SLOTS)
+    long_n, short_n = 24, 2
+    prompt = ctx.requests(1, seed=5)[0][1]
+    if ctx.combo.mode == "continuous":
+        srv = ContinuousBatcher(engine, slots=SLOTS)
+        srv.submit(0, prompt, long_n)
+        srv.step()
+        srv.submit(1, prompt, short_n)    # arrives while 0 is in flight
+        steps_to_short = 0
+        while 1 not in srv.completed:
+            srv.step()
+            steps_to_short += 1
+        assert 0 not in srv.completed, \
+            "short request waited for the long one (head-of-line blocking)"
+        assert steps_to_short <= short_n + 1
+        while srv.pending:
+            srv.step()
+        assert srv.completed[0].tokens.shape[1] == long_n
+    else:
+        srv = FixedBatchedServer(engine)
+        srv.submit(0, prompt, long_n)
+        srv.submit(1, prompt, short_n)
+        srv.step()                        # one bucket serves both
+        assert 0 in srv.completed and 1 in srv.completed
+        # the documented cost: the short rider decoded long_n steps anyway
+        assert srv.completed[1].tokens.shape[1] == short_n
+
+
+def check_warm_prefetch(ctx: ServeContext) -> None:
+    """Tiered lake: loading a replica pulls the checkpoint closure local
+    BEFORE traffic; a second prefetch finds nothing left to fetch."""
+    tiered = ServeContext(ctx.combo, ctx.root / "tiered", tiered=True)
+    local = tiered.lake.store.local
+    closure = set(commit_closure(tiered.remote_store, tiered.commit_a))
+    assert any(not local.has(d) for d in closure), \
+        "closure already local — the tiered scenario is vacuous"
+    fetched = prefetch_weights(tiered.lake, tiered.commit_a)
+    assert fetched > 0
+    assert all(local.has(d) for d in closure), "prefetch left cold objects"
+    assert prefetch_weights(tiered.lake, tiered.commit_a) == 0
+
+    fleet = tiered.fleet(replicas=1)
+    assert fleet.replicas[0].prefetched == 0  # warm pool: nothing to pull
+    reqs = tiered.requests(3, seed=6)
+    for rid, p, n in reqs:
+        fleet.submit(rid, p, n)
+    fleet.drain()
+    _assert_served(fleet, reqs, commits={tiered.commit_a})
+    # a replica loading the NEVER-prefetched commit B pulls its delta
+    r = Replica("cold", tiered.lake, tiered.cfg, max_len=MAX_LEN,
+                slots=SLOTS)
+    r.load(tiered.commit_b)
+    assert r.prefetched > 0
+    assert all(local.has(d)
+               for d in commit_closure(tiered.remote_store,
+                                       tiered.commit_b))
+
+
+CHECKS: List[Callable[[ServeContext], None]] = [
+    check_equivalence,
+    check_rollout_under_load,
+    check_rollback,
+    check_canary_gate,
+    check_replica_crash_mid_rollout,
+    check_head_of_line,
+    check_warm_prefetch,
+]
+
+
+# --------------------------------------------------------------------- soak
+def soak(combo: Combo, root: Path, *, seed: int, requests: int = 40) -> None:
+    """Pinned-seed soak: a sustained randomized workload with a rollout,
+    a rollback and a replica kill injected mid-stream.  Invariants: zero
+    failed requests, every response full-length and citing a deployed
+    commit, and (continuous mode) bit-identical to the sequential oracle.
+    """
+    ctx = ServeContext(combo, root)
+    rng = np.random.default_rng(seed)
+    reqs = ctx.requests(requests, seed=seed)
+    fleet = ctx.fleet(replicas=max(2, combo.replicas))
+    pending = list(reqs)
+    flip_at, back_at = requests // 3, (2 * requests) // 3
+    kill_at = requests // 2
+    submitted = 0
+    while pending or fleet.pending:
+        if pending and rng.random() < 0.7:
+            rid, p, n = pending.pop(0)
+            fleet.submit(rid, p, n)
+            submitted += 1
+            if submitted == flip_at:
+                flip_tag(ctx.lake, ctx.commit_b)
+            if submitted == kill_at and fleet.alive_count > 1:
+                fleet.kill(fleet.replicas[0].name)
+            if submitted == back_at:
+                rollback(ctx.lake)
+        fleet.step()
+    for _ in range(4 * fleet.poll_every):
+        fleet.step()
+    _assert_served(fleet, reqs, commits={ctx.commit_a, ctx.commit_b})
+    assert fleet.rollouts == 2
+    if combo.mode == "continuous":
+        oracles = {c: ctx.oracle(c, reqs)
+                   for c in (ctx.commit_a, ctx.commit_b)}
+        for rid, _p, _n in reqs:
+            res = fleet.completed[rid]
+            np.testing.assert_array_equal(
+                res.tokens[0], oracles[res.model_commit][rid],
+                err_msg=f"req {rid} diverged (commit "
+                        f"{res.model_commit[:12]})")
+
+
+# --------------------------------------------------------------------- main
+def run_check(check: Callable[[ServeContext], None], combo: Combo,
+              root: Path) -> None:
+    """One check in a fresh world; raises on contract violation."""
+    check(ServeContext(combo, Path(root)))
+
+
+def run_matrix(*, modes=MODES, replicas=REPLICAS,
+               verbose: bool = True) -> List[str]:
+    failures: List[str] = []
+    for mode in modes:
+        for n in replicas:
+            combo = Combo(mode, int(n))
+            for check in CHECKS:
+                tmp = tempfile.mkdtemp(prefix="serve-conf-")
+                try:
+                    run_check(check, combo, Path(tmp))
+                    if verbose:
+                        print(f"  ok  {combo.ident:24s} {check.__name__}")
+                except Exception as e:  # noqa: BLE001 - reported, rethrown
+                    failures.append(f"{combo.ident} {check.__name__}: {e!r}")
+                    if verbose:
+                        print(f"FAIL  {combo.ident:24s} "
+                              f"{check.__name__}: {e!r}")
+                finally:
+                    shutil.rmtree(tmp, ignore_errors=True)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serving conformance matrix (mode × replicas) + the "
+                    "pinned-seed soak leg (--soak N --seed S)")
+    ap.add_argument("--modes", default=",".join(MODES))
+    ap.add_argument("--replicas", default=",".join(map(str, REPLICAS)))
+    ap.add_argument("--soak", type=int, default=0, metavar="N",
+                    help="run the soak with N requests INSTEAD of the "
+                         "matrix")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="soak seed (a failing seed replays the same "
+                         "workload)")
+    args = ap.parse_args(argv)
+    modes = tuple(args.modes.split(","))
+    replicas = tuple(int(x) for x in args.replicas.split(","))
+    if args.soak > 0:
+        failures = []
+        for mode in modes:
+            tmp = tempfile.mkdtemp(prefix="serve-soak-")
+            try:
+                soak(Combo(mode, max(replicas)), Path(tmp),
+                     seed=args.seed, requests=args.soak)
+                print(f"  ok  soak {mode} seed={args.seed} n={args.soak}")
+            except Exception as e:  # noqa: BLE001
+                failures.append(f"soak {mode} seed={args.seed}: {e!r}")
+                print(f"FAIL  soak {mode} seed={args.seed}: {e!r}")
+            finally:
+                shutil.rmtree(tmp, ignore_errors=True)
+        return 1 if failures else 0
+    failures = run_matrix(modes=modes, replicas=replicas)
+    total = len(modes) * len(replicas) * len(CHECKS)
+    print(f"\nserving conformance: {total - len(failures)}/{total} passed")
+    for f in failures:
+        print(f"  FAILED: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,14 +1,26 @@
-"""Serving engine: commit-pinned weights, batched generation, determinism."""
+"""Serving engine + continuous batcher: commit-pinned weights, batched
+generation, determinism, and the scheduling contracts (head-of-line fix,
+oracle equivalence under any arrival schedule)."""
+
+import functools
 
 import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep — fall back to the seeded mini-sampler
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
 from repro.checkpoint import save
 from repro.configs import smoke_config
 from repro.core import Lake
 from repro.models import init_params
-from repro.serving import BatchedServer, ServeEngine
+from repro.serving import (BatchedServer, ContinuousBatcher,
+                           FixedBatchedServer, ServeEngine)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -52,8 +64,9 @@ def test_batched_server_completes_all(engine_and_lake):
     for rid in range(5):
         server.submit(rid, rng.integers(3, 100, 8).astype(np.int32), 4)
     done = 0
-    while server.queue:
+    while server.pending:
         done += server.step()
+    assert done == 5
     assert set(server.completed) == set(range(5))
     for res in server.completed.values():
         assert res.tokens.shape[1] == 4
@@ -74,3 +87,90 @@ def test_decode_equals_teacher_forcing(engine_and_lake):
     for t in range(4):
         expect = np.asarray(jax.numpy.argmax(logits[:, 11 + t, :], axis=-1))
         np.testing.assert_array_equal(gen[:, t], expect)
+
+
+# -------------------------------------------------- head-of-line regression
+def test_short_request_not_blocked_by_long(engine_and_lake):
+    """REGRESSION (head-of-line blocking): the old fixed-bucket
+    ``BatchedServer`` decoded every batch for ``max(n_tokens)`` steps and
+    admitted nothing new until the whole bucket drained, so a short
+    request submitted after a long one waited out the long one's entire
+    generation.  ``BatchedServer`` is now the continuous batcher: the
+    short request must complete while the long one is still in flight."""
+    engine, _, cfg, _ = engine_and_lake
+    prompt = np.random.default_rng(4).integers(
+        3, cfg.vocab_size, 6).astype(np.int32)
+    server = BatchedServer(engine)
+    server.submit(0, prompt, 30)          # the long head
+    server.step()                         # 0 is now mid-generation
+    server.submit(1, prompt, 2)           # short, submitted later
+    steps = 0
+    while 1 not in server.completed:
+        server.step()
+        steps += 1
+        assert steps < 30, "short request starved behind the long one"
+    assert 0 not in server.completed, \
+        "head-of-line blocking: the short request waited for the long one"
+    while server.pending:
+        server.step()
+    assert server.completed[0].tokens.shape[1] == 30
+
+
+def test_fixed_baseline_has_head_of_line_blocking(engine_and_lake):
+    """The control: the preserved fixed baseline DOES block — both land in
+    one bucket and complete together, which is why it is only the
+    benchmark baseline (see FixedBatchedServer's docstring)."""
+    engine, _, cfg, _ = engine_and_lake
+    prompt = np.random.default_rng(5).integers(
+        3, cfg.vocab_size, 6).astype(np.int32)
+    server = FixedBatchedServer(engine)
+    server.submit(0, prompt, 30)
+    server.submit(1, prompt, 2)
+    done = server.step()                  # one bucket serves both, together
+    assert done == 2
+    assert set(server.completed) == {0, 1}
+
+
+# ------------------------------------------- oracle-equivalence property
+@functools.lru_cache(maxsize=1)
+def _prop_engines():
+    """Shared engines for the property test (jits are cached per config,
+    so the examples pay compile cost once)."""
+    cfg = smoke_config("paper-demo")
+    params = init_params(cfg, KEY)
+    batched = ServeEngine(cfg, params, max_len=48, batch_size=2,
+                          model_commit="e" * 64)
+    solo = ServeEngine(cfg, params, max_len=48, batch_size=1,
+                       model_commit="e" * 64)
+    return cfg, batched, solo
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=8),
+                          st.integers(min_value=1, max_value=6)),
+                min_size=1, max_size=6),
+       st.integers(min_value=0, max_value=6))
+def test_continuous_equals_sequential_any_schedule(spec, split):
+    """PROPERTY: for ANY mix of prompt lengths / generation lengths and
+    ANY arrival split (some requests submitted up front, the rest injected
+    after generation has started), every continuously-batched token stream
+    is bit-identical to generating that request alone, sequentially."""
+    cfg, batched, solo = _prop_engines()
+    prompts = [np.random.default_rng(1000 + 13 * i + plen).integers(
+        3, cfg.vocab_size, plen).astype(np.int32)
+        for i, (plen, _n) in enumerate(spec)]
+    server = ContinuousBatcher(batched, slots=2)
+    k = split % (len(spec) + 1)
+    for i in range(k):
+        server.submit(i, prompts[i], spec[i][1])
+    server.step()                 # first wave is mid-generation...
+    for i in range(k, len(spec)):
+        server.submit(i, prompts[i], spec[i][1])   # ...when these arrive
+    while server.pending:
+        server.step()
+    for i, (_plen, n) in enumerate(spec):
+        oracle = solo.generate(prompts[i][None], n_tokens=n).tokens[0]
+        np.testing.assert_array_equal(
+            server.completed[i].tokens[0], oracle,
+            err_msg=f"request {i} (spec {spec}, split {k}) diverged from "
+                    "sequential generation")

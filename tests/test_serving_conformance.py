@@ -1,0 +1,44 @@
+"""Pytest wrapper over the serving conformance harness.
+
+The matrix (``serving_conformance.run_check``) pins the serving-tier
+contract over batching mode × replica count: oracle equivalence, tag-flip
+rollouts with zero failed requests, rollback convergence, the canary WAP
+gate (no partial flips), replica crashes mid-rollout, head-of-line
+behavior, and warm-pool prefetch on a tiered lake.
+
+The fast leg runs the continuous mode (the production scheduler) across
+both replica widths on every tier-1 run; the fixed baseline and the
+pinned-seed soak ride behind the ``slow`` marker, mirroring how
+``test_sync_conformance.py`` splits its matrix.
+"""
+
+import pytest
+
+from serving_conformance import (CHECKS, MODES, REPLICAS, Combo, run_check,
+                                 soak)
+
+
+@pytest.mark.parametrize("replicas", REPLICAS)
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_continuous(tmp_path, replicas, check):
+    run_check(check, Combo("continuous", replicas), tmp_path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("replicas", REPLICAS)
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_fixed_baseline(tmp_path, replicas, check):
+    """The fixed-bucket baseline leg: completion/rollout/crash contracts
+    hold there too (equivalence is continuous-only by design)."""
+    run_check(check, Combo("fixed", replicas), tmp_path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", (7, 23))
+def test_soak_pinned_seeds(tmp_path, mode, seed):
+    """Two pinned soak schedules per mode: sustained random arrivals with
+    a rollout, a rollback and a replica kill mid-stream; zero failed
+    requests and (continuous) oracle equivalence.  A failure replays with
+    ``python -m tests.serving_conformance --soak 30 --seed <seed>``."""
+    soak(Combo(mode, 2), tmp_path, seed=seed, requests=30)
