@@ -9,11 +9,14 @@ plus the run ledger (immutable run_ids, replay) and write-audit-publish.
 
 from .catalog import (Catalog, Commit, remote_tracking_ref,
                       remote_tracking_tag_ref)
+from .contracts import (CONTRACTS_TABLE, Contract, Rule, parse_rule_spec,
+                        register_rule, rule)
 from .errors import (AmbiguousRefUpdate, CodecUnavailable, CodeDrift,
-                     CycleError, ExpectationFailed, MergeConflict,
-                     NodeExecutionError, ObjectNotFound, PermissionDenied,
-                     RefConflict, RefNotFound, RemoteError, ReproError,
-                     RunNotFound, SchemaError, SyncError, TableNotFound)
+                     ContractViolation, CycleError, ExpectationFailed,
+                     MergeConflict, NodeExecutionError, ObjectNotFound,
+                     PermissionDenied, RefConflict, RefNotFound, RemoteError,
+                     ReproError, RunNotFound, SchemaError, SyncError,
+                     TableNotFound, TransactionConflict)
 from .exec import (Lease, LeaseBoard, WorkerService, run_status)
 from .frame import Expr, col, lit, nrows, select, where
 from .ledger import (ReplayReport, RunLedger, mesh_fingerprint, run_pipeline,
@@ -34,6 +37,7 @@ from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
                    pull_refs, push, push_refs)
 from .table import ManifestEntry, Snapshot, TableIO
 from .tensorfile import ColumnSpec, Schema
+from .txn import Transaction, changed_tables
 from .wap import (AuditReport, Expectation, audit, column_range, expectation,
                   no_nans, not_empty, publish)
 
@@ -92,6 +96,11 @@ class Lake:
         """Live/final per-node view of one execution (``repro status``)."""
         return run_status(self.store, run_id)
 
+    def transaction(self, branch: str, *, author="system") -> "Transaction":
+        """Open an optimistic read/write transaction on ``branch`` whose
+        reads (through ``txn.io`` / ``txn.read``) build the declared set."""
+        return self.catalog.transaction(branch, author=author, io=self.io)
+
     def replay(self, run_id: str, pipeline: Pipeline, *, branch: str,
                author="system", **kw) -> ReplayReport:
         kw.setdefault("cache", self.run_cache)
@@ -113,6 +122,9 @@ __all__ = [
     "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",
     "CacheDemotionWarning", "Lease", "LeaseBoard", "WorkerService",
     "run_status", "NodeExecutionError",
+    "Transaction", "changed_tables",
+    "Contract", "Rule", "rule", "register_rule", "parse_rule_spec",
+    "CONTRACTS_TABLE",
     "ReplayReport", "Expectation", "expectation", "audit", "publish",
     "AuditReport", "not_empty", "no_nans", "column_range", "col", "lit",
     "Expr", "select", "where", "nrows", "sha256_hex", "code_hash_of",
@@ -122,4 +134,5 @@ __all__ = [
     "TableNotFound", "SchemaError", "MergeConflict", "PermissionDenied",
     "CycleError", "ExpectationFailed", "CodeDrift", "RunNotFound",
     "RemoteError", "SyncError", "AmbiguousRefUpdate", "CodecUnavailable",
+    "TransactionConflict", "ContractViolation",
 ]

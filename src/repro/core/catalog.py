@@ -15,19 +15,35 @@ Namespacing follows the paper's ``user.branch`` convention: everyone can read
 any branch, only ``user`` can write ``user.*``; ``main`` accepts only merges
 that went through write-audit-publish (see ``wap.py``) unless the catalog is
 created with ``protect_main=False``.
+
+Writes are **optimistic table-level transactions** (``txn.py``): a commit
+declares its read/write table set, and a ref-level CAS miss triggers a
+rebase — re-read the moved head, verify no declared table changed
+snapshot since the transaction's base, retry — so concurrent writers on
+*disjoint* tables never see a conflict; only genuinely overlapping
+snapshot movement raises :class:`~.errors.TransactionConflict`.  **Data
+contracts** (``contracts.py``) attached to tables ride the commit object
+itself and are enforced here, at the ref update, on every ``commit`` and
+``merge`` path — see docs/catalog.md for the conflict matrix and
+enforcement points.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Set
 
 import msgpack
 
-from .errors import (MergeConflict, ObjectNotFound, PermissionDenied,
-                     RefNotFound, ReproError)
-from .store import ObjectStore
+from .contracts import (CONTRACTS_TABLE, Contract, Rule, evaluate,
+                        pack_contracts, unpack_contracts)
+from .errors import (ContractViolation, MergeConflict, ObjectNotFound,
+                     PermissionDenied, RefConflict, RefNotFound, ReproError,
+                     TransactionConflict)
+from .store import ObjectStore, try_cas_ref
+from .txn import DEFAULT_MAX_ATTEMPTS, Transaction, changed_tables
 
 _BRANCH_PREFIX = "branch="
 _TAG_PREFIX = "tag="
@@ -87,12 +103,31 @@ class Catalog:
         self.store = store
         self.protect_main = protect_main
         self.clock = clock
+        self._io = None  # lazy TableIO for contract enforcement
+        self._contracts_cache: Dict[str, Dict[str, Contract]] = {}
+        #: (contracts digest, table, snapshot) -> failures; rebases re-check
+        #: the same snapshot under the same contracts for free
+        self._contract_results: Dict[tuple, Dict[str, str]] = {}
+        self._stats_lock = threading.Lock()
+        #: transaction accounting: ``rebases`` counts ref-CAS misses
+        #: absorbed internally — before the transaction layer each one was
+        #: a caller-visible conflict and a full retry (bench_branching's
+        #: multi-writer leg reports these)
+        self.txn_stats = {"commits": 0, "merges": 0, "rebases": 0,
+                          "conflicts": 0, "contract_rejections": 0}
         try:
             self.store.get_ref(_BRANCH_PREFIX + "main")
         except RefNotFound:
             root = Commit((), {}, "repository root", "system", self.clock())
-            self.store.set_ref(_BRANCH_PREFIX + "main",
-                               self.store.put(_pack(root.to_obj())))
+            try:  # create-exclusive: a concurrent init's root is as good
+                self.store.cas_ref(_BRANCH_PREFIX + "main", None,
+                                   self.store.put(_pack(root.to_obj())))
+            except RefConflict:
+                pass
+
+    def _bump_stat(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self.txn_stats[key] += n
 
     # -------------------------------------------------------------- plumbing
     def _load_commit(self, digest: str) -> Commit:
@@ -189,13 +224,23 @@ class Catalog:
     # ---------------------------------------------------------------- writes
     def create_branch(self, name: str, from_ref: str = "main", *,
                       author: str = "system") -> str:
-        """Copy-on-write branch: one ref write, zero data copies (§5.4)."""
+        """Copy-on-write branch: one ref write, zero data copies (§5.4).
+
+        Creation is create-exclusive: the ref is CAS'd *from absent*, so
+        two concurrent creates of the same name have exactly one winner —
+        the loser raises :class:`ReproError` and can never overwrite the
+        winner's ref (the old check-then-set did exactly that)."""
         if name != "main" and self.branch_owner(name) not in (None, author):
             raise PermissionDenied(f"{author!r} cannot create {name!r}")
         if name in self.branches():
             raise ReproError(f"branch {name!r} exists")
         digest = self.resolve(from_ref)
-        self.store.set_ref(_BRANCH_PREFIX + name, digest)
+        try:
+            self.store.cas_ref(_BRANCH_PREFIX + name, None, digest)
+        except RefConflict:
+            raise ReproError(
+                f"branch {name!r} exists (lost a concurrent create race)"
+            ) from None
         return digest
 
     def delete_branch(self, name: str) -> None:
@@ -219,23 +264,85 @@ class Catalog:
         *,
         author: str = "system",
         meta: Optional[Dict[str, Any]] = None,
+        read_tables: Optional[Sequence[str]] = None,
+        base: Optional[str] = None,
+        expected_head: Optional[str] = None,
+        max_attempts: Optional[int] = None,
         _wap_token: bool = False,
+        _contracts_update: bool = False,
     ) -> str:
         """Multi-table transaction: atomically update snapshot pointers on a
-        branch.  ``None`` as snapshot digest deletes the table."""
+        branch.  ``None`` as snapshot digest deletes the table.
+
+        The commit is an **optimistic table-level transaction**: its
+        declared set is ``table_updates`` keys ∪ ``read_tables``, checked
+        against ``base`` (the head the caller computed its writes from;
+        defaults to the head read here).  On a ref-level CAS miss the
+        commit *rebases* — re-reads the moved head, verifies no declared
+        table changed snapshot since ``base``, rebuilds on the new head,
+        retries (up to ``max_attempts``) — so concurrent commits to
+        disjoint tables all land without any caller-visible conflict.
+        Genuine overlap raises :class:`~.errors.TransactionConflict`.
+
+        ``expected_head=`` pins the commit: exactly one CAS attempt
+        against that digest, any movement raises ``TransactionConflict``
+        with ``pinned=True`` — WAP publish uses this to guarantee the
+        branch it stamps is byte-identical to the branch it audited.
+
+        Data contracts on any written table are enforced here, before the
+        ref moves, regardless of which path produced the commit."""
         self._check_write(branch, author, wap_token=_wap_token)
-        old_head = self.head(branch)
-        tables = dict(self._load_commit(old_head).tables)
-        for name, snap in table_updates.items():
-            if snap is None:
-                tables.pop(name, None)
-            else:
-                tables[name] = snap
-        commit = Commit((old_head,), tables, message, author, self.clock(),
-                        meta or {})
-        digest = self._store_commit(commit)
-        self.store.cas_ref(_BRANCH_PREFIX + branch, old_head, digest)
-        return digest
+        if CONTRACTS_TABLE in table_updates and not _contracts_update:
+            raise PermissionDenied(
+                f"{CONTRACTS_TABLE!r} is reserved; use "
+                "Catalog.add_contract()/drop_contract()")
+        declared = set(table_updates) | set(read_tables or ())
+        attempts_cap = (1 if expected_head is not None
+                        else (max_attempts or DEFAULT_MAX_ATTEMPTS))
+        head = expected_head if expected_head is not None else self.head(branch)
+        if base is None:
+            base = head
+        base_tables = self._load_commit(base).tables
+        attempts = 0
+        while True:
+            attempts += 1
+            head_commit = self._load_commit(head)
+            if head != base:
+                overlap = changed_tables(base_tables, head_commit.tables,
+                                         declared)
+                if overlap:
+                    self._bump_stat("conflicts")
+                    raise TransactionConflict(branch, overlap,
+                                              attempts=attempts, base=base,
+                                              pinned=expected_head is not None)
+            tables = dict(head_commit.tables)
+            for name, snap in table_updates.items():
+                if snap is None:
+                    tables.pop(name, None)
+                else:
+                    tables[name] = snap
+            self._enforce_contracts(branch, head_commit.tables, tables)
+            digest = self._store_commit(
+                Commit((head,), tables, message, author, self.clock(),
+                       meta or {}))
+            try:
+                self.store.cas_ref(_BRANCH_PREFIX + branch, head, digest)
+            except RefConflict:
+                if expected_head is not None:
+                    self._bump_stat("conflicts")
+                    raise TransactionConflict(
+                        branch, [], attempts=attempts, base=base,
+                        pinned=True) from None
+                if attempts >= attempts_cap:
+                    self._bump_stat("conflicts")
+                    raise TransactionConflict(
+                        branch, [], attempts=attempts, base=base,
+                        exhausted=True) from None
+                self._bump_stat("rebases")
+                head = self.head(branch)
+                continue
+            self._bump_stat("commits")
+            return digest
 
     # ----------------------------------------------------------------- reads
     def tables(self, ref: str) -> Dict[str, str]:
@@ -302,50 +409,91 @@ class Catalog:
         return best
 
     def merge(self, src_ref: str, dst_branch: str, *, author: str = "system",
-              message: Optional[str] = None, _wap_token: bool = False) -> str:
+              message: Optional[str] = None, _wap_token: bool = False,
+              max_attempts: Optional[int] = None) -> str:
         """Fast-forward when possible, else 3-way at table granularity.
 
         Conflict rule (Nessie semantics): a table changed on *both* sides
         since the merge base conflicts unless both sides reached the same
         snapshot.
-        """
+
+        The merge is itself an optimistic transaction: a ref-level CAS
+        miss (the destination moved while we computed the merge) triggers
+        a full recompute against the new head and a retry — the 3-way
+        table comparison re-run per attempt *is* the semantic conflict
+        check, so a concurrent commit to tables the source didn't touch
+        never aborts the merge.  A fast-forward whose destination moves
+        degrades gracefully into a 3-way merge on retry.  Contracts on
+        every table the merge changes are enforced before the ref moves —
+        on the fast-forward path too (a branch can fast-forward past a
+        contract added after it forked)."""
         self._check_write(dst_branch, author, wap_token=_wap_token)
         src = self.resolve(src_ref)
+        attempts_cap = max_attempts or DEFAULT_MAX_ATTEMPTS
+        attempts = 0
         dst = self.head(dst_branch)
-        if src == dst:
-            return dst
-        if dst in self._ancestors(src):  # fast-forward
-            self.store.cas_ref(_BRANCH_PREFIX + dst_branch, dst, src)
-            return src
-        base = self.merge_base(src, dst)
-        base_tables = self._load_commit(base).tables if base else {}
-        src_tables = self._load_commit(src).tables
-        dst_tables = self._load_commit(dst).tables
-        conflicts, merged = [], dict(dst_tables)
-        for name in sorted(set(base_tables) | set(src_tables) | set(dst_tables)):
-            b = base_tables.get(name)
-            s = src_tables.get(name)
-            d = dst_tables.get(name)
-            if s == d:
+        while True:
+            attempts += 1
+            if src == dst or src in self._ancestors(dst):
+                # already merged (a retry can observe its own landed work
+                # or a concurrent identical merge) — idempotent success
+                return dst
+            dst_tables = self._load_commit(dst).tables
+            if dst in self._ancestors(src):  # fast-forward
+                src_tables = self._load_commit(src).tables
+                self._enforce_contracts(dst_branch, dst_tables, src_tables)
+                if try_cas_ref(self.store, _BRANCH_PREFIX + dst_branch,
+                               dst, src):
+                    self._bump_stat("merges")
+                    return src
+                dst = self._rebase_or_exhaust(dst_branch, attempts,
+                                              attempts_cap)
                 continue
-            src_changed, dst_changed = (s != b), (d != b)
-            if src_changed and dst_changed:
-                conflicts.append(name)
-            elif src_changed:
-                if s is None:
-                    merged.pop(name, None)
-                else:
-                    merged[name] = s
-        if conflicts:
-            raise MergeConflict(conflicts)
-        commit = Commit(
-            (dst, src), merged,
-            message or f"merge {src_ref} into {dst_branch}",
-            author, self.clock(), {"merge_base": base},
-        )
-        digest = self._store_commit(commit)
-        self.store.cas_ref(_BRANCH_PREFIX + dst_branch, dst, digest)
-        return digest
+            base = self.merge_base(src, dst)
+            base_tables = self._load_commit(base).tables if base else {}
+            src_tables = self._load_commit(src).tables
+            conflicts, merged = [], dict(dst_tables)
+            for name in sorted(set(base_tables) | set(src_tables)
+                               | set(dst_tables)):
+                b = base_tables.get(name)
+                s = src_tables.get(name)
+                d = dst_tables.get(name)
+                if s == d:
+                    continue
+                src_changed, dst_changed = (s != b), (d != b)
+                if src_changed and dst_changed:
+                    conflicts.append(name)
+                elif src_changed:
+                    if s is None:
+                        merged.pop(name, None)
+                    else:
+                        merged[name] = s
+            if conflicts:
+                self._bump_stat("conflicts")
+                raise MergeConflict(conflicts)
+            self._enforce_contracts(dst_branch, dst_tables, merged)
+            commit = Commit(
+                (dst, src), merged,
+                message or f"merge {src_ref} into {dst_branch}",
+                author, self.clock(), {"merge_base": base},
+            )
+            digest = self._store_commit(commit)
+            if try_cas_ref(self.store, _BRANCH_PREFIX + dst_branch,
+                           dst, digest):
+                self._bump_stat("merges")
+                return digest
+            dst = self._rebase_or_exhaust(dst_branch, attempts, attempts_cap)
+
+    def _rebase_or_exhaust(self, dst_branch: str, attempts: int,
+                           attempts_cap: int) -> str:
+        """CAS miss bookkeeping for merge: either hand back the moved head
+        for another attempt or give up loudly."""
+        if attempts >= attempts_cap:
+            self._bump_stat("conflicts")
+            raise TransactionConflict(dst_branch, [], attempts=attempts,
+                                      exhausted=True)
+        self._bump_stat("rebases")
+        return self.head(dst_branch)
 
     def diff(self, ref_a: str, ref_b: str) -> Dict[str, tuple]:
         """Tables whose snapshot differs between two refs."""
@@ -355,3 +503,97 @@ class Catalog:
             if ta.get(name) != tb.get(name):
                 out[name] = (ta.get(name), tb.get(name))
         return out
+
+    # ---------------------------------------------------------- transactions
+    def transaction(self, branch: str, *, author: str = "system",
+                    io=None) -> Transaction:
+        """Open an optimistic read/write transaction against ``branch``
+        (see :class:`~.txn.Transaction`)."""
+        return Transaction(self, branch, author=author, io=io)
+
+    # ------------------------------------------------------------- contracts
+    def _table_io(self):
+        if self._io is None:
+            from .table import TableIO
+            self._io = TableIO(self.store)
+        return self._io
+
+    def _load_contract_specs(self, contracts_digest: Optional[str]
+                             ) -> Dict[str, Contract]:
+        if contracts_digest is None:
+            return {}
+        cached = self._contracts_cache.get(contracts_digest)
+        if cached is None:
+            cached = unpack_contracts(self.store.get(contracts_digest))
+            self._contracts_cache[contracts_digest] = cached
+        return cached
+
+    def contracts(self, ref: str = "main") -> Dict[str, Contract]:
+        """Contracts in force at ``ref`` (table name → contract)."""
+        tables = self.tables(ref)
+        return dict(self._load_contract_specs(tables.get(CONTRACTS_TABLE)))
+
+    def _enforce_contracts(self, branch: str,
+                           old_tables: Mapping[str, str],
+                           new_tables: Mapping[str, str]) -> None:
+        """Gate a prospective commit's tables against the contracts *it*
+        carries.  Checked for every table whose snapshot OR contract
+        changed relative to the current head — so attaching a contract
+        over already-bad data is rejected at attach time, and unchanged
+        tables never cost a data read.  Evaluation is memoized by
+        (contracts blob, table, snapshot): a rebase retry re-checks the
+        same snapshots for free."""
+        new_cdig = new_tables.get(CONTRACTS_TABLE)
+        if new_cdig is None:
+            return
+        new_specs = self._load_contract_specs(new_cdig)
+        if not new_specs:
+            return
+        old_specs = self._load_contract_specs(old_tables.get(CONTRACTS_TABLE))
+        for table, contract in new_specs.items():
+            snap = new_tables.get(table)
+            if snap is None:
+                continue  # contracted table absent: nothing to validate
+            if (snap == old_tables.get(table)
+                    and contract == old_specs.get(table)):
+                continue  # neither data nor contract moved past the head
+            key = (new_cdig, table, snap)
+            failures = self._contract_results.get(key)
+            if failures is None:
+                frame = self._table_io().read(snap)
+                failures = evaluate(contract, frame)
+                self._contract_results[key] = failures
+            if failures:
+                self._bump_stat("contract_rejections")
+                raise ContractViolation(branch, table, failures)
+
+    def add_contract(self, table: str, rules: Sequence[Rule], *,
+                     branch: str = "main", author: str = "system",
+                     _wap_token: bool = False) -> str:
+        """Attach (or replace) the contract on ``table`` at ``branch``.
+
+        The attach is itself a contract-gated commit: if the table's
+        current snapshot violates the new rules, the attach is rejected —
+        a contract can never be in force over data that fails it."""
+        if table == CONTRACTS_TABLE:
+            raise PermissionDenied(f"cannot contract {CONTRACTS_TABLE!r}")
+        specs = dict(self.contracts(branch))
+        specs[table] = Contract(table, tuple(rules), author)
+        digest = self.store.put(pack_contracts(specs))
+        return self.commit(
+            branch, {CONTRACTS_TABLE: digest},
+            f"contract: {table} ({len(rules)} rule(s))", author=author,
+            _wap_token=_wap_token, _contracts_update=True)
+
+    def drop_contract(self, table: str, *, branch: str = "main",
+                      author: str = "system",
+                      _wap_token: bool = False) -> str:
+        specs = dict(self.contracts(branch))
+        if table not in specs:
+            raise ReproError(f"no contract on {table!r} at {branch!r}")
+        del specs[table]
+        digest = self.store.put(pack_contracts(specs))
+        return self.commit(
+            branch, {CONTRACTS_TABLE: digest},
+            f"contract: drop {table}", author=author,
+            _wap_token=_wap_token, _contracts_update=True)

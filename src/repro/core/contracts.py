@@ -1,0 +1,225 @@
+"""Data contracts: WAP expectations promoted into the catalog itself.
+
+A *contract* is a set of named rules attached to a table.  Contracts live
+in the commit object as a reserved table entry (``__contracts__`` →
+msgpack blob of rule specs), so they are versioned, branched and merged
+exactly like data: a debug branch inherits its parent's contracts, and a
+contract added on a feature branch rides the merge into ``main``.
+
+Unlike ``wap.Expectation`` — an opt-in audit a *cooperating* caller runs
+before publishing — a contract is enforced by ``Catalog.commit`` /
+``Catalog.merge`` at the ref update itself.  An untrusted or agentic
+writer cannot land violating data by skipping the write-audit-publish
+ceremony: the commit that would move the branch head is rejected with
+:class:`~.errors.ContractViolation` before any ref moves.
+
+Rules are *specs*, not closures: ``Rule(kind, args)`` where ``kind`` names
+a builder in the rule registry.  That keeps contracts serializable (they
+live in the store) and evaluable by any host — the same reason the run
+cache keys on code hashes instead of pickled functions.  Built-in kinds
+mirror the ``wap`` helpers (``not_empty``, ``no_nans``, ``column_range``)
+plus ``columns_required``; :func:`register_rule` extends the registry for
+project-specific checks (unknown kinds fail closed: the commit is
+rejected, never silently waved through).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+from .errors import ReproError
+
+#: reserved entry in ``Commit.tables`` holding the contracts blob digest.
+#: Regular commits may not write it directly — ``Catalog.add_contract`` /
+#: ``drop_contract`` are the only mutators — but it merges like any other
+#: table (both sides changing contracts since the base is a conflict).
+CONTRACTS_TABLE = "__contracts__"
+
+Frame = Mapping[str, np.ndarray]
+
+
+def _pack(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def _unpack(blob: bytes):
+    return msgpack.unpackb(blob, raw=False)
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One serializable check: a registry kind plus its parameters."""
+
+    kind: str
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        if not self.args:
+            return self.kind
+        parts = ",".join(f"{k}={self.args[k]}" for k in sorted(self.args))
+        return f"{self.kind}({parts})"
+
+    def to_obj(self):
+        return {"kind": self.kind, "args": dict(self.args)}
+
+    @staticmethod
+    def from_obj(o) -> "Rule":
+        return Rule(o["kind"], dict(o.get("args", {})))
+
+
+@dataclass(frozen=True)
+class Contract:
+    """All rules attached to one table (evaluated on every new snapshot)."""
+
+    table: str
+    rules: Tuple[Rule, ...]
+    author: str = "system"
+
+    def to_obj(self):
+        return {"table": self.table, "author": self.author,
+                "rules": [r.to_obj() for r in self.rules]}
+
+    @staticmethod
+    def from_obj(o) -> "Contract":
+        return Contract(o["table"],
+                        tuple(Rule.from_obj(r) for r in o["rules"]),
+                        o.get("author", "system"))
+
+
+def rule(kind: str, **args) -> Rule:
+    """``rule("column_range", column="p", lo=0.0, hi=1.0)`` — validated
+    against the registry eagerly so a typo'd kind fails at authoring time,
+    not at the first commit it should have gated."""
+    if kind not in _RULES:
+        raise ReproError(
+            f"unknown contract rule kind {kind!r} "
+            f"(registered: {sorted(_RULES)})")
+    return Rule(kind, args)
+
+
+# --------------------------------------------------------------- registry
+#: kind -> builder(args) -> (frame -> bool)
+_RULES: Dict[str, Callable[[Dict[str, Any]], Callable[[Frame], bool]]] = {}
+
+
+def register_rule(kind: str,
+                  builder: Callable[[Dict[str, Any]],
+                                    Callable[[Frame], bool]]) -> None:
+    """Extend the registry (project-specific checks).  The kind string is
+    what travels in the store; every host that commits to a contracted
+    table must have it registered, or its commits fail closed."""
+    _RULES[kind] = builder
+
+
+def _not_empty(args):
+    def fn(f: Frame) -> bool:
+        return bool(f) and all(np.asarray(v).shape[0] > 0
+                               for v in f.values())
+    return fn
+
+
+def _no_nans(args):
+    columns = args.get("columns")
+
+    def fn(f: Frame) -> bool:
+        for k, v in f.items():
+            if columns is not None and k not in columns:
+                continue
+            a = np.asarray(v)
+            if a.dtype.kind == "f" and np.isnan(a).any():
+                return False
+        return True
+    return fn
+
+
+def _column_range(args):
+    column, lo, hi = args["column"], float(args["lo"]), float(args["hi"])
+
+    def fn(f: Frame) -> bool:
+        v = np.asarray(f[column])
+        return bool(v.size) and float(v.min()) >= lo and float(v.max()) <= hi
+    return fn
+
+
+def _columns_required(args):
+    required = list(args["columns"])
+
+    def fn(f: Frame) -> bool:
+        return all(c in f for c in required)
+    return fn
+
+
+register_rule("not_empty", _not_empty)
+register_rule("no_nans", _no_nans)
+register_rule("column_range", _column_range)
+register_rule("columns_required", _columns_required)
+
+
+# ------------------------------------------------------------- evaluation
+def evaluate(contract: Contract, frame: Frame) -> Dict[str, str]:
+    """Run every rule over the frame; returns ``{rule name: why}`` for the
+    failures (empty dict = contract satisfied).  An erroring or unknown
+    rule is a failure — enforcement fails closed."""
+    failures: Dict[str, str] = {}
+    for r in contract.rules:
+        builder = _RULES.get(r.kind)
+        if builder is None:
+            failures[r.name] = f"unknown rule kind {r.kind!r}"
+            continue
+        try:
+            if not bool(builder(r.args)(frame)):
+                failures[r.name] = "failed"
+        except Exception as e:  # noqa: BLE001 - fail closed, keep the why
+            failures[r.name] = f"{type(e).__name__}: {e}"
+    return failures
+
+
+# ---------------------------------------------------------- serialization
+def pack_contracts(contracts: Mapping[str, Contract]) -> bytes:
+    return _pack({"version": 1,
+                  "contracts": [contracts[t].to_obj()
+                                for t in sorted(contracts)]})
+
+
+def unpack_contracts(blob: bytes) -> Dict[str, Contract]:
+    obj = _unpack(blob)
+    out: Dict[str, Contract] = {}
+    for c in obj.get("contracts", []):
+        contract = Contract.from_obj(c)
+        out[contract.table] = contract
+    return out
+
+
+# ------------------------------------------------------------ CLI parsing
+def parse_rule_spec(spec: str) -> Rule:
+    """``repro contract add`` rule syntax → :class:`Rule`.
+
+        not_empty
+        no_nans                         (all float columns)
+        no_nans:colA,colB               (named columns only)
+        column_range:col,lo,hi
+        columns_required:colA,colB
+    """
+    kind, _, rest = spec.partition(":")
+    kind = kind.strip()
+    parts = [p.strip() for p in rest.split(",") if p.strip()]
+    if kind == "not_empty":
+        return rule("not_empty")
+    if kind == "no_nans":
+        return rule("no_nans", **({"columns": parts} if parts else {}))
+    if kind == "column_range":
+        if len(parts) != 3:
+            raise ReproError(
+                f"column_range needs col,lo,hi (got {spec!r})")
+        return rule("column_range", column=parts[0],
+                    lo=float(parts[1]), hi=float(parts[2]))
+    if kind == "columns_required":
+        if not parts:
+            raise ReproError(f"columns_required needs columns (got {spec!r})")
+        return rule("columns_required", columns=parts)
+    raise ReproError(f"unknown contract rule kind {kind!r} in {spec!r}")

@@ -33,6 +33,36 @@ class MergeConflict(ReproError):
         super().__init__(f"merge conflict on tables: {self.tables}")
 
 
+class TransactionConflict(MergeConflict):
+    """An optimistic table-level transaction could not land.
+
+    Raised by ``Catalog.commit``/``Catalog.merge`` when, after a ref-level
+    CAS miss, the rebase check finds that a table in the transaction's
+    declared read/write set changed snapshot since the transaction's base
+    (``tables`` names them), or when the bounded rebase loop ran out of
+    attempts under sustained contention (``tables`` is then empty and
+    ``exhausted`` is True).  A plain concurrent commit to *disjoint*
+    tables never raises this — the transaction rebases and retries
+    internally.  Subclasses :class:`MergeConflict` so existing
+    conflict-handling callers keep working."""
+
+    def __init__(self, branch, tables, *, attempts, base=None,
+                 exhausted=False, pinned=False):
+        self.branch = branch
+        self.attempts = attempts
+        self.base = base
+        self.exhausted = exhausted
+        #: True when the transaction was pinned to an exact base commit
+        #: (``expected_head=``) — movement alone is a conflict, no rebase
+        self.pinned = pinned
+        super().__init__(tables)
+        what = ("transaction pinned to stale base" if pinned
+                else "rebase attempts exhausted" if exhausted
+                else f"concurrent writes to tables {self.tables}")
+        self.args = (f"transaction on {branch!r} conflicted after "
+                     f"{attempts} attempt(s): {what}",)
+
+
 class PermissionDenied(ReproError):
     """Namespace policy rejected a write."""
 
@@ -67,6 +97,23 @@ class RunAborted(ReproError):
 
 class ExpectationFailed(ReproError):
     """A write-audit-publish expectation failed."""
+
+
+class ContractViolation(ExpectationFailed):
+    """A data contract attached to a table in the catalog rejected the new
+    snapshot.  Raised at the ref update itself (``commit``/``merge``/
+    ``publish`` all funnel through it), so a writer cannot land violating
+    data by skipping the write-audit-publish ceremony — the catalog, not
+    caller cooperation, enforces the contract."""
+
+    def __init__(self, branch, table, failures):
+        self.branch = branch
+        self.table = table
+        #: rule name -> error string (or "failed" for a clean False)
+        self.failures = dict(failures)
+        super().__init__(
+            f"contract on table {table!r} rejected commit to {branch!r}: "
+            f"{self.failures}")
 
 
 class CodeDrift(ReproError):

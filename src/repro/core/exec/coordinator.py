@@ -35,8 +35,8 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 import msgpack
 
 from ..catalog import Catalog
-from ..errors import (NodeExecutionError, ReproError, RunAborted,
-                      TableNotFound)
+from ..errors import (NodeExecutionError, RefNotFound, ReproError,
+                      RunAborted, TableNotFound)
 from ..pipeline import ExecutionReport, Pipeline, default_jobs
 from ..runcache import CacheDemotionWarning, RunCache, node_key
 from ..table import TableIO
@@ -100,6 +100,14 @@ class _Coordinator:
         self.board = LeaseBoard(self.store, exec_id)
         self.head_tables = catalog.input_digests(read_ref,
                                                  pipeline.source_tables())
+        #: branch head when the run started — the base of the run's
+        #: output transaction (commit_outputs declares head_tables as its
+        #: read set against this base, so a concurrent commit to a table
+        #: the DAG never read rebases cleanly instead of conflicting)
+        try:
+            self.txn_base = catalog.head(branch)
+        except RefNotFound:  # branch created later: base = head at commit
+            self.txn_base = None
         self.internal = set(pipeline.nodes)
         #: completed nodes' results (the readiness + cache-keying substrate)
         self.results: Dict[str, NodeResult] = {}
@@ -252,6 +260,12 @@ class _Coordinator:
                     meta={"pipeline_code": self.pipeline.code_hash(),
                           "cache_hits": n_hits,
                           "cache_misses": len(node_stats) - n_hits},
+                    # declared transaction: outputs ∪ source tables, from
+                    # the head at run start — concurrent commits to other
+                    # tables on the branch rebase instead of conflicting
+                    read_tables=sorted(set(self.head_tables)
+                                       - set(outputs)),
+                    base=self.txn_base,
                 )
         self.finish_run(commit_digest)
         return ExecutionReport(outputs=outputs, commit=commit_digest,

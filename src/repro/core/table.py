@@ -91,9 +91,22 @@ class TableIO:
     (the reversible hierarchy of Fig. 2).
     """
 
-    def __init__(self, store: ObjectStore, *, target_rows_per_file: int = 65536):
+    def __init__(self, store: ObjectStore, *, target_rows_per_file: int = 65536,
+                 on_read=None):
         self.store = store
         self.target_rows_per_file = target_rows_per_file
+        #: optional callback fired with each snapshot digest a read touches
+        #: — the read-set capture hook transactions use (``core/txn.py``):
+        #: a pipeline node that only holds the IO handle still contributes
+        #: the tables it reads to its transaction's declared set
+        self.on_read = on_read
+
+    def with_read_recorder(self, on_read) -> "TableIO":
+        """A sibling handle over the same store whose reads fire
+        ``on_read(snapshot_digest)`` (this handle is left untouched)."""
+        return TableIO(self.store,
+                       target_rows_per_file=self.target_rows_per_file,
+                       on_read=on_read)
 
     # ------------------------------------------------------------------ write
     def write_snapshot(
@@ -138,6 +151,8 @@ class TableIO:
         return Snapshot.from_obj(_unpack(self.store.get(digest)))
 
     def iter_files(self, digest: str) -> Iterator[Dict[str, np.ndarray]]:
+        if self.on_read is not None:
+            self.on_read(digest)
         snap = self.load_snapshot(digest)
         for entry in snap.manifest:
             yield tensorfile.decode(self.store.get(entry.digest))

@@ -1,0 +1,152 @@
+"""Optimistic table-level transactions over the catalog (ROADMAP item 4).
+
+The catalog's ref CAS protects the *ref*, not the *tables*: before this
+layer, two writers committing to different tables on the same branch
+collided at the ref level and one retried from scratch — a spurious
+conflict that multiplies with writer count.  The fix is Iceberg-style
+semantic conflict detection on top of ``core/table.py`` snapshots:
+
+* a commit *declares* its read/write table set (writes are the keys of
+  ``table_updates``; reads are captured by :class:`Transaction` or passed
+  as ``read_tables=``);
+* on a ref-level CAS miss the catalog **rebases**: it re-reads the moved
+  head, checks that no declared table changed snapshot since the
+  transaction's base, rebuilds the commit on the new head and retries the
+  CAS (bounded attempts);
+* only a *genuinely overlapping* snapshot movement raises
+  :class:`~.errors.TransactionConflict` — disjoint writers never see a
+  conflict at all.
+
+The rebase engine itself lives in ``Catalog.commit``/``Catalog.merge``
+(it needs commit plumbing); this module holds the shared policy knobs,
+the declared-set conflict check, and the :class:`Transaction` façade that
+captures read sets at the table-IO layer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Set
+
+import numpy as np
+
+from .errors import TableNotFound
+from .table import TableIO
+
+#: bounded rebase attempts for an unpinned transaction.  Each failed CAS
+#: means some *other* writer landed (system-wide progress), so exhaustion
+#: signals pathological contention, not livelock; the bound keeps a
+#: starved writer's failure loud instead of infinite.
+DEFAULT_MAX_ATTEMPTS = 16
+
+
+def changed_tables(base_tables: Mapping[str, str],
+                   head_tables: Mapping[str, str],
+                   declared: Iterable[str]) -> list:
+    """Declared tables whose snapshot differs between the transaction's
+    base commit and the (moved) head — the semantic conflict test.  A
+    table changed and changed *back* compares equal (snapshot digests are
+    content addresses): snapshot-level, not history-level, semantics."""
+    return sorted(t for t in declared
+                  if base_tables.get(t) != head_tables.get(t))
+
+
+class Transaction:
+    """One optimistic read/write transaction against a branch.
+
+    Reads resolve against the transaction's *base* commit (the branch head
+    at open time) — a stable snapshot view, like a repeatable-read
+    database transaction — and are recorded in the read set.  Writes stage
+    snapshots without touching the branch.  ``commit()`` hands the staged
+    updates plus the declared read set to ``Catalog.commit``, which
+    rebases over concurrent disjoint commits and raises
+    :class:`~.errors.TransactionConflict` iff a declared table moved.
+
+    >>> txn = lake.catalog.transaction("etl.daily", author="etl")
+    >>> raw = txn.read("raw_events")                 # read-set capture
+    >>> txn.write("daily_agg", aggregate(raw))
+    >>> txn.commit("daily aggregation")              # rebases if needed
+
+    The ``io`` attribute is a :class:`~.table.TableIO` whose reads are
+    recorded too, so code that only receives the IO handle (pipeline
+    nodes) still contributes to the read set.
+    """
+
+    def __init__(self, catalog, branch: str, *, author: str = "system",
+                 io: Optional[TableIO] = None):
+        self.catalog = catalog
+        self.branch = branch
+        self.author = author
+        self.base = catalog.head(branch)
+        self._base_tables: Dict[str, str] = catalog.tables(self.base)
+        self._snap_to_table = {s: t for t, s in self._base_tables.items()}
+        self.reads: Set[str] = set()
+        self.writes: Dict[str, Optional[str]] = {}
+        base_io = io or TableIO(catalog.store)
+        self.io = base_io.with_read_recorder(self._record_snapshot_read)
+        self.commit_digest: Optional[str] = None
+
+    # ----------------------------------------------------------- read set
+    def _record_snapshot_read(self, digest: str) -> None:
+        table = self._snap_to_table.get(digest)
+        if table is not None:
+            self.reads.add(table)
+
+    def snapshot_of(self, table: str) -> str:
+        """Snapshot digest of ``table`` in this transaction's view (staged
+        writes shadow the base).  Records the read."""
+        self.reads.add(table)
+        if table in self.writes:
+            snap = self.writes[table]
+            if snap is None:
+                raise TableNotFound(f"{table!r} deleted in this transaction")
+            return snap
+        if table not in self._base_tables:
+            raise TableNotFound(f"{table!r} not at {self.branch!r} base")
+        return self._base_tables[table]
+
+    def read(self, table: str,
+             columns: Optional[Sequence[str]] = None
+             ) -> Dict[str, np.ndarray]:
+        return self.io.read(self.snapshot_of(table), columns)
+
+    # ---------------------------------------------------------- write set
+    def write(self, table: str, cols: Mapping[str, np.ndarray], *,
+              append: bool = False) -> str:
+        """Stage a new snapshot for ``table`` (nothing moves on the branch
+        until ``commit``).  ``append=True`` chains onto the table's
+        current snapshot in this transaction's view."""
+        parent = None
+        if append:
+            parent = self.writes.get(table, self._base_tables.get(table))
+        snap = self.io.write_snapshot(
+            cols, parent=parent, op="append" if parent else "overwrite")
+        self.writes[table] = snap
+        return snap
+
+    def write_snapshot(self, table: str, snapshot_digest: str) -> None:
+        """Stage an already-written snapshot (pipeline outputs)."""
+        self.writes[table] = snapshot_digest
+
+    def delete(self, table: str) -> None:
+        self.writes[table] = None
+
+    # -------------------------------------------------------------- commit
+    def commit(self, message: str, *, meta=None, _wap_token: bool = False,
+               max_attempts: int = DEFAULT_MAX_ATTEMPTS) -> str:
+        """Land the staged writes.  Declared set = reads ∪ writes, checked
+        from this transaction's base — a concurrent commit to any OTHER
+        table is rebased over silently."""
+        self.commit_digest = self.catalog.commit(
+            self.branch, dict(self.writes), message, author=self.author,
+            meta=meta, read_tables=sorted(self.reads - set(self.writes)),
+            base=self.base, max_attempts=max_attempts,
+            _wap_token=_wap_token)
+        return self.commit_digest
+
+    # transactions are explicit-commit: the context manager only scopes
+    # the read/write capture, an un-committed exit discards the staging
+    def __enter__(self) -> "Transaction":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        return None

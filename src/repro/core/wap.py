@@ -15,8 +15,9 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from .catalog import Catalog
-from .errors import ExpectationFailed, TableNotFound
+from .errors import ExpectationFailed, TableNotFound, TransactionConflict
 from .table import TableIO
+from .txn import DEFAULT_MAX_ATTEMPTS
 
 Frame = Mapping[str, np.ndarray]
 
@@ -52,7 +53,8 @@ def audit(catalog: Catalog, io: TableIO, branch: str,
           expectations: Sequence[Expectation]) -> AuditReport:
     """Run expectations against the branch head (the A of W-A-P)."""
     commit = catalog.head(branch)
-    tables = catalog.tables(branch)
+    tables = catalog.tables(commit)  # at the pinned commit, not the name:
+    # the report's commit and tables are guaranteed to describe one state
     results: Dict[str, bool] = {}
     errors: Dict[str, str] = {}
     cache: Dict[str, Dict[str, np.ndarray]] = {}
@@ -98,27 +100,46 @@ def audit_frames(expectations: Sequence[Expectation],
 def publish(catalog: Catalog, io: TableIO, src_branch: str,
             expectations: Sequence[Expectation], *,
             dst_branch: str = "main", author: str = "system",
-            clock=time.time) -> str:
+            clock=time.time, max_attempts: int = DEFAULT_MAX_ATTEMPTS) -> str:
     """The P of W-A-P: merge into ``dst`` only if the audit passes.
 
     This is the ONLY path that writes to a protected ``main`` — the audit
     report is stamped into the merge commit metadata so the publication is
-    itself auditable."""
-    report = audit(catalog, io, src_branch, expectations)
-    if not report.passed:
-        failed = sorted(n for n, ok in report.results.items() if not ok)
-        raise ExpectationFailed(
-            f"audit failed on {src_branch}: {failed} "
-            f"(errors: {report.errors})")
-    # stamp the audit into a commit on the source branch, then merge
-    catalog.commit(
-        src_branch, {}, f"audit passed ({len(report.results)} expectations)",
-        author=author,
-        meta={"audit": {"results": report.results, "commit": report.commit,
-                        "ts": clock()}},
-    )
-    return catalog.merge(src_branch, dst_branch, author=author,
-                         _wap_token=True)
+    itself auditable.
+
+    What gets published is **pinned to what was audited**: the audit stamp
+    is a commit CAS'd against ``report.commit`` (the exact head the
+    expectations ran over) and the merge source is the stamp digest, not
+    the branch name.  A commit landing on the source branch between audit
+    and merge therefore cannot ride through unaudited — the pinned stamp
+    fails cleanly and publish re-runs the audit against the moved head
+    (bounded by ``max_attempts``), which either vouches for the new data
+    or refuses the publication."""
+    for _ in range(max_attempts):
+        report = audit(catalog, io, src_branch, expectations)
+        if not report.passed:
+            failed = sorted(n for n, ok in report.results.items() if not ok)
+            raise ExpectationFailed(
+                f"audit failed on {src_branch}: {failed} "
+                f"(errors: {report.errors})")
+        try:
+            stamp = catalog.commit(
+                src_branch, {},
+                f"audit passed ({len(report.results)} expectations)",
+                author=author,
+                meta={"audit": {"results": report.results,
+                                "commit": report.commit, "ts": clock()}},
+                expected_head=report.commit,
+            )
+        except TransactionConflict:
+            continue  # branch moved since the audit: re-audit the new head
+        # merge the STAMP digest (immutable), never the branch name — a
+        # post-stamp commit on src stays out of this publication
+        return catalog.merge(stamp, dst_branch, author=author,
+                             _wap_token=True)
+    raise ExpectationFailed(
+        f"could not publish {src_branch}: branch kept moving during "
+        f"audit ({max_attempts} attempts)")
 
 
 # ----------------------------------------------------------- common checks

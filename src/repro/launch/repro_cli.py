@@ -13,6 +13,10 @@
                                                cache state (docs/executor.md)
   repro query "SELECT COUNT(*) FROM t" --ref R tiny read-path query
   repro log <ref> / branches / runs            inspect the catalog
+  repro contract add T not_empty no_nans       attach catalog-enforced data
+                                               contracts to a table (see
+                                               docs/catalog.md)
+  repro contract list [--ref R] / drop T       inspect / detach contracts
 
 Multi-host (git-remote semantics over the object store — see
 docs/remote_store.md):
@@ -256,6 +260,29 @@ def main(argv=None):
     sub.add_parser("branches")
     sub.add_parser("runs")
 
+    ct = sub.add_parser("contract",
+                        help="catalog-enforced data contracts: rules the "
+                             "ref update itself checks on every commit/"
+                             "merge/publish touching the table")
+    ct_sub = ct.add_subparsers(dest="contract_cmd", required=True)
+    ct_add = ct_sub.add_parser(
+        "add", help="attach rules to a table (current data is validated "
+                    "first: a contract is never in force over data that "
+                    "fails it)")
+    ct_add.add_argument("table")
+    ct_add.add_argument("rules", nargs="+",
+                        help="rule specs: not_empty | no_nans[:cols] | "
+                             "column_range:col,lo,hi | "
+                             "columns_required:cols")
+    ct_add.add_argument("--branch", default="main")
+    ct_add.add_argument("--author", default="cli")
+    ct_list = ct_sub.add_parser("list")
+    ct_list.add_argument("--ref", default="main")
+    ct_drop = ct_sub.add_parser("drop")
+    ct_drop.add_argument("table")
+    ct_drop.add_argument("--branch", default="main")
+    ct_drop.add_argument("--author", default="cli")
+
     rm = sub.add_parser("remote", help="manage named remotes")
     rm_sub = rm.add_subparsers(dest="remote_cmd", required=True)
     rm_add = rm_sub.add_parser("add")
@@ -390,28 +417,42 @@ def main(argv=None):
     elif args.cmd == "checkout":
         print(lake.catalog.resolve(args.ref))
     elif args.cmd == "run":
+        from repro.core.errors import ContractViolation, TransactionConflict
+
         pipe = _pipeline(args.pipeline, args.seq_len)
         exec_kw = dict(executor=args.executor, lease_ttl=args.lease_ttl,
                        max_attempts=args.max_attempts,
                        wait_timeout=args.wait_timeout)
-        if args.run_id:
-            rep = lake.replay(args.run_id, pipe, branch=args.branch,
-                              author=args.author,
-                              use_cache=not args.no_cache, jobs=args.jobs,
-                              **exec_kw)
-            print(json.dumps({"replayed": args.run_id,
-                              "replay_run_id": rep.replay_run_id,
-                              "branch": rep.branch,
-                              "bit_exact": rep.bit_exact}))
-        else:
-            res = lake.run(pipe, branch=args.branch, author=args.author,
-                           use_cache=not args.no_cache, jobs=args.jobs,
-                           **exec_kw)
-            print(json.dumps({"run_id": res.run_id,
-                              "commit": res.commit[:12],
-                              "outputs": list(res.outputs),
-                              "cache_hits": res.cache_hits,
-                              "cache_misses": res.cache_misses}))
+        try:
+            if args.run_id:
+                rep = lake.replay(args.run_id, pipe, branch=args.branch,
+                                  author=args.author,
+                                  use_cache=not args.no_cache,
+                                  jobs=args.jobs, **exec_kw)
+                print(json.dumps({"replayed": args.run_id,
+                                  "replay_run_id": rep.replay_run_id,
+                                  "branch": rep.branch,
+                                  "bit_exact": rep.bit_exact}))
+            else:
+                res = lake.run(pipe, branch=args.branch, author=args.author,
+                               use_cache=not args.no_cache, jobs=args.jobs,
+                               **exec_kw)
+                out = {"run_id": res.run_id,
+                       "commit": res.commit[:12],
+                       "outputs": list(res.outputs),
+                       "cache_hits": res.cache_hits,
+                       "cache_misses": res.cache_misses}
+                rebases = lake.catalog.txn_stats["rebases"]
+                if rebases:  # concurrent writers absorbed transparently
+                    out["txn_rebases"] = rebases
+                print(json.dumps(out))
+        except ContractViolation as e:
+            raise SystemExit(
+                f"commit rejected by data contract: {e}") from None
+        except TransactionConflict as e:
+            raise SystemExit(
+                f"commit lost to concurrent writers on the same tables: "
+                f"{e} (rerun to retry from the new head)") from None
     elif args.cmd == "status":
         from repro.core.errors import ReproError
 
@@ -473,6 +514,41 @@ def main(argv=None):
     elif args.cmd == "branches":
         for name in sorted(lake.catalog.branches()):
             print(name)
+    elif args.cmd == "contract":
+        from repro.core import parse_rule_spec
+        from repro.core.errors import ContractViolation, ReproError
+
+        # contract administration is an operator action: it may touch a
+        # WAP-protected main directly (the attach itself is still gated
+        # by the new rules against the current data)
+        try:
+            if args.contract_cmd == "add":
+                rules = [parse_rule_spec(s) for s in args.rules]
+                digest = lake.catalog.add_contract(
+                    args.table, rules, branch=args.branch,
+                    author=args.author, _wap_token=True)
+                print(json.dumps({"table": args.table,
+                                  "branch": args.branch,
+                                  "rules": [r.name for r in rules],
+                                  "commit": digest[:12]}))
+            elif args.contract_cmd == "drop":
+                digest = lake.catalog.drop_contract(
+                    args.table, branch=args.branch, author=args.author,
+                    _wap_token=True)
+                print(json.dumps({"dropped": args.table,
+                                  "branch": args.branch,
+                                  "commit": digest[:12]}))
+            else:  # list
+                specs = lake.catalog.contracts(args.ref)
+                print(json.dumps(
+                    {t: [r.name for r in c.rules]
+                     for t, c in sorted(specs.items())}, indent=2))
+        except ContractViolation as e:
+            raise SystemExit(
+                f"refused: {e} (fix the data or adjust the rules)"
+            ) from None
+        except ReproError as e:
+            raise SystemExit(str(e)) from None
     elif args.cmd == "runs":
         for rid in lake.ledger.runs():
             print(rid)

@@ -1,0 +1,213 @@
+"""Data contracts: catalog-enforced expectations (ROADMAP item 4).
+
+WAP expectations are opt-in — a cooperating caller runs them before
+publishing.  Contracts are attached to tables IN the catalog and enforced
+at the ref update itself, so every path that can move a branch head
+(commit, merge fast-forward, merge 3-way, publish) is gated, including
+writers that bypass the write-audit-publish ceremony entirely.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CONTRACTS_TABLE, Catalog, Commit, ContractViolation,
+                        ExpectationFailed, Lake, ObjectStore,
+                        PermissionDenied, ReproError, Rule, TableIO,
+                        parse_rule_spec, publish, rule)
+
+GOOD = {"p": np.linspace(0.0, 1.0, 8).astype(np.float32)}
+NANS = {"p": np.array([0.1, np.nan], np.float32)}
+OUT_OF_RANGE = {"p": np.array([0.5, 1.5], np.float32)}
+
+PROB_RULES = [rule("not_empty"), rule("no_nans"),
+              rule("column_range", column="p", lo=0.0, hi=1.0)]
+
+
+@pytest.fixture()
+def open_lake(tmp_path):
+    """protect_main=False: models an untrusted writer with direct commit
+    access — exactly who contracts must stop."""
+    return Lake(tmp_path / "open", protect_main=False)
+
+
+def _contracted(lake):
+    snap = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("main", {"probs": snap}, "seed", _wap_token=True)
+    lake.catalog.add_contract("probs", PROB_RULES, _wap_token=True)
+    return snap
+
+
+# ------------------------------------------------------------- enforcement
+def test_direct_commit_of_violating_data_rejected(open_lake):
+    """The untrusted-writer path: no WAP, no audit, straight commit —
+    still rejected at the ref update."""
+    lake = open_lake
+    _contracted(lake)
+    head = lake.catalog.head("main")
+    bad = lake.io.write_snapshot(NANS)
+    with pytest.raises(ContractViolation) as ei:
+        lake.catalog.commit("main", {"probs": bad}, "sneaky")
+    assert ei.value.table == "probs"
+    assert any("no_nans" in name for name in ei.value.failures)
+    assert lake.catalog.head("main") == head  # no ref moved
+
+
+def test_contracts_are_inherited_by_branches(lake):
+    _contracted(lake)
+    lake.catalog.create_branch("u.dev", "main", author="u")
+    bad = lake.io.write_snapshot(OUT_OF_RANGE)
+    with pytest.raises(ContractViolation):
+        lake.catalog.commit("u.dev", {"probs": bad}, "bad", author="u")
+    good2 = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("u.dev", {"probs": good2}, "fine", author="u")
+
+
+def test_merge_3way_enforces_dst_contracts(lake):
+    """Bad data committed on a branch that forked BEFORE the contract
+    existed (so its own commits were unguarded) is caught when merged
+    into the contracted destination."""
+    snap = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("main", {"probs": snap}, "seed", _wap_token=True)
+    lake.catalog.create_branch("u.old", "main", author="u")
+    bad = lake.io.write_snapshot(NANS)
+    lake.catalog.commit("u.old", {"probs": bad}, "pre-contract", author="u")
+    lake.catalog.add_contract("probs", PROB_RULES, _wap_token=True)
+    with pytest.raises(ContractViolation):
+        lake.catalog.merge("u.old", "main", _wap_token=True)
+    assert lake.catalog.tables("main")["probs"] == snap
+
+
+def test_merge_ff_enforces_contracts_against_raw_store_writer(open_lake):
+    """A writer with raw store access handcrafts a commit (bypassing
+    Catalog.commit entirely) and points its branch at it.  The merge —
+    even a pure fast-forward — still runs the contracts before main's
+    ref moves: enforcement is a property of the catalog, not of writer
+    cooperation."""
+    lake = open_lake
+    _contracted(lake)
+    head = lake.catalog.head("main")
+    head_tables = lake.catalog.tables("main")
+    bad = lake.io.write_snapshot(NANS)
+    forged = lake.catalog._store_commit(Commit(
+        (head,), {**head_tables, "probs": bad}, "forged", "rogue", 0.0))
+    lake.catalog.store.set_ref("branch=rogue.b", forged)
+    with pytest.raises(ContractViolation):
+        lake.catalog.merge("rogue.b", "main")
+    assert lake.catalog.head("main") == head
+
+
+def test_publish_path_enforces_contracts(lake):
+    """Passing the WAP audit is not enough: publish funnels through
+    merge, where the catalog's contracts still gate the data.
+    ContractViolation subclasses ExpectationFailed, so publish callers
+    handle both uniformly."""
+    snap = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("main", {"probs": snap}, "seed", _wap_token=True)
+    lake.catalog.create_branch("u.dev", "main", author="u")
+    bad = lake.io.write_snapshot(NANS)
+    lake.catalog.commit("u.dev", {"probs": bad}, "pre-contract", author="u")
+    lake.catalog.add_contract("probs", PROB_RULES, _wap_token=True)
+    with pytest.raises(ContractViolation) as ei:
+        publish(lake.catalog, lake.io, "u.dev", [], author="u")
+    assert isinstance(ei.value, ExpectationFailed)
+    assert lake.catalog.tables("main")["probs"] == snap
+
+
+def test_add_contract_over_violating_data_rejected(lake):
+    """Attach-time validation: a contract can never be in force over
+    data that already fails it."""
+    bad = lake.io.write_snapshot(NANS)
+    lake.catalog.commit("main", {"probs": bad}, "legacy", _wap_token=True)
+    with pytest.raises(ContractViolation):
+        lake.catalog.add_contract("probs", PROB_RULES, _wap_token=True)
+    assert lake.catalog.contracts("main") == {}
+
+
+def test_drop_contract_releases_the_gate(open_lake):
+    lake = open_lake
+    _contracted(lake)
+    lake.catalog.drop_contract("probs")
+    bad = lake.io.write_snapshot(NANS)
+    lake.catalog.commit("main", {"probs": bad}, "now allowed")
+    with pytest.raises(ReproError):
+        lake.catalog.drop_contract("probs")  # nothing left to drop
+
+
+def test_contracts_are_versioned_per_branch(lake):
+    """A contract added on a branch gates that branch only — and rides a
+    merge into main like any other table change."""
+    snap = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("main", {"probs": snap}, "seed", _wap_token=True)
+    lake.catalog.create_branch("u.dev", "main", author="u")
+    lake.catalog.add_contract("probs", PROB_RULES, branch="u.dev",
+                              author="u")
+    assert "probs" in lake.catalog.contracts("u.dev")
+    assert lake.catalog.contracts("main") == {}
+    lake.catalog.merge("u.dev", "main", _wap_token=True)
+    assert "probs" in lake.catalog.contracts("main")
+    bad = lake.io.write_snapshot(NANS)
+    with pytest.raises(ContractViolation):
+        lake.catalog.commit("main", {"probs": bad}, "bad", _wap_token=True)
+
+
+def test_unknown_rule_kind_fails_closed(lake):
+    """A rule kind this host doesn't have registered rejects the commit —
+    enforcement never silently waves data through."""
+    snap = lake.io.write_snapshot(GOOD)
+    lake.catalog.commit("main", {"probs": snap}, "seed", _wap_token=True)
+    with pytest.raises(ContractViolation) as ei:
+        # Rule() directly: rule() would refuse the unknown kind eagerly
+        lake.catalog.add_contract("probs", [Rule("from_the_future", {})],
+                                  _wap_token=True)
+    assert "unknown rule kind" in str(ei.value)
+
+
+def test_cannot_contract_the_contracts_table(lake):
+    with pytest.raises(PermissionDenied):
+        lake.catalog.add_contract(CONTRACTS_TABLE, [rule("not_empty")],
+                                  _wap_token=True)
+
+
+def test_contracts_table_hidden_from_normal_writes(lake):
+    """The reserved entry is catalog metadata: direct writes are refused
+    (only add_contract/drop_contract may move it)."""
+    with pytest.raises(PermissionDenied):
+        lake.catalog.commit("main", {CONTRACTS_TABLE: "deadbeef"}, "sneak",
+                            _wap_token=True)
+
+
+def test_unchanged_tables_are_not_revalidated(lake, monkeypatch):
+    """Enforcement only reads tables whose snapshot or contract moved —
+    a commit to table B never pays a data read for contracted table A."""
+    _contracted(lake)
+    calls = []
+    real_read = lake.catalog._table_io().read
+
+    def counting_read(digest, columns=None):
+        calls.append(digest)
+        return real_read(digest, columns)
+
+    monkeypatch.setattr(lake.catalog._table_io(), "read", counting_read)
+    other = lake.io.write_snapshot({"v": np.ones(3, np.float32)})
+    lake.catalog.commit("main", {"other": other}, "disjoint",
+                        _wap_token=True)
+    assert calls == []
+
+
+# ------------------------------------------------------------ CLI rule specs
+def test_parse_rule_spec_round_trip():
+    assert parse_rule_spec("not_empty") == rule("not_empty")
+    assert parse_rule_spec("no_nans") == rule("no_nans")
+    assert parse_rule_spec("no_nans:p,q") == rule("no_nans",
+                                                  columns=["p", "q"])
+    assert parse_rule_spec("column_range:p,0,1") == rule(
+        "column_range", column="p", lo=0.0, hi=1.0)
+    assert parse_rule_spec("columns_required:a,b") == rule(
+        "columns_required", columns=["a", "b"])
+
+
+@pytest.mark.parametrize("spec", ["bogus", "column_range:p,0",
+                                  "columns_required"])
+def test_parse_rule_spec_rejects_malformed(spec):
+    with pytest.raises(ReproError):
+        parse_rule_spec(spec)

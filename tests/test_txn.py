@@ -1,0 +1,340 @@
+"""Optimistic table-level transactions (ROADMAP item 4).
+
+The catalog's ref CAS protects the *ref*, not the *tables*: before this
+suite's subject existed, two writers committing to different tables on the
+same branch collided at the ref level and one had to retry from scratch.
+The transaction layer rebases a commit whose declared read/write table set
+is untouched by the concurrent head movement; only genuinely overlapping
+snapshots raise.
+
+Interleavings are scheduled with tests/fault_schedule.py (same instrument
+as the gc-vs-push races), not hoped for.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from fault_schedule import FaultyStore, Schedule
+from repro.core import (CONTRACTS_TABLE, Catalog, ExpectationFailed,
+                        ObjectStore, PermissionDenied, RefConflict,
+                        ReproError, TableIO, TransactionConflict, no_nans,
+                        publish)
+
+
+def _snap(lake, value=0.0, n=4):
+    return lake.io.write_snapshot({"v": np.full(n, value, np.float32)})
+
+
+def _faulty_lake(tmp_path, schedule):
+    """A second catalog handle over the same lake directory whose store ops
+    fire ``schedule`` sync points (the handle under test)."""
+    store = FaultyStore(ObjectStore(tmp_path / "lake"), schedule)
+    return Catalog(store, protect_main=False), TableIO(store)
+
+
+def _wait_any(gates, timeout=30.0):
+    """Block until one of ``gates`` is reached; return it.  Lets a test
+    freeze a thread at its ref-write sync point without hard-coding which
+    primitive (``set_ref`` vs ``cas_ref``) the implementation uses."""
+    waited = 0.0
+    while waited < timeout:
+        for g in gates:
+            if g.reached.wait(0.02):
+                return g
+            waited += 0.02
+    raise AssertionError("no gate reached")
+
+
+# ----------------------------------------------------- failing-first bugfixes
+def test_publish_pins_audited_commit(lake, monkeypatch):
+    """wap.publish TOCTOU: a commit landing on the source branch between
+    the audit and the merge must NOT be published to protected main.
+
+    Pre-fix, the audit ran against ``report.commit`` but the merge re-read
+    the src branch head — the rogue (unaudited, NaN-ridden) snapshot
+    sailed through to main."""
+    lake.catalog.create_branch("r.dev", "main", author="r")
+    good = lake.io.write_snapshot({"x": np.ones(5, np.float32)})
+    lake.catalog.commit("r.dev", {"training_data": good}, "good", author="r")
+    bad = lake.io.write_snapshot(
+        {"x": np.array([1.0, np.nan], np.float32)})
+
+    real_merge = lake.catalog.merge
+
+    def merge_after_rogue_commit(src_ref, dst_branch, **kw):
+        # the interleaving: a concurrent writer lands unaudited data on the
+        # source branch after the audit passed, before the merge runs
+        lake.catalog.commit("r.dev", {"training_data": bad}, "rogue",
+                            author="r")
+        return real_merge(src_ref, dst_branch, **kw)
+
+    monkeypatch.setattr(lake.catalog, "merge", merge_after_rogue_commit)
+    publish(lake.catalog, lake.io, "r.dev", [no_nans("training_data")],
+            author="r")
+    assert lake.catalog.tables("main")["training_data"] == good  # not `bad`
+
+
+def test_publish_reaudits_when_branch_moves_before_stamp(lake, tmp_path):
+    """The other half of the publish window: the src branch moves between
+    the audit and the audit-stamp commit.  The stamp is CAS-pinned to the
+    audited commit, so the movement forces a re-audit — which now sees the
+    NaNs and refuses to publish (pre-fix: a raw RefConflict leaked, or
+    worse, the stamp landed on the moved head)."""
+    lake.catalog.create_branch("r.dev", "main", author="r")
+    good = lake.io.write_snapshot({"x": np.ones(5, np.float32)})
+    lake.catalog.commit("r.dev", {"training_data": good}, "good", author="r")
+    bad = lake.io.write_snapshot(
+        {"x": np.array([1.0, np.nan], np.float32)})
+
+    sched = Schedule()
+    gates = [sched.gate("cas_ref:before"), sched.gate("set_ref:before")]
+    cat, io = _faulty_lake(tmp_path, sched)
+
+    result = {}
+
+    def do_publish():
+        try:
+            result["head"] = publish(cat, io, "r.dev",
+                                     [no_nans("training_data")], author="r")
+        except Exception as e:  # noqa: BLE001 - the assertion inspects it
+            result["error"] = e
+
+    t = threading.Thread(target=do_publish)
+    t.start()
+    _wait_any(gates)  # publisher frozen at the audit-stamp ref write
+    lake.catalog.commit("r.dev", {"training_data": bad}, "rogue", author="r")
+    for g in gates:
+        g.open()
+    t.join(30)
+    assert not t.is_alive()
+    # the re-audit saw the rogue NaNs: publication refused, main untouched
+    assert isinstance(result.get("error"), ExpectationFailed), result
+    assert "training_data" not in lake.catalog.tables("main")
+
+
+def test_create_branch_race_single_winner(lake, tmp_path):
+    """Catalog.create_branch check-then-set race: two concurrent creates of
+    the same name must produce exactly one winner, and the winner's ref
+    must survive (pre-fix the loser silently overwrote it)."""
+    c1 = lake.catalog.commit("main", {"t": _snap(lake, 1)}, "c1",
+                             _wap_token=True)
+    c2 = lake.catalog.commit("main", {"t": _snap(lake, 2)}, "c2",
+                             _wap_token=True)
+
+    sched = Schedule()
+    gates = [sched.gate("cas_ref:before"), sched.gate("set_ref:before")]
+    cat, _io = _faulty_lake(tmp_path, sched)
+
+    result = {}
+
+    def create_slow():
+        try:
+            result["digest"] = cat.create_branch("u.same", c1, author="u")
+        except ReproError as e:
+            result["error"] = e
+
+    t = threading.Thread(target=create_slow)
+    t.start()
+    _wait_any(gates)  # slow creator frozen between its check and its write
+    winner = lake.catalog.create_branch("u.same", c2, author="u")
+    for g in gates:
+        g.open()
+    t.join(30)
+    assert not t.is_alive()
+    assert winner == c2
+    assert "error" in result, "both concurrent create_branch calls succeeded"
+    assert lake.catalog.head("u.same") == c2  # winner's ref intact
+
+
+def test_merge_ff_rebases_over_disjoint_concurrent_commit(lake, tmp_path):
+    """Catalog.merge fast-forward race: a concurrent commit touching a
+    DIFFERENT table on dst mid-merge must not abort the merge (pre-fix a
+    raw RefConflict leaked to the caller)."""
+    sa = _snap(lake, 1)
+    lake.catalog.create_branch("dev.x", "main", author="dev")
+    lake.catalog.commit("dev.x", {"table_a": sa}, "a", author="dev")
+
+    sched = Schedule()
+    gate = sched.gate("cas_ref:before")
+    cat, _io = _faulty_lake(tmp_path, sched)
+
+    result = {}
+
+    def do_merge():
+        try:
+            result["merged"] = cat.merge("dev.x", "main", _wap_token=True)
+        except ReproError as e:
+            result["error"] = e
+
+    t = threading.Thread(target=do_merge)
+    t.start()
+    gate.wait_reached()  # merge frozen at its ref CAS
+    sb = _snap(lake, 2)
+    lake.catalog.commit("main", {"table_b": sb}, "concurrent", _wap_token=True)
+    gate.open()
+    t.join(30)
+    assert not t.is_alive()
+    assert "error" not in result, f"merge aborted: {result.get('error')!r}"
+    tables = lake.catalog.tables("main")
+    assert tables.get("table_a") == sa and tables.get("table_b") == sb
+
+# --------------------------------------------- tentpole: rebase-on-CAS-miss
+def test_commit_rebases_over_disjoint_concurrent_commit(lake):
+    """A stale-base commit to table_a lands cleanly over a concurrent
+    commit to table_b: the declared sets don't overlap, so the catalog
+    rebases instead of conflicting."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+    base = lake.catalog.head("u.b")
+    sa, sb = _snap(lake, 1), _snap(lake, 2)
+    lake.catalog.commit("u.b", {"table_b": sb}, "b", author="u")
+    lake.catalog.commit("u.b", {"table_a": sa}, "a", author="u", base=base)
+    tables = lake.catalog.tables("u.b")
+    assert tables["table_a"] == sa and tables["table_b"] == sb
+
+
+def test_concurrent_disjoint_writers_both_land(lake, tmp_path):
+    """The CAS-miss path proper: writer A frozen at its ref CAS while
+    writer B lands a different table.  Pre-fix A's caller saw a raw
+    RefConflict; now the rebase absorbs it (and is counted)."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+    sched = Schedule()
+    gate = sched.gate("cas_ref:before")
+    cat, io = _faulty_lake(tmp_path, sched)
+
+    sa = lake.io.write_snapshot({"v": np.full(4, 1.0, np.float32)})
+    result = {}
+
+    def writer_a():
+        try:
+            result["digest"] = cat.commit("u.b", {"table_a": sa}, "a",
+                                          author="u")
+        except ReproError as e:
+            result["error"] = e
+
+    t = threading.Thread(target=writer_a)
+    t.start()
+    gate.wait_reached()  # A frozen between building its commit and the CAS
+    sb = _snap(lake, 2)
+    lake.catalog.commit("u.b", {"table_b": sb}, "b", author="u")
+    gate.open()
+    t.join(30)
+    assert not t.is_alive()
+    assert "error" not in result, f"disjoint writer aborted: {result}"
+    tables = lake.catalog.tables("u.b")
+    assert tables["table_a"] == sa and tables["table_b"] == sb
+    assert cat.txn_stats["rebases"] == 1
+    assert cat.txn_stats["conflicts"] == 0
+
+
+def test_overlapping_writers_conflict(lake):
+    """Two writers to the SAME table from the same base: the loser gets
+    TransactionConflict naming exactly the overlapping table."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+    lake.catalog.commit("u.b", {"t": _snap(lake, 0)}, "init", author="u")
+    base = lake.catalog.head("u.b")
+    lake.catalog.commit("u.b", {"t": _snap(lake, 1)}, "w1", author="u")
+    with pytest.raises(TransactionConflict) as ei:
+        lake.catalog.commit("u.b", {"t": _snap(lake, 2)}, "w2", author="u",
+                            base=base)
+    assert ei.value.tables == ["t"]
+    assert not ei.value.exhausted and not ei.value.pinned
+    # TransactionConflict IS a MergeConflict: existing handlers keep working
+    from repro.core import MergeConflict
+    assert isinstance(ei.value, MergeConflict)
+
+
+def test_declared_read_set_conflicts(lake):
+    """A commit whose READ table moved since its base conflicts too —
+    writing derived data computed from stale inputs is a lost update in
+    disguise."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+    lake.catalog.commit("u.b", {"src": _snap(lake, 0)}, "init", author="u")
+    base = lake.catalog.head("u.b")
+    lake.catalog.commit("u.b", {"src": _snap(lake, 9)}, "mutate", author="u")
+    with pytest.raises(TransactionConflict) as ei:
+        lake.catalog.commit("u.b", {"derived": _snap(lake, 1)}, "derive",
+                            author="u", base=base, read_tables=["src"])
+    assert ei.value.tables == ["src"]
+
+
+def test_pinned_commit_refuses_any_movement(lake):
+    """expected_head= pins the commit: exactly one attempt, movement of
+    ANY kind (even a disjoint table) raises with pinned=True."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+    pinned_to = lake.catalog.commit("u.b", {"t": _snap(lake, 0)}, "init",
+                                    author="u")
+    lake.catalog.commit("u.b", {"other": _snap(lake, 1)}, "move", author="u")
+    with pytest.raises(TransactionConflict) as ei:
+        lake.catalog.commit("u.b", {"t": _snap(lake, 2)}, "stale",
+                            author="u", expected_head=pinned_to)
+    assert ei.value.pinned and ei.value.attempts == 1
+
+
+def test_rebase_attempts_are_bounded(lake, monkeypatch):
+    """Sustained contention exhausts the bounded rebase loop loudly."""
+    lake.catalog.create_branch("u.b", "main", author="u")
+
+    def always_contended(name, expected, new):
+        raise RefConflict(f"contended: {name}")
+
+    monkeypatch.setattr(lake.catalog.store, "cas_ref", always_contended)
+    with pytest.raises(TransactionConflict) as ei:
+        lake.catalog.commit("u.b", {"t": _snap(lake, 1)}, "w", author="u",
+                            max_attempts=3)
+    assert ei.value.exhausted and ei.value.attempts == 3
+    assert ei.value.tables == []  # nothing semantically overlapped
+
+
+def test_reserved_contracts_table_rejected(lake):
+    """Only add_contract/drop_contract may move the contracts entry."""
+    with pytest.raises(PermissionDenied):
+        lake.catalog.commit("main", {CONTRACTS_TABLE: "deadbeef"}, "sneak",
+                            _wap_token=True)
+
+
+# ------------------------------------------------- tentpole: Transaction API
+def test_transaction_read_write_rebases(seeded_lake):
+    lake = seeded_lake
+    lake.catalog.create_branch("u.b", "main", author="u")
+    txn = lake.transaction("u.b", author="u")
+    cols = txn.read("source_table")
+    assert txn.reads == {"source_table"}
+    txn.write("derived", {"x": cols["c1"] * 2.0})
+    # a concurrent disjoint commit lands mid-transaction
+    other = lake.io.write_snapshot({"v": np.ones(3, np.float32)})
+    lake.catalog.commit("u.b", {"unrelated": other}, "concurrent",
+                        author="u")
+    txn.commit("derived from source")
+    tables = lake.catalog.tables("u.b")
+    assert "derived" in tables and tables["unrelated"] == other
+    np.testing.assert_allclose(
+        lake.read_table("u.b", "derived")["x"], cols["c1"] * 2.0)
+
+
+def test_transaction_conflict_on_read_table_movement(seeded_lake):
+    lake = seeded_lake
+    lake.catalog.create_branch("u.b", "main", author="u")
+    txn = lake.transaction("u.b", author="u")
+    cols = txn.read("source_table")
+    txn.write("derived", {"x": cols["c1"] * 2.0})
+    # the INPUT moves under the transaction: derived would be stale
+    moved = lake.io.write_snapshot({"c1": np.zeros(3, np.float32)})
+    lake.catalog.commit("u.b", {"source_table": moved}, "mutate input",
+                        author="u")
+    with pytest.raises(TransactionConflict) as ei:
+        txn.commit("derived from stale source")
+    assert ei.value.tables == ["source_table"]
+
+
+def test_transaction_io_handle_records_reads(seeded_lake):
+    """Read-set capture at the TableIO layer: code holding only the
+    transaction's io handle still contributes to the declared set."""
+    lake = seeded_lake
+    lake.catalog.create_branch("u.b", "main", author="u")
+    txn = lake.transaction("u.b", author="u")
+    snap = txn.snapshot_of("source_table")
+    txn.reads.clear()  # snapshot_of recorded it; prove io.read does too
+    txn.io.read(snap)
+    assert txn.reads == {"source_table"}
