@@ -9,6 +9,8 @@ plus the run ledger (immutable run_ids, replay) and write-audit-publish.
 
 from .catalog import (Catalog, Commit, remote_tracking_ref,
                       remote_tracking_tag_ref)
+from .compact import (CompactionError, CompactionReport, compact_snapshot,
+                      compact_table)
 from .contracts import (CONTRACTS_TABLE, Contract, Rule, parse_rule_spec,
                         register_rule, rule)
 from .errors import (AmbiguousRefUpdate, CodecUnavailable, CodeDrift,
@@ -35,9 +37,10 @@ from .store import (GC_GENERATION_REF, ObjectStore, StoreBackend,
                     sha256_hex)
 from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
                    pull_refs, push, push_refs)
-from .table import ManifestEntry, Snapshot, TableIO
+from .table import (ManifestEntry, ManifestFile, Snapshot, TableIO,
+                    zone_may_match)
 from .tensorfile import ColumnSpec, Schema
-from .txn import Transaction, changed_tables
+from .txn import Transaction, changed_tables, rebase_append
 from .wap import (AuditReport, Expectation, audit, column_range, expectation,
                   no_nans, not_empty, publish)
 
@@ -75,8 +78,9 @@ class Lake:
                             message or f"write {name}", author=author)
         return snap
 
-    def read_table(self, ref: str, name: str, columns=None):
-        return self.io.read(self.catalog.snapshot_of(ref, name), columns)
+    def read_table(self, ref: str, name: str, columns=None, where=None):
+        return self.io.read(self.catalog.snapshot_of(ref, name), columns,
+                            where=where)
 
     def run(self, pipeline: Pipeline, *, branch: str, author="system",
             config=None, seed=None, mesh=None, use_cache=True,
@@ -117,12 +121,15 @@ __all__ = [
     "commit_closure", "remote_tracking_ref", "remote_tracking_tag_ref",
     "decode_frame", "encode_frame", "frame_raw",
     "Snapshot",
-    "ManifestEntry", "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
+    "ManifestEntry", "ManifestFile", "zone_may_match",
+    "CompactionReport", "CompactionError", "compact_snapshot",
+    "compact_table",
+    "Schema", "ColumnSpec", "Pipeline", "Node", "Model",
     "model", "sql_model", "execute", "run_pipeline", "RunResult", "RunLedger",
     "RunCache", "node_key", "ExecutionReport", "NodeStat", "is_cache_safe",
     "CacheDemotionWarning", "Lease", "LeaseBoard", "WorkerService",
     "run_status", "NodeExecutionError",
-    "Transaction", "changed_tables",
+    "Transaction", "changed_tables", "rebase_append",
     "Contract", "Rule", "rule", "register_rule", "parse_rule_spec",
     "CONTRACTS_TABLE",
     "ReplayReport", "Expectation", "expectation", "audit", "publish",

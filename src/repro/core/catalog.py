@@ -113,8 +113,11 @@ class Catalog:
         #: absorbed internally — before the transaction layer each one was
         #: a caller-visible conflict and a full retry (bench_branching's
         #: multi-writer leg reports these)
-        self.txn_stats = {"commits": 0, "merges": 0, "rebases": 0,
-                          "conflicts": 0, "contract_rejections": 0}
+        #: ``append_merges`` counts same-table append/append races the
+        #: manifest-diff rebase absorbed (two writers extending one table)
+        self.txn_stats = {"commits": 0, "merges": 0, "append_merges": 0,
+                          "rebases": 0, "conflicts": 0,
+                          "contract_rejections": 0}
         try:
             self.store.get_ref(_BRANCH_PREFIX + "main")
         except RefNotFound:
@@ -307,16 +310,32 @@ class Catalog:
         while True:
             attempts += 1
             head_commit = self._load_commit(head)
+            updates = dict(table_updates)
             if head != base:
                 overlap = changed_tables(base_tables, head_commit.tables,
                                          declared)
+                if overlap and expected_head is None:
+                    # Manifest-diff escape hatch: when every overlapping
+                    # table is an append/append race (both sides extended
+                    # the base snapshot's manifest list verbatim), the
+                    # file sets are disjoint by construction and the
+                    # appends merge — same-table concurrent ingest lands
+                    # with no caller-visible conflict.  Anything else
+                    # (overwrite, compact, delete, declared read) stays a
+                    # TransactionConflict.  Never under expected_head=:
+                    # WAP publish pins byte-identical state.
+                    merged = self._merge_table_appends(
+                        overlap, updates, base_tables, head_commit.tables)
+                    if merged is not None:
+                        updates.update(merged)
+                        overlap = []
                 if overlap:
                     self._bump_stat("conflicts")
                     raise TransactionConflict(branch, overlap,
                                               attempts=attempts, base=base,
                                               pinned=expected_head is not None)
             tables = dict(head_commit.tables)
-            for name, snap in table_updates.items():
+            for name, snap in updates.items():
                 if snap is None:
                     tables.pop(name, None)
                 else:
@@ -343,6 +362,36 @@ class Catalog:
                 continue
             self._bump_stat("commits")
             return digest
+
+    def _merge_table_appends(
+        self,
+        overlap: Sequence[str],
+        updates: Mapping[str, Optional[str]],
+        base_tables: Mapping[str, str],
+        head_tables: Mapping[str, str],
+    ) -> Optional[Dict[str, str]]:
+        """Try to absorb an overlapping head movement as append merges.
+
+        Returns ``{table: merged snapshot digest}`` when EVERY overlapping
+        table is a same-table append/append race resolvable by
+        :func:`~.txn.rebase_append`; None if any single one is not — the
+        merge is all-or-nothing so a commit never lands half its declared
+        set rebased one way and half another."""
+        from .txn import rebase_append
+
+        io = self._table_io()
+        merged: Dict[str, str] = {}
+        for table in overlap:
+            ours = updates.get(table)
+            if table not in updates or ours is None:
+                return None  # declared read or delete: genuine conflict
+            rebased = rebase_append(io, base_tables.get(table),
+                                    head_tables.get(table), ours)
+            if rebased is None:
+                return None
+            merged[table] = rebased
+        self._bump_stat("append_merges", len(merged))
+        return merged
 
     # ----------------------------------------------------------------- reads
     def tables(self, ref: str) -> Dict[str, str]:

@@ -1,0 +1,194 @@
+"""Background compaction for high-churn tables (ROADMAP item 5).
+
+Micro-batch ingestion (``TableIO.append_stream``) buys flat ingest cost by
+landing every batch as its own manifest of small tensorfile fragments —
+and pays for it on the read side: scans touch one blob per fragment.
+Compaction is the other half of the bargain: rewrite the small fragments
+into ``target_rows_per_file``-sized files as a NEW snapshot — the old one
+stays immutable and time-travelable until snapshot expiry (the PR-5 GC
+grace window) collects it.
+
+The refactor's invariant, enforced at runtime, is **provable
+losslessness**: a compacted snapshot's :meth:`~.table.TableIO.logical_digest`
+— schema + per-column row bytes in row order, independent of file
+boundaries — must equal the source's exactly, or :func:`compact_snapshot`
+raises and nothing is published.  Entries already at or above the target
+size are reused *verbatim* (same blob digest — zero data read or written
+for them), so steady-state compaction cost is proportional to the small
+tail, not the table.
+
+:func:`compact_table` runs the snapshot rewrite inside an optimistic
+transaction (``core/txn.py``).  Ingestion keeps winning under contention:
+a concurrent append moves the table, the compactor's commit conflicts
+(an append/compact race is NOT append/append, so the manifest-diff merge
+correctly refuses it), and the compactor retries from the new head —
+never the other way around.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from .errors import ReproError, TransactionConflict
+from .table import ManifestEntry, Snapshot, TableIO, inline_manifest
+from . import tensorfile
+
+
+class CompactionError(ReproError):
+    """Compaction produced (or would publish) different logical contents —
+    the losslessness proof failed.  Nothing was published."""
+
+
+@dataclass(frozen=True)
+class CompactionReport:
+    table: Optional[str]  # None for bare compact_snapshot runs
+    old_snapshot: str
+    new_snapshot: str
+    files_before: int
+    files_after: int
+    rows: int
+    #: bytes of fragment data decoded + re-encoded; right-sized files are
+    #: reused verbatim and cost zero here, so write amplification =
+    #: bytes_written / ingested bytes stays bounded by the small tail
+    bytes_read: int
+    bytes_written: int
+    logical_digest: str
+
+    def summary(self) -> str:
+        name = f"{self.table}: " if self.table else ""
+        return (f"compact {name}{self.files_before} -> {self.files_after} "
+                f"files, {self.rows} rows, rewrote {self.bytes_written} "
+                f"bytes (digest {self.logical_digest[:12]} verified)")
+
+
+def compact_snapshot(io: TableIO, digest: str, *,
+                     target_rows_per_file: Optional[int] = None,
+                     keep_history: bool = True) -> CompactionReport:
+    """Rewrite ``digest``'s small fragments into target-sized files as a
+    new snapshot; returns a report carrying the new digest.
+
+    Row order is preserved exactly (it is part of the logical contents):
+    entries are walked in scan order, runs of under-sized fragments are
+    buffered and re-chunked, and any entry already holding >=
+    ``target_rows_per_file`` rows is carried over by digest.  With
+    ``keep_history`` the new snapshot keeps ``digest`` as parent (op
+    ``"compact"`` in the lineage); otherwise it starts a fresh chain and
+    the old history becomes GC-collectable once nothing references it."""
+    target = target_rows_per_file or io.target_rows_per_file
+    snap = io.load_snapshot(digest)
+    before_digest = io.logical_digest(digest)
+
+    entries: List[ManifestEntry] = []
+    buffered: List[dict] = []
+    buffered_rows = 0
+    bytes_read = 0
+    bytes_written = 0
+
+    def flush(final: bool) -> None:
+        """Re-chunk the buffered fragment run into target-sized files.
+        Mid-stream, hold back a partial tail chunk — the next fragment may
+        top it up; at the end everything goes out."""
+        nonlocal buffered, buffered_rows, bytes_written
+        if not buffered:
+            return
+        if not final and buffered_rows < target:
+            return
+        cols = tensorfile.concat(buffered)
+        n = buffered_rows
+        emit_until = n if final else (n // target) * target
+        for start in range(0, emit_until, target):
+            stop = min(start + target, emit_until)
+            blob, meta = tensorfile.encode(
+                {k: v[start:stop] for k, v in cols.items()})
+            bytes_written += meta["nbytes"]
+            entries.append(ManifestEntry(io.store.put(blob), meta["nrows"],
+                                         meta["nbytes"], meta["stats"]))
+        if emit_until < n:
+            buffered = [{k: v[emit_until:] for k, v in cols.items()}]
+            buffered_rows = n - emit_until
+        else:
+            buffered = []
+            buffered_rows = 0
+
+    files_before = 0
+    for mf in snap.manifests:
+        for entry in io.manifest_entries(mf):
+            files_before += 1
+            if entry.nrows >= target and not buffered:
+                # right-sized and on a clean boundary: reuse verbatim —
+                # no decode, no re-encode, no new blob
+                entries.append(entry)
+                continue
+            buffered.append(tensorfile.decode(io.store.get(entry.digest)))
+            bytes_read += entry.nbytes
+            buffered_rows += entry.nrows
+            flush(final=False)
+    flush(final=True)
+
+    new_snap = Snapshot(
+        schema=snap.schema,
+        manifests=(inline_manifest(tuple(entries)),),
+        parent=digest if keep_history else None,
+        op="compact",
+        seq=snap.seq + 1,
+    )
+    new_digest = io.store_snapshot(new_snap)
+    after_digest = io.logical_digest(new_digest)
+    if after_digest != before_digest:
+        raise CompactionError(
+            f"compaction of {digest[:12]} changed logical contents "
+            f"({before_digest[:12]} -> {after_digest[:12]}); refusing to "
+            "publish")
+    return CompactionReport(
+        table=None,
+        old_snapshot=digest,
+        new_snapshot=new_digest,
+        files_before=files_before,
+        files_after=len(entries),
+        rows=snap.nrows,
+        bytes_read=bytes_read,
+        bytes_written=bytes_written,
+        logical_digest=after_digest,
+    )
+
+
+def compact_table(catalog, table: str, *, branch: str = "main",
+                  author: str = "compactor",
+                  target_rows_per_file: Optional[int] = None,
+                  keep_history: bool = True,
+                  max_attempts: int = 4,
+                  _wap_token: bool = False) -> CompactionReport:
+    """Compact ``table`` on ``branch`` through a transaction.
+
+    Each attempt compacts the CURRENT head snapshot; if ingestion lands
+    mid-compaction the commit conflicts (append/compact is a genuine
+    conflict by design) and the compactor retries against the new head —
+    streaming writers never see the compactor, only the compactor yields.
+    Raises :class:`~.errors.TransactionConflict` after ``max_attempts``
+    losing races (call again later — churn that hot means the table is
+    being rewritten anyway)."""
+    last: Optional[TransactionConflict] = None
+    for _ in range(max_attempts):
+        txn = catalog.transaction(branch, author=author)
+        report = compact_snapshot(
+            txn.io, txn.snapshot_of(table),
+            target_rows_per_file=target_rows_per_file,
+            keep_history=keep_history)
+        txn.write_snapshot(table, report.new_snapshot)
+        try:
+            txn.commit(f"compact {table}: {report.files_before} -> "
+                       f"{report.files_after} files",
+                       _wap_token=_wap_token)
+        except TransactionConflict as e:
+            last = e  # ingestion won the race: retry from the new head
+            continue
+        return CompactionReport(table=table, old_snapshot=report.old_snapshot,
+                                new_snapshot=report.new_snapshot,
+                                files_before=report.files_before,
+                                files_after=report.files_after,
+                                rows=report.rows, bytes_read=report.bytes_read,
+                                bytes_written=report.bytes_written,
+                                logical_digest=report.logical_digest)
+    assert last is not None
+    raise last

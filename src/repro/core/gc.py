@@ -127,8 +127,26 @@ def _mark_snapshot(store: StoreBackend, digest: str, live: Set[str]):
             return
         live.add(digest)
         snap = _unpack(store.get(digest))
-        for entry in snap.get("manifest", []):
-            live.add(entry[0])  # tensorfile digest
+        mlist_digest = snap.get("manifest_list")
+        if mlist_digest is not None:
+            # v1 hierarchy: snapshot -> manifest-list -> manifests -> files.
+            # Manifests dedup across snapshots (an append reuses its
+            # parent's verbatim), so the `in live` check skips whole
+            # subtrees already marked via another snapshot.
+            if mlist_digest not in live and store.has(mlist_digest):
+                live.add(mlist_digest)
+                mlist = _unpack(store.get(mlist_digest))
+                for row in mlist.get("manifests", []):
+                    m_digest = row[0]
+                    if m_digest in live or not store.has(m_digest):
+                        continue
+                    live.add(m_digest)
+                    manifest = _unpack(store.get(m_digest))
+                    for entry in manifest.get("entries", []):
+                        live.add(entry[0])  # tensorfile digest
+        else:
+            for entry in snap.get("manifest", []):  # legacy v0: inline
+                live.add(entry[0])  # tensorfile digest
         digest = snap.get("parent")
 
 

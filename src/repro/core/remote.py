@@ -91,15 +91,46 @@ class RemoteServer:
 
     def __init__(self, store: StoreBackend):
         self.store = store
-        # pending server-side GC marks: sweep token -> live digest set,
-        # stashed by gc_mark for the gc_sweep that follows.  Real marks
-        # key on the (freshly bumped, so unique) generation; dry-run
-        # marks key on a nonce so a read-only dry run can never clobber
-        # or consume a pending real mark.  Bounded to the 4 most recent
-        # so a crashed GC client cannot leak unbounded live sets.
+        # Pending server-side GC marks.  REAL marks (a generation bump
+        # will follow with a sweep) are persisted in the served store
+        # itself — mark blob in the object keyspace, ``gc/mark/<token>``
+        # ref pointing at it — so a server restart between gc_mark and
+        # gc_sweep no longer aborts the collection (any server instance
+        # over the same store can finish it).  Bounded to the
+        # ``_GC_MARK_KEEP`` most recent so a crashed GC client cannot
+        # leak unbounded live sets.  DRY-RUN marks stay process-local:
+        # a dry run must not write anything, so its token only has to
+        # outlive the immediate dry sweep that consumes it.
         self._gc_marks: Dict[str, set] = {}
         self._gc_nonce = 0
         self._gc_lock = threading.Lock()
+
+    _GC_MARK_REF_PREFIX = "gc/mark/"
+    _GC_MARK_KEEP = 4
+
+    # ---------------------------------------------- persistent mark blobs
+    def _pending_marks(self) -> List[Tuple[str, str]]:
+        """(token, mark blob digest) of every persisted, unconsumed mark."""
+        out = []
+        for ref in self.store.iter_refs(self._GC_MARK_REF_PREFIX):
+            try:
+                out.append((ref[len(self._GC_MARK_REF_PREFIX):],
+                            self.store.get_ref(ref)))
+            except RefNotFound:  # consumed by a concurrent sweep
+                continue
+        return out
+
+    def _drop_mark(self, token: str, digest: Optional[str]) -> None:
+        """Consume a persisted mark: ref first (the consumption point),
+        then the blob unless another pending mark shares it (identical
+        live sets content-address to the same blob)."""
+        try:
+            self.store.delete_ref(self._GC_MARK_REF_PREFIX + token)
+        except RefNotFound:
+            pass
+        if digest is not None and all(d != digest
+                                      for _t, d in self._pending_marks()):
+            self.store.delete_object(digest)
 
     # Each op returns a plain dict; errors are returned (not raised) so the
     # transport layer stays exception-free and HTTP responses stay 200.
@@ -210,6 +241,15 @@ class RemoteServer:
         return {"size": self.store.size(digest),
                 "mtime": float(self.store.mtime(digest))}
 
+    def _op_touch_objects(self, req):
+        # batched mtime refresh (sync touch-on-dedup): resets the grace-
+        # window clock on objects a push deduplicated against, so they
+        # cannot age out while the rest of the closure uploads
+        touch = getattr(self.store, "touch_many", None)
+        if touch is None:  # backend without cheap touch: report 0
+            return {"touched": 0}
+        return {"touched": int(touch(req["digests"]))}
+
     # ----------------------------------------------------- server-side GC
     def _op_gc_mark(self, req):
         # the whole mark phase runs HERE, over the server's own store: no
@@ -223,7 +263,8 @@ class RemoteServer:
         if dry_run:
             # a nonce token, NOT the shared generation: a dry run must
             # neither bump the generation nor collide with (and later
-            # consume) a real mark pending its sweep
+            # consume) a real mark pending its sweep.  Kept in process
+            # memory — a dry run writes nothing to the store.
             with self._gc_lock:
                 self._gc_nonce += 1
                 token = f"dry-{self._gc_nonce}"
@@ -231,10 +272,22 @@ class RemoteServer:
             token = bump_generation(self.store)
         live = mark_live(self.store, drop_cache=bool(req.get("drop_cache")),
                          dry_run=dry_run)
-        with self._gc_lock:
-            self._gc_marks[token] = live
-            while len(self._gc_marks) > 4:  # drop the oldest abandoned mark
-                self._gc_marks.pop(next(iter(self._gc_marks)))
+        if dry_run:
+            with self._gc_lock:
+                self._gc_marks[token] = live
+                while len(self._gc_marks) > self._GC_MARK_KEEP:
+                    self._gc_marks.pop(next(iter(self._gc_marks)))
+        else:
+            # persist the mark: blob in the object keyspace, consumed by
+            # the sweep — which may run on a different server instance
+            digest = self.store.put(_pack({"live": sorted(live)}))
+            self.store.set_ref(self._GC_MARK_REF_PREFIX + token, digest)
+            # prune abandoned marks beyond the newest _GC_MARK_KEEP
+            # (generation tokens are monotonically increasing integers)
+            pending = sorted(self._pending_marks(),
+                             key=lambda td: int(td[0]))
+            for old_token, old_digest in pending[:-self._GC_MARK_KEEP]:
+                self._drop_mark(old_token, old_digest)
         return {"generation": token, "live": len(live)}
 
     def _op_gc_sweep(self, req):
@@ -243,15 +296,31 @@ class RemoteServer:
         generation = req["generation"]
         with self._gc_lock:
             live = self._gc_marks.pop(generation, None)
-        if live is None:
-            return {"error": "bad_request",
-                    "message": f"unknown gc generation {generation!r} "
-                               "(run gc_mark first; marks do not survive "
-                               "a server restart)"}
+        mark_digest: Optional[str] = None
+        if live is None:  # not a dry token: look up the persisted mark
+            try:
+                mark_digest = self.store.get_ref(
+                    self._GC_MARK_REF_PREFIX + generation)
+                live = set(_unpack(self.store.get(mark_digest))["live"])
+            except RefNotFound:
+                return {"error": "bad_request",
+                        "message": f"unknown gc generation {generation!r} "
+                                   "(run gc_mark first)"}
+            except ObjectNotFound:
+                self._drop_mark(generation, None)
+                return {"error": "bad_request",
+                        "message": f"gc mark {generation!r} expired "
+                                   "(collected by a concurrent sweep); "
+                                   "run gc_mark again"}
+        # pending mark blobs are GC bookkeeping, not garbage: keep every
+        # one (including ours) out of this sweep's candidate set
+        keep = live | {d for _t, d in self._pending_marks()}
         swept, freed, young = sweep(
-            self.store, live,
+            self.store, keep,
             prune_age=float(req.get("prune_age") or 0.0),
             dry_run=bool(req.get("dry_run")))
+        if mark_digest is not None and not bool(req.get("dry_run")):
+            self._drop_mark(generation, mark_digest)
         return {"swept": swept, "bytes_freed": freed,
                 "skipped_young": young}
 
@@ -413,8 +482,8 @@ _RETRYABLE_OPS = frozenset({
     "put_object", "get_object", "head_objects", "list_objects",
     "get_objects", "put_objects",
     "get_objects_encoded", "put_objects_encoded", "delete_object",
-    "size_object", "stat_object", "get_ref", "set_ref", "delete_ref",
-    "list_refs",
+    "size_object", "stat_object", "touch_objects", "get_ref", "set_ref",
+    "delete_ref", "list_refs",
     # gc_mark re-marks from scratch on retry (the superseded mark is
     # discarded server-side); gc_sweep is NOT retryable — a sweep whose
     # reply was lost consumed its mark, and a blind re-send would race
@@ -561,6 +630,22 @@ class RemoteStore:
                 "remote with allow_delete=True (repro gc --remote) to "
                 "run a remote-side sweep")
         return bool(self._call("delete_object", digest=digest)["deleted"])
+
+    def touch_many(self, digests: Sequence[str]) -> int:
+        """Batched remote mtime refresh (sync touch-on-dedup).  Best
+        effort by contract: a server predating ``touch_objects`` answers
+        "unknown op" and this degrades to 0 touched — the GC generation
+        token still protects such pushes, just via retry instead."""
+        digests = list(digests)
+        if not digests:
+            return 0
+        try:
+            return int(self._call("touch_objects",
+                                  digests=digests)["touched"])
+        except RemoteError as e:
+            if self._is_unknown_op(e):
+                return 0
+            raise
 
     # ------------------------------------------------------ server-side GC
     def gc_mark(self, *, drop_cache: bool = False,
@@ -804,6 +889,12 @@ class TieredStore:
 
     def delete_object(self, digest: str) -> bool:
         return self.local.delete_object(digest)
+
+    def touch_many(self, digests: Sequence[str]) -> int:
+        # writes land locally, so the local tier is what a local GC would
+        # sweep — touch there; never mutate the shared remote's clocks
+        # from a tier mount
+        return self.local.touch_many(list(digests))
 
     # -------------------------------------------------- encoded payloads
     def _supports_encoded(self) -> bool:

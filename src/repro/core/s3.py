@@ -294,6 +294,13 @@ class S3Backend:
         except (TypeError, ValueError):
             return size, _time.time()
 
+    def touch_many(self, digests: Sequence[str]) -> int:
+        """S3 has no cheap mtime refresh (a self-copy per object would
+        cost a mutating request each) — report 0 touched; pushes that
+        dedup against an S3 remote stay protected by the GC generation
+        token's retry path instead."""
+        return 0
+
     def delete_object(self, digest: str) -> bool:
         """Remote-side GC sweep primitive.  Idempotent: missing → False."""
         status, _h, _b = self._request("DELETE", _object_key(digest))

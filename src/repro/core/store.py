@@ -151,6 +151,11 @@ class StoreBackend(Protocol):
     # combined (size, mtime) in ONE backend round-trip — what the sweep
     # uses per candidate so a remote collection never pays two
     def stat(self, digest: str) -> Tuple[int, float]: ...
+    # best-effort mtime refresh of already-present objects (the sync
+    # engine's touch-on-dedup): returns how many were actually touched —
+    # 0 is a valid answer for backends with no cheap touch (S3), the GC
+    # generation-retry path still protects those
+    def touch_many(self, digests: Sequence[str]) -> int: ...
     def delete_object(self, digest: str) -> bool: ...
     # encoded (framed, possibly compressed) payload transfer: a blob
     # compressed once at rest crosses every hop in that form — see
@@ -380,6 +385,22 @@ class ObjectStore:
             return True
         except FileNotFoundError:
             return False
+
+    def touch_many(self, digests: Sequence[str]) -> int:
+        """Reset present objects' mtimes to now; returns how many existed.
+
+        The sync engine calls this on dedup hits so a long push can't have
+        its already-present objects age past the GC grace window while the
+        rest of the closure is still uploading (the ref flip that would
+        protect them only lands at the end)."""
+        touched = 0
+        for digest in digests:
+            try:
+                os.utime(self._path(digest))
+                touched += 1
+            except FileNotFoundError:
+                continue  # raced a sweep: the generation token catches it
+        return touched
 
     # ------------------------------------------------- encoded payloads
     def get_encoded(self, digest: str) -> bytes:

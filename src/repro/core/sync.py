@@ -95,6 +95,9 @@ class SyncReport:
     head: str
     objects_sent: int = 0
     objects_skipped: int = 0
+    #: dedup hits whose destination mtime was refreshed so the GC grace
+    #: window can't age them out while the rest of the push is in flight
+    objects_touched: int = 0
     bytes_sent: int = 0
     bytes_wire: int = 0  # framed/compressed bytes actually sent per object
     cache_entries: int = 0
@@ -135,6 +138,7 @@ class MultiSyncReport:
     updated_refs: List[str] = field(default_factory=list)
     objects_sent: int = 0
     objects_skipped: int = 0
+    objects_touched: int = 0  # see SyncReport.objects_touched
     bytes_sent: int = 0
     bytes_wire: int = 0  # framed/compressed bytes actually sent per object
     cache_entries: int = 0
@@ -186,13 +190,19 @@ class _TransferEngine:
     previous phase already moved.
     """
 
-    _COMMIT, _SNAPSHOT, _BLOB = "c", "s", "b"
+    _COMMIT, _SNAPSHOT, _MLIST, _MANIFEST, _BLOB = "c", "s", "l", "m", "b"
 
     def __init__(self, src: StoreBackend, dst: StoreBackend, report,
                  *, jobs: Optional[int] = None, compress_wire: bool = True):
         self.src = src
         self.dst = dst
         self.report = report  # any object with the Sync*Report counters
+        # touch-on-dedup: refresh dst mtimes of already-present objects so
+        # a long push's dedup hits can't age past the GC grace window
+        # mid-transfer (ROADMAP item 3).  Best-effort capability — absent
+        # on backends without cheap mtime updates.
+        self._touch = getattr(dst, "touch_many", None)
+        self._to_touch: List[str] = []
         self.jobs = max(1, jobs) if jobs is not None else _default_jobs()
         # leaf blobs move as framed at-rest payloads when both sides speak
         # the encoded contract: compressed ONCE (at the source's original
@@ -224,11 +234,22 @@ class _TransferEngine:
                        for s in sorted(obj.get("tables", {}).values())])
         if kind == self._SNAPSHOT:
             obj = _unpack(blob)
-            out = [(self._BLOB, entry[0])
-                   for entry in obj.get("manifest", [])]
+            if obj.get("manifest_list") is not None:  # v1 hierarchy
+                out = [(self._MLIST, obj["manifest_list"])]
+            else:  # legacy v0: flat entry list inline
+                out = [(self._BLOB, entry[0])
+                       for entry in obj.get("manifest", [])]
             if obj.get("parent"):
                 out.append((self._SNAPSHOT, obj["parent"]))
             return out
+        if kind == self._MLIST:
+            obj = _unpack(blob)
+            return [(self._MANIFEST, row[0])
+                    for row in obj.get("manifests", [])]
+        if kind == self._MANIFEST:
+            obj = _unpack(blob)
+            return [(self._BLOB, entry[0])
+                    for entry in obj.get("entries", [])]
         return []  # leaf tensorfile
 
     def _want(self, kind: str, digest: str, parent: Optional[str]) -> bool:
@@ -305,6 +326,9 @@ class _TransferEngine:
                 raise SyncError(f"transfer of {digest} produced {got}")
         return ("put", [(d, len(b), len(b)) for d, b in items])
 
+    def _task_touch(self, digests: List[str]):
+        return ("touched", self._touch(digests))
+
     # -------------------------------------------------------- coordinator
     def _finish(self, digest: str) -> None:
         """``digest`` is now on dst: release parents whose last missing
@@ -329,6 +353,9 @@ class _TransferEngine:
         for i in range(0, len(self._to_put), self._chunk):
             submit(self._task_put, self._to_put[i:i + self._chunk])
         self._to_put = []
+        for i in range(0, len(self._to_touch), _HAS_CHUNK):
+            submit(self._task_touch, self._to_touch[i:i + _HAS_CHUNK])
+        self._to_touch = []
 
     def _handle(self, event) -> None:
         if event[0] == "checked":
@@ -336,6 +363,8 @@ class _TransferEngine:
             for digest in chunk:
                 if digest in present:
                     self.report.objects_skipped += 1
+                    if self._touch is not None:
+                        self._to_touch.append(digest)
                     self._finish(digest)
                 elif self._seen[digest] == self._BLOB:
                     self._to_copy.append(digest)  # leaf: fetch+put, batched
@@ -351,6 +380,8 @@ class _TransferEngine:
                 else:
                     self._npending[digest] = pending
                     self._payload[digest] = blob
+        elif event[0] == "touched":
+            self.report.objects_touched += event[1]
         else:  # "copied" | "put" — objects landed on dst
             for digest, nbytes, wire_bytes in event[1]:
                 self.report.objects_sent += 1
@@ -439,6 +470,8 @@ class _TransferEngine:
             present |= self.dst.has_many([d for d, _b in
                                           fresh[i:i + _HAS_CHUNK]])
         self.report.objects_skipped += len(present)
+        if self._touch is not None and present:
+            self.report.objects_touched += self._touch(sorted(present))
         self.done.update(present)
         todo = [(d, b) for d, b in fresh if d not in present]
         for i in range(0, len(todo), _BLOB_CHUNK):
@@ -456,8 +489,9 @@ class _TransferEngine:
 # ------------------------------------------------------------------ closures
 def commit_closure(store: StoreBackend, head: str) -> Set[str]:
     """Every digest reachable from ``head``: commits, snapshots,
-    tensorfiles.  Walks ``store`` directly, so call it on the side that has
-    the objects locally (push: before transfer; pull: after)."""
+    manifest-lists, manifests, tensorfiles.  Walks ``store`` directly, so
+    call it on the side that has the objects locally (push: before
+    transfer; pull: after)."""
     closure: Set[str] = set()
     stack: List[Tuple[str, str]] = [("c", head)]
     while stack:
@@ -471,10 +505,17 @@ def commit_closure(store: StoreBackend, head: str) -> Set[str]:
         if kind == "c":
             stack.extend(("c", p) for p in obj.get("parents", []))
             stack.extend(("s", s) for s in obj.get("tables", {}).values())
-        else:  # snapshot
-            stack.extend(("b", e[0]) for e in obj.get("manifest", []))
+        elif kind == "s":
+            if obj.get("manifest_list") is not None:  # v1 hierarchy
+                stack.append(("l", obj["manifest_list"]))
+            else:  # legacy v0: flat entry list inline
+                stack.extend(("b", e[0]) for e in obj.get("manifest", []))
             if obj.get("parent"):
                 stack.append(("s", obj["parent"]))
+        elif kind == "l":  # manifest list
+            stack.extend(("m", row[0]) for row in obj.get("manifests", []))
+        else:  # manifest
+            stack.extend(("b", e[0]) for e in obj.get("entries", []))
     return closure
 
 
@@ -968,6 +1009,7 @@ def _single_report(multi: MultiSyncReport, direction: str,
         direction, branch, multi.branches[branch],
         objects_sent=multi.objects_sent,
         objects_skipped=multi.objects_skipped,
+        objects_touched=multi.objects_touched,
         bytes_sent=multi.bytes_sent,
         bytes_wire=multi.bytes_wire,
         cache_entries=multi.cache_entries,

@@ -11,7 +11,7 @@ columns are dense ndarrays (directly device-puttable), not Arrow buffers.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Mapping, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import msgpack
 import numpy as np
@@ -133,14 +133,26 @@ def encode(cols: Mapping[str, np.ndarray]) -> Tuple[bytes, Dict[str, Any]]:
     return blob, meta
 
 
-def decode(blob: bytes) -> Dict[str, np.ndarray]:
+def decode(blob: bytes, columns: Optional[Sequence[str]] = None
+           ) -> Dict[str, np.ndarray]:
+    """Deserialize a tensorfile.  With ``columns``, only the named columns
+    are materialized — the other columns' bytes are never touched, which
+    is what makes projected table scans cheap (``TableIO.read(columns=)``
+    pushes its selection down to here)."""
     payload = msgpack.unpackb(blob, raw=False)
     if payload.get("v") != _FORMAT_VERSION:
         raise SchemaError(f"unknown tensorfile version {payload.get('v')!r}")
     schema = Schema.from_obj(payload["schema"])
     n = payload["nrows"]
+    specs = schema.columns
+    if columns is not None:
+        by_name = {spec.name: spec for spec in specs}
+        missing = sorted(set(columns) - set(by_name))
+        if missing:
+            raise SchemaError(f"missing columns {missing}")
+        specs = [by_name[name] for name in dict.fromkeys(columns)]
     out: Dict[str, np.ndarray] = {}
-    for spec in schema.columns:
+    for spec in specs:
         raw = payload["data"][spec.name]
         arr = np.frombuffer(raw, dtype=resolve_dtype(spec.dtype))
         out[spec.name] = arr.reshape((n, *spec.row_shape)).copy()

@@ -29,8 +29,8 @@ from typing import Dict, Iterable, Mapping, Optional, Sequence, Set
 
 import numpy as np
 
-from .errors import TableNotFound
-from .table import TableIO
+from .errors import SchemaError, TableNotFound
+from .table import Snapshot, TableIO
 
 #: bounded rebase attempts for an unpinned transaction.  Each failed CAS
 #: means some *other* writer landed (system-wide progress), so exhaustion
@@ -48,6 +48,59 @@ def changed_tables(base_tables: Mapping[str, str],
     content addresses): snapshot-level, not history-level, semantics."""
     return sorted(t for t in declared
                   if base_tables.get(t) != head_tables.get(t))
+
+
+def rebase_append(io: TableIO, base: Optional[str], theirs: Optional[str],
+                  ours: Optional[str]) -> Optional[str]:
+    """Manifest-diff merge for two writers appending to the SAME table.
+
+    ``base`` is the table's snapshot at the transaction's base commit,
+    ``theirs`` what the moved head holds now, ``ours`` what this
+    transaction staged.  When both sides are pure appends on ``base`` —
+    their manifest lists extend base's verbatim, which the three-level
+    hierarchy makes a cheap prefix check over manifest keys — the appends
+    touch disjoint files by construction, and the merge is "their
+    manifests + our new ones" as a fresh snapshot on their head.  Returns
+    its digest, or None when the movement is NOT append/append (overwrite,
+    compaction, delete, schema drift, or anything unreadable as a v0/v1
+    snapshot — e.g. the ``__contracts__`` registry): the caller falls back
+    to :class:`~.errors.TransactionConflict`, exactly as before this
+    existed."""
+    if base is None or theirs is None or ours is None:
+        return None
+    if ours == base:  # read-only declaration on a moved table: not a merge
+        return None
+    if theirs == base:  # head did not actually move this table
+        return ours
+    try:
+        base_snap = io.load_snapshot(base)
+        their_snap = io.load_snapshot(theirs)
+        our_snap = io.load_snapshot(ours)
+    except Exception:  # noqa: BLE001 - not snapshots (contracts registry…)
+        return None
+    base_keys = [m.key() for m in base_snap.manifests]
+
+    def extends_base(snap: Snapshot) -> bool:
+        keys = [m.key() for m in snap.manifests]
+        return len(keys) >= len(base_keys) and keys[:len(base_keys)] == base_keys
+
+    if not extends_base(their_snap) or not extends_base(our_snap):
+        return None  # someone rewrote history: a genuine conflict
+    ours_new = our_snap.manifests[len(base_keys):]
+    if not ours_new:  # we appended nothing: their state already covers us
+        return theirs
+    try:
+        their_snap.schema.check_compatible(our_snap.schema)
+    except SchemaError:
+        return None
+    merged = Snapshot(
+        schema=their_snap.schema,
+        manifests=their_snap.manifests + ours_new,
+        parent=theirs,
+        op="append",
+        seq=their_snap.seq + 1,
+    )
+    return io.store_snapshot(merged)
 
 
 class Transaction:
@@ -105,9 +158,9 @@ class Transaction:
         return self._base_tables[table]
 
     def read(self, table: str,
-             columns: Optional[Sequence[str]] = None
-             ) -> Dict[str, np.ndarray]:
-        return self.io.read(self.snapshot_of(table), columns)
+             columns: Optional[Sequence[str]] = None,
+             where=None) -> Dict[str, np.ndarray]:
+        return self.io.read(self.snapshot_of(table), columns, where=where)
 
     # ---------------------------------------------------------- write set
     def write(self, table: str, cols: Mapping[str, np.ndarray], *,

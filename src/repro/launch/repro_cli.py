@@ -250,6 +250,27 @@ def main(argv=None):
                         "margin that lets gc run concurrently with "
                         "pushes; 0 sweeps everything unreachable)")
 
+    cp = sub.add_parser(
+        "compact",
+        help="rewrite a table's small tensorfile fragments into "
+             "target-sized files as a new snapshot with digest-provably "
+             "identical logical contents (the maintenance half of "
+             "streaming ingestion)")
+    cp.add_argument("table")
+    cp.add_argument("--branch", default="main")
+    cp.add_argument("--author", default="compactor")
+    cp.add_argument("--target-rows", type=int, default=None, metavar="N",
+                    help="rows per output file (default: the lake's "
+                         "target_rows_per_file)")
+    cp.add_argument("--no-history", action="store_true",
+                    help="start a fresh snapshot chain instead of keeping "
+                         "the compacted snapshot as parent — the old "
+                         "fragments become GC-collectable once the grace "
+                         "window passes")
+    cp.add_argument("--max-attempts", type=int, default=4,
+                    help="retries when concurrent ingestion keeps moving "
+                         "the table (ingestion always wins the race)")
+
     q = sub.add_parser("query")
     q.add_argument("sql")
     q.add_argument("--ref", default="main")
@@ -505,6 +526,30 @@ def main(argv=None):
                           "generation": rep.generation,
                           "mode": rep.mode,
                           "dry_run": args.dry_run}))
+    elif args.cmd == "compact":
+        from repro.core.compact import compact_table
+        from repro.core.errors import ReproError
+
+        # compaction is an operator/maintenance action like contract
+        # administration: it may touch a WAP-protected main directly —
+        # losslessness is enforced internally by the digest check
+        try:
+            rep = compact_table(
+                lake.catalog, args.table, branch=args.branch,
+                author=args.author,
+                target_rows_per_file=args.target_rows,
+                keep_history=not args.no_history,
+                max_attempts=args.max_attempts, _wap_token=True)
+        except ReproError as e:
+            raise SystemExit(str(e)) from None
+        print(json.dumps({"table": args.table, "branch": args.branch,
+                          "files_before": rep.files_before,
+                          "files_after": rep.files_after,
+                          "rows": rep.rows,
+                          "bytes_read": rep.bytes_read,
+                          "bytes_written": rep.bytes_written,
+                          "snapshot": rep.new_snapshot[:12],
+                          "logical_digest": rep.logical_digest[:12]}))
     elif args.cmd == "query":
         _query(lake, args.sql, args.ref)
     elif args.cmd == "log":

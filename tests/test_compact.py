@@ -1,0 +1,299 @@
+"""Provably-lossless compaction: streaming micro-batch ingest produces
+fragment-heavy snapshots; ``compact_snapshot`` rewrites them into
+target-sized files with a runtime logical-digest proof, reuses right-sized
+files verbatim, and ``compact_table`` loses every race to ingestion."""
+
+import msgpack
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.core import (CompactionError, Lake, ObjectStore, TableIO,
+                        TransactionConflict, compact_snapshot, compact_table)
+from repro.core.errors import SchemaError
+from repro.core.gc import collect
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return ObjectStore(tmp_path / "store")
+
+
+@pytest.fixture()
+def io(store):
+    return TableIO(store, target_rows_per_file=16)
+
+
+def _stream(io, n_batches, batch_rows, *, start=0):
+    """Ingest ``n_batches`` tiny batches — one manifest + fragment each."""
+    vals = iter(range(start, start + n_batches * batch_rows))
+
+    def batches():
+        for _ in range(n_batches):
+            a = np.fromiter((next(vals) for _ in range(batch_rows)),
+                            dtype=np.int64, count=batch_rows)
+            yield {"a": a, "b": (a * 2).astype(np.float32)}
+
+    return io.append_stream(None, batches())
+
+
+# --------------------------------------------------------- append_stream
+def test_append_stream_lands_one_manifest_per_batch(io):
+    head = _stream(io, 10, 3)
+    snap = io.load_snapshot(head)
+    assert snap.nfiles == 10 and snap.nrows == 30
+    np.testing.assert_array_equal(io.read(head)["a"], np.arange(30))
+
+
+def test_append_stream_chains_onto_parent(io):
+    head = _stream(io, 4, 3)
+    head = io.append_stream(head, iter([{"a": np.arange(12, 15,
+                                                        dtype=np.int64),
+                                         "b": np.zeros(3,
+                                                       dtype=np.float32)}]))
+    np.testing.assert_array_equal(io.read(head)["a"], np.arange(15))
+
+
+def test_append_stream_rejects_empty(io):
+    with pytest.raises(SchemaError):
+        io.append_stream(None, iter([]))
+
+
+# ------------------------------------------------------------- compaction
+def test_compact_rewrites_fragments_and_proves_digest(io):
+    head = _stream(io, 20, 3)  # 20 fragments of 3 rows, target 16
+    before = io.logical_digest(head)
+    report = compact_snapshot(io, head)
+    assert report.files_before == 20
+    assert report.files_after == 4  # 60 rows / 16 = 3 full + 1 tail
+    assert report.rows == 60
+    assert report.logical_digest == before == io.logical_digest(
+        report.new_snapshot)
+    np.testing.assert_array_equal(io.read(report.new_snapshot)["a"],
+                                  np.arange(60))
+
+
+def test_compact_reuses_right_sized_files_verbatim(io, store):
+    big = io.write_snapshot({"a": np.arange(32, dtype=np.int64),
+                             "b": np.zeros(32, dtype=np.float32)})
+    head = io.append_stream(big, iter(
+        [{"a": np.arange(32 + i * 2, 34 + i * 2, dtype=np.int64),
+          "b": np.zeros(2, dtype=np.float32)} for i in range(8)]))
+    old_entries = [e for m in io.load_snapshot(head).manifests
+                   for e in io.manifest_entries(m)]
+    report = compact_snapshot(io, head)
+    new_entries = [e for m in io.load_snapshot(report.new_snapshot).manifests
+                   for e in io.manifest_entries(m)]
+    # the two 16-row files from the bulk write carry over by digest —
+    # zero bytes read or written for them
+    assert new_entries[0].digest == old_entries[0].digest
+    assert new_entries[1].digest == old_entries[1].digest
+    assert report.bytes_read == sum(e.nbytes for e in old_entries[2:])
+    # write amplification bounded by the fragment tail, not the table
+    assert report.bytes_written <= report.bytes_read
+
+
+def test_compact_keep_history_lineage(io):
+    head = _stream(io, 6, 3)
+    kept = compact_snapshot(io, head)
+    snap = io.load_snapshot(kept.new_snapshot)
+    assert snap.parent == head and snap.op == "compact"
+    assert io.history(kept.new_snapshot)[:2] == [kept.new_snapshot, head]
+    fresh = compact_snapshot(io, head, keep_history=False)
+    assert io.load_snapshot(fresh.new_snapshot).parent is None
+    assert io.history(fresh.new_snapshot) == [fresh.new_snapshot]
+
+
+def test_compact_refuses_to_publish_on_digest_mismatch(io, monkeypatch):
+    head = _stream(io, 6, 3)
+    real = io.logical_digest
+    seen = []
+
+    def corrupting(digest):
+        seen.append(digest)
+        out = real(digest)
+        return out if len(seen) == 1 else "0" * 64  # corrupt the after-hash
+
+    monkeypatch.setattr(io, "logical_digest", corrupting)
+    with pytest.raises(CompactionError):
+        compact_snapshot(io, head)
+
+
+def test_compact_legacy_v0_snapshot(io, store):
+    """Pre-hierarchy snapshots compact too — the rewrite IS the
+    migration, digest-proved like any other."""
+    from repro.core import tensorfile
+
+    entries = []
+    for start in range(0, 30, 3):
+        a = np.arange(start, start + 3, dtype=np.int64)
+        blob, meta = tensorfile.encode({"a": a})
+        entries.append([store.put(blob), meta["nrows"], meta["nbytes"],
+                        meta["stats"]])
+        schema = meta["schema"]
+    legacy = store.put(msgpack.packb(
+        {"schema": schema, "manifest": entries, "parent": None,
+         "op": "overwrite", "seq": 0}, use_bin_type=True))
+    report = compact_snapshot(io, legacy)
+    assert report.files_before == 10 and report.files_after == 2
+    assert report.logical_digest == io.logical_digest(legacy)
+    np.testing.assert_array_equal(io.read(report.new_snapshot)["a"],
+                                  np.arange(30))
+
+
+_LAYOUT = st.lists(st.integers(min_value=1, max_value=9), min_size=1,
+                   max_size=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(fragment_rows=_LAYOUT,
+       target=st.integers(min_value=1, max_value=24))
+def test_compaction_lossless_for_arbitrary_layouts(tmp_path, fragment_rows,
+                                                   target):
+    """THE compaction property: for random fragment layouts and target
+    sizes, the compacted snapshot holds byte-identical logical contents
+    and every output file except the tail is exactly ``target`` rows."""
+    key = abs(hash((tuple(fragment_rows), target))) % (1 << 30)
+    io = TableIO(ObjectStore(tmp_path / f"s{key}"), target_rows_per_file=16)
+    n = 0
+
+    def batches():
+        nonlocal n
+        for rows in fragment_rows:
+            a = np.arange(n, n + rows, dtype=np.int64)
+            n += rows
+            yield {"a": a}
+
+    head = io.append_stream(None, batches())
+    report = compact_snapshot(io, head, target_rows_per_file=target)
+    assert report.logical_digest == io.logical_digest(head)
+    total = sum(fragment_rows)
+    sizes = [e.nrows
+             for m in io.load_snapshot(report.new_snapshot).manifests
+             for e in io.manifest_entries(m)]
+    assert sum(sizes) == total == report.rows
+    # re-chunked files come out at exactly ``target``; already-big files
+    # are reused verbatim (>= target) — either way no small fragment
+    # survives except possibly one tail
+    assert all(s >= target for s in sizes[:-1])
+    np.testing.assert_array_equal(io.read(report.new_snapshot)["a"],
+                                  np.arange(total))
+
+
+# ---------------------------------------------------------- compact_table
+def test_compact_table_through_transaction(tmp_path):
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    io = TableIO(lake.store, target_rows_per_file=16)
+    head = io.append_stream(None, iter(
+        [{"v": np.arange(i * 4, i * 4 + 4, dtype=np.int64)}
+         for i in range(12)]))
+    lake.catalog.commit("main", {"events": head}, "ingest")
+    report = compact_table(lake.catalog, "events",
+                           target_rows_per_file=16)
+    assert report.table == "events"
+    assert report.files_before == 12 and report.files_after == 3
+    out = lake.read_table("main", "events")["v"]
+    np.testing.assert_array_equal(out, np.arange(48))
+    # the branch head moved via a real commit
+    from repro.core.catalog import Commit
+
+    head_commit = Commit.from_obj(msgpack.unpackb(
+        lake.store.get(lake.catalog.head("main")), raw=False))
+    assert head_commit.message.startswith("compact events")
+
+
+def test_compact_table_retries_when_ingestion_wins(tmp_path):
+    """append/compact is a genuine conflict (NOT an append/append merge);
+    the compactor must yield and retry from the new head."""
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    io = TableIO(lake.store, target_rows_per_file=16)
+    head = io.append_stream(None, iter(
+        [{"v": np.arange(i * 4, i * 4 + 4, dtype=np.int64)}
+         for i in range(8)]))
+    lake.catalog.commit("main", {"events": head}, "ingest")
+
+    real_commit = lake.catalog.commit
+    raced = []
+
+    def racing_commit(branch, updates, message, **kw):
+        # an ingest batch sneaks in ahead of the compactor's first commit
+        if message.startswith("compact") and not raced:
+            raced.append(True)
+            txn = lake.catalog.transaction("main", author="ingest")
+            txn.write("events", {"v": np.arange(900, 904, dtype=np.int64)},
+                      append=True)
+            txn.commit("late batch")
+        return real_commit(branch, updates, message, **kw)
+
+    lake.catalog.commit = racing_commit
+    try:
+        report = compact_table(lake.catalog, "events",
+                               target_rows_per_file=16)
+    finally:
+        del lake.catalog.commit
+    assert raced == [True]
+    out = lake.read_table("main", "events")["v"]
+    assert out.shape[0] == 36  # the late batch survived compaction
+    assert 900 in out and 903 in out
+    assert report.rows == 36  # retried against the post-ingest head
+
+
+def test_compact_table_gives_up_after_max_attempts(tmp_path):
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    io = TableIO(lake.store, target_rows_per_file=16)
+    head = io.append_stream(None, iter(
+        [{"v": np.arange(i * 2, i * 2 + 2, dtype=np.int64)}
+         for i in range(4)]))
+    lake.catalog.commit("main", {"events": head}, "ingest")
+    real_commit = lake.catalog.commit
+    n = [0]
+
+    def always_racing(branch, updates, message, **kw):
+        if message.startswith("compact"):
+            n[0] += 1
+            txn = lake.catalog.transaction("main", author="ingest")
+            txn.write("events",
+                      {"v": np.arange(n[0] * 10, n[0] * 10 + 2,
+                                      dtype=np.int64)}, append=True)
+            txn.commit(f"batch {n[0]}")
+        return real_commit(branch, updates, message, **kw)
+
+    lake.catalog.commit = always_racing
+    try:
+        with pytest.raises(TransactionConflict):
+            compact_table(lake.catalog, "events", target_rows_per_file=16,
+                          max_attempts=3)
+    finally:
+        del lake.catalog.commit
+    assert n[0] == 3  # one losing race per attempt, then gave up
+
+
+def test_gc_collects_compacted_away_fragments(tmp_path):
+    """Staging pattern (compact BEFORE publishing, ``keep_history=False``):
+    only the compacted snapshot enters the catalog, so the raw ingest
+    fragments are never reachable from any ref and GC reclaims them —
+    while everything the published snapshot needs survives."""
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    io = TableIO(lake.store, target_rows_per_file=16)
+    head = io.append_stream(None, iter(
+        [{"v": np.arange(i * 4, i * 4 + 4, dtype=np.int64)}
+         for i in range(8)]))  # staged only — no commit yet
+    old_fragments = [e.digest for m in io.load_snapshot(head).manifests
+                     for e in io.manifest_entries(m)]
+    report = compact_snapshot(io, head, keep_history=False)
+    lake.catalog.commit("main", {"events": report.new_snapshot},
+                        "publish compacted")
+
+    gc_report = collect(lake.store, prune_age=0)
+    assert gc_report.swept > 0
+    for digest in old_fragments:
+        assert not lake.store.has(digest)  # fragments actually reclaimed
+    assert not lake.store.has(head)  # and the staging snapshot chain
+    np.testing.assert_array_equal(lake.read_table("main", "events")["v"],
+                                  np.arange(32))

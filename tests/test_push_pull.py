@@ -131,7 +131,7 @@ def test_push_is_incremental_and_dedup_aware(host_a, remote):
                        {"v": np.arange(8, dtype=np.float32)}, author="alice")
     third = push(lake_a.store, remote, "alice.exp")
     assert third.ref_updated
-    assert 0 < third.objects_sent <= 3  # tensorfile + snapshot + commit
+    assert 0 < third.objects_sent <= 5  # tensorfile + manifest + list + snapshot + commit
 
 
 def test_push_refuses_non_fast_forward(tmp_path, host_a, remote):

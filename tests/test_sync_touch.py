@@ -1,0 +1,222 @@
+"""Touch-on-dedup and restart-safe server-side GC marks.
+
+A long push's already-present (deduped) objects used to keep their old
+mtimes while the rest of the closure uploaded — old enough to fall past
+the ``--prune-age`` grace window and be swept mid-push.  The sync engine
+now refreshes their clocks (``touch_many``) as it dedups.  Separately,
+``gc_mark`` used to keep its live-set in server process memory, so a
+server restart between mark and sweep silently lost the mark; marks now
+persist in the store keyspace (``gc/mark/<generation>`` refs) and any
+server instance over the same store can consume them.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Lake, LoopbackTransport, ObjectStore, RemoteError,
+                        RemoteServer, RemoteStore, TieredStore, push)
+from repro.core.errors import RefNotFound
+
+
+def _make_lake(tmp_path, name="lake"):
+    lake = Lake(tmp_path / name, protect_main=False)
+    lake.write_table("main", "t",
+                     {"v": np.arange(32, dtype=np.int64)})
+    return lake
+
+
+def _age_all(store, seconds=10_000):
+    for digest in store.iter_objects():
+        p = store._path(digest)
+        os.utime(p, (p.stat().st_atime, p.stat().st_mtime - seconds))
+
+
+def _mtimes(store):
+    return {d: store._path(d).stat().st_mtime for d in store.iter_objects()}
+
+
+# ----------------------------------------------------------- touch-on-dedup
+def test_object_store_touch_many(tmp_path):
+    store = ObjectStore(tmp_path / "s")
+    a = store.put(b"one")
+    b = store.put(b"two")
+    _age_all(store)
+    old = _mtimes(store)
+    touched = store.touch_many([a, b, "0" * 64])  # one missing digest
+    assert touched == 2
+    now = _mtimes(store)
+    assert now[a] > old[a] and now[b] > old[b]
+
+
+def test_push_touches_deduped_remote_objects(tmp_path):
+    """The regression: a delta push must refresh the clocks of the
+    closure objects the remote already had, or a concurrent prune-age
+    sweep could collect them before the final ref flip."""
+    lake = _make_lake(tmp_path)
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    push(lake.store, remote, "main")
+
+    _age_all(remote_store)  # objects now look ancient to a sweep
+    old = _mtimes(remote_store)
+    snap = lake.io.append(lake.catalog.snapshot_of("main", "t"),
+                          {"v": np.arange(100, 104, dtype=np.int64)})
+    lake.catalog.commit("main", {"t": snap}, "delta")
+    report = push(lake.store, remote, "main")
+
+    assert report.objects_touched > 0
+    now = _mtimes(remote_store)
+    refreshed = [d for d in old if now[d] > old[d]]
+    # every deduped object the delta closure re-visited got a fresh clock
+    assert report.objects_touched == len(refreshed)
+    # in particular the parent snapshot's data files are young again
+    for d in refreshed:
+        assert now[d] - old[d] > 9_000
+
+
+def test_touch_count_survives_server_without_the_op(tmp_path, monkeypatch):
+    """A server predating ``touch_objects`` answers unknown-op; the push
+    must still succeed with 0 touched (the generation token's retry path
+    covers it), never crash."""
+    monkeypatch.delattr(RemoteServer, "_op_touch_objects")
+    lake = _make_lake(tmp_path)
+    remote = RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "remote"))))
+    push(lake.store, remote, "main")
+    snap = lake.io.append(lake.catalog.snapshot_of("main", "t"),
+                          {"v": np.arange(100, 104, dtype=np.int64)})
+    lake.catalog.commit("main", {"t": snap}, "delta")
+    report = push(lake.store, remote, "main")
+    assert report.objects_sent > 0
+    assert report.objects_touched == 0
+    assert remote.touch_many(["0" * 64]) == 0  # degrades quietly
+
+
+def test_tiered_store_touches_local_tier_only(tmp_path):
+    local = ObjectStore(tmp_path / "local")
+    remote_store = ObjectStore(tmp_path / "remote")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(remote_store)))
+    tiered = TieredStore(local, remote)
+    digest = tiered.put(b"payload")  # lands locally
+    remote_store.put(b"payload")  # and (separately) on the remote
+    _age_all(local)
+    _age_all(remote_store)
+    old_remote = _mtimes(remote_store)
+    assert tiered.touch_many([digest]) == 1
+    # the shared remote's clocks are never mutated from a tier mount
+    assert _mtimes(remote_store) == old_remote
+    assert _mtimes(local)[digest] > old_remote[digest]
+
+
+# ------------------------------------------------- restart-safe gc marks
+def _remote_pair(tmp_path):
+    """A pushed lake + a remote whose server we can 'restart' at will."""
+    lake = _make_lake(tmp_path)
+    remote_root = tmp_path / "remote"
+    remote = RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(remote_root))), allow_delete=True)
+    push(lake.store, remote, "main")
+    return lake, remote_root, remote
+
+
+def _fresh_server(remote_root):
+    return RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(remote_root))), allow_delete=True)
+
+
+def test_gc_mark_is_persisted_in_store_keyspace(tmp_path):
+    _lake, remote_root, remote = _remote_pair(tmp_path)
+    generation, live = remote.gc_mark()
+    assert live > 0
+    store = ObjectStore(remote_root)
+    mark_digest = store.get_ref(f"gc/mark/{generation}")
+    assert store.has(mark_digest)  # the live set is a real blob
+
+
+def test_sweep_works_across_server_restart(tmp_path):
+    """THE restart regression: mark on one server instance, sweep on a
+    fresh instance over the same store — previously the in-memory mark
+    vanished and the sweep failed (or worse, ran markless)."""
+    lake, remote_root, remote = _remote_pair(tmp_path)
+    # make some remote garbage: an object nothing references
+    orphan = ObjectStore(remote_root).put(b"orphaned bytes")
+    generation, _live = remote.gc_mark()
+
+    restarted = _fresh_server(remote_root)  # simulated restart
+    swept, freed, _young = restarted.gc_sweep(generation)
+    assert swept >= 1 and freed > 0
+    store = ObjectStore(remote_root)
+    assert not store.has(orphan)
+    # the consumed mark is gone: ref deleted, blob reclaimed
+    with pytest.raises(RefNotFound):
+        store.get_ref(f"gc/mark/{generation}")
+    # and everything the branch needs survived
+    lake2 = Lake(tmp_path / "lake2", protect_main=False)
+    from repro.core import pull
+
+    pull(lake2.store, restarted, "main")
+    np.testing.assert_array_equal(lake2.read_table("main", "t")["v"],
+                                  np.arange(32))
+
+
+def test_sweep_of_unknown_generation_errors(tmp_path):
+    _lake, _root, remote = _remote_pair(tmp_path)
+    with pytest.raises(RemoteError, match="unknown gc generation"):
+        remote.gc_sweep("999999")
+
+
+def test_mark_is_consumed_exactly_once(tmp_path):
+    _lake, remote_root, remote = _remote_pair(tmp_path)
+    generation, _ = remote.gc_mark()
+    remote.gc_sweep(generation)
+    with pytest.raises(RemoteError, match="unknown gc generation"):
+        _fresh_server(remote_root).gc_sweep(generation)
+
+
+def test_dry_run_mark_writes_nothing(tmp_path):
+    """A dry run must not mutate the store — its mark stays in process
+    memory (and therefore does NOT survive a restart, by design)."""
+    _lake, remote_root, remote = _remote_pair(tmp_path)
+    store = ObjectStore(remote_root)
+    objects_before = set(store.iter_objects())
+    refs_before = set(store.iter_refs())
+    generation, _ = remote.gc_mark(dry_run=True)
+    assert set(store.iter_objects()) == objects_before
+    assert set(store.iter_refs()) == refs_before
+    # the dry token works against the SAME instance...
+    swept, _freed, _young = remote.gc_sweep(generation, dry_run=True)
+    assert swept >= 0
+    # ...but a restarted server never heard of it
+    with pytest.raises(RemoteError, match="unknown gc generation"):
+        _fresh_server(remote_root).gc_sweep(generation, dry_run=True)
+
+
+def test_abandoned_marks_are_pruned_to_newest_four(tmp_path):
+    """Crashed GC clients must not leak unbounded live-set blobs: only
+    the newest ``_GC_MARK_KEEP`` pending marks survive a new mark."""
+    _lake, remote_root, remote = _remote_pair(tmp_path)
+    tokens = [remote.gc_mark()[0] for _ in range(6)]
+    store = ObjectStore(remote_root)
+    pending = sorted(
+        (ref[len("gc/mark/"):] for ref in store.iter_refs("gc/mark/")),
+        key=int)
+    assert len(pending) == RemoteServer._GC_MARK_KEEP
+    assert pending == sorted(tokens, key=int)[-RemoteServer._GC_MARK_KEEP:]
+    # the newest mark still sweeps fine after the pruning
+    swept, _freed, _young = remote.gc_sweep(tokens[-1])
+    assert swept >= 0
+
+
+def test_concurrent_sweep_expiry_reports_clearly(tmp_path):
+    """If another sweep collected a mark blob out from under a pending
+    ref, the sweep reports an actionable error instead of crashing."""
+    _lake, remote_root, remote = _remote_pair(tmp_path)
+    generation, _ = remote.gc_mark()
+    store = ObjectStore(remote_root)
+    store.delete_object(store.get_ref(f"gc/mark/{generation}"))
+    with pytest.raises(RemoteError, match="expired"):
+        _fresh_server(remote_root).gc_sweep(generation)
+    with pytest.raises(RefNotFound):  # the dangling ref was cleaned up
+        store.get_ref(f"gc/mark/{generation}")

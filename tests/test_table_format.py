@@ -1,0 +1,447 @@
+"""The Iceberg-style table metadata hierarchy (snapshot -> manifest-list ->
+manifest -> tensorfiles): versioned encoding with legacy-v0 decode, O(delta)
+appends that reuse parent manifests verbatim, zone-map predicate pushdown
+provably equivalent to the unpruned scan, column pruning down to the
+tensorfile decode, and the manifest-diff append/append merge in the
+transaction layer.
+"""
+
+import msgpack
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.core import Lake, ObjectStore, TableIO, col
+from repro.core import gc as gc_mod
+from repro.core import sync as sync_mod
+from repro.core.errors import SchemaError, TransactionConflict
+from repro.core.table import (ManifestEntry, inline_manifest, unpack_manifest,
+                              zone_may_match, zone_of)
+
+
+def _unpack(blob):
+    return msgpack.unpackb(blob, raw=False)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return ObjectStore(tmp_path / "store")
+
+
+@pytest.fixture()
+def io(store):
+    return TableIO(store, target_rows_per_file=8)
+
+
+# ---------------------------------------------------------- format hierarchy
+def test_snapshot_is_three_level_hierarchy(io, store):
+    digest = io.write_snapshot({"a": np.arange(20, dtype=np.int64)})
+    obj = _unpack(store.get(digest))
+    assert obj["v"] == 1
+    assert "manifest" not in obj  # flat v0 list is gone
+    mlist = _unpack(store.get(obj["manifest_list"]))
+    assert mlist["kind"] == "manifest_list"
+    [row] = mlist["manifests"]
+    entries = unpack_manifest(store.get(row[0]))
+    assert len(entries) == 3  # 20 rows / 8 per file
+    assert sum(e.nrows for e in entries) == 20 == obj["nrows"]
+    # manifest-list rows carry the zone rollup next to the counts
+    assert row[4]["a"]["min"] == 0 and row[4]["a"]["max"] == 19
+
+
+def test_append_is_o_delta_and_reuses_parent_manifests(io, store):
+    head = io.write_snapshot({"a": np.arange(64, dtype=np.int64)})
+    base_manifests = [m.digest for m in io.load_snapshot(head).manifests]
+    before = set(store.iter_objects())
+    head2 = io.append(head, {"a": np.arange(64, 70, dtype=np.int64)})
+    new_objects = set(store.iter_objects()) - before
+    # O(delta): 1 tensorfile + 1 manifest + 1 manifest-list + 1 snapshot,
+    # regardless of how many files the parent already had
+    assert len(new_objects) == 4
+    manifests = io.load_snapshot(head2).manifests
+    assert [m.digest for m in manifests[:-1]] == base_manifests  # verbatim
+    assert manifests[-1].nrows == 6
+
+
+def test_append_cost_flat_as_table_grows(io, store):
+    head = io.write_snapshot({"a": np.arange(80, dtype=np.int64)})
+    costs = []
+    for i in range(12):
+        before = len(set(store.iter_objects()))
+        head = io.append(head, {"a": np.arange(i * 5, i * 5 + 5,
+                                               dtype=np.int64)})
+        costs.append(len(set(store.iter_objects())) - before)
+    assert len(set(costs)) == 1  # identical metadata cost every time
+
+
+def test_history_and_row_order_preserved(io):
+    h1 = io.write_snapshot({"a": np.arange(10, dtype=np.int64)})
+    h2 = io.append(h1, {"a": np.arange(10, 14, dtype=np.int64)})
+    h3 = io.append(h2, {"a": np.arange(14, 30, dtype=np.int64)})
+    assert io.history(h3) == [h3, h2, h1]
+    np.testing.assert_array_equal(io.read(h3)["a"], np.arange(30))
+    np.testing.assert_array_equal(io.read(h2)["a"], np.arange(14))
+
+
+# ------------------------------------------------------------------ legacy v0
+def _write_legacy_v0(store, cols, *, parent=None, op="overwrite", seq=0,
+                     rows_per_file=8):
+    """Hand-pack a pre-hierarchy snapshot: flat entry list inline, no
+    ``v`` key — byte-compatible with what old lakes hold on disk."""
+    from repro.core import tensorfile
+
+    arrays = {k: np.asarray(v) for k, v in cols.items()}
+    n = next(iter(arrays.values())).shape[0]
+    entries, schema = [], None
+    for start in range(0, n, rows_per_file):
+        chunk = {k: v[start:start + rows_per_file] for k, v in arrays.items()}
+        blob, meta = tensorfile.encode(chunk)
+        schema = meta["schema"]
+        entries.append([store.put(blob), meta["nrows"], meta["nbytes"],
+                        meta["stats"]])
+    return store.put(msgpack.packb(
+        {"schema": schema, "manifest": entries, "parent": parent, "op": op,
+         "seq": seq}, use_bin_type=True))
+
+
+def test_legacy_v0_snapshot_still_readable(io, store):
+    cols = {"a": np.arange(20, dtype=np.int64),
+            "b": np.linspace(0, 1, 20).astype(np.float32)}
+    legacy = _write_legacy_v0(store, cols)
+    snap = io.load_snapshot(legacy)
+    assert snap.nrows == 20 and snap.nfiles == 3
+    np.testing.assert_array_equal(io.read(legacy)["a"], cols["a"])
+    # pushdown works over the inline manifest's rolled-up zone too
+    out = io.read(legacy, columns=["a"], where=col("a") >= 18)
+    np.testing.assert_array_equal(out["a"], [18, 19])
+
+
+def test_append_on_legacy_parent_migrates_to_hierarchy(io, store):
+    legacy = _write_legacy_v0(store, {"a": np.arange(20, dtype=np.int64)})
+    head = io.append(legacy, {"a": np.arange(20, 25, dtype=np.int64)})
+    obj = _unpack(store.get(head))
+    assert obj["v"] == 1 and "manifest_list" in obj  # migrated on touch
+    np.testing.assert_array_equal(io.read(head)["a"], np.arange(25))
+    # the legacy parent's entries were materialized as a real manifest blob
+    first = io.load_snapshot(head).manifests[0]
+    assert first.digest is not None
+    assert len(unpack_manifest(store.get(first.digest))) == 3
+
+
+def test_walkers_traverse_both_formats(io, store):
+    legacy = _write_legacy_v0(store, {"a": np.arange(20, dtype=np.int64)})
+    head = io.append(legacy, {"a": np.arange(20, 25, dtype=np.int64)})
+    live = set()
+    gc_mod._mark_snapshot(store, head, live)
+    # every reachable object of both formats is marked: data files of the
+    # legacy parent AND the v1 snapshot/mlist/manifest blobs
+    for frame_digest in [e.digest
+                         for m in io.load_snapshot(head).manifests
+                         for e in io.manifest_entries(m)]:
+        assert frame_digest in live
+    assert legacy in live and head in live
+    # commit_closure agrees with the mark walk on snapshot subtrees
+    # (modulo the commit objects it is rooted at)
+    lake = Lake(store.root, protect_main=False)
+    lake.catalog.commit("main", {"t": head}, "seed")
+    closure = sync_mod.commit_closure(store, lake.catalog.head("main"))
+    assert live <= closure
+
+
+def test_sync_ships_hierarchy_and_dedups_manifests(tmp_path):
+    from repro.core import (LoopbackTransport, RemoteServer, RemoteStore,
+                            push, pull)
+
+    lake = Lake(tmp_path / "a", protect_main=False)
+    io = TableIO(lake.store, target_rows_per_file=8)
+    head = io.write_snapshot({"a": np.arange(40, dtype=np.int64)})
+    lake.catalog.commit("main", {"t": head}, "seed")
+    remote = RemoteStore(LoopbackTransport(RemoteServer(
+        ObjectStore(tmp_path / "remote"))))
+    push(lake.store, remote, "main")
+
+    head2 = io.append(head, {"a": np.arange(40, 45, dtype=np.int64)})
+    lake.catalog.commit("main", {"t": head2}, "append")
+    rep = push(lake.store, remote, "main")
+    # checkpoint-to-checkpoint: the parent's manifests dedup — only the
+    # delta (tensorfile, manifest, mlist, snapshot, commit) crosses
+    assert 0 < rep.objects_sent <= 5
+
+    lake_b = Lake(tmp_path / "b", protect_main=False)
+    pull(lake_b.store, remote, "main")
+    np.testing.assert_array_equal(
+        lake_b.read_table("main", "t")["a"], np.arange(45))
+
+
+# ------------------------------------------------------------ column pruning
+def test_projected_read_never_materializes_untouched_columns(io, monkeypatch):
+    """Failing-first regression for the column-pruning bug: with
+    ``columns=``, the other columns' raw bytes must never reach
+    ``np.frombuffer`` (the materialization point in tensorfile.decode)."""
+    cols = {"a": np.arange(32, dtype=np.int64),
+            "b": np.arange(32, dtype=np.float32),
+            "c": np.arange(32, dtype=np.int32)}
+    digest = io.write_snapshot(cols)
+    nfiles = io.load_snapshot(digest).nfiles
+
+    calls = []
+    real = np.frombuffer
+
+    def counting(buf, *a, **kw):
+        calls.append(len(buf))
+        return real(buf, *a, **kw)
+
+    monkeypatch.setattr(np, "frombuffer", counting)
+    out = io.read(digest, columns=["a"])
+    assert list(out) == ["a"]
+    assert len(calls) == nfiles  # one decode per file for ONE column, not 3
+    total = sum(calls)
+    assert total == 32 * 8  # int64 bytes only; b and c never materialized
+
+
+def test_predicate_columns_are_decoded_but_not_returned(io):
+    digest = io.write_snapshot({"a": np.arange(32, dtype=np.int64),
+                                "b": np.arange(32, dtype=np.int64)})
+    out = io.read(digest, columns=["a"], where=col("b") > 29)
+    assert list(out) == ["a"]
+    np.testing.assert_array_equal(out["a"], [30, 31])
+
+
+def test_unknown_columns_raise(io):
+    digest = io.write_snapshot({"a": np.arange(8, dtype=np.int64)})
+    with pytest.raises(SchemaError):
+        io.read(digest, columns=["nope"])
+    with pytest.raises(SchemaError):
+        io.read(digest, columns=["a"], where=col("nope") > 0)
+
+
+# --------------------------------------------------------- zone-map pushdown
+def test_zone_pruned_scan_skips_manifest_blobs(io, store):
+    head = io.write_snapshot({"a": np.arange(64, dtype=np.int64)})
+    head = io.append(head, {"a": np.arange(1000, 1064, dtype=np.int64)})
+    reads = []
+    orig_get = store.get
+
+    def tracking_get(d):
+        reads.append(d)
+        return orig_get(d)
+
+    store.get = tracking_get
+    try:
+        out = io.read(head, where=col("a") >= 1000)
+    finally:
+        del store.get
+    np.testing.assert_array_equal(out["a"], np.arange(1000, 1064))
+    snap = io.load_snapshot(head)
+    pruned_manifest = snap.manifests[0].digest
+    assert pruned_manifest not in reads  # whole manifest skipped unread
+    # and none of its data files were fetched either
+    for e in unpack_manifest(orig_get(pruned_manifest)):
+        assert e.digest not in reads
+
+
+def _build_predicate(spec):
+    """(kind, op_a, lit_a, op_b, lit_b) -> an Expr over columns a and b."""
+    kind, op_a, lit_a, op_b, lit_b = spec
+    ops = {"gt": lambda c, v: c > v, "ge": lambda c, v: c >= v,
+           "lt": lambda c, v: c < v, "le": lambda c, v: c <= v,
+           "eq": lambda c, v: c == v, "ne": lambda c, v: c != v}
+    pa, pb = ops[op_a](col("a"), lit_a), ops[op_b](col("b"), lit_b)
+    if kind == "a":
+        return pa
+    if kind == "and":
+        return pa & pb
+    if kind == "or":
+        return pa | pb
+    return ~pa  # "not"
+
+
+_CMP = st.sampled_from(["gt", "ge", "lt", "le", "eq", "ne"])
+_PRED = st.tuples(st.sampled_from(["a", "and", "or", "not"]),
+                  _CMP, st.integers(min_value=-50, max_value=150),
+                  _CMP, st.integers(min_value=-50, max_value=150))
+_BATCHES = st.lists(
+    st.lists(st.integers(min_value=-40, max_value=140), min_size=1,
+             max_size=20),
+    min_size=1, max_size=6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(batches=_BATCHES, spec=_PRED)
+def test_pruned_scan_equals_full_scan(tmp_path, batches, spec):
+    """THE pushdown soundness property: for arbitrary data distributions
+    (so arbitrary zone maps) and arbitrary predicates, the zone-pruned
+    filtered read returns exactly the rows a full-scan filter would."""
+    suffix = abs(hash((tuple(map(tuple, batches)), spec))) % (1 << 30)
+    store = ObjectStore(tmp_path / f"s{suffix}")
+    io = TableIO(store, target_rows_per_file=4)
+    head = None
+    for batch in batches:
+        a = np.asarray(batch, dtype=np.int64)
+        cols = {"a": a, "b": (a * 3 - 7).astype(np.int64)}
+        head = io.write_snapshot(cols) if head is None else io.append(head,
+                                                                      cols)
+    pred = _build_predicate(spec)
+    full = io.read(head)
+    mask = pred.evaluate(full)
+    pruned = io.read(head, where=pred)
+    np.testing.assert_array_equal(pruned["a"], full["a"][mask])
+    np.testing.assert_array_equal(pruned["b"], full["b"][mask])
+
+
+@settings(max_examples=40, deadline=None)
+@given(values=st.lists(st.integers(min_value=-100, max_value=100),
+                       min_size=0, max_size=12),
+       op=_CMP, literal=st.integers(min_value=-110, max_value=110))
+def test_zone_may_match_is_sound(values, op, literal):
+    """zone_may_match(e, zone, n) is False ONLY when no row matches —
+    checked against brute-force evaluation on the actual rows."""
+    arr = np.asarray(values, dtype=np.int64).reshape(len(values))
+    if len(values):
+        entry = ManifestEntry("x", len(values), arr.nbytes,
+                              {"v": {"min": int(arr.min()),
+                                     "max": int(arr.max())}})
+    else:
+        entry = ManifestEntry("x", 0, 0, {})
+    zone = zone_of((entry,))
+    ops = {"gt": lambda c, v: c > v, "ge": lambda c, v: c >= v,
+           "lt": lambda c, v: c < v, "le": lambda c, v: c <= v,
+           "eq": lambda c, v: c == v, "ne": lambda c, v: c != v}
+    pred = ops[op](col("v"), literal)
+    any_match = bool(pred.evaluate({"v": arr}).any()) if len(values) else False
+    if any_match:
+        assert zone_may_match(pred, zone, len(values))
+
+
+def test_nan_semantics_in_zone_pruning(io):
+    """NaN rows compare False under every operator except ``!=`` — the
+    zone evaluator must keep files containing NaN alive for ``!=`` and
+    must never prune a mixed file unsoundly."""
+    vals = np.array([1.0, np.nan, 3.0, np.nan], dtype=np.float64)
+    digest = io.write_snapshot({"v": vals})
+    out = io.read(digest, where=col("v") != 2.0)
+    # != matches the NaN rows as numpy does
+    assert out["v"].shape[0] == 4
+    out = io.read(digest, where=col("v") > 2.0)
+    np.testing.assert_array_equal(out["v"], [3.0])
+    # all-NaN file: only != can match
+    digest = io.write_snapshot({"v": np.full(4, np.nan)})
+    assert io.read(digest, where=col("v") == 1.0)["v"].shape[0] == 0
+    assert io.read(digest, where=col("v") != 1.0)["v"].shape[0] == 4
+
+
+def test_zone_rollup_omits_unstatted_columns():
+    entries = (ManifestEntry("x", 4, 32, {"a": {"min": 0, "max": 3}}),
+               ManifestEntry("y", 4, 32, {"a": {}}))  # empty stats
+    assert "a" not in zone_of(entries)  # pruning would be unsound
+    mf = inline_manifest(entries)
+    assert mf.nrows == 8 and mf.nfiles == 2
+
+
+def test_empty_filtered_read_returns_typed_empty_columns(io):
+    digest = io.write_snapshot({"a": np.arange(8, dtype=np.int64),
+                                "b": np.ones((8, 3), dtype=np.float32)})
+    out = io.read(digest, where=col("a") > 99)
+    assert out["a"].dtype == np.int64 and out["a"].shape == (0,)
+    assert out["b"].dtype == np.float32 and out["b"].shape == (0, 3)
+
+
+# --------------------------------------------- append/append manifest merge
+def test_same_table_disjoint_appends_both_land_without_conflict(tmp_path):
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    base = lake.io.write_snapshot({"v": np.arange(10, dtype=np.int64)})
+    lake.catalog.commit("main", {"events": base}, "seed")
+
+    t1 = lake.transaction("main", author="w1")
+    t2 = lake.transaction("main", author="w2")
+    t1.write("events", {"v": np.arange(100, 110, dtype=np.int64)},
+             append=True)
+    t2.write("events", {"v": np.arange(200, 210, dtype=np.int64)},
+             append=True)
+    t1.commit("w1 append")
+    t2.commit("w2 append")  # rebases via manifest diff, no conflict
+
+    assert lake.catalog.txn_stats["conflicts"] == 0
+    assert lake.catalog.txn_stats["append_merges"] == 1
+    out = lake.read_table("main", "events")["v"]
+    assert out.shape[0] == 30
+    assert set(out.tolist()) == (set(range(10)) | set(range(100, 110))
+                                 | set(range(200, 210)))
+    # first-committer's rows precede the rebased writer's (their + ours)
+    np.testing.assert_array_equal(out[:20],
+                                  np.concatenate([np.arange(10),
+                                                  np.arange(100, 110)]))
+
+
+def test_append_overwrite_race_is_still_a_conflict(tmp_path):
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    base = lake.io.write_snapshot({"v": np.arange(10, dtype=np.int64)})
+    lake.catalog.commit("main", {"events": base}, "seed")
+
+    t1 = lake.transaction("main", author="w1")
+    t2 = lake.transaction("main", author="w2")
+    t1.write("events", {"v": np.arange(5, dtype=np.int64)})  # overwrite
+    t2.write("events", {"v": np.arange(50, 60, dtype=np.int64)}, append=True)
+    t1.commit("w1 overwrite")
+    with pytest.raises(TransactionConflict):
+        t2.commit("w2 append")
+    # and the mirror image: append lands, overwrite conflicts
+    t3 = lake.transaction("main", author="w3")
+    t4 = lake.transaction("main", author="w4")
+    t3.write("events", {"v": np.arange(3, dtype=np.int64)}, append=True)
+    t4.write("events", {"v": np.arange(3, dtype=np.int64)})
+    t3.commit("w3 append")
+    with pytest.raises(TransactionConflict):
+        t4.commit("w4 overwrite")
+
+
+def test_declared_read_of_moved_table_still_conflicts(tmp_path):
+    """The append merge must not weaken repeatable-read semantics: a
+    transaction that READ a table another writer appended to is stale."""
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    base = lake.io.write_snapshot({"v": np.arange(4, dtype=np.int64)})
+    lake.catalog.commit("main", {"events": base}, "seed")
+
+    t1 = lake.transaction("main", author="reader")
+    t1.read("events")
+    t1.write("summary", {"n": np.array([4], dtype=np.int64)})
+    t2 = lake.transaction("main", author="writer")
+    t2.write("events", {"v": np.arange(9, dtype=np.int64)}, append=True)
+    t2.commit("concurrent append")
+    with pytest.raises(TransactionConflict):
+        t1.commit("stale summary")
+
+
+def test_many_writers_same_table_all_land(tmp_path):
+    import threading
+
+    lake = Lake(tmp_path / "lake", protect_main=False)
+    base = lake.io.write_snapshot({"v": np.arange(4, dtype=np.int64)})
+    lake.catalog.commit("main", {"events": base}, "seed")
+    errors = []
+
+    def writer(i):
+        try:
+            txn = lake.transaction("main", author=f"w{i}")
+            txn.write("events",
+                      {"v": np.arange(i * 100, i * 100 + 10,
+                                      dtype=np.int64)}, append=True)
+            txn.commit(f"w{i}")
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    assert lake.catalog.txn_stats["conflicts"] == 0
+    out = lake.read_table("main", "events")["v"]
+    assert out.shape[0] == 4 + 6 * 10  # zero lost updates
