@@ -24,6 +24,24 @@ with ``compress_wire=False`` — and checks:
   * the two remotes are bit-identical (no digest drift: every closure
     digest decodes to identical content on both).
 
+**Delta frames** (wire-speed PR): a checkpoint-to-checkpoint push — v2
+differs from v1 by a small contiguous slice of each weight table — ships
+content-defined chunk recipes instead of whole frames.  The benchmark
+pushes v1, mutates ~4% of each table, then pushes the v2 increment twice
+(delta on / delta off) through byte-counting transports, and checks:
+
+  * the delta push moves ≤ ``MAX_DELTA_RATIO`` (0.2x) of the whole-frame
+    wire bytes for the same increment;
+  * the destination stores are **bit-identical** (every closure digest
+    decodes to the same bytes on both — recipes are rebuilt and
+    digest-verified on the receiver, so delta can never drift).
+
+**Multipart + ranged transfer** (same PR): large blobs cross the S3
+dialect as part-sized pieces both ways.  The smoke leg pushes a blob well
+over a toy ``multipart_threshold`` through the in-process stub, reads it
+back through the ranged-GET path, and checks bit-identical round-trip with
+zero orphaned multipart state.
+
 Usage: PYTHONPATH=src python -m benchmarks.bench_sync
 """
 
@@ -45,6 +63,12 @@ JOBS_CONCURRENT = 4     # modest pool: the win must not need many cores
 N_TENSOR_TABLES = 24    # wire-compression leg: fewer, fatter tensorfiles
 TENSOR_ROWS = 8192      # compressible float32 payloads, ~32 KiB each
 MAX_WIRE_RATIO = 0.8    # compressed wire bytes must be ≤ 80% of raw
+N_CKPT_TABLES = 6       # delta leg: weight-checkpoint-shaped tables
+CKPT_ROWS = 65536       # 256 KiB float32 each, incompressible random
+MUTATE_FRAC = 0.04      # v2 touches a contiguous ~4% slice per table
+MAX_DELTA_RATIO = 0.2   # delta push wire bytes vs whole-frame push
+MP_BLOB_BYTES = 1 << 20      # multipart smoke: one 1 MiB random blob
+MP_PART_BYTES = 96 << 10     # toy part size so several parts fly
 
 
 class LatencyTransport:
@@ -138,6 +162,117 @@ def timed_push(lake: Lake, remote_root: Path, jobs: int):
     return wall, report, store, transport.requests
 
 
+def build_ckpt_lake(root: Path) -> Lake:
+    """Weight-checkpoint-shaped branch: incompressible random float32
+    tables (white noise is the adversarial case for frame compression, so
+    any wire win here is delta's alone)."""
+    lake = Lake(root, protect_main=False)
+    rng = np.random.default_rng(7)
+    snaps = {}
+    for i in range(N_CKPT_TABLES):
+        snaps[f"w{i:02d}"] = lake.io.write_snapshot(
+            {"w": rng.normal(size=CKPT_ROWS).astype(np.float32)})
+    lake.catalog.commit("main", snaps, "ckpt v1", _wap_token=True)
+    lake.catalog.create_branch("bench.ckpt", "main", author="bench")
+    return lake
+
+
+def mutate_ckpt(lake: Lake) -> None:
+    """v2 checkpoint: a contiguous ~MUTATE_FRAC slice of each table moves
+    (the optimizer-step shape: most weights drift little, a band changes)."""
+    rng = np.random.default_rng(8)
+    snaps = {}
+    for name in sorted(lake.catalog.tables("bench.ckpt")):
+        cols = lake.read_table("bench.ckpt", name)
+        w = np.array(cols["w"])
+        n = max(1, int(len(w) * MUTATE_FRAC))
+        start = int(rng.integers(0, len(w) - n))
+        w[start:start + n] = rng.normal(size=n).astype(np.float32)
+        snaps[name] = lake.io.write_snapshot({"w": w})
+    lake.catalog.commit("bench.ckpt", snaps, "ckpt v2", author="bench")
+
+
+def delta_push_leg(tmp: Path) -> None:
+    lake = build_ckpt_lake(tmp / "ckpt_lake")
+
+    remotes = {}
+    for mode, use_delta in (("delta", True), ("whole", False)):
+        store = ObjectStore(tmp / f"ckpt_remote_{mode}")
+        transport = ByteCountingTransport(
+            LoopbackTransport(RemoteServer(store)))
+        remote = RemoteStore(transport)
+        remotes[mode] = (store, transport, remote, use_delta)
+        # v1 lands whole either way (nothing to delta against)
+        push(lake.store, remote, "bench.ckpt", jobs=JOBS_CONCURRENT,
+             cache_entries=False, runs=False, delta_frames=use_delta)
+
+    mutate_ckpt(lake)
+    head = lake.catalog.head("bench.ckpt")
+    closure = commit_closure(lake.store, head)
+
+    v2_wire = {}
+    reports = {}
+    for mode, (store, transport, remote, use_delta) in remotes.items():
+        before = transport.total
+        reports[mode] = push(lake.store, remote, "bench.ckpt",
+                             jobs=JOBS_CONCURRENT, cache_entries=False,
+                             runs=False, delta_frames=use_delta)
+        v2_wire[mode] = transport.total - before
+
+    delta_store, whole_store = remotes["delta"][0], remotes["whole"][0]
+    assert sorted(delta_store.iter_objects()) == \
+        sorted(whole_store.iter_objects()), "remotes diverged"
+    assert set(delta_store.iter_objects()) >= closure
+    for digest in sorted(closure):
+        assert delta_store.get(digest) == whole_store.get(digest)
+    assert delta_store.get_ref("branch=bench.ckpt") == head
+    assert reports["delta"].bytes_delta_saved > 0
+    assert reports["whole"].bytes_delta_saved == 0
+
+    ratio = v2_wire["delta"] / v2_wire["whole"]
+    emit("sync/ckpt_whole_frame_bytes", v2_wire["whole"],
+         f"tables={N_CKPT_TABLES};mutated={MUTATE_FRAC}")
+    emit("sync/ckpt_delta_bytes", v2_wire["delta"],
+         f"tables={N_CKPT_TABLES};mutated={MUTATE_FRAC};"
+         f"ratio={ratio:.3f};saved={reports['delta'].bytes_delta_saved}")
+    print(f"delta: ckpt v2 whole_wire={v2_wire['whole']} "
+          f"delta_wire={v2_wire['delta']} ratio={ratio:.3f} "
+          f"saved={reports['delta'].bytes_delta_saved}", flush=True)
+    assert ratio <= MAX_DELTA_RATIO, \
+        (f"delta push moved {ratio:.3f}x of whole-frame wire bytes "
+         f"(need <= {MAX_DELTA_RATIO})")
+
+
+def multipart_leg(tmp: Path) -> None:
+    from repro.core import serve_s3, sha256_hex
+    from repro.core.s3 import S3Backend
+
+    httpd, url = serve_s3(tmp / "mp_bucket")
+    try:
+        backend = S3Backend.from_url(url, multipart_threshold=MP_PART_BYTES,
+                                     part_size=MP_PART_BYTES)
+        blob = np.random.default_rng(9).integers(
+            0, 256, size=MP_BLOB_BYTES, dtype=np.uint8).tobytes()
+        t0 = time.perf_counter()
+        digest = backend.put(blob)          # multipart upload path
+        up_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        back = backend.get(digest)          # ranged GET path
+        down_s = time.perf_counter() - t0
+        assert back == blob and digest == sha256_hex(blob)
+        assert not httpd.uploads, "orphaned multipart upload state"
+        backend.close()
+        emit("sync/multipart_upload", up_s * 1e6,
+             f"bytes={MP_BLOB_BYTES};part={MP_PART_BYTES}")
+        emit("sync/ranged_get", down_s * 1e6,
+             f"bytes={MP_BLOB_BYTES};part={MP_PART_BYTES}")
+        print(f"multipart: {MP_BLOB_BYTES} bytes in {MP_PART_BYTES}-byte "
+              f"parts up={up_s*1e3:.0f}ms down={down_s*1e3:.0f}ms "
+              f"round-trip ok", flush=True)
+    finally:
+        httpd.shutdown()
+
+
 def main():
     with tempfile.TemporaryDirectory() as tmp:
         tmp = Path(tmp)
@@ -210,6 +345,12 @@ def main():
         assert ratio <= MAX_WIRE_RATIO, \
             (f"compressed frames moved {ratio:.2f}x of raw wire bytes "
              f"(need <= {MAX_WIRE_RATIO})")
+
+        # --------------------------------------------------- delta frames
+        delta_push_leg(tmp)
+
+        # ------------------------------------------ multipart + ranged GET
+        multipart_leg(tmp)
 
 
 if __name__ == "__main__":

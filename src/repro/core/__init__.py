@@ -35,8 +35,9 @@ from .store import (GC_GENERATION_REF, ObjectStore, StoreBackend,
                     bump_generation, decode_frame, encode_frame,
                     ensure_generation, frame_raw, read_generation,
                     sha256_hex)
+from .sigv4 import Credentials, SigV4Signer
 from .sync import (MultiSyncReport, SyncReport, clone, commit_closure, pull,
-                   pull_refs, push, push_refs)
+                   pull_refs, push, push_fanout, push_refs)
 from .table import (ManifestEntry, ManifestFile, Snapshot, TableIO,
                     zone_may_match)
 from .tensorfile import ColumnSpec, Schema
@@ -117,7 +118,8 @@ __all__ = [
     "RemoteStore", "RemoteServer", "TieredStore", "LoopbackTransport",
     "HTTPTransport", "S3Backend", "serve_s3", "connect", "serve_http",
     "push", "pull", "clone",
-    "push_refs", "pull_refs", "SyncReport", "MultiSyncReport",
+    "push_refs", "pull_refs", "push_fanout", "SyncReport", "MultiSyncReport",
+    "Credentials", "SigV4Signer",
     "commit_closure", "remote_tracking_ref", "remote_tracking_tag_ref",
     "decode_frame", "encode_frame", "frame_raw",
     "Snapshot",

@@ -1,0 +1,267 @@
+"""Delta frames: content-defined chunking so a push resends only what changed.
+
+Checkpoint-to-checkpoint pushes are the motivating workload (docs/tables.md):
+two successive weight snapshots usually share almost all of their bytes, but
+any single changed element gives the tensorfile a new content digest — so
+blob-level dedup (``has_many``) sees a brand-new object and ships the whole
+thing.  Delta frames recover the sharing *inside* a blob:
+
+1. the sender splits the raw content into **content-defined chunks** — cut
+   points chosen by a rolling hash of a small byte window, so an insert or
+   edit only disturbs the chunks it touches and the cut points re-synchronize
+   right after (a fixed-size grid would shift every boundary downstream);
+2. one ``has_chunks`` round-trip asks the receiver which chunk hashes it
+   already holds (the receiver keeps a bounded :class:`ChunkIndex` over the
+   large blobs it has seen arrive);
+3. the blob crosses the wire as a **recipe** — literal runs for missing
+   chunks, ``(chunk hash)`` references for present ones — and the receiver
+   reassembles, re-hashes every referenced chunk, verifies the whole blob's
+   digest, and stores it like any other put.
+
+Everything here is deterministic (the gear table is derived from sha-256 of
+fixed strings, never from process randomness), so two hosts always agree on
+chunk boundaries — the property the hypothesis suite in
+``tests/test_delta_frames.py`` pins, along with bit-identical reassembly
+under random insert/delete/edit mutations.
+
+The wire ops live in :mod:`repro.core.remote` (``has_chunks`` /
+``put_objects_delta``) and are negotiated per hop: a server that predates
+them answers "unknown op" once and the sender downgrades to whole-frame
+transfer for the rest of the sync (same pattern as the encoded-payload ops).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
+
+import numpy as np
+
+from .errors import ObjectNotFound
+
+#: default chunking geometry.  ``avg`` must be a power of two (the cut
+#: condition masks the rolling hash with ``avg - 1``); expected chunk size
+#: is roughly ``min + avg``.  Shared by sender and receiver so the index
+#: built on arrival matches the boundaries the next push computes.
+MIN_CHUNK = 2048
+AVG_CHUNK = 8192
+MAX_CHUNK = 65536
+
+#: blobs below this raw size are never chunked/delta'd — the recipe and
+#: has_chunks overhead would exceed the possible saving
+DELTA_MIN_BYTES = 32768
+
+_WINDOW = 48  # rolling-hash window: edits further apart than this re-sync
+
+#: per-op wire overhead charged for a chunk reference in recipe accounting
+#: (64-hex hash + msgpack framing); literal runs are charged at byte length
+REF_WIRE_COST = 72
+
+
+def _gear_table() -> "np.ndarray":
+    """256 pseudo-random 64-bit values, derived deterministically so every
+    host computes identical cut points."""
+    table = np.empty(256, dtype=np.uint64)
+    for i in range(256):
+        digest = hashlib.sha256(b"repro-delta-gear-%d" % i).digest()
+        table[i] = int.from_bytes(digest[:8], "big")
+    return table
+
+
+_GEAR = _gear_table()
+
+
+def chunk_spans(data: bytes, *, min_size: int = MIN_CHUNK,
+                avg_size: int = AVG_CHUNK,
+                max_size: int = MAX_CHUNK) -> List[Tuple[int, int]]:
+    """Content-defined ``(offset, length)`` partition of ``data``.
+
+    A position is a candidate cut when the windowed rolling hash of the
+    preceding ``_WINDOW`` bytes lands on zero under the ``avg_size - 1``
+    mask (so cuts depend only on nearby content, giving ~1 cut per
+    ``avg_size`` bytes); candidates closer than ``min_size`` to the
+    previous cut are skipped and runs longer than ``max_size`` are force-
+    cut on a fixed grid.  The spans are contiguous and cover ``data``
+    exactly — reassembly by concatenation is the identity."""
+    n = len(data)
+    if n == 0:
+        return []
+    if avg_size & (avg_size - 1):
+        raise ValueError(f"avg_size must be a power of two, got {avg_size}")
+    if n <= min_size or n <= _WINDOW:
+        return [(0, n)]
+    mapped = _GEAR[np.frombuffer(data, dtype=np.uint8)]
+    csum = np.cumsum(mapped, dtype=np.uint64)  # wraps mod 2**64, by design
+    rolling = csum[_WINDOW:] - csum[:-_WINDOW]
+    mask = np.uint64(avg_size - 1)
+    candidates = (np.nonzero((rolling & mask) == 0)[0] + _WINDOW).tolist()
+    spans: List[Tuple[int, int]] = []
+    start = 0
+    for cut in candidates:
+        while cut - start > max_size:
+            spans.append((start, max_size))
+            start += max_size
+        if cut - start < min_size:
+            continue
+        spans.append((start, cut - start))
+        start = cut
+    while n - start > max_size:
+        spans.append((start, max_size))
+        start += max_size
+    if n > start:
+        spans.append((start, n - start))
+    return spans
+
+
+def chunk_blob(data: bytes, **geometry) -> List[Tuple[str, int, int]]:
+    """``(chunk sha-256, offset, length)`` for every content-defined span."""
+    return [(hashlib.sha256(data[off:off + ln]).hexdigest(), off, ln)
+            for off, ln in chunk_spans(data, **geometry)]
+
+
+# -------------------------------------------------------------------- recipes
+#: recipe ops, msgpack-safe: ``["r", <bytes>]`` literal run, ``["c", <hash>]``
+#: reference to a chunk the receiver already holds
+RAW_OP = "r"
+REF_OP = "c"
+
+
+def build_recipe(data: bytes, chunks: Sequence[Tuple[str, int, int]],
+                 have: Set[str]) -> Tuple[List[list], int]:
+    """Turn ``data`` into a recipe against the receiver's ``have`` set.
+
+    Adjacent missing chunks coalesce into one literal run.  Returns
+    ``(recipe, wire_cost)`` where ``wire_cost`` is the literal bytes plus
+    :data:`REF_WIRE_COST` per reference — what the recipe costs to send,
+    compared against the whole frame before choosing the delta path."""
+    recipe: List[list] = []
+    cost = 0
+    raw_start: Optional[int] = None
+    raw_end = 0
+
+    def flush() -> None:
+        nonlocal raw_start, cost
+        if raw_start is not None:
+            run = data[raw_start:raw_end]
+            recipe.append([RAW_OP, run])
+            cost += len(run)
+            raw_start = None
+
+    for chunk_hash, off, ln in chunks:
+        if chunk_hash in have:
+            flush()
+            recipe.append([REF_OP, chunk_hash])
+            cost += REF_WIRE_COST
+        else:
+            if raw_start is None:
+                raw_start = off
+            raw_end = off + ln
+    flush()
+    return recipe, cost
+
+
+def apply_recipe(recipe: Iterable[Sequence],
+                 resolve: Callable[[str], bytes]) -> bytes:
+    """Reassemble a recipe: literals verbatim, references through
+    ``resolve`` (which must return the exact chunk bytes — the caller
+    re-hashes).  Raises :class:`ObjectNotFound` on a malformed op so a
+    corrupt wire frame surfaces as a transfer failure, not a crash."""
+    parts: List[bytes] = []
+    for op in recipe:
+        if op[0] == RAW_OP:
+            parts.append(bytes(op[1]))
+        elif op[0] == REF_OP:
+            parts.append(resolve(op[1]))
+        else:
+            raise ObjectNotFound(f"delta recipe: unknown op {op[0]!r}")
+    return b"".join(parts)
+
+
+# ---------------------------------------------------------------- chunk index
+class ChunkIndex:
+    """Bounded chunk hash → ``(blob digest, offset, length)`` map a receiver
+    maintains over the large blobs it has stored.
+
+    The index is an *acceleration structure*, never a source of truth: a
+    lookup only tells the receiver where a chunk's bytes may be found in its
+    own store, and every resolved chunk is re-hashed before use — so a stale
+    entry (the blob was GC'd since) degrades to "chunk unavailable" and the
+    sender falls back to a whole frame for that blob.  LRU-bounded so a
+    long-lived server cannot grow it without limit; eviction likewise only
+    costs future delta efficiency, never correctness."""
+
+    def __init__(self, max_entries: int = 1 << 16):
+        self.max_entries = max(1, max_entries)
+        self._map: "OrderedDict[str, Tuple[str, int, int]]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._map)
+
+    def add_blob(self, digest: str, data: bytes,
+                 chunks: Optional[Sequence[Tuple[str, int, int]]] = None
+                 ) -> int:
+        """Index every chunk of ``data`` (chunked here unless the caller
+        already did).  Returns the number of chunks indexed."""
+        if chunks is None:
+            chunks = chunk_blob(data)
+        with self._lock:
+            for chunk_hash, off, ln in chunks:
+                # move-to-end on re-add: recently seen chunks stay resident
+                self._map.pop(chunk_hash, None)
+                self._map[chunk_hash] = (digest, off, ln)
+            while len(self._map) > self.max_entries:
+                self._map.popitem(last=False)
+        return len(chunks)
+
+    def lookup(self, chunk_hash: str) -> Optional[Tuple[str, int, int]]:
+        with self._lock:
+            loc = self._map.get(chunk_hash)
+            if loc is not None:
+                self._map.move_to_end(chunk_hash)
+            return loc
+
+    def has(self, hashes: Iterable[str]) -> Set[str]:
+        with self._lock:
+            return {h for h in hashes if h in self._map}
+
+    def forget_blob(self, digest: str) -> int:
+        """Drop every entry pointing into ``digest`` (called when a sweep
+        deletes the blob, so lookups stop chasing freed bytes)."""
+        with self._lock:
+            stale = [h for h, (d, _o, _l) in self._map.items() if d == digest]
+            for h in stale:
+                del self._map[h]
+        return len(stale)
+
+
+def assemble(recipe: Iterable[Sequence], index: ChunkIndex,
+             read_blob: Callable[[str], bytes],
+             blob_cache: Optional[Dict[str, bytes]] = None) -> bytes:
+    """Receiver-side reassembly: resolve each referenced chunk through the
+    index and the local store, re-hash it (the index is untrusted), and
+    concatenate.  Raises :class:`ObjectNotFound` when a referenced chunk is
+    no longer resolvable — the sender retries that blob whole-frame."""
+    cache = blob_cache if blob_cache is not None else {}
+
+    def resolve(chunk_hash: str) -> bytes:
+        loc = index.lookup(chunk_hash)
+        if loc is None:
+            raise ObjectNotFound(f"chunk {chunk_hash[:12]} not indexed")
+        digest, off, ln = loc
+        data = cache.get(digest)
+        if data is None:
+            data = read_blob(digest)  # ObjectNotFound propagates (stale)
+            cache[digest] = data
+        piece = data[off:off + ln]
+        if hashlib.sha256(piece).hexdigest() != chunk_hash:
+            raise ObjectNotFound(
+                f"chunk {chunk_hash[:12]}: index points at mismatching "
+                "bytes")
+        return piece
+
+    return apply_recipe(recipe, resolve)

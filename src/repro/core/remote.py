@@ -22,6 +22,16 @@ Three pieces:
                           payloads (compressed wire frames)
         put_objects_…     …_encoded: batched PutObject of framed payloads
                           (decoded + digest-verified server-side)
+        has_chunks        chunk-level HeadObject: which content-defined
+                          chunk hashes the server can already resolve
+                          (bounded index over its own large blobs)
+        put_objects_delta batched PutObject of delta *recipes* — literal
+                          runs + references to chunks the server already
+                          holds; reassembled, re-hashed per chunk and
+                          digest-verified server-side.  Unresolvable
+                          references answer "stale", never an error: the
+                          client re-sends those blobs whole-frame
+                          (see repro.core.delta)
         delete_object     DeleteObject (remote-side GC sweep; clients
                           must opt in with allow_delete=True)
         stat_object       HeadObject (size + Last-Modified — what the
@@ -65,6 +75,7 @@ from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
 
 import msgpack
 
+from . import delta as _delta
 from .errors import (AmbiguousRefUpdate, CodecUnavailable, ObjectNotFound,
                      RefConflict, RefNotFound, RemoteError, ReproError)
 from .store import (ObjectStore, StoreBackend, decode_frame, frame_raw,
@@ -104,6 +115,11 @@ class RemoteServer:
         self._gc_marks: Dict[str, set] = {}
         self._gc_nonce = 0
         self._gc_lock = threading.Lock()
+        # chunk hash → location over this server's large blobs: what lets
+        # a sender ship delta recipes instead of whole frames.  Purely an
+        # accelerator (bounded LRU, every hit re-verified) — an empty or
+        # stale index costs wire bytes, never correctness.
+        self.chunks = _delta.ChunkIndex()
 
     _GC_MARK_REF_PREFIX = "gc/mark/"
     _GC_MARK_KEEP = 4
@@ -163,6 +179,12 @@ class RemoteServer:
         return _pack(self.handle(request))
 
     # objects -----------------------------------------------------------
+    def _index_blob(self, digest: str, data: bytes) -> None:
+        """Feed the chunk index on arrival — only blobs big enough that a
+        future delta against them could beat a whole frame."""
+        if len(data) >= _delta.DELTA_MIN_BYTES:
+            self.chunks.add_blob(digest, data)
+
     def _op_put_object(self, req):
         data = req["data"]
         digest = req["digest"]
@@ -170,7 +192,9 @@ class RemoteServer:
             return {"error": "bad_request",
                     "message": f"content does not hash to {digest}"}
         # idempotent: ObjectStore.put dedups on existing digests
-        return {"digest": self.store.put(data)}
+        got = self.store.put(data)
+        self._index_blob(digest, data)
+        return {"digest": got}
 
     def _op_get_object(self, req):
         return {"data": self.store.get(req["digest"])}
@@ -190,6 +214,7 @@ class RemoteServer:
                 return {"error": "bad_request",
                         "message": f"content does not hash to {digest}"}
             digests.append(self.store.put(data))
+            self._index_blob(digest, data)
         return {"digests": digests}
 
     def _op_get_objects_encoded(self, req):
@@ -203,19 +228,61 @@ class RemoteServer:
         return {"objects": [[d, get_encoded(d)] for d in req["digests"]]}
 
     def _op_put_objects_encoded(self, req):
-        put_encoded = getattr(self.store, "put_encoded", None)
+        # decode HERE (server-side verification was always part of this
+        # op's contract) so the raw bytes can also feed the chunk index —
+        # these are exactly the blobs a follow-up checkpoint push will
+        # want to delta against
+        put_many_encoded = getattr(self.store, "put_many_encoded", None)
         digests = []
         for digest, payload in req["objects"]:
-            if put_encoded is not None:
-                got = put_encoded(payload)  # decodes + verifies server-side
+            data = decode_frame(payload, what="encoded payload")
+            if sha256_hex(data) != digest:
+                return {"error": "bad_request",
+                        "message": f"payload does not hash to {digest}"}
+            if put_many_encoded is not None:
+                # store the original frame (compression already paid at
+                # the source); the digest hint skips stores' re-decode
+                # where they honor it
+                got = put_many_encoded([payload], digests=[digest])[0]
             else:
-                data = decode_frame(payload, what="encoded payload")
                 got = self.store.put(data)
             if got != digest:
                 return {"error": "bad_request",
-                        "message": f"payload does not hash to {digest}"}
+                        "message": f"store acknowledged {got}, "
+                                   f"expected {digest}"}
+            self._index_blob(digest, data)
             digests.append(got)
         return {"digests": digests}
+
+    def _op_has_chunks(self, req):
+        # chunk-level has_many: the one round-trip that decides how much
+        # of each blob a delta push can leave out
+        return {"present": sorted(self.chunks.has(req["hashes"]))}
+
+    def _op_put_objects_delta(self, req):
+        # batched delta put: reassemble each recipe against the chunk
+        # index + our own store, verify chunk-by-chunk AND whole-blob,
+        # store like any other put.  A reference we can no longer resolve
+        # (evicted index entry, GC'd blob) makes that blob "stale" — the
+        # client re-sends it whole-frame; it is never an error.
+        digests: List[str] = []
+        stale: List[str] = []
+        blob_cache: Dict[str, bytes] = {}
+        for digest, recipe in req["objects"]:
+            try:
+                data = _delta.assemble(recipe, self.chunks, self.store.get,
+                                       blob_cache)
+            except ObjectNotFound:
+                stale.append(digest)
+                continue
+            if sha256_hex(data) != digest:
+                return {"error": "bad_request",
+                        "message": f"delta recipe does not reassemble "
+                                   f"to {digest}"}
+            self.store.put(data)
+            self._index_blob(digest, data)
+            digests.append(digest)
+        return {"digests": digests, "stale": stale}
 
     def _op_delete_object(self, req):
         # remote-side GC sweep (repro gc --remote): the only mutation of
@@ -482,6 +549,9 @@ _RETRYABLE_OPS = frozenset({
     "put_object", "get_object", "head_objects", "list_objects",
     "get_objects", "put_objects",
     "get_objects_encoded", "put_objects_encoded", "delete_object",
+    # delta ops are idempotent too: has_chunks reads, and re-applying a
+    # delta put re-stores the same content-addressed blobs
+    "has_chunks", "put_objects_delta",
     "size_object", "stat_object", "touch_objects", "get_ref", "set_ref",
     "delete_ref", "list_refs",
     # gc_mark re-marks from scratch on retry (the superseded mark is
@@ -517,6 +587,8 @@ class RemoteStore:
         self.allow_delete = allow_delete
         #: None = unknown, False = server predates the encoded wire ops
         self._encoded_ops: Optional[bool] = None
+        #: None = unknown, False = server predates the delta wire ops
+        self._delta_ops: Optional[bool] = None
 
     # ------------------------------------------------------------ plumbing
     def _call(self, op: str, **kwargs) -> Dict[str, Any]:
@@ -752,6 +824,63 @@ class RemoteStore:
                 "put_objects_encoded: server acknowledged different "
                 "digests than were sent")
         return digests
+
+    # ------------------------------------------------------- delta frames
+    def _supports_delta(self) -> bool:
+        """False once the server has answered "unknown op" for a delta op.
+        Unlike the encoded-payload downgrade (which must redo the transfer
+        raw, so it raises), delta degrades SILENTLY: a whole-frame put was
+        always going to happen anyway, the delta path only tries to shrink
+        it first."""
+        return self._delta_ops is not False
+
+    def has_chunks(self, hashes: Sequence[str]) -> Set[str]:
+        """Which content-defined chunk hashes the server can resolve.
+        Empty set against an old server (after one "unknown op" probe) —
+        the sender then finds nothing to reference and ships whole frames,
+        which is exactly the downgrade semantics we want."""
+        hashes = list(hashes)
+        if not hashes or not self._supports_delta():
+            return set()
+        try:
+            reply = self._call("has_chunks", hashes=hashes)
+        except RemoteError as e:
+            if self._is_unknown_op(e):
+                self._delta_ops = False
+                return set()
+            raise
+        self._delta_ops = True
+        return set(reply["present"])
+
+    def put_objects_delta(self, items: Sequence[Tuple[str, list]]
+                          ) -> Tuple[List[str], List[str]]:
+        """Batched delta put → ``(stored digests, stale digests)``.
+
+        Stale = the server could no longer resolve a referenced chunk
+        (index eviction / concurrent GC); the caller re-sends those blobs
+        whole-frame.  Against an old server every blob is reported stale —
+        same re-send path, no special casing."""
+        items = list(items)
+        if not items:
+            return [], []
+        if not self._supports_delta():
+            return [], [d for d, _r in items]
+        try:
+            reply = self._call("put_objects_delta",
+                               objects=[[d, r] for d, r in items])
+        except RemoteError as e:
+            if self._is_unknown_op(e):
+                self._delta_ops = False
+                return [], [d for d, _r in items]
+            raise
+        stored = list(reply["digests"])
+        stale = list(reply.get("stale") or [])
+        sent = {d for d, _r in items}
+        if not set(stored) | set(stale) >= sent:
+            raise RemoteError(
+                "put_objects_delta: server reply does not account for "
+                "every blob sent")
+        return stored, stale
 
     def list_objects(self, *, page_token: Optional[str] = None,
                      limit: int = 1000

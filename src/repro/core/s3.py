@@ -41,19 +41,39 @@ A transport fault *during* a conditional write raises
 :class:`~repro.core.errors.AmbiguousRefUpdate` (the write may have landed;
 see docs/remote_store.md), never a plain failure.
 
-Against a real S3/GCS endpoint only auth signing is missing (out of scope
-here); ``tests/``'s :mod:`repro.core.s3stub` serves the same dialect from
-the stdlib so the whole stack is testable with zero new dependencies.
+Real-endpoint readiness (docs/remote_store.md "Wire speed"):
+
+* **SigV4 signing** — when credentials are present (keyword, URL userinfo,
+  or ``AWS_ACCESS_KEY_ID``/``AWS_SECRET_ACCESS_KEY``), every request
+  carries an ``Authorization`` header computed by
+  :class:`~repro.core.sigv4.SigV4Signer`; the stub's verification mode
+  proves the canonical-request math in CI.
+* **Retryable 5xx** — 500/502/503/504 (S3 ``SlowDown`` throttling) retry
+  with capped jittered backoff, but ONLY for idempotent requests: a
+  conditional write is never blindly replayed, preserving the
+  ``AmbiguousRefUpdate`` contract.
+* **Multipart + ranged transfer** — payloads at or above
+  ``multipart_threshold`` upload via initiate/part/complete (part-level
+  retry for free since part PUTs are idempotent; any failure aborts the
+  upload server-side so no orphaned parts accrue) and download via ranged
+  GETs (a ``Range``-first probe: a 200 means the server ignored the header
+  and sent everything — the clean downgrade path).
+
+``tests/``'s :mod:`repro.core.s3stub` serves the same dialect from the
+stdlib so the whole stack is testable with zero new dependencies.
 """
 
 from __future__ import annotations
 
+import random
 import threading
+import time
 import urllib.parse
 import xml.etree.ElementTree as ET
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
+from . import sigv4
 from .errors import (AmbiguousRefUpdate, ObjectNotFound, RefConflict,
                      RefNotFound, RemoteError)
 from .store import decode_frame, encode_frame, sha256_hex
@@ -61,6 +81,11 @@ from .store import decode_frame, encode_frame, sha256_hex
 _OBJ_PREFIX = "objects/"
 _REF_PREFIX = "refs/"
 _CAS_ATTEMPTS = 4  # re-read/retry rounds before a contended CAS gives up
+
+#: response statuses worth retrying (transient server-side): 500 internal,
+#: 502/504 gateway, 503 SlowDown — S3's throttling signal
+_RETRYABLE_STATUS = frozenset({500, 502, 503, 504})
+_BACKOFF_CAP = 2.0  # seconds; per-sleep ceiling for the jittered backoff
 
 
 def _object_key(digest: str) -> str:
@@ -99,31 +124,64 @@ class S3Backend:
 
     def __init__(self, endpoint: str, bucket: str, *, timeout: float = 30.0,
                  retries: int = 2, pool: int = 8, codec: str = "auto",
-                 level: int = 3):
+                 level: int = 3,
+                 credentials: Optional[sigv4.Credentials] = None,
+                 region: str = "us-east-1", style: str = "path",
+                 multipart_threshold: int = 8 << 20,
+                 part_size: int = 8 << 20,
+                 backoff: float = 0.1):
         parsed = urllib.parse.urlsplit(endpoint)
         if parsed.scheme not in ("http", "https"):
             raise ValueError(f"unsupported endpoint scheme {parsed.scheme!r}")
         if not bucket or "/" in bucket:
             raise ValueError(f"bad bucket name {bucket!r}")
+        if style not in ("path", "virtual"):
+            raise ValueError(f"addressing style must be 'path' or "
+                             f"'virtual', got {style!r}")
         self.endpoint = endpoint.rstrip("/")
         self.bucket = bucket
         self.scheme = parsed.scheme
-        self.host = parsed.hostname or "127.0.0.1"
+        endpoint_host = parsed.hostname or "127.0.0.1"
+        self.style = style
+        # virtual-host addressing (real S3 default): the bucket rides the
+        # hostname and drops out of the path; path style keeps /bucket/key
+        # (MinIO/stub spelling)
+        self.host = (f"{bucket}.{endpoint_host}" if style == "virtual"
+                     else endpoint_host)
         self.port = parsed.port or (443 if parsed.scheme == "https" else 80)
         self.timeout = timeout
         self.retries = retries
         self.pool = max(1, pool)
         self.codec = codec
         self.level = level
+        self.region = region
+        self.multipart_threshold = max(1, multipart_threshold)
+        self.part_size = max(1, part_size)
+        self.backoff = backoff
+        if credentials is None:
+            credentials = sigv4.Credentials.from_env()
+        self.credentials = credentials
+        self._signer = (sigv4.SigV4Signer(credentials, region=region)
+                        if credentials is not None else None)
+        # what http.client will put in the Host header (port elided when
+        # default for the scheme) — the signer must sign the exact bytes
+        default_port = 443 if self.scheme == "https" else 80
+        self._host_header = (self.host if self.port == default_port
+                             else f"{self.host}:{self.port}")
         self._local = threading.local()
         self._executor: Optional[ThreadPoolExecutor] = None
         self._executor_lock = threading.Lock()
 
     @classmethod
     def from_url(cls, url: str, **kw) -> "S3Backend":
-        """``s3://host:port/bucket`` → a backend over plain-HTTP (the stub
-        dialect; a signing layer for real S3 endpoints would slot in
-        here)."""
+        """``s3://[key:secret@]host[:port]/bucket[?region=R&style=S&secure=1]``
+        → a configured backend.
+
+        Credential precedence: explicit ``credentials=`` keyword, then URL
+        userinfo, then the standard ``AWS_*`` environment variables (the
+        constructor's fallback); no credentials anywhere → unsigned
+        requests (the stub's default mode).  ``secure=1`` selects HTTPS
+        (real endpoints); default is plain HTTP (stub/MinIO-in-CI)."""
         parsed = urllib.parse.urlsplit(url)
         if parsed.scheme != "s3":
             raise ValueError(f"not an s3 URL: {url!r}")
@@ -132,7 +190,19 @@ class S3Backend:
             raise ValueError(f"s3 URL missing a bucket: {url!r}")
         host = parsed.hostname or "127.0.0.1"
         port = f":{parsed.port}" if parsed.port else ""
-        return cls(f"http://{host}{port}", bucket, **kw)
+        params = dict(urllib.parse.parse_qsl(parsed.query,
+                                             keep_blank_values=True))
+        if "region" in params:
+            kw.setdefault("region", params["region"])
+        if "style" in params:
+            kw.setdefault("style", params["style"])
+        if kw.get("credentials") is None and parsed.username:
+            kw["credentials"] = sigv4.Credentials(
+                access_key=urllib.parse.unquote(parsed.username),
+                secret_key=urllib.parse.unquote(parsed.password or ""))
+        scheme = ("https" if params.get("secure", "").lower()
+                  in ("1", "true", "yes") else "http")
+        return cls(f"{scheme}://{host}{port}", bucket, **kw)
 
     # ----------------------------------------------------------- plumbing
     def _conn(self):
@@ -154,6 +224,13 @@ class S3Backend:
             finally:
                 self._local.conn = None
 
+    def _sleep_backoff(self, attempt: int) -> None:
+        """Capped exponential backoff with full jitter — the polite
+        response to a throttling 503 (a synchronized immediate retry from
+        a whole fan-out pool is exactly what SlowDown asks us to stop)."""
+        delay = min(_BACKOFF_CAP, self.backoff * (2 ** attempt))
+        time.sleep(delay * random.random())
+
     def _request(self, method: str, key: str, *, body: Optional[bytes] = None,
                  headers: Optional[Dict[str, str]] = None,
                  query: Optional[Dict[str, str]] = None,
@@ -161,38 +238,73 @@ class S3Backend:
         """One REST round-trip → ``(status, headers, body)``.
 
         Idempotent requests (everything except conditional writes) retry
-        on transport faults; a conditional write that faults mid-flight
-        raises :class:`AmbiguousRefUpdate` because the server may have
-        applied it."""
+        on transport faults AND on retryable 5xx responses (500/502/503/504
+        — S3 throttling serves ``503 SlowDown``) with capped jittered
+        backoff.  A conditional write is never blindly replayed: a
+        transport fault mid-flight raises :class:`AmbiguousRefUpdate`
+        because the server may have applied it, and a 5xx *response*
+        (the server answered — the write was not applied) surfaces to the
+        caller unretried."""
         # percent-encode the key (the server decodes): ref names may carry
         # spaces/%/?/# — sent raw they would break http.client, truncate at
-        # the query separator, or alias with their decoded spelling
-        path = "/" + self.bucket + (
-            "/" + urllib.parse.quote(key, safe="/") if key else "")
-        if query:
-            path += "?" + urllib.parse.urlencode(query)
+        # the query separator, or alias with their decoded spelling.  The
+        # SigV4 canonical-URI rule is "single-encode, sign what you send",
+        # so the signer sees this exact string.
+        key_path = "/" + sigv4.canonical_quote(key, safe="/") if key else ""
+        if self.style == "virtual":
+            path = key_path or "/"
+        else:
+            path = "/" + self.bucket + key_path
+        query_pairs = sorted((query or {}).items())
+        # canonical query encoding on the wire == what gets signed; also
+        # round-trips continuation tokens with spaces/%/# intact (urlencode
+        # would spell a space '+', which SigV4 never does)
+        query_string = sigv4.canonical_query(query_pairs)
+        target = path + ("?" + query_string if query_string else "")
         attempts = 1 + (self.retries if idempotent else 0)
         last: Optional[Exception] = None
-        for _ in range(attempts):
+        last_status: Optional[int] = None
+        result = None
+        for attempt in range(attempts):
+            result = None
+            send_headers = dict(headers or {})
+            if self._signer is not None:
+                # re-signed per attempt: x-amz-date stays fresh across
+                # backoff sleeps
+                send_headers.update(self._signer.sign(
+                    method, self._host_header, path, query_pairs,
+                    body or b""))
             conn = self._conn()
             try:
-                conn.request(method, path, body=body, headers=headers or {})
+                conn.request(method, target, body=body,
+                             headers=send_headers)
                 resp = conn.getresponse()
                 data = resp.read()
                 # normalize header names: servers spell ETag/Etag/etag
                 # differently, and a missed version token would break CAS
-                return (resp.status,
-                        {k.lower(): v for k, v in resp.getheaders()}, data)
+                result = (resp.status,
+                          {k.lower(): v for k, v in resp.getheaders()}, data)
             except Exception as e:  # noqa: BLE001 - socket/http.client zoo
                 self._drop_conn()
                 last = e
+                continue
+            if (result[0] in _RETRYABLE_STATUS and idempotent
+                    and attempt + 1 < attempts):
+                last_status = result[0]
+                self._sleep_backoff(attempt)
+                continue
+            return result
+        if result is not None:
+            return result  # final attempt still 5xx: caller raises
         if not idempotent:
             raise AmbiguousRefUpdate(
                 f"{method} {key}: transport failed after a conditional "
                 f"write may have been delivered ({last!r}); ref state is "
                 "unknown — re-read to resolve") from last
+        detail = (f"HTTP {last_status}" if last_status is not None
+                  else repr(last))
         raise RemoteError(f"{method} {key}: transport failed after "
-                          f"{attempts} attempts ({last!r})") from last
+                          f"{attempts} attempts ({detail})") from last
 
     def close(self) -> None:
         self._drop_conn()
@@ -207,10 +319,7 @@ class S3Backend:
 
     def put(self, data: bytes) -> str:
         digest = sha256_hex(data)
-        status, _h, _b = self._request(
-            "PUT", _object_key(digest), body=self._encode(data))
-        if status not in (200, 201, 204):
-            raise RemoteError(f"put {digest}: HTTP {status}")
+        self._upload(_object_key(digest), self._encode(data), digest)
         return digest
 
     def get(self, digest: str) -> bytes:
@@ -310,23 +419,121 @@ class S3Backend:
             return False
         raise RemoteError(f"delete {digest}: HTTP {status}")
 
+    # ------------------------------------------------- large-blob transfer
+    def _upload(self, key: str, payload: bytes, what: str) -> None:
+        """Simple PUT below the multipart threshold, initiate/part/complete
+        at or above it."""
+        if len(payload) >= self.multipart_threshold:
+            self._put_multipart(key, payload, what)
+            return
+        status, _h, _b = self._request("PUT", key, body=payload)
+        if status not in (200, 201, 204):
+            raise RemoteError(f"put {what}: HTTP {status}")
+
+    def _put_multipart(self, key: str, payload: bytes, what: str) -> None:
+        """Multipart upload with abort-on-failure.
+
+        Part PUTs are idempotent (same bytes to the same part number), so
+        they ride ``_request``'s retry loop for free.  ANY failure after
+        initiation aborts the upload server-side — a crashed push must not
+        leave orphaned parts accruing storage charges."""
+        status, _h, body = self._request("POST", key, body=b"",
+                                         query={"uploads": ""})
+        if status != 200:
+            raise RemoteError(f"multipart initiate {what}: HTTP {status}")
+        upload_id = None
+        try:
+            root = ET.fromstring(body)
+        except ET.ParseError as e:
+            raise RemoteError(
+                f"multipart initiate {what}: malformed XML ({e})") from e
+        for el in root.iter():
+            if _local_name(el.tag) == "UploadId" and el.text:
+                upload_id = el.text.strip()
+                break
+        if not upload_id:
+            raise RemoteError(f"multipart initiate {what}: no UploadId")
+        try:
+            part_numbers: List[int] = []
+            for off in range(0, len(payload), self.part_size):
+                number = off // self.part_size + 1
+                status, _h, _b = self._request(
+                    "PUT", key, body=payload[off:off + self.part_size],
+                    query={"uploadId": upload_id,
+                           "partNumber": str(number)})
+                if status not in (200, 201, 204):
+                    raise RemoteError(
+                        f"multipart part {number} of {what}: HTTP {status}")
+                part_numbers.append(number)
+            complete = ("<CompleteMultipartUpload>" + "".join(
+                f"<Part><PartNumber>{n}</PartNumber></Part>"
+                for n in part_numbers) +
+                "</CompleteMultipartUpload>").encode()
+            status, _h, _b = self._request(
+                "POST", key, body=complete, query={"uploadId": upload_id})
+            if status != 200:
+                raise RemoteError(
+                    f"multipart complete {what}: HTTP {status}")
+        except BaseException:
+            try:  # best-effort abort: no orphaned parts
+                self._request("DELETE", key,
+                              query={"uploadId": upload_id})
+            except Exception:  # noqa: BLE001 - original error wins
+                pass
+            raise
+
+    @staticmethod
+    def _content_range_total(value: Optional[str]) -> Optional[int]:
+        """``bytes 0-99/1234`` → 1234 (None when absent/opaque)."""
+        if not value or "/" not in value:
+            return None
+        total = value.rsplit("/", 1)[1].strip()
+        return int(total) if total.isdigit() else None
+
     # -------------------------------------------------- encoded payloads
     def get_encoded(self, digest: str) -> bytes:
-        status, _h, body = self._request("GET", _object_key(digest))
+        """Framed payload fetch via ranged GET.
+
+        The first request carries ``Range: bytes=0-(part_size-1)`` as a
+        probe: a 200 means the server ignored the header and sent the
+        whole object (the downgrade path — old stubs, simple proxies); a
+        206 carries ``Content-Range`` naming the total, and the remainder
+        streams in sequential ``part_size`` ranges (each idempotent, so a
+        dropped connection re-fetches one range, not the whole blob).
+        Ranges are fetched on the calling thread — ``get_many_encoded``
+        already fans out per blob and nesting pools would deadlock."""
+        key = _object_key(digest)
+        status, headers, body = self._request(
+            "GET", key, headers={"Range": f"bytes=0-{self.part_size - 1}"})
         if status == 404:
             raise ObjectNotFound(digest)
-        if status != 200:
+        if status == 200:
+            return body  # server ignored Range: whole object in one go
+        if status != 206:
             raise RemoteError(f"get {digest}: HTTP {status}")
-        return body
+        total = self._content_range_total(headers.get("content-range"))
+        if total is None or total <= len(body):
+            return body
+        parts = [body]
+        got = len(body)
+        while got < total:
+            end = min(got + self.part_size, total) - 1
+            status, _h, chunk = self._request(
+                "GET", key, headers={"Range": f"bytes={got}-{end}"})
+            if status == 200:
+                return chunk  # downgraded mid-flight: full body came back
+            if status != 206 or not chunk:
+                raise RemoteError(
+                    f"get {digest}: ranged fetch at {got} → HTTP {status}")
+            parts.append(chunk)
+            got += len(chunk)
+        return b"".join(parts)
 
     def put_encoded(self, payload: bytes) -> str:
         # decode to learn + verify the digest, upload the ORIGINAL payload:
         # compression paid at the source is never re-paid here
         digest = sha256_hex(decode_frame(payload, what="encoded payload"))
-        status, _h, _b = self._request(
-            "PUT", _object_key(digest), body=payload)
-        if status not in (200, 201, 204):
-            raise RemoteError(f"put {digest}: HTTP {status}")
+        self._upload(_object_key(digest), payload, digest)
         return digest
 
     def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:

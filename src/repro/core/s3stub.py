@@ -12,11 +12,16 @@ Dialect (the subset of the S3 REST API the backend needs):
 
     GET    /<bucket>/<key>                     200 body + ETag +
                                                Last-Modified   | 404
+           Range: bytes=a-b                    206 + Content-Range | 416
     HEAD   /<bucket>/<key>                     200 headers     | 404
     PUT    /<bucket>/<key>                     200 + ETag
            If-Match: <etag>                    412 unless the current
                                                version matches
            If-None-Match: *                    412 unless the key is absent
+    PUT    /<bucket>/<key>?uploadId&partNumber 200 + part ETag
+    POST   /<bucket>/<key>?uploads             InitiateMultipartUpload XML
+    POST   /<bucket>/<key>?uploadId=U          complete: assemble + store
+    DELETE /<bucket>/<key>?uploadId=U          abort: drop buffered parts
     DELETE /<bucket>/<key>                     204 | 404
            If-Match: <etag>                    412 unless the current
                                                version matches
@@ -28,19 +33,45 @@ because ref semantics compare *values* (ABA on equal content is, by
 definition, not a conflict).  Conditional evaluation and the write/delete
 it guards happen under one server-side lock, which is what makes the
 backend's read-compare-conditional-write loop linearizable per key.
+
+Two opt-in test affordances:
+
+* ``credentials=`` turns on **SigV4 verification**: every request must carry
+  a valid ``Authorization`` header (verified via :func:`repro.core.sigv4.verify`
+  against the received bytes) or it is refused with 403 — CI proves the
+  client's canonical-request math without network access.  The returned URL
+  embeds the credentials so ``connect(url)`` signs transparently.
+* ``httpd.inject_faults(n, status=503)`` arms a **fault plan**: the next
+  ``n`` matching requests are answered with a retryable error (``SlowDown``
+  body, like real S3 throttling) before service resumes — the hook the
+  503-retry regression tests use.
+
+In-flight multipart uploads are buffered in memory and exposed as
+``httpd.uploads`` so tests can assert the abort path leaves no orphans.
 """
 
 from __future__ import annotations
 
 import hashlib
 import os
+import re
 import tempfile
 import threading
 from pathlib import Path
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
+from urllib.parse import quote
 from xml.sax.saxutils import escape
 
+from . import sigv4
+
 _MAX_KEYS_CAP = 1000
+
+_SLOWDOWN_BODY = (
+    b'<?xml version="1.0" encoding="UTF-8"?>'
+    b"<Error><Code>SlowDown</Code>"
+    b"<Message>Please reduce your request rate.</Message></Error>")
+
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
 
 
 def _etag(data: bytes) -> str:
@@ -125,25 +156,74 @@ def _list_xml(bucket: str, prefix: str, keys: List[str],
         f"{contents}</ListBucketResult>").encode()
 
 
+class _FaultPlan:
+    """Armed via ``httpd.inject_faults``: answer the next ``n`` matching
+    requests with an error status before returning to normal service."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: List[dict] = []
+        self.served = 0  # total faults actually injected (for assertions)
+
+    def arm(self, count: int, *, status: int = 503,
+            method: Optional[str] = None,
+            key_contains: Optional[str] = None) -> None:
+        with self._lock:
+            self._entries.append({"count": count, "status": status,
+                                  "method": method,
+                                  "key_contains": key_contains})
+
+    def take(self, method: str, key: str) -> Optional[int]:
+        """Status to inject for this request, or None to serve normally."""
+        with self._lock:
+            for entry in self._entries:
+                if entry["method"] and entry["method"] != method:
+                    continue
+                if entry["key_contains"] and entry["key_contains"] not in key:
+                    continue
+                if entry["count"] > 0:
+                    entry["count"] -= 1
+                    self.served += 1
+                    return entry["status"]
+        return None
+
+
 def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
-             bucket: str = "lake") -> Tuple[object, str]:
+             bucket: str = "lake",
+             credentials: Optional["sigv4.Credentials"] = None,
+             region: str = "us-east-1",
+             max_keys_cap: Optional[int] = None) -> Tuple[object, str]:
     """Serve ``root`` as one S3-dialect bucket on a daemon thread.
 
     Returns ``(httpd, url)`` where ``url`` is the ``s3://host:port/bucket``
     spelling :func:`repro.core.remote.connect` (and therefore
     ``repro remote add``/``clone``) accepts directly.  ``port=0`` picks a
     free port; call ``httpd.shutdown()`` to stop.
+
+    With ``credentials=`` the stub verifies SigV4 signatures on every
+    request (403 on failure) and the returned URL embeds the key pair so
+    clients built from it sign automatically.  ``max_keys_cap`` lowers the
+    server-side listing page cap (pagination stress tests).
     """
     import email.utils
     import http.server
     import urllib.parse
 
     tree = _BucketTree(root)
+    faults = _FaultPlan()
+    # in-flight multipart uploads: id -> {"key": str, "parts": {n: bytes}};
+    # in memory on purpose — an aborted upload must leave zero residue in
+    # the bucket tree, and tests assert this dict drains
+    uploads: Dict[str, dict] = {}
+    uploads_lock = threading.Lock()
+    upload_seq = [0]
 
     def _object_headers(key: str, data: bytes) -> dict:
         headers = {"ETag": _etag(data)}
         mtime = tree.mtime(key)
         if mtime is not None:
+            # IMF-fixdate, always GMT and always English month names —
+            # never strftime, whose %b depends on the process locale
             headers["Last-Modified"] = email.utils.formatdate(
                 mtime, usegmt=True)
         return headers
@@ -170,22 +250,114 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
                 return None
             return urllib.parse.unquote(parts[1]) if len(parts) == 2 else ""
 
+        def _query(self) -> Dict[str, str]:
+            # keep_blank_values: "?uploads" (no value) marks multipart
+            # initiation and must survive parsing
+            return dict(urllib.parse.parse_qsl(
+                urllib.parse.urlsplit(self.path).query,
+                keep_blank_values=True))
+
+        def _read_body(self) -> bytes:
+            length = int(self.headers.get("Content-Length", 0))
+            return self.rfile.read(length) if length else b""
+
+        def _gate(self, body: bytes) -> bool:
+            """Fault plan + signature verification.  Returns True when the
+            request was already answered (fault or 403)."""
+            key = self._key() or ""
+            status = faults.take(self.command, key)
+            if status is not None:
+                self._reply(status, _SLOWDOWN_BODY,
+                            {"Content-Type": "application/xml"})
+                return True
+            if credentials is not None:
+                try:
+                    sigv4.verify(self.command, self.path, dict(self.headers),
+                                 body, lambda access: credentials.secret_key
+                                 if access == credentials.access_key else None)
+                except sigv4.SignatureError as exc:
+                    self._reply(403, (
+                        '<?xml version="1.0" encoding="UTF-8"?>'
+                        "<Error><Code>SignatureDoesNotMatch</Code>"
+                        f"<Message>{escape(str(exc))}</Message></Error>"
+                    ).encode(), {"Content-Type": "application/xml"})
+                    return True
+            return False
+
         # ------------------------------------------------------- listing
         def _list(self) -> None:
-            query = dict(urllib.parse.parse_qsl(
-                urllib.parse.urlsplit(self.path).query))
+            query = self._query()
+            cap = max_keys_cap if max_keys_cap is not None else _MAX_KEYS_CAP
             prefix = query.get("prefix", "")
             start_after = query.get("start-after", "")
-            limit = min(int(query.get("max-keys", _MAX_KEYS_CAP) or 1),
-                        _MAX_KEYS_CAP)
+            limit = min(int(query.get("max-keys", cap) or 1), cap)
             keys = [k for k in tree.keys(prefix)
                     if not start_after or k > start_after]
             page, truncated = keys[:limit], len(keys) > limit
             self._reply(200, _list_xml(bucket, prefix, page, truncated),
                         {"Content-Type": "application/xml"})
 
+        # ----------------------------------------------------- multipart
+        def _initiate_upload(self, key: str) -> None:
+            with uploads_lock:
+                upload_seq[0] += 1
+                upload_id = f"upload-{upload_seq[0]:06d}"
+                uploads[upload_id] = {"key": key, "parts": {}}
+            self._reply(200, (
+                '<?xml version="1.0" encoding="UTF-8"?>'
+                "<InitiateMultipartUploadResult>"
+                f"<Bucket>{escape(bucket)}</Bucket><Key>{escape(key)}</Key>"
+                f"<UploadId>{upload_id}</UploadId>"
+                "</InitiateMultipartUploadResult>").encode(),
+                {"Content-Type": "application/xml"})
+
+        def _put_part(self, key: str, query: Dict[str, str],
+                      body: bytes) -> None:
+            upload_id = query["uploadId"]
+            part_number = int(query["partNumber"])
+            with uploads_lock:
+                upload = uploads.get(upload_id)
+                if upload is None or upload["key"] != key:
+                    self._reply(404)
+                    return
+                upload["parts"][part_number] = body
+            self._reply(200, b"", {"ETag": _etag(body)})
+
+        def _complete_upload(self, key: str, upload_id: str) -> None:
+            with uploads_lock:
+                upload = uploads.get(upload_id)
+                if upload is None or upload["key"] != key:
+                    self._reply(404)
+                    return
+                parts = upload["parts"]
+                data = b"".join(parts[n] for n in sorted(parts))
+                del uploads[upload_id]
+            try:
+                with tree.lock:
+                    tree.write(key, data)
+            except ValueError:
+                self._reply(400)
+                return
+            self._reply(200, (
+                '<?xml version="1.0" encoding="UTF-8"?>'
+                "<CompleteMultipartUploadResult>"
+                f"<Key>{escape(key)}</Key><ETag>{escape(_etag(data))}</ETag>"
+                "</CompleteMultipartUploadResult>").encode(),
+                {"Content-Type": "application/xml"})
+
+        def _abort_upload(self, key: str, upload_id: str) -> None:
+            with uploads_lock:
+                upload = uploads.get(upload_id)
+                if upload is None or upload["key"] != key:
+                    self._reply(404)
+                    return
+                del uploads[upload_id]
+            self._reply(204)
+
         # ------------------------------------------------------- methods
         def do_GET(self):  # noqa: N802 - stdlib naming
+            if self._gate(b""):
+                return
             key = self._key()
             if key is None:
                 self._reply(404)
@@ -199,9 +371,27 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
                 return
             headers = _object_headers(key, data)
             headers["Content-Type"] = "application/octet-stream"
+            range_header = self.headers.get("Range")
+            if range_header:
+                match = _RANGE_RE.match(range_header.strip())
+                if match:
+                    start = int(match.group(1))
+                    end = int(match.group(2)) if match.group(2) else (
+                        len(data) - 1)
+                    if start >= len(data):
+                        self._reply(416, b"", {
+                            "Content-Range": f"bytes */{len(data)}"})
+                        return
+                    end = min(end, len(data) - 1)
+                    headers["Content-Range"] = (
+                        f"bytes {start}-{end}/{len(data)}")
+                    self._reply(206, data[start:end + 1], headers)
+                    return
             self._reply(200, data, headers)
 
         def do_HEAD(self):  # noqa: N802
+            if self._gate(b""):
+                return
             key = self._key()
             data = tree.read(key) if key else None
             if data is None:
@@ -209,13 +399,34 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
                 return
             self._reply(200, data, _object_headers(key, data))
 
-        def do_PUT(self):  # noqa: N802
+        def do_POST(self):  # noqa: N802
+            body = self._read_body()
+            if self._gate(body):
+                return
             key = self._key()
             if not key:
                 self._reply(404)
                 return
-            length = int(self.headers.get("Content-Length", 0))
-            body = self.rfile.read(length)
+            query = self._query()
+            if "uploads" in query:
+                self._initiate_upload(key)
+            elif "uploadId" in query:
+                self._complete_upload(key, query["uploadId"])
+            else:
+                self._reply(400)
+
+        def do_PUT(self):  # noqa: N802
+            body = self._read_body()
+            if self._gate(body):
+                return
+            key = self._key()
+            if not key:
+                self._reply(404)
+                return
+            query = self._query()
+            if "uploadId" in query and "partNumber" in query:
+                self._put_part(key, query, body)
+                return
             if_match = self.headers.get("If-Match")
             if_none = self.headers.get("If-None-Match")
             # conditional evaluation + write are one critical section:
@@ -238,9 +449,15 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
             self._reply(200, b"", {"ETag": _etag(body)})
 
         def do_DELETE(self):  # noqa: N802
+            if self._gate(b""):
+                return
             key = self._key()
             if not key:
                 self._reply(404)
+                return
+            query = self._query()
+            if "uploadId" in query:
+                self._abort_upload(key, query["uploadId"])
                 return
             if_match = self.headers.get("If-Match")
             with tree.lock:
@@ -260,8 +477,16 @@ def serve_s3(root, *, host: str = "127.0.0.1", port: int = 0,
 
     httpd = http.server.ThreadingHTTPServer((host, port), Handler)
     httpd.daemon_threads = True
+    httpd.uploads = uploads        # in-flight multipart (orphan assertions)
+    httpd.faults = faults
+    httpd.inject_faults = faults.arm
     thread = threading.Thread(target=httpd.serve_forever, daemon=True)
     thread.start()
-    url = (f"s3://{httpd.server_address[0]}:{httpd.server_address[1]}"
-           f"/{bucket}")
+    auth = ""
+    if credentials is not None:
+        auth = (f"{quote(credentials.access_key, safe='')}:"
+                f"{quote(credentials.secret_key, safe='')}@")
+    suffix = "" if region == "us-east-1" else f"?region={quote(region)}"
+    url = (f"s3://{auth}{httpd.server_address[0]}:{httpd.server_address[1]}"
+           f"/{bucket}{suffix}")
     return httpd, url

@@ -134,6 +134,15 @@ class StoreBackend(Protocol):
     * **exists** checks batch (``has_many``) and blob reads/writes batch
       (``get_many``/``put_many``) so transfers can dedup and pipeline
       without a round-trip per object.
+
+    Backends may additionally implement the **optional delta capability**
+    — ``has_chunks(hashes) -> Set[str]`` and
+    ``put_objects_delta(items) -> (stored, stale)`` over content-defined
+    chunk recipes (see :mod:`repro.core.delta`).  The sync engine probes
+    for these with ``hasattr`` and degrades to whole-frame transfer when
+    absent, so the methods are deliberately NOT part of this protocol:
+    implementing them is a bandwidth optimization, never a correctness
+    requirement.
     """
 
     # objects -----------------------------------------------------------

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import os
 import queue
+import threading
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -100,6 +101,9 @@ class SyncReport:
     objects_touched: int = 0
     bytes_sent: int = 0
     bytes_wire: int = 0  # framed/compressed bytes actually sent per object
+    #: wire bytes delta frames avoided sending (whole-frame size minus
+    #: recipe size, summed over blobs that shipped as deltas)
+    bytes_delta_saved: int = 0
     cache_entries: int = 0
     runs: int = 0
     ref_updated: bool = False
@@ -115,9 +119,11 @@ class SyncReport:
     def summary(self) -> str:
         wire = (f" (wire={self.bytes_wire})"
                 if self.bytes_wire != self.bytes_sent else "")
+        delta = (f" delta_saved={self.bytes_delta_saved}"
+                 if self.bytes_delta_saved else "")
         return (f"{self.direction} {self.branch}: head={self.head[:12]} "
                 f"objects={self.objects_sent} (+{self.objects_skipped} "
-                f"deduped) bytes={self.bytes_sent}{wire} "
+                f"deduped) bytes={self.bytes_sent}{wire}{delta} "
                 f"cache_entries={self.cache_entries} runs={self.runs} "
                 f"ref_updated={self.ref_updated}")
 
@@ -141,6 +147,7 @@ class MultiSyncReport:
     objects_touched: int = 0  # see SyncReport.objects_touched
     bytes_sent: int = 0
     bytes_wire: int = 0  # framed/compressed bytes actually sent per object
+    bytes_delta_saved: int = 0  # see SyncReport.bytes_delta_saved
     cache_entries: int = 0
     runs: int = 0
     ref_update_mode: str = "atomic"  # see SyncReport.ref_update_mode
@@ -151,9 +158,11 @@ class MultiSyncReport:
         names += [f"tag:{t}" for t in sorted(self.tags)]
         wire = (f" (wire={self.bytes_wire})"
                 if self.bytes_wire != self.bytes_sent else "")
+        delta = (f" delta_saved={self.bytes_delta_saved}"
+                 if self.bytes_delta_saved else "")
         return (f"{self.direction} [{', '.join(names)}]: "
                 f"objects={self.objects_sent} (+{self.objects_skipped} "
-                f"deduped) bytes={self.bytes_sent}{wire} "
+                f"deduped) bytes={self.bytes_sent}{wire}{delta} "
                 f"cache_entries={self.cache_entries} runs={self.runs} "
                 f"refs_updated={len(self.updated_refs)}")
 
@@ -193,7 +202,8 @@ class _TransferEngine:
     _COMMIT, _SNAPSHOT, _MLIST, _MANIFEST, _BLOB = "c", "s", "l", "m", "b"
 
     def __init__(self, src: StoreBackend, dst: StoreBackend, report,
-                 *, jobs: Optional[int] = None, compress_wire: bool = True):
+                 *, jobs: Optional[int] = None, compress_wire: bool = True,
+                 delta_frames: bool = True):
         self.src = src
         self.dst = dst
         self.report = report  # any object with the Sync*Report counters
@@ -210,6 +220,16 @@ class _TransferEngine:
         self._encoded = (compress_wire
                          and hasattr(src, "get_many_encoded")
                          and hasattr(dst, "put_many_encoded"))
+        # delta frames: large blobs ship as chunk recipes against what the
+        # destination already holds (checkpoint-to-checkpoint pushes share
+        # most of their bytes under new digests).  Requires the encoded
+        # path (the recipes are built from the decoded payloads it already
+        # verifies) and a destination speaking the delta wire ops;
+        # negotiation is per hop — one "unknown op" downgrades the rest of
+        # the transfer to whole frames, silently.
+        self._delta = (delta_frames and self._encoded
+                       and hasattr(dst, "has_chunks")
+                       and hasattr(dst, "put_objects_delta"))
         # jobs=1 preserves the PR-2 wire pattern — one blob per round-trip,
         # the finest resume granularity; with a pool, gets/puts pipeline in
         # chunks (one wire frame per chunk, one coordinator wakeup per
@@ -293,7 +313,7 @@ class _TransferEngine:
         for digest, got in zip(digests, written):
             if got != digest:  # defensive: src handed us corrupt bytes
                 raise SyncError(f"transfer of {digest} produced {got}")
-        return ("copied", [(d, len(blobs[d]), len(blobs[d]))
+        return ("copied", [(d, len(blobs[d]), len(blobs[d]), 0)
                            for d in digests])
 
     def _task_copy_encoded(self, digests: List[str]):
@@ -301,14 +321,21 @@ class _TransferEngine:
         verify them here (never trust the wire — and learn the uncompressed
         size the report counts), forward the ORIGINAL payloads to the
         destination, which decodes and verifies again before storing them
-        as-is."""
+        as-is.  With a delta-capable destination, large payloads try to
+        ship as chunk recipes first (:meth:`_copy_delta`)."""
         payloads = self.src.get_many_encoded(digests)
         sizes: Dict[str, int] = {}
+        datas: Dict[str, bytes] = {}
         for d in digests:
             data = decode_frame(payloads[d], what=f"object {d}")
             if sha256_hex(data) != d:
                 raise SyncError(f"transfer of {d}: payload digest mismatch")
             sizes[d] = len(data)
+            datas[d] = data
+        if self._delta:
+            events = self._copy_delta(digests, payloads, sizes, datas)
+            if events is not None:
+                return ("copied", events)
         # digests ride along as a verified hint so a wire destination can
         # skip re-decoding what this loop just checked
         written = self.dst.put_many_encoded([payloads[d] for d in digests],
@@ -316,15 +343,74 @@ class _TransferEngine:
         for digest, got in zip(digests, written):
             if got != digest:
                 raise SyncError(f"transfer of {digest} produced {got}")
-        return ("copied", [(d, sizes[d], len(payloads[d]))
+        return ("copied", [(d, sizes[d], len(payloads[d]), 0)
                            for d in digests])
+
+    def _copy_delta(self, digests: List[str], payloads: Dict[str, bytes],
+                    sizes: Dict[str, int], datas: Dict[str, bytes]):
+        """Delta leg of a leaf chunk: chunk the large blobs, ask the
+        destination which chunk hashes it already resolves (ONE round-trip
+        for the whole chunk), ship recipes where they beat the whole frame
+        and whole frames for the rest.  Returns the ``copied`` event list,
+        or ``None`` to let the caller run the plain encoded path (nothing
+        eligible, or the destination downgraded)."""
+        from . import delta as delta_mod
+
+        chunked = {d: delta_mod.chunk_blob(datas[d]) for d in digests
+                   if sizes[d] >= delta_mod.DELTA_MIN_BYTES}
+        if not chunked:
+            return None
+        hashes = sorted({h for chunks in chunked.values()
+                         for h, _o, _l in chunks})
+        have = self.dst.has_chunks(hashes)
+        supports = getattr(self.dst, "_supports_delta", None)
+        if supports is not None and not supports():
+            # old server: stop chunking for the rest of the transfer
+            # (benign race: workers flip a monotonic bool, same pattern as
+            # the encoded-path kill switch)
+            self._delta = False
+            return None
+        recipes: List[Tuple[str, list]] = []
+        recipe_cost: Dict[str, int] = {}
+        whole: List[str] = []
+        for d in digests:
+            chunks = chunked.get(d)
+            if chunks and have:
+                recipe, cost = delta_mod.build_recipe(datas[d], chunks, have)
+                # a recipe's literals are uncompressed, the whole frame is
+                # not — only ship the delta when it clearly wins
+                if cost < 0.9 * len(payloads[d]):
+                    recipes.append((d, recipe))
+                    recipe_cost[d] = cost
+                    continue
+            whole.append(d)
+        events: List[Tuple[str, int, int, int]] = []
+        if recipes:
+            stored, stale = self.dst.put_objects_delta(recipes)
+            stored_set = set(stored)
+            for d, _recipe in recipes:
+                if d in stored_set:
+                    events.append((d, sizes[d], recipe_cost[d],
+                                   len(payloads[d]) - recipe_cost[d]))
+                else:
+                    # stale reference (index eviction / raced GC) or a
+                    # downgrading server: this blob goes whole-frame
+                    whole.append(d)
+        if whole:
+            written = self.dst.put_many_encoded(
+                [payloads[d] for d in whole], digests=whole)
+            for digest, got in zip(whole, written):
+                if got != digest:
+                    raise SyncError(f"transfer of {digest} produced {got}")
+            events.extend((d, sizes[d], len(payloads[d]), 0) for d in whole)
+        return events
 
     def _task_put(self, items: List[Tuple[str, bytes]]):
         written = _put_many(self.dst, [b for _d, b in items])
         for (digest, blob), got in zip(items, written):
             if got != digest:
                 raise SyncError(f"transfer of {digest} produced {got}")
-        return ("put", [(d, len(b), len(b)) for d, b in items])
+        return ("put", [(d, len(b), len(b), 0) for d, b in items])
 
     def _task_touch(self, digests: List[str]):
         return ("touched", self._touch(digests))
@@ -383,10 +469,11 @@ class _TransferEngine:
         elif event[0] == "touched":
             self.report.objects_touched += event[1]
         else:  # "copied" | "put" — objects landed on dst
-            for digest, nbytes, wire_bytes in event[1]:
+            for digest, nbytes, wire_bytes, saved in event[1]:
                 self.report.objects_sent += 1
                 self.report.bytes_sent += nbytes
                 self.report.bytes_wire += wire_bytes
+                self.report.bytes_delta_saved += saved
                 self._finish(digest)
 
     @staticmethod
@@ -760,7 +847,8 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
               remote_name: str = "origin", force: bool = False,
               cache_entries: bool = True, runs: bool = True,
               jobs: Optional[int] = None,
-              compress_wire: bool = True) -> MultiSyncReport:
+              compress_wire: bool = True,
+              delta_frames: bool = True) -> MultiSyncReport:
     """Atomic multi-ref push: several branches plus tags move in ONE
     deps-first transfer (shared subtrees dedup across refs), then every ref
     lands via one all-or-nothing ``cas_refs`` — a fast-forward conflict on
@@ -836,7 +924,8 @@ def push_refs(local: StoreBackend, remote: StoreBackend,
     attempt = 0
     while True:
         engine = _TransferEngine(local, remote, report, jobs=jobs,
-                                 compress_wire=compress_wire)
+                                 compress_wire=compress_wire,
+                                 delta_frames=delta_frames)
         engine.run([(engine._COMMIT, h) for h in heads.values()]
                    + [(engine._COMMIT, d) for d in tag_digests.values()])
         if cache_entries:
@@ -1012,6 +1101,7 @@ def _single_report(multi: MultiSyncReport, direction: str,
         objects_touched=multi.objects_touched,
         bytes_sent=multi.bytes_sent,
         bytes_wire=multi.bytes_wire,
+        bytes_delta_saved=multi.bytes_delta_saved,
         cache_entries=multi.cache_entries,
         runs=multi.runs,
         ref_updated=(_BRANCH_PREFIX + branch) in multi.updated_refs,
@@ -1023,15 +1113,113 @@ def push(local: StoreBackend, remote: StoreBackend, branch: str, *,
          remote_name: str = "origin", force: bool = False,
          cache_entries: bool = True, runs: bool = True,
          tags: Sequence[str] = (), jobs: Optional[int] = None,
-         compress_wire: bool = True) -> SyncReport:
+         compress_wire: bool = True,
+         delta_frames: bool = True) -> SyncReport:
     """Publish one branch (plus optional tags): closure transfer, then a
     CAS-guarded ref update.  Refuses non-fast-forward updates (the remote
     head must be an ancestor of the pushed head) unless ``force``."""
     multi = push_refs(local, remote, [branch], tags=tags,
                       remote_name=remote_name, force=force,
                       cache_entries=cache_entries, runs=runs, jobs=jobs,
-                      compress_wire=compress_wire)
+                      compress_wire=compress_wire,
+                      delta_frames=delta_frames)
     return _single_report(multi, "push", branch)
+
+
+class _SourceCache:
+    """Read-through memo over a fan-out push's shared fetch side.
+
+    ``push_fanout`` runs one :func:`push_refs` per destination off the SAME
+    local store; without this wrapper every destination would re-read the
+    full closure (walk + leaf fetches) from disk.  Reads memoize by digest
+    — safe because the store is content-addressed, so a digest's bytes can
+    never change — while every write and every ref operation passes
+    straight through.  Lives for one fan-out call, so the memo's size is
+    bounded by the pushed closure."""
+
+    def __init__(self, store: StoreBackend):
+        self._store = store
+        self._blobs: Dict[str, bytes] = {}
+        self._payloads: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def get(self, digest: str) -> bytes:
+        with self._lock:
+            if digest in self._blobs:
+                return self._blobs[digest]
+        data = self._store.get(digest)
+        with self._lock:
+            self._blobs[digest] = data
+        return data
+
+    def get_many(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        digests = list(digests)
+        with self._lock:
+            out = {d: self._blobs[d] for d in digests if d in self._blobs}
+        rest = [d for d in digests if d not in out]
+        if rest:
+            fetched = self._store.get_many(rest)
+            with self._lock:
+                self._blobs.update(fetched)
+            out.update(fetched)
+        return out
+
+    def get_encoded(self, digest: str) -> bytes:
+        with self._lock:
+            if digest in self._payloads:
+                return self._payloads[digest]
+        payload = self._store.get_encoded(digest)
+        with self._lock:
+            self._payloads[digest] = payload
+        return payload
+
+    def get_many_encoded(self, digests: Sequence[str]) -> Dict[str, bytes]:
+        digests = list(digests)
+        with self._lock:
+            out = {d: self._payloads[d] for d in digests
+                   if d in self._payloads}
+        rest = [d for d in digests if d not in out]
+        if rest:
+            fetched = self._store.get_many_encoded(rest)
+            with self._lock:
+                self._payloads.update(fetched)
+            out.update(fetched)
+        return out
+
+    def __getattr__(self, name: str):
+        # refs, puts, has_many, iteration, capability probes — everything
+        # else is the store itself
+        return getattr(self._store, name)
+
+
+def push_fanout(local: StoreBackend,
+                remotes: Sequence[Tuple[str, StoreBackend]],
+                branches: Sequence[str], *, tags: Sequence[str] = (),
+                force: bool = False, cache_entries: bool = True,
+                runs: bool = True, jobs: Optional[int] = None,
+                compress_wire: bool = True, delta_frames: bool = True
+                ) -> List[Tuple[str, MultiSyncReport]]:
+    """Push the same branches/tags to several remotes — one shared fetch
+    side, N destination engines (``repro push --remote a --remote b``).
+
+    Each destination still gets the full :func:`push_refs` treatment
+    (preflight, deps-first transfer, GC guard, atomic ``cas_refs``,
+    tracking refs under its own remote name), but closure reads hit a
+    shared memo, so the local store pays the walk and the leaf fetches
+    once, not once per remote.  Destinations are pushed in order and
+    independently: a conflict on one raises after earlier remotes already
+    landed — like a loop of ``git push``, not a cross-remote transaction
+    (remotes don't share a CAS domain to be atomic over)."""
+    if not remotes:
+        raise SyncError("push_fanout: no remotes given")
+    source = _SourceCache(local)
+    reports: List[Tuple[str, MultiSyncReport]] = []
+    for name, remote in remotes:
+        reports.append((name, push_refs(
+            source, remote, branches, tags=tags, remote_name=name,
+            force=force, cache_entries=cache_entries, runs=runs, jobs=jobs,
+            compress_wire=compress_wire, delta_frames=delta_frames)))
+    return reports
 
 
 def pull(local: StoreBackend, remote: StoreBackend, branch: str, *,

@@ -148,8 +148,10 @@ def _add_sync_args(p):
                         "positional BRANCH)")
     p.add_argument("--tags", action="append", default=None, metavar="PATTERN",
                    help="also sync tags matching PATTERN (glob; repeatable)")
-    p.add_argument("--remote", default="origin",
-                   help="configured remote name, or a URL/path")
+    p.add_argument("--remote", action="append", default=None,
+                   help="configured remote name, or a URL/path (default: "
+                        "origin; repeatable on push — one closure walk "
+                        "fans out to every destination)")
     p.add_argument("--force", action="store_true",
                    help="allow a non-fast-forward ref update / tag clobber")
     p.add_argument("--jobs", type=int, default=None, metavar="N",
@@ -644,17 +646,39 @@ def main(argv=None):
         except RefNotFound as e:
             raise SystemExit(str(e)) from None
     elif args.cmd in ("push", "pull"):
-        remote = _resolve_remote(lake, args.remote)
+        remote_specs = args.remote or ["origin"]
+        if len(remote_specs) > 1 and args.cmd == "pull":
+            raise SystemExit("pull: --remote may be given once (fan-out "
+                             "is a push concept; pull merges ONE remote's "
+                             "view)")
         branches = ([args.branch] if args.branch else []) + args.refspecs
         tags = args.tags or []
         if not branches and not tags:
             raise SystemExit(f"{args.cmd}: name at least one branch "
                              "(--branch or positional) or --tags")
-        remote_name = args.remote if "/" not in args.remote else "origin"
-        kw = dict(remote_name=remote_name, force=args.force,
-                  cache_entries=not args.no_cache_entries,
-                  runs=not args.no_runs, jobs=args.jobs)
+
+        def _tracking_name(spec):
+            return spec if "/" not in spec else "origin"
+
         try:
+            if len(remote_specs) > 1:
+                # multi-remote push: shared fetch side, N destinations
+                remotes = [(_tracking_name(spec),
+                            _resolve_remote(lake, spec))
+                           for spec in remote_specs]
+                reports = sync_mod.push_fanout(
+                    lake.store, remotes, branches, tags=tags,
+                    force=args.force,
+                    cache_entries=not args.no_cache_entries,
+                    runs=not args.no_runs, jobs=args.jobs)
+                for name, rep in reports:
+                    print(f"{name}: {rep.summary()}")
+                return
+            spec = remote_specs[0]
+            remote = _resolve_remote(lake, spec)
+            kw = dict(remote_name=_tracking_name(spec), force=args.force,
+                      cache_entries=not args.no_cache_entries,
+                      runs=not args.no_runs, jobs=args.jobs)
             if (len(branches) == 1 and not tags
                     and not any(ch in branches[0] for ch in "*?[")):
                 # single literal branch: the PR-2 surface, unchanged output

@@ -5,11 +5,13 @@ is reached or how many transfer workers move the closure.  This module
 states that contract ONCE as a list of checks and runs it against every
 
     backend   ×  transport  ×  concurrency
-    (fs, tiered) (direct, loopback, http, s3)  (--jobs 1, --jobs N)
+    (fs, tiered) (direct, loopback, http, s3, s3+sigv4)  (--jobs 1, --jobs N)
 
 combination — ``s3`` reaches the remote through the S3-compatible REST
 dialect (:class:`repro.core.s3.S3Backend` against the in-process stub
-server), with the SAME directory read directly as the oracle: the stub's
+server; the ``s3+sigv4`` flavor additionally arms the stub's
+signature verification, proving the canonical-request math on every
+request), with the SAME directory read directly as the oracle: the stub's
 bucket layout is byte-compatible with the filesystem store — "correct-by-design" sync treated as a testable interface
 rather than an emergent property of one happy path:
 
@@ -62,7 +64,7 @@ from repro.core.errors import (ObjectNotFound, RefConflict, RefNotFound,
 from repro.core.gc import collect
 
 BACKENDS = ("fs", "tiered")
-TRANSPORTS = ("direct", "loopback", "http", "s3")
+TRANSPORTS = ("direct", "loopback", "http", "s3", "s3+sigv4")
 
 
 @dataclass(frozen=True)
@@ -97,10 +99,20 @@ class SyncContext:
         if self.combo.transport == "loopback":
             return RemoteStore(LoopbackTransport(self._server))
         if self._httpd is None:
-            if self.combo.transport == "s3":
+            if self.combo.transport.startswith("s3"):
                 # the stub serves the SAME tree remote_store reads — the
-                # oracle stays a direct filesystem view of the bucket
-                self._httpd, self._url = serve_s3(self.root / "remote")
+                # oracle stays a direct filesystem view of the bucket.
+                # The sigv4 flavor arms signature verification: every
+                # request of every check must carry a signature the stub
+                # re-derives identically (creds ride the returned URL, so
+                # connect() signs transparently)
+                creds = None
+                if self.combo.transport == "s3+sigv4":
+                    from repro.core.sigv4 import Credentials
+                    creds = Credentials("CONFORMANCEKEY",
+                                        "conformance/secret+key")
+                self._httpd, self._url = serve_s3(self.root / "remote",
+                                                  credentials=creds)
             else:
                 self._httpd, self._url = serve_http(self.remote_store)
         return connect(self._url)

@@ -472,3 +472,411 @@ def test_cli_s3_remote_push_clone_gc(tmp_path, capsys):
             assert lake.store.has(digest)
     finally:
         httpd.shutdown()
+
+
+# ----------------------------------------------- retry / throttle (bugfix)
+@pytest.fixture()
+def s3h(tmp_path):
+    """Backend plus its stub httpd (fault-injection tests)."""
+    httpd, url = serve_s3(tmp_path / "bucket")
+    backend = connect(url)
+    yield backend, httpd
+    backend.close()
+    httpd.shutdown()
+
+
+def test_retryable_5xx_is_retried_with_backoff(s3h):
+    """Regression: a 503 SlowDown on an idempotent request used to surface
+    immediately (only transport exceptions were retried).  Two injected
+    503s then success must be invisible to the caller."""
+    s3, httpd = s3h
+    s3.backoff = 0.001  # keep the test fast
+    digest = s3.put(b"throttle me" * 40)
+    httpd.inject_faults(2, status=503, method="GET")
+    assert s3.get(digest) == b"throttle me" * 40
+    assert httpd.faults.served == 2  # both faults were really injected
+
+
+def test_5xx_surfaces_after_retry_budget_exhausted(s3h):
+    """More consecutive 503s than the retry budget -> the error reaches
+    the caller instead of retrying forever."""
+    from repro.core.errors import RemoteError
+
+    s3, httpd = s3h
+    s3.backoff = 0.001
+    digest = s3.put(b"hopeless" * 40)
+    httpd.inject_faults(s3.retries + 5, status=503, method="GET")
+    with pytest.raises(RemoteError, match="503"):
+        s3.get(digest)
+
+
+def test_500_internal_error_also_retried(s3h):
+    s3, httpd = s3h
+    s3.backoff = 0.001
+    digest = s3.put(b"ie" * 60)
+    httpd.inject_faults(1, status=500, method="HEAD")
+    assert s3.has(digest) is True
+    assert httpd.faults.served == 1
+
+
+def test_conditional_write_is_never_blindly_retried(s3h):
+    """A 5xx on a conditional ref write is ambiguous (the server may have
+    applied it before failing to answer) — replaying it could clobber a
+    racer.  The backend must surface the error after ONE attempt, even
+    though a retry would have 'succeeded'."""
+    from repro.core.errors import RemoteError
+
+    s3, httpd = s3h
+    s3.backoff = 0.001
+    s3.set_ref("branch=b", "a" * 64)
+    httpd.inject_faults(1, status=503, method="PUT", key_contains="refs/")
+    with pytest.raises(RemoteError, match="503"):
+        s3.cas_ref("branch=b", "a" * 64, "b" * 64)
+    assert httpd.faults.served == 1  # exactly one attempt hit the server
+    assert s3.get_ref("branch=b") == "a" * 64  # fault preceded the apply
+
+
+# ----------------------------------------------- Last-Modified vs locale
+def _set_non_c_time_locale():
+    """Switch LC_TIME to a locale whose month names differ from C, or
+    skip.  Exercises the header path that strftime/strptime("%b") would
+    corrupt."""
+    import locale
+
+    for cand in ("fr_FR.UTF-8", "de_DE.UTF-8", "es_ES.UTF-8", "fr_FR",
+                 "de_DE"):
+        try:
+            locale.setlocale(locale.LC_TIME, cand)
+            return cand
+        except locale.Error:
+            continue
+    pytest.skip("no non-C LC_TIME locale installed")
+
+
+def test_last_modified_round_trip_is_locale_proof(tmp_path):
+    """The stub must emit IMF-fixdate GMT headers and the backend must
+    parse them via email.utils regardless of LC_TIME.  Pinned under a
+    non-C locale so a regression to strftime('%a/%b') month names fails
+    here instead of in production."""
+    import locale
+    import time as _time
+
+    saved = locale.setlocale(locale.LC_TIME)
+    _set_non_c_time_locale()
+    try:
+        httpd, url = serve_s3(tmp_path / "bucket")
+        try:
+            s3 = connect(url)
+            before = _time.time()
+            digest = s3.put(b"when was I written" * 20)
+            mtime = s3.mtime(digest)
+            size, stat_mtime = s3.stat(digest)
+            # HTTP dates have 1s resolution; allow the floor
+            assert before - 1.5 <= mtime <= _time.time() + 1.5
+            assert stat_mtime == pytest.approx(mtime, abs=1.5)
+            assert size == s3.size(digest)
+            # and the header itself is an RFC 7231 GMT fixdate, with an
+            # English month name even under fr/de locales
+            status, headers, _b = s3._request(
+                "HEAD", f"objects/{digest[:2]}/{digest[2:]}")
+            assert status == 200
+            lm = headers["last-modified"]
+            assert lm.endswith("GMT")
+            assert any(m in lm for m in
+                       ("Jan", "Feb", "Mar", "Apr", "May", "Jun", "Jul",
+                        "Aug", "Sep", "Oct", "Nov", "Dec"))
+        finally:
+            httpd.shutdown()
+    finally:
+        locale.setlocale(locale.LC_TIME, saved)
+
+
+def test_sigv4_amz_date_is_locale_proof():
+    """x-amz-date never goes through strftime month names."""
+    import locale
+    from datetime import datetime, timezone
+
+    from repro.core import sigv4
+
+    saved = locale.setlocale(locale.LC_TIME)
+    _set_non_c_time_locale()
+    try:
+        stamp = sigv4._amz_date(
+            datetime(2026, 8, 7, 23, 59, 5, tzinfo=timezone.utc))
+        assert stamp == "20260807T235905Z"
+    finally:
+        locale.setlocale(locale.LC_TIME, saved)
+
+
+# ------------------------------------- pagination under max-keys=1 (audit)
+def test_pagination_at_max_keys_one_with_reserved_characters(tmp_path):
+    """Server pages capped at ONE key, ref names that need percent
+    encoding: continuation (start-after) tokens must round-trip encoded —
+    a token that decodes or truncates loses or duplicates keys."""
+    httpd, url = serve_s3(tmp_path / "bucket", max_keys_cap=1)
+    try:
+        s3 = connect(url)
+        names = ["branch=exp 1", "branch=pct%25", "tag=h#v", "tag=q?x",
+                 "branch=a+b", "cache/00/e", "cache/01/e"]
+        for i, name in enumerate(names):
+            s3.set_ref(name, f"{i:064d}"[:64])
+        listed = []
+        token = None
+        pages = 0
+        while True:
+            page, token = s3.list_refs(page_token=token, limit=1000)
+            assert len(page) <= 1  # the cap really bites
+            listed.extend(page)
+            pages += 1
+            if token is None:
+                break
+        assert pages >= len(names)
+        assert sorted(n for n, _v in listed) == sorted(names)
+        for i, name in enumerate(names):
+            value = dict(listed)[name]
+            assert value == f"{i:064d}"[:64]
+        # object listing under the same cap
+        digests = {s3.put(bytes([i]) * 90) for i in range(5)}
+        assert sorted(s3.iter_objects()) == sorted(digests)
+        assert sorted(n for n in s3.iter_refs()) == sorted(names)
+    finally:
+        httpd.shutdown()
+
+
+# --------------------------------------------------------- SigV4 signing
+@pytest.fixture()
+def signed(tmp_path):
+    """Stub in verification mode + a backend that signs (creds from URL)."""
+    from repro.core.sigv4 import Credentials
+
+    creds = Credentials("AKIDEXAMPLE", "wJalrXUtnFEMI/K7MDENG+bPxRfiCY")
+    httpd, url = serve_s3(tmp_path / "bucket", credentials=creds)
+    backend = connect(url)
+    yield backend, httpd, creds, url
+    backend.close()
+    httpd.shutdown()
+
+
+def test_signed_round_trip_all_primitives(signed, tmp_path):
+    """With verification armed, every request the backend makes must carry
+    a signature the stub re-derives identically: objects, batched ops,
+    paged listings, conditional ref writes, and keys needing percent
+    encoding all round-trip."""
+    s3, httpd, _creds, _url = signed
+    data = b"signed payload " * 100
+    digest = s3.put(data)
+    assert s3.get(digest) == data
+    assert s3.has(digest)
+    assert s3.stat(digest)[0] == s3.size(digest)
+    blobs = [bytes([i]) * 120 for i in range(8)]
+    assert s3.has_many(s3.put_many(blobs)) == set(
+        sha256_hex(b) for b in blobs)
+    # percent-encoded key names exercise single-encoding of the canonical
+    # URI; query canonicalization is exercised by the listing params
+    for name in ("branch=exp 1", "tag=rel%41", "tag=h#v"):
+        s3.set_ref(name, "a" * 64)
+        assert s3.get_ref(name) == "a" * 64
+    s3.cas_ref("branch=exp 1", "a" * 64, "b" * 64)
+    assert sorted(s3.iter_objects()) == sorted(
+        [digest] + [sha256_hex(b) for b in blobs])
+    assert len(list(s3.iter_refs())) == 3
+    s3.delete_ref("tag=h#v")
+    assert s3.delete_object(digest) is True
+
+
+def test_wrong_secret_is_rejected(signed, tmp_path):
+    from repro.core.errors import RemoteError
+    from repro.core.s3 import S3Backend
+
+    s3, httpd, creds, url = signed
+    digest = s3.put(b"protected" * 30)
+    bad = url.replace(creds.secret_key.replace("/", "%2F")
+                      .replace("+", "%2B"), "WRONGSECRET")
+    assert "WRONGSECRET" in bad  # the replace really happened
+    evil = connect(bad)
+    with pytest.raises(RemoteError, match="403"):
+        evil.get(digest)
+    evil.close()
+
+
+def test_unsigned_request_is_rejected_when_verification_armed(signed):
+    from repro.core.errors import RemoteError
+
+    s3, httpd, _creds, _url = signed
+    digest = s3.put(b"no anonymous reads" * 10)
+    anon = type(s3)(s3.endpoint, s3.bucket, credentials=None)
+    try:
+        with pytest.raises(RemoteError, match="403"):
+            anon.get(digest)
+    finally:
+        anon.close()
+
+
+def test_session_token_is_signed_and_forwarded(tmp_path):
+    """STS-style credentials add x-amz-security-token to the signed set."""
+    from repro.core.s3 import S3Backend
+    from repro.core.sigv4 import Credentials
+
+    creds = Credentials("AKID", "secret", session_token="tok/en+123")
+    httpd, url = serve_s3(tmp_path / "bucket",
+                          credentials=Credentials("AKID", "secret"))
+    try:
+        host, port = httpd.server_address
+        s3 = S3Backend(f"http://{host}:{port}", "lake",
+                       credentials=Credentials("AKID", "secret",
+                                               session_token="tok/en+123"))
+        digest = s3.put(b"sts" * 50)
+        assert s3.get(digest) == b"sts" * 50
+        s3.close()
+    finally:
+        httpd.shutdown()
+
+
+def test_credentials_from_env(monkeypatch):
+    from repro.core.sigv4 import Credentials
+
+    monkeypatch.delenv("AWS_ACCESS_KEY_ID", raising=False)
+    monkeypatch.delenv("AWS_SECRET_ACCESS_KEY", raising=False)
+    monkeypatch.delenv("AWS_SESSION_TOKEN", raising=False)
+    assert Credentials.from_env() is None
+    monkeypatch.setenv("AWS_ACCESS_KEY_ID", "AK")
+    assert Credentials.from_env() is None  # secret still missing
+    monkeypatch.setenv("AWS_SECRET_ACCESS_KEY", "SK")
+    creds = Credentials.from_env()
+    assert creds == Credentials("AK", "SK")
+    monkeypatch.setenv("AWS_SESSION_TOKEN", "TOK")
+    assert Credentials.from_env().session_token == "TOK"
+
+
+def test_sigv4_known_answer_vector():
+    """Signature against a fixed clock/key is deterministic — pins the
+    canonical-request and key-derivation math to exact output, so any
+    canonicalization drift fails loudly even without the stub."""
+    from datetime import datetime, timezone
+
+    from repro.core.sigv4 import Credentials, SigV4Signer
+
+    signer = SigV4Signer(
+        Credentials("AKIDEXAMPLE",
+                    "wJalrXUtnFEMI/K7MDENG+bPxRfiCYEXAMPLEKEY"),
+        region="us-east-1",
+        clock=lambda: datetime(2015, 8, 30, 12, 36, 0, tzinfo=timezone.utc))
+    headers = signer.sign("GET", "example.amazonaws.com",
+                          "/lake/refs/branch%3Dmain",
+                          [("list-type", "2"), ("prefix", "refs/")], b"")
+    assert headers["x-amz-date"] == "20150830T123600Z"
+    auth = headers["Authorization"]
+    assert auth.startswith(
+        "AWS4-HMAC-SHA256 Credential=AKIDEXAMPLE/20150830/us-east-1/s3/"
+        "aws4_request, SignedHeaders=host;x-amz-content-sha256;x-amz-date, "
+        "Signature=")
+    # byte-for-byte repeatability (same clock -> same signature)
+    again = signer.sign("GET", "example.amazonaws.com",
+                        "/lake/refs/branch%3Dmain",
+                        [("list-type", "2"), ("prefix", "refs/")], b"")
+    assert again == headers
+
+
+# ------------------------------------------------- multipart + ranged GET
+@pytest.fixture()
+def mp(tmp_path):
+    """Backend with toy multipart thresholds against the stub."""
+    from repro.core.s3 import S3Backend
+
+    httpd, url = serve_s3(tmp_path / "bucket")
+    backend = S3Backend.from_url(url, multipart_threshold=64 << 10,
+                                 part_size=64 << 10)
+    yield backend, httpd, tmp_path / "bucket"
+    backend.close()
+    httpd.shutdown()
+
+
+def test_multipart_upload_and_ranged_get_round_trip(mp):
+    backend, httpd, root = mp
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=700_000, dtype=np.uint8).tobytes()
+    digest = backend.put(data)  # compressed payload still > threshold
+    assert backend.get(digest) == data  # ranged GET reassembly
+    assert not httpd.uploads  # completed upload left no in-flight state
+    # the stored object is indistinguishable from a single-shot PUT
+    oracle = ObjectStore(root)
+    assert oracle.get(digest) == data
+    # and small objects still take the single-request path
+    small = backend.put(b"tiny")
+    assert backend.get(small) == b"tiny"
+
+
+def test_failed_multipart_upload_aborts_and_leaves_no_orphans(mp,
+                                                              monkeypatch):
+    from repro.core.errors import RemoteError
+
+    backend, httpd, root = mp
+    backend.backoff = 0.001
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 256, size=400_000, dtype=np.uint8).tobytes()
+    # every part PUT for this key answers 500, beyond the retry budget
+    httpd.inject_faults(100, status=500, method="PUT",
+                        key_contains="objects/")
+    with pytest.raises(RemoteError):
+        backend.put(data)
+    assert not httpd.uploads  # abort ran: no orphaned multipart state
+    assert not list(backend.iter_objects())  # and no partial object
+    # the backend recovers once the weather clears
+    httpd.faults._entries.clear()
+    digest = backend.put(data)
+    assert backend.get(digest) == data
+
+
+def test_part_level_retry_heals_transient_faults(mp):
+    backend, httpd, _root = mp
+    backend.backoff = 0.001
+    rng = np.random.default_rng(2)
+    data = rng.integers(0, 256, size=300_000, dtype=np.uint8).tobytes()
+    # one transient 503 somewhere inside the part sequence
+    httpd.inject_faults(1, status=503, method="PUT",
+                        key_contains="objects/")
+    digest = backend.put(data)
+    assert httpd.faults.served == 1
+    assert backend.get(digest) == data
+    assert not httpd.uploads
+
+
+def test_ranged_get_downgrades_on_200(mp, monkeypatch):
+    """A server that ignores Range and answers 200 with the whole body
+    must still round-trip (downgrade, not error)."""
+    backend, httpd, _root = mp
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, size=300_000, dtype=np.uint8).tobytes()
+    digest = backend.put(data)
+    real = type(backend)._request
+
+    def no_range(self, method, key, *, headers=None, **kw):
+        if headers and "Range" in headers:
+            headers = {k: v for k, v in headers.items() if k != "Range"}
+        return real(self, method, key, headers=headers, **kw)
+
+    monkeypatch.setattr(type(backend), "_request", no_range)
+    assert backend.get(digest) == data
+
+
+def test_multipart_and_single_shot_store_identical_bytes(tmp_path):
+    """Property at the boundary: the same blob uploaded multipart and
+    single-shot lands byte-identical payloads (completes assemble in part
+    order, no framing corruption at part seams)."""
+    from repro.core.s3 import S3Backend
+
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 256, size=200_000, dtype=np.uint8).tobytes()
+    httpd_a, url_a = serve_s3(tmp_path / "a")
+    httpd_b, url_b = serve_s3(tmp_path / "b")
+    try:
+        multi = S3Backend.from_url(url_a, multipart_threshold=1,
+                                   part_size=33_333)  # ragged final part
+        single = S3Backend.from_url(url_b)
+        da, db = multi.put(data), single.put(data)
+        assert da == db
+        assert multi.get_encoded(da) == single.get_encoded(db)
+        multi.close(), single.close()
+    finally:
+        httpd_a.shutdown()
+        httpd_b.shutdown()

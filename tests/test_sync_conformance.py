@@ -65,6 +65,16 @@ def test_conformance_matrix_s3(tmp_path, backend, jobs, check):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("jobs", (1, 8))
+@pytest.mark.parametrize("check", CHECKS, ids=lambda c: c.__name__)
+def test_conformance_matrix_s3_sigv4(tmp_path, jobs, check):
+    """The signed leg: same contract, but the stub verifies a SigV4
+    signature on EVERY request — any canonicalization drift between the
+    backend and the spec fails the whole suite, not just a unit test."""
+    run_check(check, Combo("fs", "s3+sigv4", jobs), tmp_path)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("backend", ("fs", "s3"))
 @pytest.mark.parametrize("seed", (101, 202))
 def test_gc_race_fuzz_fixed_seeds(tmp_path, backend, seed):
